@@ -1,0 +1,104 @@
+//! C code generation demo (KerasCNN2C analogue, §5.6–5.8): quantize a
+//! trained model, emit the portable C library, compile it with the host C
+//! compiler, run one inference, and verify it agrees with the Rust
+//! integer engine.
+//!
+//! Run: `make artifacts && cargo run --release --example codegen_demo`
+
+use std::io::Write as _;
+use std::process::Command;
+
+use microai::coordinator::deployer;
+use microai::coordinator::trainer::{LrSchedule, Trainer};
+use microai::datasets;
+use microai::quant::QuantSpec;
+use microai::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let tag = "har_f16";
+    let spec = rt.spec(tag)?.clone();
+    let data = datasets::load("har", 42).unwrap();
+
+    println!("training {tag} (150 steps)...");
+    let mut trainer = Trainer::new(&rt, 42);
+    let mut state = trainer.init(tag)?;
+    let sched = LrSchedule { initial: 0.05, factor: 0.13, milestones: vec![100], warmup: 8 };
+    trainer.train(&mut state, &data, "train", 150, &sched, 0)?;
+    let graph = deployer::build_deployed_graph(&spec, trainer.params_to_host(&state)?);
+    let stats = deployer::calibrate(&graph, &data, 64);
+    let qg = microai::quant::quantize(&graph, &stats, QuantSpec::int8_per_layer());
+
+    let lib = microai::codegen::generate(&qg);
+    let dir = std::path::Path::new("results/codegen_demo");
+    microai::codegen::write_to(&lib, dir)?;
+    println!("generated C library in {}:", dir.display());
+    println!("--- model.h ---\n{}", lib.model_h);
+
+    // Compile with the host compiler (stands in for arm-none-eabi-gcc).
+    let main_c = r#"
+#include <stdio.h>
+#include "model.h"
+int main(void) {
+    static number_t input[MODEL_INPUT_SAMPLES][MODEL_INPUT_CHANNELS];
+    static number_t output[MODEL_OUTPUT_UNITS];
+    for (int s = 0; s < MODEL_INPUT_SAMPLES; s++)
+        for (int c = 0; c < MODEL_INPUT_CHANNELS; c++) {
+            long v; if (scanf("%ld", &v) != 1) return 1;
+            input[s][c] = (number_t)v;
+        }
+    cnn(input, output);
+    for (int i = 0; i < MODEL_OUTPUT_UNITS; i++) printf("%d\n", (int)output[i]);
+    return 0;
+}
+"#;
+    std::fs::write(dir.join("main.c"), main_c)?;
+    let bin = dir.join("demo");
+    let status = Command::new("cc")
+        .args(["-Ofast", "-o"])
+        .arg(&bin)
+        .arg(dir.join("main.c"))
+        .arg(dir.join("model.c"))
+        .arg("-I")
+        .arg(dir)
+        .status();
+    let Ok(status) = status else {
+        println!("(no host cc — skipping compile check)");
+        return Ok(());
+    };
+    anyhow::ensure!(status.success(), "cc failed");
+    println!("compiled with cc -Ofast (paper uses GCC -Ofast, §5.7)");
+
+    // Run one test example through both the C binary and the Rust engine.
+    let x = data.test_example(0);
+    let in_fmt = microai::fixedpoint::QFormat::new(8, qg.act_n[0]);
+    let payload: Vec<i32> = x.iter().map(|&v| in_fmt.quantize(v)).collect();
+    let mut child = Command::new(&bin)
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .spawn()?;
+    child
+        .stdin
+        .as_mut()
+        .unwrap()
+        .write_all(payload.iter().map(|p| p.to_string()).collect::<Vec<_>>().join("\n").as_bytes())?;
+    let out = child.wait_with_output()?;
+    let c_out: Vec<i32> = String::from_utf8(out.stdout)?
+        .lines()
+        .map(|l| l.trim().parse().unwrap())
+        .collect();
+
+    let rust_logits = microai::nn::int_exec::run(&qg, x);
+    let out_fmt = microai::fixedpoint::QFormat::new(8, qg.act_n[qg.graph.output_id()]);
+    let rust_out: Vec<i32> = rust_logits.iter().map(|&v| out_fmt.quantize(v)).collect();
+
+    println!("C payloads:    {c_out:?}");
+    println!("Rust payloads: {rust_out:?}");
+    anyhow::ensure!(c_out == rust_out, "C and Rust disagree!");
+    println!(
+        "bit-exact ✓  (true label = {}, prediction = {})",
+        data.test_y[0],
+        microai::nn::argmax(&rust_logits)
+    );
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! END-TO-END driver (the DESIGN.md validation workload): the complete
+//! MicroAI pipeline of paper Fig 3 on the synthetic UCI-HAR workload.
+//!
+//!   train (float32, a few hundred SGD steps through the AOT HLO train
+//!   step, loss curve logged) → PTQ int16 / int9 / int8 + TFLite-affine
+//!   int8 → QAT int8 fine-tune → accuracy table (paper Figs 5/6 row) →
+//!   deployment matrix across engines × boards (Figs 11–13 cells) → C
+//!   library generation (KerasCNN2C analogue).
+//!
+//! Results of a reference run are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_har_pipeline`
+
+use microai::coordinator::deployer;
+use microai::coordinator::trainer::{LrSchedule, Trainer};
+use microai::datasets;
+use microai::engines::all_engines;
+use microai::mcu::board::BOARDS;
+use microai::quant::QuantSpec;
+use microai::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let filters = 16usize;
+    let tag = format!("har_f{filters}");
+
+    println!("== MicroAI end-to-end pipeline: synthetic UCI-HAR, f={filters} ==\n");
+    let rt = Runtime::open_default()?;
+    let spec = rt.spec(&tag)?.clone();
+    let data = datasets::load("har", 42).unwrap();
+    println!(
+        "dataset: {} train / {} test examples, shape {:?}, {} classes",
+        data.n_train(),
+        data.n_test(),
+        data.shape,
+        data.classes
+    );
+
+    // ---- Phase 1: float32 training from Rust via the HLO train step ----
+    println!("\n-- phase 1: float32 training ({steps} SGD steps, batch {}) --", spec.train_batch);
+    let mut trainer = Trainer::new(&rt, 42);
+    let mut state = trainer.init(&tag)?;
+    let sched = LrSchedule {
+        initial: 0.05,
+        factor: 0.13,
+        milestones: vec![steps * 5 / 8, steps * 3 / 4, steps * 7 / 8],
+        warmup: steps / 20,
+    };
+    trainer.train(&mut state, &data, "train", steps, &sched, (steps / 12).max(1))?;
+    // Loss curve summary (the "log the loss curve" requirement).
+    let curve: Vec<String> = state
+        .losses
+        .iter()
+        .step_by((steps / 16).max(1))
+        .map(|l| format!("{l:.3}"))
+        .collect();
+    println!("loss curve: {}", curve.join(" -> "));
+
+    // ---- Phase 2: QAT int8 fine-tune (paper §4.3) ----
+    let qat_steps = (steps / 4).max(20);
+    println!("\n-- phase 2: QAT int8 fine-tune ({qat_steps} steps) --");
+    let mut qat_state = microai::coordinator::trainer::TrainState {
+        tag: state.tag.clone(),
+        params: state.params.clone(),
+        mom: state.mom.clone(),
+        losses: Vec::new(),
+    };
+    let qat_sched = LrSchedule {
+        initial: 0.01,
+        factor: 0.1,
+        milestones: vec![qat_steps / 2],
+        warmup: 5,
+    };
+    trainer.train(&mut qat_state, &data, "qat8_train", qat_steps, &qat_sched, 0)?;
+
+    // ---- Phase 3: quantization arms + accuracy (Figs 5/6 row) ----
+    println!("\n-- phase 3: quantization & accuracy (Rust integer engine) --");
+    let graph = deployer::build_deployed_graph(&spec, trainer.params_to_host(&state)?);
+    let qat_graph = deployer::build_deployed_graph(&spec, trainer.params_to_host(&qat_state)?);
+
+    let acc_float = deployer::float_accuracy(&graph, &data);
+    let (q16, acc16) = deployer::ptq_accuracy(&graph, &data, QuantSpec::int16_per_layer(), 64);
+    let (q9, acc9) = deployer::ptq_accuracy(&graph, &data, QuantSpec::int9_per_layer(), 64);
+    let (q8p, acc8p) = deployer::ptq_accuracy(&graph, &data, QuantSpec::int8_per_layer(), 64);
+    let (_q8, acc8qat) =
+        deployer::ptq_accuracy(&qat_graph, &data, QuantSpec::int8_per_layer(), 64);
+    let acc_affine = deployer::affine_accuracy(&graph, &data, 64);
+
+    println!("{:<26} {:>9} {:>12}", "variant", "accuracy", "weights(B)");
+    println!("{:<26} {:>9.4} {:>12}", "float32", acc_float, graph.param_count() * 4);
+    println!("{:<26} {:>9.4} {:>12}", "int16 PTQ (per-layer)", acc16, q16.weight_bytes());
+    println!("{:<26} {:>9.4} {:>12}", "int9 PTQ (App. B)", acc9, q9.weight_bytes());
+    println!("{:<26} {:>9.4} {:>12}", "int8 PTQ", acc8p, q8p.weight_bytes());
+    println!("{:<26} {:>9.4} {:>12}", "int8 QAT", acc8qat, q8p.weight_bytes());
+    println!("{:<26} {:>9.4} {:>12}", "int8 affine (TFLite-PTQ)", acc_affine, graph.param_count());
+
+    // ---- Phase 4: deployment matrix (Figs 11-13 cells) ----
+    println!("\n-- phase 4: deployment matrix (engines x boards) --");
+    let rows = deployer::deployment_matrix(&graph, filters, &all_engines(), &BOARDS);
+    print!("{}", deployer::render_matrix(&rows));
+
+    // ---- Phase 5: C library generation ----
+    println!("\n-- phase 5: C code generation (KerasCNN2C analogue) --");
+    let stats = deployer::calibrate(&graph, &data, 64);
+    let qg = microai::quant::quantize(&graph, &stats, QuantSpec::int8_per_layer());
+    let lib = microai::codegen::generate(&qg);
+    let out = std::path::Path::new("results/e2e_generated_c");
+    microai::codegen::write_to(&lib, out)?;
+    println!(
+        "wrote {}/number.h, model.h, model.c ({} B of C)",
+        out.display(),
+        lib.model_c.len()
+    );
+
+    println!("\n== pipeline complete in {:.1}s ==", t0.elapsed().as_secs_f64());
+    println!(
+        "paper-shape checks: int16≈float ({acc16:.3} vs {acc_float:.3}); \
+         int8-QAT ≥ int8-PTQ ({acc8qat:.3} vs {acc8p:.3})"
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Quickstart: the three layers in one page.
+//!
+//!   1. Load and run the L1 Pallas kernel artifact (fixed-point matmul)
+//!      through PJRT from Rust — the AOT bridge.
+//!   2. Build a ResNetv1-6, quantize it to int8 with the Qm.n PTQ
+//!      quantizer, and run the integer inference engine.
+//!   3. Price the deployment on both paper boards.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use microai::engines::microai;
+use microai::graph::ir::LayerKind;
+use microai::graph::{deploy_pipeline, resnet_v1_6_shapes};
+use microai::mcu::board::{NUCLEO_L452RE_P, SPARKFUN_EDGE};
+use microai::mcu::DType;
+use microai::nn::float_exec::ActStats;
+use microai::quant::{quantize, QuantSpec};
+use microai::runtime::exec::{lit_f32, to_f32};
+use microai::runtime::Runtime;
+use microai::util::prng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. the AOT bridge: Pallas kernel via PJRT ----
+    let rt = Runtime::open_default()?;
+    let exe = rt.compile("kernel_fixed_matmul.hlo.txt")?;
+    let (m, k, n) = (32usize, 24usize, 16usize);
+    let xq: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32) - 6.0).collect();
+    let wq: Vec<f32> = (0..k * n).map(|i| ((i % 7) as f32) - 3.0).collect();
+    let bq = vec![0.0f32; n];
+    let out = exe.run(&[
+        lit_f32(&xq, &[m, k])?,
+        lit_f32(&wq, &[k, n])?,
+        lit_f32(&bq, &[n])?,
+        xla::Literal::scalar(0.25f32), // 2^-2 rescale
+    ])?;
+    let y = to_f32(&out[0])?;
+    println!("L1 Pallas fixed_matmul via PJRT: out[0..4] = {:?}", &y[..4]);
+
+    // ---- 2. quantize + integer inference in Rust ----
+    let mut g = resnet_v1_6_shapes("quickstart", 1, &[128, 9], 6, 16);
+    let mut rng = Pcg32::seeded(7);
+    for node in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut node.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.3;
+            }
+            for v in b.data.iter_mut() {
+                *v = 0.01;
+            }
+        }
+    }
+    let g = deploy_pipeline(&g);
+    println!("\nResNetv1-6 (paper Fig 4), {} parameters", g.param_count());
+
+    let mut stats = ActStats::new(g.nodes.len());
+    let calib: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..128 * 9).map(|_| rng.normal()).collect())
+        .collect();
+    for x in &calib {
+        microai::nn::float_exec::run(&g, x, Some(&mut stats));
+    }
+    let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+    let x: Vec<f32> = (0..128 * 9).map(|_| rng.normal()).collect();
+    let fl = microai::nn::float_exec::run(&g, &x, None);
+    let il = microai::nn::int_exec::run(&qg, &x);
+    println!("float  logits: {fl:?}");
+    println!("int8   logits: {il:?}");
+    println!(
+        "weights: {} B (int8) vs {} B (float32)",
+        qg.weight_bytes(),
+        g.param_count() * 4
+    );
+
+    // ---- 3. deployment cost on the paper's boards ----
+    let e = microai();
+    for board in [&NUCLEO_L452RE_P, &SPARKFUN_EDGE] {
+        for dt in [DType::F32, DType::I16, DType::I8] {
+            let t = e.latency_s(&g, board, dt).unwrap() * 1e3;
+            let en = e.energy_uwh(&g, board, dt).unwrap();
+            println!("{:<14} {:<8} {t:>7.1} ms  {en:>6.3} µWh", board.name, dt.label());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for Rust (L3).
+
+Run once at build time (`make artifacts`). Emits, per (dataset, filters):
+
+  init_{d}_f{f}.hlo.txt       (key u32[2]) -> tuple(params...)
+  train_{d}_f{f}.hlo.txt      (params..., mom..., x, y i32, key u32[2],
+                               lr f32) -> tuple(params'..., mom'..., loss)
+  qat8_train_{d}_f{f}.hlo.txt same signature, int8 fake-quant forward
+  fwd_{d}_f{f}.hlo.txt        (params..., x) -> tuple(logits)
+  qfwd8_{d}_f{f}.hlo.txt      (params..., x) -> tuple(logits), int8 Pallas
+                              integer path (L1 fixed_matmul kernels)
+
+plus kernel demo artifacts and artifacts/manifest.json describing every
+signature for `rust/src/runtime/artifact.rs`.
+
+Interchange is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import fixed_matmul as fm_kernel
+
+# Accuracy-figure sweep (DESIGN.md §6): reduced vs the paper's {16..80} to
+# keep CPU training tractable; the footprint/latency/energy tables use the
+# paper's full sweep through the Rust cost model (no artifacts needed).
+SWEEPS = {
+    "har": [8, 16, 32, 64],
+    "smnist": [8, 16, 32, 64],
+    "gtsrb": [8, 16, 32],
+}
+TRAIN_BATCH = {"har": 64, "smnist": 64, "gtsrb": 32}
+EVAL_BATCH = 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return [_spec(p.shape) for p in params], [list(p.shape) for p in params]
+
+
+def lower_model(d: str, f: int, outdir: str, manifest: dict) -> None:
+    cfg = M.make_config(d, f)
+    pspecs, pshapes = _param_specs(cfg)
+    tb = TRAIN_BATCH[d]
+    x_train = _spec((tb,) + cfg.input_shape)
+    y_train = _spec((tb,), jnp.int32)
+    x_eval = _spec((EVAL_BATCH,) + cfg.input_shape)
+    key_spec = _spec((2,), jnp.uint32)
+    lr_spec = _spec((), jnp.float32)
+    tag = f"{d}_f{f}"
+
+    def init_fn(key_data):
+        key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+        return tuple(M.init_params(key, cfg))
+
+    def train_fn(*args):
+        n = len(pspecs)
+        params, mom = list(args[:n]), list(args[n : 2 * n])
+        x, y, key, lr = args[2 * n : 2 * n + 4]
+        p2, m2, loss = M.train_step(params, mom, x, y, key, lr, cfg)
+        return tuple(p2) + tuple(m2) + (loss,)
+
+    def qat_train_fn(*args):
+        n = len(pspecs)
+        params, mom = list(args[:n]), list(args[n : 2 * n])
+        x, y, key, lr = args[2 * n : 2 * n + 4]
+        p2, m2, loss = M.train_step(params, mom, x, y, key, lr, cfg, width=8)
+        return tuple(p2) + tuple(m2) + (loss,)
+
+    def fwd_fn(*args):
+        params, x = list(args[:-1]), args[-1]
+        return (M.apply(params, x, cfg),)
+
+    def qfwd8_fn(*args):
+        params, x = list(args[:-1]), args[-1]
+        return (M.apply(params, x, cfg, width=8, use_pallas=True),)
+
+    train_in = pspecs + pspecs + [x_train, y_train, key_spec, lr_spec]
+    arts = {}
+    for name, fn, specs in [
+        ("init", init_fn, [key_spec]),
+        ("train", train_fn, train_in),
+        ("qat8_train", qat_train_fn, train_in),
+        ("fwd", fwd_fn, pspecs + [x_eval]),
+        ("qfwd8", qfwd8_fn, pspecs + [x_eval]),
+    ]:
+        fname = f"{name}_{tag}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(os.path.join(outdir, fname), "w") as fh:
+            fh.write(text)
+        arts[name] = fname
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    manifest["models"][tag] = {
+        "dataset": d,
+        "filters": f,
+        "dims": cfg.dims,
+        "input_shape": list(cfg.input_shape),
+        "classes": cfg.classes,
+        "train_batch": tb,
+        "eval_batch": EVAL_BATCH,
+        "param_names": M.PARAM_NAMES,
+        "param_shapes": pshapes,
+        "artifacts": arts,
+    }
+
+
+def lower_kernels(outdir: str, manifest: dict) -> None:
+    """Standalone L1 kernel artifacts: quickstart demo + Rust parity tests."""
+    m, k, n = 32, 24, 16
+
+    def quickstart_fn(xq, wq, bq, mult):
+        return (fm_kernel.fixed_matmul(xq, wq, bq, mult, width=8, relu=True),)
+
+    specs = [_spec((m, k)), _spec((k, n)), _spec((n,)), _spec(())]
+    text = to_hlo_text(jax.jit(quickstart_fn).lower(*specs))
+    with open(os.path.join(outdir, "kernel_fixed_matmul.hlo.txt"), "w") as fh:
+        fh.write(text)
+    manifest["kernels"]["fixed_matmul"] = {
+        "file": "kernel_fixed_matmul.hlo.txt",
+        "m": m, "k": k, "n": n, "width": 8, "relu": True,
+        "inputs": ["xq f32[m,k]", "wq f32[k,n]", "bq f32[n]", "mult f32[]"],
+    }
+    print("  wrote kernel_fixed_matmul.hlo.txt")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="dataset filter, e.g. har")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}, "kernels": {}}
+    lower_kernels(args.out, manifest)
+    for d, filters in SWEEPS.items():
+        if args.only and d != args.only:
+            continue
+        for f in filters:
+            print(f"lowering {d} f={f} ...")
+            lower_model(d, f, args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"manifest: {len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

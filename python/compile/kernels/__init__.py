@@ -1,0 +1,2 @@
+"""L1 Pallas kernels + pure-jnp oracles for the MicroAI reproduction."""
+from . import fake_quant, fixed_matmul, quant_math, ref  # noqa: F401

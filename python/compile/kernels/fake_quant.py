@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: fake quantization (quantize-dequantize) of a tensor.
+
+This is the QAT hot-spot of the paper (§4.3, Fig 2): every conv/dense input,
+weight and output goes through quantize-dequantize during the forward pass.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on the Cortex-M4 the
+paper implements this as a scalar trunc/saturate loop; on TPU the same
+element-wise epilogue is a VPU op over a VMEM-resident tile. The kernel is
+tiled along the leading dimension so each block fits VMEM; the scale is a
+broadcast scalar operand (SMEM-like (1,1) block).
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that the Rust runtime can
+load and run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant_math import qmn_limits
+
+# VPU-friendly tile: 8×128 lanes per step; the row tile is kept modest so
+# that worst-case (rows, cols) blocks stay far below the ~16 MiB VMEM budget.
+_ROW_TILE = 256
+
+
+def _fake_quant_kernel(x_ref, scale_ref, o_ref, *, lo: float, hi: float):
+    scale = scale_ref[0, 0]
+    q = jnp.clip(jnp.trunc(x_ref[...] * scale), lo, hi)
+    o_ref[...] = q / scale
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def fake_quant(x: jax.Array, scale: jax.Array, width: int = 8) -> jax.Array:
+    """Quantize-dequantize `x` (any shape) with scale = 2^n, `width` bits.
+
+    The scale is a traced scalar (recomputed per batch during QAT, frozen at
+    inference — paper §4.3), so it is passed as an operand rather than baked
+    into the kernel.
+    """
+    lo, hi = qmn_limits(width)
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # Pad to a whole number of row tiles of 128 lanes.
+    cols = 128
+    rows = -(-n // cols)
+    rows_pad = -(-rows // _ROW_TILE) * _ROW_TILE
+    buf = jnp.zeros((rows_pad * cols,), x.dtype).at[:n].set(flat)
+    buf = buf.reshape(rows_pad, cols)
+    grid = (rows_pad // _ROW_TILE,)
+    out = pl.pallas_call(
+        functools.partial(_fake_quant_kernel, lo=float(lo), hi=float(hi)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_ROW_TILE, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((_ROW_TILE, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, cols), x.dtype),
+        interpret=True,
+    )(buf, scale.reshape(1, 1).astype(x.dtype))
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: fixed-point matmul with shift/saturate epilogue.
+
+This is the paper's inference hot-spot (§5.8, Table A6): int8 operands,
+wide accumulator, arithmetic-shift-right rescale, saturation, optional fused
+ReLU — exactly the semantics of the generated C inner loop, and of the Rust
+integer engine (`rust/src/nn/int_ops.rs`). Convolutions reach this kernel
+through im2col (ref.im2col_1d/2d), mirroring how the MCU code streams
+patches through a MACC loop.
+
+Hardware adaptation: the Cortex-M4 loop is one MACC/cycle (SMLABB); on TPU
+the same contraction is an MXU matmul over (bm, bk)×(bk, bn) VMEM tiles.
+Operands are integer-valued float32 (exact while |acc| < 2^24, guaranteed
+for int8 operands with K ≤ 2^9), because the CPU interpret path and the
+MXU's bf16/int8 paths both reduce into ≥24-bit accumulators.
+
+The rescale multiplier (2^-shift) is a traced scalar operand: the Qm.n
+shift differs per layer and, under QAT, per batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant_math import qmn_limits
+
+# MXU-friendly tiles. K is kept whole (layer contractions here are ≤ a few
+# hundred), so each grid step is one (bm, K) × (K, bn) VMEM-resident matmul.
+_BM = 128
+_BN = 128
+
+
+def _fixed_matmul_kernel(x_ref, w_ref, b_ref, mult_ref, o_ref, *, lo, hi, relu):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    out = jnp.floor(acc * mult_ref[0, 0])
+    out = jnp.clip(out, lo, hi)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def _pad_to(a, rows, cols):
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("width", "relu"))
+def fixed_matmul(
+    xq: jax.Array,
+    wq: jax.Array,
+    bq: jax.Array,
+    out_mult: jax.Array,
+    width: int = 8,
+    relu: bool = False,
+) -> jax.Array:
+    """Quantized (M,K)×(K,N) matmul with bias, rescale, saturate, [ReLU].
+
+    xq, wq: integer-valued float32 fixed-point payloads.
+    bq: (N,) bias already in the accumulator scale (n_x + n_w bits).
+    out_mult: scalar 2^-shift taking the accumulator to the output scale.
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2, (k, k2)
+    lo, hi = qmn_limits(width)
+    mp = -(-m // _BM) * _BM
+    np_ = -(-n // _BN) * _BN
+    xp = _pad_to(xq, mp, k)
+    wp = _pad_to(wq, k, np_)
+    bp = jnp.pad(bq, (0, np_ - n)).reshape(1, np_)
+    grid = (mp // _BM, np_ // _BN)
+    out = pl.pallas_call(
+        functools.partial(
+            _fixed_matmul_kernel, lo=float(lo), hi=float(hi), relu=relu
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, _BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, _BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((_BM, _BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp, out_mult.reshape(1, 1).astype(jnp.float32))
+    return out[:m, :n]

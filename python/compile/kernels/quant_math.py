@@ -1,0 +1,75 @@
+"""Shared fixed-point quantization math (paper §4.1.4, Eqs 1-4).
+
+This is the single source of truth for the Qm.n scale-factor rule used by
+the JAX model (L2), the Pallas kernels (L1) and — re-implemented in Rust —
+the MicroAI quantizer (L3, `rust/src/quant/`). The Rust unit tests pin the
+same vectors as `python/tests/test_quant_math.py` so the three layers agree.
+
+Conventions (match the paper exactly):
+  m = 1 + floor(log2(max_i |x_i|))       # bits for the unsigned integer part
+  n = w - m - 1                          # bits for the fractional part
+  x_fixed = trunc(x * 2^n)               # truncation toward zero
+  s = 2^-n                               # scale factor (power of two)
+
+A value set with max|x| == 0 gets the maximum fractional precision
+(n = w - 1), mirroring the Rust implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "frac_bits",
+    "quantize_to_int",
+    "fake_quant",
+    "qmn_limits",
+]
+
+
+def qmn_limits(width: int) -> tuple[int, int]:
+    """Inclusive integer limits of a signed `width`-bit fixed-point value."""
+    lo = -(1 << (width - 1))
+    hi = (1 << (width - 1)) - 1
+    return lo, hi
+
+
+def frac_bits(x: jax.Array, width: int) -> jax.Array:
+    """Number of fractional bits `n` for the vector `x` (Eqs 1-2).
+
+    Returns a float32 scalar (kept float so that `exp2` stays cheap inside
+    a jitted graph); its value is always an exact small integer.
+    """
+    maxabs = jnp.max(jnp.abs(x))
+    # Eq 1: m = 1 + floor(log2(max|x|)); an all-zero vector takes m = 0
+    # (n = w - 1, maximum fractional precision) by convention — the Rust
+    # quantizer (rust/src/quant) pins the same rule.
+    m = 1.0 + jnp.floor(jnp.log2(jnp.maximum(maxabs, 1e-38)))
+    m = jnp.where(maxabs > 0, m, 0.0)
+    # Eq 2: n = w - m - 1.
+    n = width - m - 1.0
+    return n.astype(jnp.float32)
+
+
+def quantize_to_int(x: jax.Array, n: jax.Array, width: int) -> jax.Array:
+    """Eq 3 with saturation: integer-valued float tensor trunc(x * 2^n).
+
+    The result is kept in float32 (holding exact small integers) so that it
+    can flow through XLA/Pallas on any backend; the Rust engine stores the
+    same values as i8/i16.
+    """
+    lo, hi = qmn_limits(width)
+    scaled = jnp.trunc(x * jnp.exp2(n))
+    return jnp.clip(scaled, float(lo), float(hi))
+
+
+def fake_quant(x: jax.Array, width: int) -> jax.Array:
+    """Quantize-dequantize with a straight-through estimator (paper §4.3).
+
+    Forward: clip(trunc(x * 2^n), lo, hi) * 2^-n  with n from Eqs 1-2.
+    Backward: identity (STE), so QAT gradients flow through.
+    """
+    n = frac_bits(x, width)
+    q = quantize_to_int(x, n, width) * jnp.exp2(-n)
+    return x + jax.lax.stop_gradient(q - x)

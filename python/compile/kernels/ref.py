@@ -1,0 +1,92 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jnp ops and no tiling, used by pytest/hypothesis to
+check numerics. The oracles also serve as the L2 building blocks when the
+Pallas path is disabled (e.g. inside the training step, where interpret-mode
+Pallas would slow lowering down without changing the math).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .quant_math import qmn_limits
+
+
+def fake_quant_with_scale_ref(x, scale, width: int):
+    """Reference for kernels.fake_quant: clip(trunc(x*scale), lo, hi)/scale."""
+    lo, hi = qmn_limits(width)
+    q = jnp.clip(jnp.trunc(x * scale), float(lo), float(hi))
+    return q / scale
+
+
+def fixed_matmul_ref(xq, wq, out_mult, width: int):
+    """Reference for kernels.fixed_matmul.
+
+    xq: (M, K) integer-valued float32 (fixed-point payload)
+    wq: (K, N) integer-valued float32
+    out_mult: scalar 2^-shift rescale multiplier (power of two)
+    Semantics of the generated C (paper §5.8 / Table A6): widen, MACC,
+    arithmetic-shift-right (floor), saturate to `width` bits.
+    """
+    lo, hi = qmn_limits(width)
+    acc = xq @ wq  # exact in f32 while |acc| < 2^24 (int8 operands)
+    out = jnp.floor(acc * out_mult)  # ASR == floor division for 2^k scales
+    return jnp.clip(out, float(lo), float(hi))
+
+
+def fixed_matmul_bias_ref(xq, wq, bq, out_mult, width: int, relu: bool):
+    """fixed_matmul with accumulator-scale bias add and optional fused ReLU.
+
+    `bq` must already be expressed in the accumulator's scale
+    (n_x + n_w fractional bits), exactly like the Rust engine and the
+    generated C (§5.8: operands of an addition must share the format).
+    """
+    lo, hi = qmn_limits(width)
+    acc = xq @ wq + bq[None, :]
+    out = jnp.floor(acc * out_mult)
+    out = jnp.clip(out, float(lo), float(hi))
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def im2col_1d(x, kernel: int, stride: int, pad_lo: int, pad_hi: int):
+    """Unroll a (B, S, C) input into (B, S_out, kernel*C) patches.
+
+    Tap-major, channel-minor ordering — matches w.reshape(k*C, F) for a
+    WIO-layout weight tensor (k, C, F).
+    """
+    b, s, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad_lo, pad_hi), (0, 0)))
+    s_out = (s + pad_lo + pad_hi - kernel) // stride + 1
+    taps = [xp[:, i : i + s_out * stride : stride, :] for i in range(kernel)]
+    return jnp.concatenate(taps, axis=-1), s_out
+
+
+def im2col_2d(x, kh: int, kw: int, stride: int, pads):
+    """Unroll a (B, H, W, C) input into (B, H_out, W_out, kh*kw*C) patches.
+
+    Row-major over (tap_h, tap_w), channel-minor — matches
+    w.reshape(kh*kw*C, F) for an HWIO-layout weight tensor.
+    """
+    b, h, w, c = x.shape
+    (plh, phh), (plw, phw) = pads
+    xp = jnp.pad(x, ((0, 0), (plh, phh), (plw, phw), (0, 0)))
+    h_out = (h + plh + phh - kh) // stride + 1
+    w_out = (w + plw + phw - kw) // stride + 1
+    taps = []
+    for i in range(kh):
+        for j in range(kw):
+            taps.append(
+                xp[:, i : i + h_out * stride : stride, j : j + w_out * stride : stride, :]
+            )
+    return jnp.concatenate(taps, axis=-1), h_out, w_out
+
+
+def same_padding(size: int, kernel: int, stride: int) -> tuple[int, int]:
+    """XLA SAME padding amounts (lo, hi) for one spatial dimension."""
+    out = -(-size // stride)  # ceil
+    total = max((out - 1) * stride + kernel - size, 0)
+    return total // 2, total - total // 2

@@ -1,0 +1,351 @@
+"""L2: the paper's model — ResNetv1-6 (Fig 4) in JAX, float and QAT forward,
+plus the SGD(+momentum, +weight-decay, +mixup) training step of §6.
+
+Everything here runs at BUILD TIME only: `aot.py` lowers these functions to
+HLO text artifacts that the Rust coordinator loads through PJRT. Python is
+never on the request path.
+
+Architecture (reverse-engineered from Fig 4 and the 3958-byte int8 @ f=16
+datapoint, DESIGN.md §7):
+
+    Conv(k=3, f, SAME) + ReLU
+    MaxPool(2)
+    Block1: Conv3-ReLU-Conv3, identity shortcut, Add, ReLU
+    MaxPool(2)
+    Block2: Conv3(stride 2)-ReLU-Conv3, 1x1-conv(stride 2) shortcut, Add, ReLU
+    GlobalAvgPool
+    Dense(classes)
+
+The 2D variant (GTSRB) uses 3x3 convs and 2x2 pools. All convs carry a bias
+(no BatchNorm — §4.3: "we do not use batch normalization in our
+experiments"; BN folding is still implemented in the Rust graph passes for
+completeness).
+
+Parameter order is the deployment contract shared with Rust
+(`runtime::artifact`): see PARAM_NAMES.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.quant_math import fake_quant, frac_bits, quantize_to_int
+from .kernels import fake_quant as fq_kernel
+from .kernels import fixed_matmul as fm_kernel
+from .kernels.ref import im2col_1d, im2col_2d, same_padding
+
+PARAM_NAMES = [
+    "c1w", "c1b",
+    "b1c1w", "b1c1b", "b1c2w", "b1c2b",
+    "b2c1w", "b2c1b", "b2c2w", "b2c2b",
+    "scw", "scb",
+    "dw", "db",
+]
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+MIXUP_ALPHA = 0.2
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of one ResNetv1-6 instance."""
+
+    dims: int           # 1 or 2 spatial dimensions
+    input_shape: tuple  # (S, C) or (H, W, C)
+    classes: int
+    filters: int
+    kernel: int = 3
+
+    @property
+    def in_channels(self) -> int:
+        return self.input_shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    """He-normal conv weights, Glorot dense, zero biases.
+
+    Returns a list of arrays in PARAM_NAMES order.
+    """
+    f, c, k = cfg.filters, cfg.in_channels, cfg.kernel
+    keys = jax.random.split(key, 7)
+
+    def he(key, shape, fan_in):
+        return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    # Small positive bias reduces dead-ReLU inits, which otherwise pin the
+    # 43-class model at the ln(C) plateau with vanishing gradients.
+    bias = lambda n: jnp.full((n,), 0.01, jnp.float32)
+
+    if cfg.dims == 1:
+        conv_shape = lambda ci, co: (k, ci, co)
+        one_shape = lambda ci, co: (1, ci, co)
+        fan = lambda ci: k * ci
+    else:
+        conv_shape = lambda ci, co: (k, k, ci, co)
+        one_shape = lambda ci, co: (1, 1, ci, co)
+        fan = lambda ci: k * k * ci
+
+    params = [
+        he(keys[0], conv_shape(c, f), fan(c)), bias(f),
+        he(keys[1], conv_shape(f, f), fan(f)), bias(f),
+        he(keys[2], conv_shape(f, f), fan(f)), bias(f),
+        he(keys[3], conv_shape(f, f), fan(f)), bias(f),
+        he(keys[4], conv_shape(f, f), fan(f)), bias(f),
+        he(keys[5], one_shape(f, f), f), bias(f),
+        # Damped classifier init: near-zero logits at start avoid the
+        # uniform-softmax collapse basin that mixup + 43 classes can hit.
+        jax.random.normal(keys[6], (f, cfg.classes), jnp.float32)
+        * (0.1 * jnp.sqrt(1.0 / f)),
+        bias(cfg.classes),
+    ]
+    assert len(params) == len(PARAM_NAMES)
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    key = jax.random.PRNGKey(0)
+    return sum(int(p.size) for p in init_params(key, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def _conv(x, w, b, stride: int, dims: int):
+    if dims == 1:
+        dn = ("NWC", "WIO", "NWC")
+        strides = (stride,)
+    else:
+        dn = ("NHWC", "HWIO", "NHWC")
+        strides = (stride, stride)
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=strides, padding="SAME", dimension_numbers=dn
+    )
+    return y + b
+
+
+def _maxpool(x, dims: int, size: int = 2):
+    if dims == 1:
+        window = (1, size, 1)
+        strides = (1, size, 1)
+    else:
+        window = (1, size, size, 1)
+        strides = (1, size, size, 1)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, window, strides, "VALID"
+    )
+
+
+def _global_avgpool(x, dims: int):
+    axes = (1,) if dims == 1 else (1, 2)
+    return jnp.mean(x, axis=axes)
+
+
+# ---------------------------------------------------------------------------
+# Quantization wrappers (QAT forward, paper Fig 2)
+# ---------------------------------------------------------------------------
+
+def _maybe_fq(x, width, use_pallas: bool):
+    """Fake-quantize with dynamically reassessed scale (paper §4.3)."""
+    if width is None:
+        return x
+    if use_pallas:
+        n = frac_bits(x, width)
+        return fq_kernel.fake_quant(x, jnp.exp2(n), width)
+    return fake_quant(x, width)
+
+
+def _qconv(x, w, b, stride, dims, width, use_pallas, relu):
+    """Conv in QAT mode: quantize inputs/weights/bias, compute, quantize out.
+
+    With use_pallas=True the contraction itself runs through the L1
+    fixed_matmul kernel on im2col patches — the same integer dataflow as the
+    MCU inner loop (trunc/shift/saturate included).
+    """
+    if width is None:
+        y = _conv(x, w, b, stride, dims)
+        return jnp.maximum(y, 0.0) if relu else y
+
+    if not use_pallas:
+        xq = fake_quant(x, width)
+        wq = fake_quant(w, width)
+        bq = fake_quant(b, width)
+        y = _conv(xq, wq, bq, stride, dims)
+        y = jnp.maximum(y, 0.0) if relu else y
+        return fake_quant(y, width)
+
+    # --- Pallas integer path (inference artifacts) ---
+    nx = frac_bits(x, width)
+    nw = frac_bits(w, width)
+    xq = quantize_to_int(x, nx, width)          # int payload in f32
+    wq = quantize_to_int(w, nw, width)
+    # Bias is expressed directly in the accumulator scale (nx + nw).
+    bacc = jnp.trunc(b * jnp.exp2(nx + nw))
+    # Output scale: reassessed from the float-path output range.
+    yf = _conv(x, w, b, stride, dims)
+    yf = jnp.maximum(yf, 0.0) if relu else yf
+    ny = frac_bits(yf, width)
+    shift_mult = jnp.exp2(ny - nx - nw)         # 2^-(nx+nw-ny)
+
+    if dims == 1:
+        kk = w.shape[0]
+        pl_, ph = same_padding(x.shape[1], kk, stride)
+        patches, s_out = im2col_1d(xq, kk, stride, pl_, ph)
+        m = x.shape[0] * s_out
+        acc = fm_kernel.fixed_matmul(
+            patches.reshape(m, -1), wq.reshape(-1, w.shape[-1]),
+            bacc, shift_mult, width=width, relu=relu,
+        )
+        yq = acc.reshape(x.shape[0], s_out, w.shape[-1])
+    else:
+        kh, kw = w.shape[0], w.shape[1]
+        pads = (
+            same_padding(x.shape[1], kh, stride),
+            same_padding(x.shape[2], kw, stride),
+        )
+        patches, h_out, w_out = im2col_2d(xq, kh, kw, stride, pads)
+        m = x.shape[0] * h_out * w_out
+        acc = fm_kernel.fixed_matmul(
+            patches.reshape(m, -1), wq.reshape(-1, w.shape[-1]),
+            bacc, shift_mult, width=width, relu=relu,
+        )
+        yq = acc.reshape(x.shape[0], h_out, w_out, w.shape[-1])
+    return yq * jnp.exp2(-ny)                   # back to real scale
+
+
+def _qdense(x, w, b, width, use_pallas):
+    if width is None:
+        return x @ w + b
+    if not use_pallas:
+        xq = fake_quant(x, width)
+        wq = fake_quant(w, width)
+        bq = fake_quant(b, width)
+        return xq @ wq + bq
+    nx = frac_bits(x, width)
+    nw = frac_bits(w, width)
+    xq = quantize_to_int(x, nx, width)
+    wq = quantize_to_int(w, nw, width)
+    bacc = jnp.trunc(b * jnp.exp2(nx + nw))
+    yf = x @ w + b
+    ny = frac_bits(yf, width)
+    # Keep logits wide (the final layer feeds argmax, paper keeps it in the
+    # layer dtype; we saturate to the same width for parity with the C code).
+    acc = fm_kernel.fixed_matmul(
+        xq, wq, bacc, jnp.exp2(ny - nx - nw), width=width, relu=False
+    )
+    return acc * jnp.exp2(-ny)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def apply(params, x, cfg: ModelConfig, width=None, use_pallas: bool = False):
+    """ResNetv1-6 forward. width=None → float32; width=8 → QAT fake-quant;
+    use_pallas routes conv/dense contractions through the L1 kernels."""
+    (c1w, c1b, b1c1w, b1c1b, b1c2w, b1c2b,
+     b2c1w, b2c1b, b2c2w, b2c2b, scw, scb, dw, db) = params
+    d = cfg.dims
+
+    x = _maybe_fq(x, width, use_pallas)
+    h = _qconv(x, c1w, c1b, 1, d, width, use_pallas, relu=True)
+    h = _maxpool(h, d)
+
+    # Block 1: identity shortcut
+    y = _qconv(h, b1c1w, b1c1b, 1, d, width, use_pallas, relu=True)
+    y = _qconv(y, b1c2w, b1c2b, 1, d, width, use_pallas, relu=False)
+    h = jnp.maximum(h + y, 0.0)
+    h = _maybe_fq(h, width, use_pallas)
+    h = _maxpool(h, d)
+
+    # Block 2: stride-2 with 1x1-conv shortcut
+    y = _qconv(h, b2c1w, b2c1b, 2, d, width, use_pallas, relu=True)
+    y = _qconv(y, b2c2w, b2c2b, 1, d, width, use_pallas, relu=False)
+    s = _qconv(h, scw, scb, 2, d, width, use_pallas, relu=False)
+    h = jnp.maximum(s + y, 0.0)
+    h = _maybe_fq(h, width, use_pallas)
+
+    h = _global_avgpool(h, d)
+    return _qdense(h, dw, db, width, use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Training (paper §6: SGD momentum 0.9, weight decay 5e-4, mixup, z-scored
+# inputs; LR schedule is driven from the Rust coordinator via the lr input)
+# ---------------------------------------------------------------------------
+
+def _cross_entropy(logits, onehot):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def _mixup(key, x, y_onehot):
+    """Mixup (Zhang et al. 2018) with Beta(alpha, alpha)."""
+    kl, kp = jax.random.split(key)
+    lam = jax.random.beta(kl, MIXUP_ALPHA, MIXUP_ALPHA)
+    perm = jax.random.permutation(kp, x.shape[0])
+    xm = lam * x + (1.0 - lam) * x[perm]
+    ym = lam * y_onehot + (1.0 - lam) * y_onehot[perm]
+    return xm, ym
+
+
+def train_step(params, mom, x, y, key_data, lr, cfg: ModelConfig, width=None):
+    """One SGD step. Returns (new_params, new_mom, loss).
+
+    params/mom: lists in PARAM_NAMES order. x: batch inputs. y: int32 labels.
+    key_data: uint32[2] PRNG key payload. lr: scalar learning rate.
+    width: None for the float phase, 8 for QAT fine-tuning (§4.3).
+    """
+    key = jax.random.wrap_key_data(key_data.astype(jnp.uint32),
+                                   impl="threefry2x32")
+
+    def loss_fn(p):
+        y1 = jax.nn.one_hot(y, cfg.classes)
+        xm, ym = _mixup(key, x, y1)
+        logits = apply(p, xm, cfg, width=width)
+        return _cross_entropy(logits, ym)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_mom, new_params = [], []
+    for p, m, g in zip(params, mom, grads):
+        g = g + WEIGHT_DECAY * p
+        m2 = MOMENTUM * m + g
+        new_mom.append(m2)
+        new_params.append(p - lr * m2)
+    return new_params, new_mom, loss
+
+
+def accuracy(params, x, y, cfg: ModelConfig, width=None, use_pallas=False):
+    logits = apply(params, x, cfg, width=width, use_pallas=use_pallas)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Dataset model configurations (paper §6.1) — shapes only; the data itself
+# is synthesized by the Rust coordinator (DESIGN.md §3 substitutions).
+# ---------------------------------------------------------------------------
+
+DATASETS = {
+    "har": ModelConfig(dims=1, input_shape=(128, 9), classes=6, filters=0),
+    "smnist": ModelConfig(dims=1, input_shape=(39, 13), classes=10, filters=0),
+    "gtsrb": ModelConfig(dims=2, input_shape=(32, 32, 3), classes=43, filters=0),
+}
+
+
+def make_config(dataset: str, filters: int) -> ModelConfig:
+    base = DATASETS[dataset]
+    return ModelConfig(
+        dims=base.dims,
+        input_shape=base.input_shape,
+        classes=base.classes,
+        filters=filters,
+    )

@@ -1,0 +1,145 @@
+"""Hypothesis sweeps: Pallas kernels (L1) vs pure-jnp oracles (ref.py).
+
+This is the CORE correctness signal for the build-time compute path: if
+these pass, the HLO artifacts produced by aot.py carry the same integer
+semantics the Rust engine implements.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant as fqk
+from compile.kernels import fixed_matmul as fmk
+from compile.kernels import ref
+from compile.kernels.quant_math import frac_bits, qmn_limits, quantize_to_int
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant kernel
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n_elems=st.integers(1, 5000),
+    width=st.sampled_from([8, 9, 16]),
+    nbits=st.integers(-2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_kernel_vs_ref(n_elems, width, nbits, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n_elems,), scale=3.0)
+    scale = jnp.float32(2.0**nbits)
+    got = fqk.fake_quant(x, scale, width)
+    want = ref.fake_quant_with_scale_ref(x, scale, width)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.sampled_from([(3,), (4, 5), (2, 3, 4), (2, 3, 4, 5)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_kernel_preserves_shape(shape, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, shape)
+    got = fqk.fake_quant(x, jnp.float32(64.0), 8)
+    assert got.shape == shape
+
+
+# ---------------------------------------------------------------------------
+# fixed_matmul kernel
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 160),
+    shift=st.integers(0, 10),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fixed_matmul_kernel_vs_ref(m, k, n, shift, relu, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = qmn_limits(8)
+    xq = jnp.asarray(rng.integers(lo, hi + 1, size=(m, k)).astype(np.float32))
+    wq = jnp.asarray(rng.integers(lo, hi + 1, size=(k, n)).astype(np.float32))
+    bq = jnp.asarray(rng.integers(-(1 << 12), 1 << 12, size=(n,)).astype(np.float32))
+    mult = jnp.float32(2.0**-shift)
+    got = fmk.fixed_matmul(xq, wq, bq, mult, width=8, relu=relu)
+    want = ref.fixed_matmul_bias_ref(xq, wq, bq, mult, 8, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fixed_matmul_saturates_exactly():
+    # A single huge accumulator must clamp to +127 / -128.
+    xq = jnp.full((1, 4), 127.0)
+    wq = jnp.full((4, 2), 127.0).at[:, 1].set(-128.0)
+    bq = jnp.zeros((2,))
+    got = fmk.fixed_matmul(xq, wq, bq, jnp.float32(1.0), width=8, relu=False)
+    assert got.tolist() == [[127.0, -128.0]]
+
+
+# ---------------------------------------------------------------------------
+# im2col helpers (used by the qfwd8 artifacts)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(4, 64),
+    c=st.integers(1, 8),
+    f=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_conv1d_matches_lax(s, c, f, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (2, s, c))
+    w = _rand(rng, (3, c, f))
+    pl_, ph = ref.same_padding(s, 3, stride)
+    patches, s_out = ref.im2col_1d(x, 3, stride, pl_, ph)
+    got = (patches.reshape(2 * s_out, -1) @ w.reshape(-1, f)).reshape(2, s_out, f)
+    want = jax.lax.conv_general_dilated(
+        x, w, (stride,), "SAME", dimension_numbers=("NWC", "WIO", "NWC")
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    c=st.integers(1, 4),
+    f=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_conv2d_matches_lax(h, c, f, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (2, h, h, c))
+    w = _rand(rng, (3, 3, c, f))
+    pads = (ref.same_padding(h, 3, stride), ref.same_padding(h, 3, stride))
+    patches, ho, wo = ref.im2col_2d(x, 3, 3, stride, pads)
+    got = (patches.reshape(2 * ho * wo, -1) @ w.reshape(-1, f)).reshape(2, ho, wo, f)
+    want = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# accumulator exactness precondition (DESIGN: |acc| < 2^24 for int8)
+# ---------------------------------------------------------------------------
+
+def test_accumulator_exactness_bound():
+    # Largest contraction in the artifact sweep: k=3 taps * 80 ch = 240.
+    k = 240
+    worst = k * 128 * 128 + (1 << 13)
+    assert worst < 2**24, "int8 accumulation must stay exact in f32"

@@ -1,0 +1,114 @@
+"""L2 model tests: shapes, the paper's parameter-count datapoint, training
+behaviour, and QAT/Pallas-path consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def har_cfg():
+    return M.make_config("har", 16)
+
+
+def test_param_count_matches_paper(har_cfg):
+    # §6.1.1: "an 8-bit quantization ... 3958 memory bytes to store the
+    # parameters" at 16 filters -> exactly 3958 parameters.
+    assert M.param_count(har_cfg) == 3958
+
+
+@pytest.mark.parametrize("dataset,filters,batch", [
+    ("har", 8, 3), ("smnist", 8, 3), ("gtsrb", 8, 2),
+])
+def test_forward_shapes(dataset, filters, batch):
+    cfg = M.make_config(dataset, filters)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch,) + cfg.input_shape)
+    for kwargs in ({}, {"width": 8}, {"width": 8, "use_pallas": True}):
+        out = M.apply(params, x, cfg, **kwargs)
+        assert out.shape == (batch, cfg.classes)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_param_shapes_stable(har_cfg):
+    params = M.init_params(jax.random.PRNGKey(0), har_cfg)
+    assert len(params) == len(M.PARAM_NAMES) == 14
+    assert params[0].shape == (3, 9, 16)
+    assert params[10].shape == (1, 16, 16)  # 1x1 shortcut
+    assert params[12].shape == (16, 6)
+
+
+def test_train_step_decreases_loss(har_cfg):
+    cfg = har_cfg
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    mom = [jnp.zeros_like(p) for p in params]
+    # Learnable synthetic signal: class-dependent sinusoid.
+    b = 32
+    y = jnp.arange(b, dtype=jnp.int32) % cfg.classes
+    t = jnp.arange(128.0)
+    base = jnp.sin(t[None, :, None] * (0.05 + 0.05 * y[:, None, None]))
+    x = base + 0.1 * jax.random.normal(key, (b, 128, 9))
+
+    step = jax.jit(lambda p, m, kd: M.train_step(
+        p, m, x, y, kd, jnp.float32(0.05), cfg))
+    first = None
+    for i in range(30):
+        kd = jnp.array([0, i], dtype=jnp.uint32)
+        params, mom, loss = step(params, mom, kd)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, (float(loss), first)
+
+
+def test_qat_train_step_runs(har_cfg):
+    cfg = har_cfg
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    mom = [jnp.zeros_like(p) for p in params]
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 128, 9))
+    y = jnp.zeros((8,), jnp.int32)
+    kd = jnp.array([0, 0], dtype=jnp.uint32)
+    p2, m2, loss = M.train_step(params, mom, x, y, kd, jnp.float32(0.01),
+                                cfg, width=8)
+    assert jnp.isfinite(loss)
+    # QAT must actually update the parameters (STE gradients flow).
+    moved = sum(float(jnp.max(jnp.abs(a - b))) for a, b in zip(params, p2))
+    assert moved > 0
+
+
+def test_weight_decay_shrinks_unused_params(har_cfg):
+    # With lr > 0 and zero-ish gradients on a dead path, weight decay alone
+    # must shrink the parameter norm (SGD contract of §6).
+    cfg = har_cfg
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    mom = [jnp.zeros_like(p) for p in params]
+    x = jnp.zeros((4, 128, 9))
+    y = jnp.zeros((4,), jnp.int32)
+    kd = jnp.array([0, 0], dtype=jnp.uint32)
+    p2, _, _ = M.train_step(params, mom, x, y, kd, jnp.float32(0.1), cfg)
+    # conv1 weight gets zero data -> only decay: ||p2|| < ||p||
+    assert float(jnp.linalg.norm(p2[0])) < float(jnp.linalg.norm(params[0]))
+
+
+def test_pallas_path_close_to_fake_quant_path(har_cfg):
+    """The integer Pallas path and the fake-quant float path differ only in
+    where truncation happens; logits must stay within a few quantization
+    steps of each other."""
+    cfg = har_cfg
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 9))
+    a = M.apply(params, x, cfg, width=8)
+    b = M.apply(params, x, cfg, width=8, use_pallas=True)
+    assert float(jnp.max(jnp.abs(a - b))) < 0.5
+
+
+def test_accuracy_helper(har_cfg):
+    cfg = har_cfg
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 128, 9))
+    y = jnp.zeros((16,), jnp.int32)
+    acc = M.accuracy(params, x, y, cfg)
+    assert 0.0 <= float(acc) <= 1.0

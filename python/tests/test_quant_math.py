@@ -1,0 +1,76 @@
+"""Pinned vectors for the Qm.n scale rule (Eqs 1-4).
+
+The same vectors are pinned in rust/src/quant tests — the contract keeping
+the three layers in agreement.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.quant_math import fake_quant, frac_bits, qmn_limits, quantize_to_int
+
+
+# (max_abs, width, expected_n)
+PINNED_N = [
+    (1.0, 8, 6),       # m = 1 -> Q1.6 (sign excluded from m per Eq 2)
+    (1.98, 8, 6),
+    (2.0, 8, 5),       # m = 2
+    (0.49, 8, 8),      # m = -1 -> leading unused bits recovered (§4.1.4)
+    (0.25, 8, 8),      # m = 1 + floor(-2) = -1
+    (100.0, 8, 0),     # m = 7
+    (200.0, 8, -1),    # m = 8: integer part not fully representable
+    (1.0, 16, 14),
+    (3.0, 16, 13),
+    (0.0078125, 16, 21),  # 2^-7 -> m = -6
+]
+
+
+@pytest.mark.parametrize("maxabs,width,expected", PINNED_N)
+def test_frac_bits_pinned(maxabs, width, expected):
+    x = jnp.array([maxabs, -maxabs / 2, 0.0])
+    assert int(frac_bits(x, width)) == expected
+
+
+def test_frac_bits_zero_vector():
+    x = jnp.zeros((4,))
+    assert int(frac_bits(x, 8)) == 7
+
+
+def test_quantize_saturates():
+    x = jnp.array([300.0, -300.0])
+    q = quantize_to_int(x, jnp.float32(0.0), 8)
+    lo, hi = qmn_limits(8)
+    assert q.tolist() == [float(hi), float(lo)]
+
+
+def test_quantize_truncates_toward_zero():
+    # Eq 3 uses trunc, not round: 1.9 -> 1, -1.9 -> -1 (at n = 0)
+    q = quantize_to_int(jnp.array([1.9, -1.9]), jnp.float32(0.0), 8)
+    assert q.tolist() == [1.0, -1.0]
+
+
+def test_fake_quant_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=512).astype(np.float32))
+    for width in (8, 9, 16):
+        n = int(frac_bits(x, width))
+        step = 2.0 ** (-n)
+        err = np.abs(np.asarray(fake_quant(x, width)) - np.asarray(x))
+        # trunc error < one step everywhere (no saturation by construction)
+        assert err.max() < step + 1e-7
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    q1 = fake_quant(x, 8)
+    q2 = fake_quant(q1, 8)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-7)
+
+
+def test_fake_quant_gradient_is_identity():
+    import jax
+
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, 8)))(jnp.ones((4,)) * 0.3)
+    np.testing.assert_allclose(np.asarray(g), np.ones(4), atol=1e-6)

@@ -1,0 +1,121 @@
+//! Table A1/A2: float32 inference time per input on MCU vs CPU vs GPU.
+//!
+//!   MCU — the calibrated STM32Cube.AI Nucleo model (Table A2's MCU row is
+//!         the Cube.AI float32 series).
+//!   CPU — REAL measurement: the `fwd` HLO artifact executed batched via
+//!         PJRT on this host (batch = eval_batch, amortized per input, as
+//!         the paper amortizes batch-512 runs).
+//!   GPU — throughput model from the paper's Quadro P2000M column
+//!         (no GPU in this environment; DESIGN.md §3).
+//!
+//! Run: `make artifacts && cargo bench --bench bench_host_a2`
+
+use microai::coordinator::trainer::Trainer;
+use microai::mcu::cost::{har_graph, validate_latency};
+use microai::mcu::paper_data::{self, DType, FILTERS};
+use microai::runtime::exec::{lit_f32, to_f32};
+use microai::runtime::Runtime;
+use microai::util::prng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    println!("==== Table A2: float32 inference time per input (ms) ====");
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP CPU rows (run `make artifacts`): {e}");
+            return Ok(());
+        }
+    };
+
+    // MCU model (Cube.AI float on Nucleo).
+    let mcu_series = paper_data::find(
+        &paper_data::TABLE_A4_MS, "STM32Cube.AI", "NucleoL452REP", DType::F32).unwrap();
+    let mcu = validate_latency(mcu_series);
+
+    // Host CPU: available artifact filter counts.
+    let mut cpu_rows: Vec<(usize, f64)> = Vec::new();
+    let tags: Vec<String> = rt
+        .manifest
+        .models
+        .values()
+        .filter(|m| m.dataset == "har")
+        .map(|m| m.tag.clone())
+        .collect();
+    for tag in &tags {
+        let spec = rt.spec(tag)?.clone();
+        let mut trainer = Trainer::new(&rt, 1);
+        let state = trainer.init(tag)?;
+        let exe = rt.compile_model(tag, "fwd")?;
+        let b = spec.eval_batch;
+        let ex_len = spec.example_len();
+        let mut rng = Pcg32::seeded(5);
+        let xs: Vec<f32> = (0..b * ex_len).map(|_| rng.normal()).collect();
+        let mut shape = vec![b];
+        shape.extend_from_slice(&spec.input_shape);
+        let mut inputs: Vec<xla::Literal> = state.params.to_vec();
+        inputs.push(lit_f32(&xs, &shape)?);
+        // Warmup + timed runs.
+        for _ in 0..3 {
+            let _ = exe.run(&inputs)?;
+        }
+        let mut samples = Vec::new();
+        for _ in 0..10 {
+            let t0 = std::time::Instant::now();
+            let out = exe.run(&inputs)?;
+            let _ = to_f32(&out[0])?;
+            samples.push(t0.elapsed().as_secs_f64() * 1e3 / b as f64);
+        }
+        cpu_rows.push((spec.filters, microai::util::stats::median(&samples)));
+    }
+    cpu_rows.sort_by(|a, b| a.0.cmp(&b.0));
+
+    println!(
+        "\n{:<22} {}",
+        "Platform",
+        FILTERS.iter().map(|f| format!("{f:>9}")).collect::<String>()
+    );
+    print!("{:<22}", "MCU (model)");
+    for v in &mcu.predicted {
+        print!("{v:>9.1}");
+    }
+    println!();
+    print!("{:<22}", "MCU (paper)");
+    for v in paper_data::TABLE_A2_MCU_MS {
+        print!("{v:>9.1}");
+    }
+    println!();
+    print!("{:<22}", "CPU host (measured)");
+    for f in FILTERS {
+        match cpu_rows.iter().find(|(ff, _)| *ff == f) {
+            Some((_, ms)) => print!("{ms:>9.4}"),
+            None => print!("{:>9}", "-"),
+        }
+    }
+    println!("   (artifact filters: {:?})", cpu_rows.iter().map(|r| r.0).collect::<Vec<_>>());
+    print!("{:<22}", "CPU (paper i7-8850H)");
+    for v in paper_data::TABLE_A2_CPU_MS {
+        print!("{v:>9.4}");
+    }
+    println!();
+    print!("{:<22}", "GPU (paper P2000M)");
+    for v in paper_data::TABLE_A2_GPU_MS {
+        print!("{v:>9.4}");
+    }
+    println!("   (GPU column: paper values; no GPU in this testbed)");
+
+    // The A2 headline: the MCU runs 3-5 orders of magnitude slower than
+    // CPU/GPU — verify our measured host CPU reproduces that gap.
+    if let Some((f, cpu_ms)) = cpu_rows.last() {
+        let g = har_graph(*f);
+        let mcu_ms = {
+            let board = microai::mcu::board::Board::by_name("NucleoL452REP").unwrap();
+            let model = microai::mcu::cost::LatencyModel::calibrate(mcu_series, board);
+            model.latency_s(&g, board) * 1e3
+        };
+        let ratio = mcu_ms / cpu_ms;
+        println!("\nMCU/CPU slowdown at f={f}: {ratio:.0}x (paper: ~{:.0}x at f=80)",
+            paper_data::TABLE_A2_MCU_MS[6] / paper_data::TABLE_A2_CPU_MS[6]);
+        assert!(ratio > 100.0, "MCU must be orders of magnitude slower");
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Hot-path micro-benchmarks (criterion-free harness, util::bench):
+//! the integer conv/dense kernels, whole-graph inference per dtype, the
+//! quantizer and the allocator. These are the numbers the §Perf pass in
+//! EXPERIMENTS.md tracks.
+//!
+//! Run: `cargo bench --bench bench_hotpath`
+
+use microai::graph::ir::LayerKind;
+use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
+use microai::nn::float_exec::{self, ActStats};
+use microai::nn::{affine_exec, int_exec};
+use microai::quant::{quantize, quantize_affine, QuantSpec};
+use microai::util::bench::{black_box, print_header, Bencher};
+use microai::util::prng::Pcg32;
+
+fn randomized_har(filters: usize) -> Graph {
+    let mut g = resnet_v1_6_shapes("har", 1, &[128, 9], 6, filters);
+    let mut rng = Pcg32::seeded(1);
+    for n in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.3;
+            }
+            for v in b.data.iter_mut() {
+                *v = 0.01;
+            }
+        }
+    }
+    deploy_pipeline(&g)
+}
+
+fn calibrated_stats(g: &Graph, ex_len: usize) -> ActStats {
+    let mut stats = ActStats::new(g.nodes.len());
+    let mut rng = Pcg32::seeded(2);
+    for _ in 0..8 {
+        let x: Vec<f32> = (0..ex_len).map(|_| rng.normal()).collect();
+        float_exec::run(g, &x, Some(&mut stats));
+    }
+    stats
+}
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Pcg32::seeded(3);
+
+    print_header("whole-graph single-input inference (UCI-HAR ResNet)");
+    for filters in [16usize, 80] {
+        let g = randomized_har(filters);
+        let ex_len = 128 * 9;
+        let stats = calibrated_stats(&g, ex_len);
+        let x: Vec<f32> = (0..ex_len).map(|_| rng.normal()).collect();
+        let macc = microai::mcu::graph_ops(&g).macc as f64;
+
+        let r = b.run_throughput(&format!("float32 f={filters}"), macc, "MACC/s", || {
+            black_box(float_exec::run(&g, &x, None));
+        });
+        println!("{}", r.report());
+
+        for (label, spec) in [
+            ("int8 ", QuantSpec::int8_per_layer()),
+            ("int16", QuantSpec::int16_per_layer()),
+        ] {
+            let qg = quantize(&g, &stats, spec);
+            let r = b.run_throughput(&format!("{label} f={filters}"), macc, "MACC/s", || {
+                black_box(int_exec::run(&qg, &x));
+            });
+            println!("{}", r.report());
+        }
+
+        let aq = quantize_affine(&g, &stats);
+        let r = b.run_throughput(&format!("affine int8 f={filters}"), macc, "MACC/s", || {
+            black_box(affine_exec::run(&aq, &x));
+        });
+        println!("{}", r.report());
+    }
+
+    print_header("quantizer (PTQ over full graph, f=32)");
+    let g = randomized_har(32);
+    let stats = calibrated_stats(&g, 128 * 9);
+    for (label, spec) in [
+        ("int8 per-layer ", QuantSpec::int8_per_layer()),
+        ("int8 per-filter", QuantSpec::int8_per_filter()),
+        ("int16 per-layer", QuantSpec::int16_per_layer()),
+    ] {
+        let r = b.run(label, || {
+            black_box(quantize(&g, &stats, spec));
+        });
+        println!("{}", r.report());
+    }
+
+    print_header("calibration pass (float forward with stats, f=32)");
+    let x: Vec<f32> = (0..128 * 9).map(|_| rng.normal()).collect();
+    let r = b.run("calibrate 1 example", || {
+        let mut s = ActStats::new(g.nodes.len());
+        black_box(float_exec::run(&g, &x, Some(&mut s)));
+    });
+    println!("{}", r.report());
+
+    print_header("allocator (§5.7 first-fit, f=80)");
+    let g80 = randomized_har(80);
+    let r = b.run("allocate ResNet", || {
+        black_box(microai::allocator::allocate(&g80));
+    });
+    println!("{}", r.report());
+
+    print_header("C code generation (f=16, int8)");
+    let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+    let r = b.run("generate C library", || {
+        black_box(microai::codegen::generate(&qg));
+    });
+    println!("{}", r.report());
+
+    print_header("synthetic dataset generation");
+    let r = b.run("har full dataset", || {
+        black_box(microai::datasets::load("har", 1));
+    });
+    println!("{}", r.report());
+}

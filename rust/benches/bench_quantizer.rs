@@ -1,0 +1,96 @@
+//! Quantization-scheme ablation bench (design-choice ablations DESIGN.md
+//! calls out): weight-MSE and logit error across widths and granularities,
+//! plus the Q7.9-network-wide vs per-layer int16 comparison the paper's
+//! §6 setup implies.
+//!
+//! Run: `cargo bench --bench bench_quantizer`
+
+use microai::graph::ir::LayerKind;
+use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
+use microai::nn::float_exec::{self, ActStats};
+use microai::nn::int_exec;
+use microai::quant::ptq::weight_mse;
+use microai::quant::{quantize, QuantSpec};
+use microai::util::prng::Pcg32;
+
+fn setup(filters: usize) -> (Graph, Vec<Vec<f32>>, ActStats) {
+    let mut g = resnet_v1_6_shapes("har", 1, &[128, 9], 6, filters);
+    let mut rng = Pcg32::seeded(11);
+    for n in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.3;
+            }
+            for v in b.data.iter_mut() {
+                *v = 0.01;
+            }
+        }
+    }
+    let g = deploy_pipeline(&g);
+    let inputs: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..128 * 9).map(|_| rng.normal()).collect())
+        .collect();
+    let mut stats = ActStats::new(g.nodes.len());
+    for x in &inputs {
+        float_exec::run(&g, x, Some(&mut stats));
+    }
+    (g, inputs, stats)
+}
+
+fn logit_rmse(g: &Graph, qg: &microai::quant::QuantizedGraph, inputs: &[Vec<f32>]) -> f64 {
+    let mut se = 0.0f64;
+    let mut n = 0usize;
+    for x in inputs {
+        let fl = float_exec::run(g, x, None);
+        for (u, v) in fl.iter().zip(int_exec::run(qg, x)) {
+            se += ((u - v) as f64).powi(2);
+            n += 1;
+        }
+    }
+    (se / n as f64).sqrt()
+}
+
+fn main() {
+    println!("==== quantization-scheme ablation (UCI-HAR ResNet, f=32) ====");
+    let (g, inputs, stats) = setup(32);
+    println!(
+        "{:<28} {:>14} {:>14} {:>12}",
+        "scheme", "weight MSE", "logit RMSE", "weights(B)"
+    );
+    let schemes = [
+        QuantSpec::int8_per_layer(),
+        QuantSpec::int8_per_filter(),
+        QuantSpec::int9_per_layer(),
+        QuantSpec::int16_per_layer(),
+        QuantSpec::int16_q7_9(),
+    ];
+    let mut results = Vec::new();
+    for spec in schemes {
+        let qg = quantize(&g, &stats, spec);
+        let mse = weight_mse(&g, &qg);
+        let rmse = logit_rmse(&g, &qg, &inputs);
+        println!(
+            "{:<28} {:>14.3e} {:>14.5} {:>12}",
+            spec.label(),
+            mse,
+            rmse,
+            qg.weight_bytes()
+        );
+        results.push((spec.label(), mse, rmse));
+    }
+
+    // Ablation claims (paper §4.1.3, §7, §6):
+    let get = |label: &str| results.iter().find(|r| r.0 == label).unwrap().clone();
+    let (_, mse_l8, rmse_l8) = get("int8-per-layer");
+    let (_, mse_f8, _) = get("int8-per-filter");
+    let (_, _, rmse_9) = get("int9-per-layer");
+    let (_, _, rmse_16) = get("int16-per-layer");
+    let (_, _, rmse_q79) = get("int16-Q7.9");
+    assert!(mse_f8 <= mse_l8, "per-filter must not increase weight MSE");
+    assert!(rmse_9 < rmse_l8, "one extra bit must reduce logit error");
+    assert!(rmse_16 < rmse_9);
+    // Per-layer int16 beats the fixed network-wide Q7.9 (finer formats).
+    assert!(rmse_16 <= rmse_q79 * 1.001, "{rmse_16} vs {rmse_q79}");
+    println!("\nablation orderings: OK");
+    println!("(per-filter ≤ per-layer MSE; int9 < int8; int16 < int9; per-layer ≤ Q7.9)");
+}

@@ -1,0 +1,159 @@
+//! Regenerates the paper's footprint / latency / energy tables and figures
+//! from the calibrated cost models, printing predicted-vs-paper rows:
+//!
+//!   Table 3  — board specs
+//!   Table 4  — framework capability matrix
+//!   Table A3 / Fig 11 — ROM footprint vs filters
+//!   Table A4 / Fig 12 — inference time vs filters
+//!   Table A5 / Fig 13 — energy vs filters
+//!   Table A6 — per-layer integer op counts
+//!
+//! Calibration uses ONLY each series' f=16 / f=80 endpoints; the five
+//! intermediate filter counts validate the model shape (DESIGN.md §8).
+//! Run: `cargo bench --bench bench_tables`
+
+use microai::engines::all_engines;
+use microai::mcu::board::{Board, BOARDS};
+use microai::mcu::cost::{har_graph, validate_latency, validate_rom, SeriesValidation};
+use microai::mcu::opcounts::node_ops;
+use microai::mcu::paper_data::{self, FILTERS};
+
+fn print_validation(title: &str, vs: &[SeriesValidation]) {
+    println!("\n==== {title} ====");
+    let mut worst = 0.0f64;
+    for v in vs {
+        print!("{:<13} {:<14} {:<8} pred ", v.framework, v.board, format!("{:?}", v.dtype));
+        for p in &v.predicted {
+            print!("{p:>9.1}");
+        }
+        println!();
+        print!("{:<37} papr ", "");
+        for p in &v.paper {
+            print!("{p:>9.1}");
+        }
+        println!("   held-out err {:.1}%", v.max_held_out_rel_err * 100.0);
+        worst = worst.max(v.max_held_out_rel_err);
+    }
+    println!("-- worst held-out relative error: {:.1}% --", worst * 100.0);
+}
+
+fn table3() {
+    println!("\n==== Table 3: embedded platforms ====");
+    println!(
+        "{:<16} {:<14} {:<11} {:>9} {:>10} {:>13} {:>13} {:>10}",
+        "Board", "MCU", "Core", "RAM(kiB)", "Flash(kiB)", "CoreMark/MHz", "I@3.3V/48MHz", "Power(mW)"
+    );
+    for b in BOARDS {
+        println!(
+            "{:<16} {:<14} {:<11} {:>9} {:>10} {:>13.3} {:>10.2} mA {:>9.2}",
+            b.name,
+            b.mcu,
+            b.core,
+            b.ram_bytes / 1024,
+            b.flash_bytes / 1024,
+            b.coremark_per_mhz,
+            b.run_current_a * 1e3,
+            b.power_w() * 1e3,
+        );
+    }
+}
+
+fn table4() {
+    println!("\n==== Table 4: embedded AI frameworks ====");
+    println!(
+        "{:<13} {:<18} {:<18} {:<22} {:<9} {:<12} {}",
+        "Framework", "Sources", "Portability", "Data types", "OpenSrc", "Coding", "Deployment"
+    );
+    for e in all_engines() {
+        let dts: Vec<&str> = e.caps.dtypes.iter().map(|d| d.label()).collect();
+        println!(
+            "{:<13} {:<18} {:<18} {:<22} {:<9} {:<12} {}",
+            e.name,
+            e.caps.sources.join(","),
+            e.caps.portability,
+            dts.join(","),
+            if e.caps.open_source { "yes" } else { "no" },
+            format!("{:?}", e.caps.coding),
+            if e.caps.compiled { "codegen" } else { "interpreter" },
+        );
+    }
+}
+
+fn table_a6() {
+    println!("\n==== Table A6: integer op counts (UCI-HAR ResNet, f=16) ====");
+    let g = har_graph(16);
+    println!(
+        "{:<12} {:>12} {:>10} {:>10} {:>12} {:>8}",
+        "Layer", "MACC(1cy)", "Add(1cy)", "Shift(1cy)", "Max/Sat(2cy)", "Div"
+    );
+    for n in &g.nodes {
+        let ops = node_ops(&g, n.id);
+        if ops.total_ops() == 0 {
+            continue;
+        }
+        println!(
+            "{:<12} {:>12} {:>10} {:>10} {:>12} {:>8}",
+            n.name, ops.macc, ops.add, ops.shift, ops.sat, ops.div
+        );
+    }
+    let total = microai::mcu::graph_ops(&g);
+    println!(
+        "{:<12} {:>12} {:>10} {:>10} {:>12} {:>8}  ideal cycles = {}",
+        "TOTAL", total.macc, total.add, total.shift, total.sat, total.div,
+        total.ideal_cycles()
+    );
+}
+
+fn table_a5_energy() {
+    println!("\n==== Table A5 / Fig 13: energy per inference (µWh), model vs paper ====");
+    let mut worst = 0.0f64;
+    for s in &paper_data::TABLE_A5_UWH {
+        let lat_series =
+            paper_data::find(&paper_data::TABLE_A4_MS, s.framework, s.board, s.dtype).unwrap();
+        let board = Board::by_name(s.board).unwrap();
+        let v = validate_latency(lat_series);
+        print!("{:<13} {:<14} {:<8} pred ", s.framework, s.board, format!("{:?}", s.dtype));
+        for (i, ms) in v.predicted.iter().enumerate() {
+            let e = microai::mcu::energy_uwh(ms / 1e3, board);
+            print!("{e:>8.3}");
+            if i != 0 && i != 6 {
+                worst = worst.max((e - s.values[i]).abs() / s.values[i]);
+            }
+        }
+        println!();
+        print!("{:<37} papr ", "");
+        for p in &s.values {
+            print!("{p:>8.3}");
+        }
+        println!();
+    }
+    println!("-- worst held-out relative error: {:.1}% --", worst * 100.0);
+}
+
+fn main() {
+    println!("MicroAI paper-table regeneration (cost models; see DESIGN.md §8)");
+    println!("filters sweep: {FILTERS:?}");
+
+    table3();
+    table4();
+
+    let rom: Vec<_> = paper_data::TABLE_A3_KIB.iter().map(validate_rom).collect();
+    print_validation("Table A3 / Fig 11: ROM footprint (kiB)", &rom);
+
+    let lat: Vec<_> = paper_data::TABLE_A4_MS.iter().map(validate_latency).collect();
+    print_validation("Table A4 / Fig 12: inference time (ms)", &lat);
+
+    table_a5_energy();
+    table_a6();
+
+    // Headline ordering assertions (the "who wins" shape).
+    let a4 = &paper_data::TABLE_A4_MS;
+    let pred = |fw: &str, bd: &str, dt: paper_data::DType| {
+        validate_latency(paper_data::find(a4, fw, bd, dt).unwrap()).predicted[6]
+    };
+    use paper_data::DType::*;
+    assert!(pred("STM32Cube.AI", "NucleoL452REP", I8) < pred("TFLiteMicro", "SparkFunEdge", I8));
+    assert!(pred("TFLiteMicro", "SparkFunEdge", I8) < pred("MicroAI", "NucleoL452REP", I8));
+    assert!(pred("MicroAI", "NucleoL452REP", I8) < pred("MicroAI", "NucleoL452REP", F32));
+    println!("\nordering checks (Fig 12 who-wins at f=80): OK");
+}

@@ -1,0 +1,198 @@
+//! RAM output-buffer allocator (§5.7).
+//!
+//! "The allocator module aims at saving the RAM usage. To do so, it
+//! allocates the layer's output buffers in the smallest number of pools
+//! without conflicts. For each layer of the model, its output buffer is
+//! allocated to the first pool that satisfies two conditions: it must
+//! neither overwrite its input, nor the output of a layer that has not
+//! already been consumed. If there is no such available pool, a new one is
+//! created."
+//!
+//! We implement exactly that first-fit strategy, plus the lifetime
+//! analysis it needs, and report the resulting RAM usage (pool sizes are
+//! the max element count assigned to each pool). The paper notes pool-size
+//! minimization is NOT attempted ("a harder problem"); we keep that
+//! behaviour for fidelity and verify the no-conflict invariant by property
+//! test.
+
+use crate::graph::ir::{Graph, LayerKind};
+
+/// Buffer assignment for one graph.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Pool index per node (usize::MAX for nodes with no buffer: Input).
+    pub pool_of: Vec<usize>,
+    /// Element capacity of each pool.
+    pub pool_elems: Vec<usize>,
+}
+
+impl Allocation {
+    pub fn n_pools(&self) -> usize {
+        self.pool_elems.len()
+    }
+
+    /// Total RAM in bytes at `bytes_per_elem` (1 for int8, 2 for int16,
+    /// 4 for float32), plus the input buffer held by the caller.
+    pub fn ram_bytes(&self, bytes_per_elem: usize) -> usize {
+        self.pool_elems.iter().sum::<usize>() * bytes_per_elem
+    }
+}
+
+/// Last node (in topological order) that reads each node's output.
+fn last_use(graph: &Graph) -> Vec<usize> {
+    let mut last = vec![0usize; graph.nodes.len()];
+    for node in &graph.nodes {
+        for &i in &node.inputs {
+            last[i] = last[i].max(node.id);
+        }
+    }
+    // The graph output is "used" by the caller after everything.
+    let out = graph.output_id();
+    last[out] = usize::MAX;
+    last
+}
+
+/// First-fit pool allocation per §5.7.
+pub fn allocate(graph: &Graph) -> Allocation {
+    let last = last_use(graph);
+    let n = graph.nodes.len();
+    let mut pool_of = vec![usize::MAX; n];
+    let mut pool_elems: Vec<usize> = Vec::new();
+    // For each pool, the id of the node whose output currently lives there.
+    let mut occupant: Vec<Option<usize>> = Vec::new();
+
+    for node in &graph.nodes {
+        if matches!(node.kind, LayerKind::Input) {
+            continue; // input buffer is provided by the caller
+        }
+        let elems: usize = node.out_shape.iter().product();
+        // Pools holding an input of this node are forbidden (no in-place),
+        // as are pools whose occupant still has readers after this node.
+        let mut chosen = None;
+        for (p, occ) in occupant.iter().enumerate() {
+            let free = match occ {
+                None => true,
+                Some(o) => {
+                    let still_needed = last[*o] > node.id;
+                    let is_my_input = node.inputs.iter().any(|&i| pool_of[i] == p);
+                    !still_needed && !is_my_input
+                }
+            };
+            if free {
+                chosen = Some(p);
+                break;
+            }
+        }
+        let p = match chosen {
+            Some(p) => p,
+            None => {
+                occupant.push(None);
+                pool_elems.push(0);
+                occupant.len() - 1
+            }
+        };
+        pool_of[node.id] = p;
+        occupant[p] = Some(node.id);
+        pool_elems[p] = pool_elems[p].max(elems);
+    }
+    Allocation { pool_of, pool_elems }
+}
+
+/// Check the §5.7 invariant: at no point does writing a node's output
+/// clobber (a) one of its inputs or (b) a value still to be read.
+pub fn check_no_conflict(graph: &Graph, alloc: &Allocation) -> Result<(), String> {
+    let last = last_use(graph);
+    for node in &graph.nodes {
+        let p = alloc.pool_of[node.id];
+        if p == usize::MAX {
+            continue;
+        }
+        // (a) inputs must live elsewhere.
+        for &i in &node.inputs {
+            if alloc.pool_of[i] == p {
+                return Err(format!("node {} overwrites its input {}", node.id, i));
+            }
+        }
+        // (b) any earlier node in the same pool must be fully consumed.
+        for other in &graph.nodes[..node.id] {
+            if alloc.pool_of[other.id] == p && last[other.id] > node.id {
+                return Err(format!(
+                    "node {} overwrites node {} (still needed until {})",
+                    node.id, other.id, last[other.id]
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build::{cnn, resnet_v1_6_shapes};
+    use crate::graph::deploy_pipeline;
+    use crate::prop_assert;
+    use crate::util::check::property;
+
+    #[test]
+    fn sequential_graph_uses_two_pools() {
+        // A pure chain ping-pongs between two pools.
+        let g = cnn("c", 1, &[64, 4], 5, &[8, 8], 3, 16);
+        let a = allocate(&g);
+        check_no_conflict(&g, &a).unwrap();
+        assert_eq!(a.n_pools(), 2, "pools: {:?}", a.pool_elems);
+    }
+
+    #[test]
+    fn resnet_needs_a_third_pool_for_the_residual() {
+        // The residual tap keeps a value alive across the block body.
+        let g = deploy_pipeline(&resnet_v1_6_shapes("r", 1, &[128, 9], 6, 16));
+        let a = allocate(&g);
+        check_no_conflict(&g, &a).unwrap();
+        assert!(a.n_pools() >= 3);
+        assert!(a.n_pools() <= 4, "first-fit should stay small: {}", a.n_pools());
+    }
+
+    #[test]
+    fn ram_scales_with_dtype_width() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("r", 1, &[128, 9], 6, 16));
+        let a = allocate(&g);
+        assert_eq!(a.ram_bytes(4), 2 * a.ram_bytes(2));
+    }
+
+    #[test]
+    fn prop_no_conflict_on_random_resnets() {
+        property(30, |g| {
+            let filters = g.usize_in(4, 32);
+            let s = 8 * g.usize_in(2, 16);
+            let c = g.usize_in(1, 8);
+            let graph = deploy_pipeline(&resnet_v1_6_shapes(
+                "p", 1, &[s, c], g.usize_in(2, 10), filters,
+            ));
+            let a = allocate(&graph);
+            if let Err(e) = check_no_conflict(&graph, &a) {
+                return Err(e);
+            }
+            // Every non-input node got a pool.
+            for n in &graph.nodes {
+                if !matches!(n.kind, LayerKind::Input) {
+                    prop_assert!(a.pool_of[n.id] != usize::MAX, "node {} unallocated", n.id);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pool_capacity_fits_largest_assignment() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("r", 1, &[128, 9], 6, 24));
+        let a = allocate(&g);
+        for n in &g.nodes {
+            let p = a.pool_of[n.id];
+            if p != usize::MAX {
+                let elems: usize = n.out_shape.iter().product();
+                assert!(a.pool_elems[p] >= elems);
+            }
+        }
+    }
+}

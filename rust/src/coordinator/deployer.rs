@@ -1,0 +1,195 @@
+//! Deployment pipeline (Fig 3, right half): trained parameters → deployed
+//! graph → calibration → quantization → engine/board reports → optional C
+//! library.
+
+
+use crate::datasets::RawDataModel;
+use crate::engines::Engine;
+use crate::graph::{deploy_pipeline, resnet_v1_6, Graph};
+use crate::mcu::board::Board;
+use crate::mcu::paper_data::DType;
+use crate::nn::float_exec::{self, ActStats};
+use crate::quant::{quantize, QuantSpec, QuantizedGraph};
+use crate::runtime::ModelSpec;
+use crate::tensor::TensorF;
+
+/// Build the deployed (fused) graph from trained host parameters.
+pub fn build_deployed_graph(spec: &ModelSpec, params: Vec<TensorF>) -> Graph {
+    let g = resnet_v1_6(
+        &spec.tag,
+        spec.dims,
+        &spec.input_shape,
+        spec.classes,
+        params,
+    );
+    deploy_pipeline(&g)
+}
+
+/// Calibrate activation ranges over `n` training examples (§5.8 PTQ).
+pub fn calibrate(graph: &Graph, data: &RawDataModel, n: usize) -> ActStats {
+    let mut stats = ActStats::new(graph.nodes.len());
+    for i in 0..n.min(data.n_train()) {
+        float_exec::run(graph, data.train_example(i), Some(&mut stats));
+    }
+    stats
+}
+
+/// PTQ + integer-engine test accuracy in one call.
+pub fn ptq_accuracy(
+    graph: &Graph,
+    data: &RawDataModel,
+    spec: QuantSpec,
+    calib_examples: usize,
+) -> (QuantizedGraph, f64) {
+    let stats = calibrate(graph, data, calib_examples);
+    let qg = quantize(graph, &stats, spec);
+    let mut correct = 0usize;
+    for i in 0..data.n_test() {
+        let logits = crate::nn::int_exec::run(&qg, data.test_example(i));
+        if crate::nn::argmax(&logits) as i32 == data.test_y[i] {
+            correct += 1;
+        }
+    }
+    (qg, correct as f64 / data.n_test().max(1) as f64)
+}
+
+/// Float-engine test accuracy (Rust reference path).
+pub fn float_accuracy(graph: &Graph, data: &RawDataModel) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..data.n_test() {
+        let logits = float_exec::run(graph, data.test_example(i), None);
+        if crate::nn::argmax(&logits) as i32 == data.test_y[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / data.n_test().max(1) as f64
+}
+
+/// Affine (TFLite-scheme) PTQ accuracy — the Appendix B comparison arm.
+pub fn affine_accuracy(graph: &Graph, data: &RawDataModel, calib_examples: usize) -> f64 {
+    let stats = calibrate(graph, data, calib_examples);
+    let aq = crate::quant::quantize_affine(graph, &stats);
+    let mut correct = 0usize;
+    for i in 0..data.n_test() {
+        let logits = crate::nn::affine_exec::run(&aq, data.test_example(i));
+        if crate::nn::argmax(&logits) as i32 == data.test_y[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / data.n_test().max(1) as f64
+}
+
+/// One row of a deployment report (Figs 11–13 cells).
+#[derive(Clone, Debug)]
+pub struct DeployReport {
+    pub engine: String,
+    pub board: String,
+    pub dtype: DType,
+    pub rom_bytes: f64,
+    pub ram_bytes: usize,
+    pub latency_ms: f64,
+    pub energy_uwh: f64,
+    pub fits: bool,
+}
+
+/// Evaluate a deployed graph across engines × boards × dtypes.
+pub fn deployment_matrix(
+    graph: &Graph,
+    filters: usize,
+    engines: &[Engine],
+    boards: &[&Board],
+) -> Vec<DeployReport> {
+    let alloc = crate::allocator::allocate(graph);
+    let mut rows = Vec::new();
+    for e in engines {
+        for &b in boards {
+            for dt in [DType::F32, DType::I16, DType::I8] {
+                let (Some(lat), Some(rom)) = (
+                    e.latency_s(graph, b, dt),
+                    e.rom_bytes(graph, filters, dt),
+                ) else {
+                    continue;
+                };
+                let ram = alloc.ram_bytes(dt.bytes())
+                    + graph.input_shape.iter().product::<usize>() * dt.bytes();
+                rows.push(DeployReport {
+                    engine: e.name.to_string(),
+                    board: b.name.to_string(),
+                    dtype: dt,
+                    rom_bytes: rom,
+                    ram_bytes: ram,
+                    latency_ms: lat * 1e3,
+                    energy_uwh: e.energy_uwh(graph, b, dt).unwrap(),
+                    fits: b.fits(rom as usize, ram),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Render a deployment matrix as a paper-style table.
+pub fn render_matrix(rows: &[DeployReport]) -> String {
+    let mut s = String::from(
+        "Engine        Board           DType    ROM(kiB)  RAM(kiB)  Time(ms)  E(µWh)  Fits\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<13} {:<15} {:<8} {:>8.1} {:>9.1} {:>9.1} {:>7.3}  {}\n",
+            r.engine,
+            r.board,
+            r.dtype.label(),
+            r.rom_bytes / 1024.0,
+            r.ram_bytes as f64 / 1024.0,
+            r.latency_ms,
+            r.energy_uwh,
+            if r.fits { "yes" } else { "NO" },
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::all_engines;
+    use crate::graph::resnet_v1_6_shapes;
+    use crate::mcu::board::BOARDS;
+
+    #[test]
+    fn matrix_covers_supported_combos() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("har", 1, &[128, 9], 6, 16));
+        let rows = deployment_matrix(&g, 16, &all_engines(), &BOARDS);
+        // MicroAI: 2 boards x 3 dtypes; TFLM: 2 x 2; CubeAI: 1 board x 2.
+        assert_eq!(rows.len(), 6 + 4 + 2);
+        assert!(rows.iter().all(|r| r.latency_ms > 0.0 && r.rom_bytes > 0.0));
+        // Everything fits these boards at f=16.
+        assert!(rows.iter().all(|r| r.fits));
+        let txt = render_matrix(&rows);
+        assert!(txt.contains("MicroAI"));
+    }
+
+    #[test]
+    fn int16_row_exists_only_for_microai() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("har", 1, &[128, 9], 6, 16));
+        let rows = deployment_matrix(&g, 16, &all_engines(), &BOARDS);
+        assert!(rows
+            .iter()
+            .all(|r| r.dtype != DType::I16 || r.engine == "MicroAI"));
+    }
+
+    #[test]
+    fn large_float_model_may_not_fit_nucleo() {
+        // f=80 float32 ROM ~372 kiB fits 512 kiB flash; RAM check matters
+        // at larger sizes. Sanity: report stays consistent.
+        let g = deploy_pipeline(&resnet_v1_6_shapes("har", 1, &[128, 9], 6, 80));
+        let rows = deployment_matrix(&g, 80, &all_engines(), &BOARDS);
+        for r in &rows {
+            assert_eq!(
+                r.fits,
+                r.rom_bytes as usize <= Board::by_name(&r.board).unwrap().flash_bytes
+                    && r.ram_bytes <= Board::by_name(&r.board).unwrap().ram_bytes
+            );
+        }
+    }
+}

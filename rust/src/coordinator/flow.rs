@@ -1,0 +1,234 @@
+//! The MicroAI general flow (Fig 3 + §5.3): a TOML experiment description
+//! drives preprocess → train → post-process (PTQ / QAT) → deploy →
+//! evaluate, matching the `microai <config.toml> ...` commands of
+//! Appendix C.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::deployer;
+use crate::coordinator::trainer::{LrSchedule, Trainer};
+use crate::datasets;
+use crate::engines::all_engines;
+use crate::mcu::board::BOARDS;
+use crate::quant::QuantSpec;
+use crate::runtime::Runtime;
+use crate::util::toml::{TomlDoc, TomlTable};
+
+/// One [[model]] block: a quantization configuration to evaluate.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    /// "float32" | "int16" | "int8-qat" | "int9" | "int8-affine"
+    pub mode: String,
+    pub qat_steps: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentCfg {
+    pub dataset: String,
+    pub filters: usize,
+    pub seed: u64,
+    pub train_steps: usize,
+    pub lr: f32,
+    pub calib_examples: usize,
+    pub models: Vec<ModelCfg>,
+    pub deploy: bool,
+}
+
+fn get_usize(t: &TomlTable, k: &str, d: usize) -> usize {
+    t.get(k).and_then(|v| v.as_i64()).map(|v| v as usize).unwrap_or(d)
+}
+
+impl ExperimentCfg {
+    pub fn parse(text: &str) -> Result<ExperimentCfg> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!(e))?;
+        let root = &doc.root;
+        let tmpl = doc.table("model_template").cloned().unwrap_or_default();
+        let mut models = Vec::new();
+        for m in doc.array("model") {
+            let name = m
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("[[model]] needs name")?
+                .to_string();
+            let mode = m
+                .get("mode")
+                .and_then(|v| v.as_str())
+                .unwrap_or(name.as_str())
+                .to_string();
+            models.push(ModelCfg {
+                name,
+                mode,
+                qat_steps: get_usize(m, "qat_steps", get_usize(&tmpl, "qat_steps", 40)),
+            });
+        }
+        if models.is_empty() {
+            for mode in ["float32", "int16", "int8-qat"] {
+                models.push(ModelCfg { name: mode.into(), mode: mode.into(), qat_steps: 40 });
+            }
+        }
+        Ok(ExperimentCfg {
+            dataset: root
+                .get("dataset")
+                .and_then(|v| v.as_str())
+                .unwrap_or("har")
+                .to_string(),
+            filters: get_usize(root, "filters", 16),
+            seed: get_usize(root, "seed", 42) as u64,
+            train_steps: get_usize(&tmpl, "steps", get_usize(root, "steps", 150)),
+            lr: tmpl.get("lr").and_then(|v| v.as_f64()).unwrap_or(0.05) as f32,
+            calib_examples: get_usize(root, "calib_examples", 64),
+            models,
+            deploy: root.get("deploy").and_then(|v| v.as_bool()).unwrap_or(true),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelResult {
+    pub name: String,
+    pub mode: String,
+    pub accuracy: f64,
+    pub weight_bytes: usize,
+}
+
+pub struct ExperimentResult {
+    pub cfg: ExperimentCfg,
+    pub float_losses: Vec<f32>,
+    pub results: Vec<ModelResult>,
+    pub deployment: String,
+}
+
+/// Run the full flow. Needs the artifacts for `{dataset}_f{filters}`.
+pub fn run(rt: &Runtime, cfg: &ExperimentCfg, verbose: bool) -> Result<ExperimentResult> {
+    let tag = format!("{}_f{}", cfg.dataset, cfg.filters);
+    let spec = rt.spec(&tag)?.clone();
+    let data = datasets::load(&cfg.dataset, cfg.seed).context("unknown dataset")?;
+
+    // --- train (float32 base model) ---
+    let mut trainer = Trainer::new(rt, cfg.seed);
+    let mut state = trainer.init(&tag)?;
+    let sched = LrSchedule { initial: cfg.lr, factor: 0.13, milestones: vec![
+        cfg.train_steps / 3, 2 * cfg.train_steps / 3, cfg.train_steps * 5 / 6], warmup: 10 };
+    trainer.train(&mut state, &data, "train", cfg.train_steps, &sched,
+        if verbose { (cfg.train_steps / 8).max(1) } else { 0 })?;
+    let float_losses = state.losses.clone();
+
+    // --- deployment graph from trained weights ---
+    let params = trainer.params_to_host(&state)?;
+    let graph = deployer::build_deployed_graph(&spec, params);
+
+    let mut results = Vec::new();
+    for m in &cfg.models {
+        let (acc, bytes) = match m.mode.as_str() {
+            "float32" => (deployer::float_accuracy(&graph, &data), graph.param_count() * 4),
+            "int16" => {
+                let (qg, acc) =
+                    deployer::ptq_accuracy(&graph, &data, QuantSpec::int16_per_layer(), cfg.calib_examples);
+                (acc, qg.weight_bytes())
+            }
+            "int16-q7.9" => {
+                let (qg, acc) =
+                    deployer::ptq_accuracy(&graph, &data, QuantSpec::int16_q7_9(), cfg.calib_examples);
+                (acc, qg.weight_bytes())
+            }
+            "int9" => {
+                let (qg, acc) =
+                    deployer::ptq_accuracy(&graph, &data, QuantSpec::int9_per_layer(), cfg.calib_examples);
+                (acc, qg.weight_bytes())
+            }
+            "int8" => {
+                let (qg, acc) =
+                    deployer::ptq_accuracy(&graph, &data, QuantSpec::int8_per_layer(), cfg.calib_examples);
+                (acc, qg.weight_bytes())
+            }
+            "int8-affine" => {
+                let acc = deployer::affine_accuracy(&graph, &data, cfg.calib_examples);
+                (acc, graph.param_count())
+            }
+            "int8-qat" => {
+                // QAT fine-tune on top of the float model (§4.3), then
+                // evaluate the int8 engine on the fine-tuned weights.
+                let mut qat_state = crate::coordinator::trainer::TrainState {
+                    tag: state.tag.clone(),
+                    params: state.params.clone(),
+                    mom: state.mom.clone(),
+                    losses: Vec::new(),
+                };
+                let qat_sched = LrSchedule {
+                    initial: cfg.lr * 0.2,
+                    factor: 0.1,
+                    milestones: vec![m.qat_steps / 2], warmup: 10 };
+                trainer.train(&mut qat_state, &data, "qat8_train", m.qat_steps, &qat_sched, 0)?;
+                let qat_params = trainer.params_to_host(&qat_state)?;
+                let qat_graph = deployer::build_deployed_graph(&spec, qat_params);
+                let (qg, acc) = deployer::ptq_accuracy(
+                    &qat_graph, &data, QuantSpec::int8_per_layer(), cfg.calib_examples);
+                (acc, qg.weight_bytes())
+            }
+            other => anyhow::bail!("unknown model mode {other:?}"),
+        };
+        if verbose {
+            println!("  model {:<12} mode {:<12} acc {:.4}", m.name, m.mode, acc);
+        }
+        results.push(ModelResult {
+            name: m.name.clone(),
+            mode: m.mode.clone(),
+            accuracy: acc,
+            weight_bytes: bytes,
+        });
+    }
+
+    let deployment = if cfg.deploy {
+        deployer::render_matrix(&deployer::deployment_matrix(
+            &graph, cfg.filters, &all_engines(), &BOARDS))
+    } else {
+        String::new()
+    };
+
+    Ok(ExperimentResult { cfg: cfg.clone(), float_losses, results, deployment })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+dataset = "har"
+filters = 8
+seed = 7
+calib_examples = 32
+
+[model_template]
+steps = 30
+lr = 0.05
+qat_steps = 10
+
+[[model]]
+name = "float32"
+
+[[model]]
+name = "int16"
+
+[[model]]
+name = "qat8"
+mode = "int8-qat"
+"#;
+
+    #[test]
+    fn parses_experiment_toml() {
+        let cfg = ExperimentCfg::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.dataset, "har");
+        assert_eq!(cfg.filters, 8);
+        assert_eq!(cfg.train_steps, 30);
+        assert_eq!(cfg.models.len(), 3);
+        assert_eq!(cfg.models[2].mode, "int8-qat");
+        assert_eq!(cfg.models[2].qat_steps, 10);
+    }
+
+    #[test]
+    fn default_models_when_none_given() {
+        let cfg = ExperimentCfg::parse("dataset = \"smnist\"\n").unwrap();
+        assert_eq!(cfg.models.len(), 3);
+    }
+}

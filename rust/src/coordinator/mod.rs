@@ -1,0 +1,11 @@
+//! The L3 coordinator — MicroAI's end-to-end flow (Fig 3): training driver
+//! over the AOT artifacts, deployment pipeline, TOML experiment runner and
+//! the big/LITTLE serving cascade.
+
+pub mod deployer;
+pub mod flow;
+pub mod serving;
+pub mod trainer;
+
+pub use deployer::{build_deployed_graph, deployment_matrix, ptq_accuracy};
+pub use trainer::{LrSchedule, TrainState, Trainer};

@@ -1,0 +1,271 @@
+//! Serving coordinator with the big/LITTLE DNN cascade (§8 future work,
+//! citing Park et al. [58]): every request first runs a small model; when
+//! the classifier's confidence is below a threshold, it escalates to the
+//! large model. The router tracks per-request latency and energy using the
+//! MCU cost models, so the demo reports the paper-style "fast path for
+//! most inputs" effect.
+//!
+//! Implementation is std-threads + channels (tokio is unavailable
+//! offline): a router thread feeds a worker pool; each worker owns clones
+//! of the quantized graphs (weights are shared via Arc).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use crate::mcu::board::Board;
+use crate::nn::{argmax, int_exec};
+use crate::quant::QuantizedGraph;
+use crate::util::prng::Pcg32;
+use crate::util::stats::{summarize, Summary};
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub prediction: usize,
+    pub confidence: f32,
+    pub escalated: bool,
+    /// Simulated on-device latency (ms) for this request.
+    pub device_ms: f64,
+    pub energy_uwh: f64,
+}
+
+/// Softmax max-probability confidence.
+pub fn confidence(logits: &[f32]) -> f32 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().fold(0.0f32, |a, &e| a.max(e)) / sum
+}
+
+pub struct CascadeConfig {
+    pub threshold: f32,
+    pub workers: usize,
+    /// Simulated per-inference device latency (ms) for little/big models.
+    pub little_ms: f64,
+    pub big_ms: f64,
+    pub board_power_w: f64,
+}
+
+pub struct CascadeStats {
+    pub responses: Vec<Response>,
+    pub latency: Summary,
+    pub escalation_rate: f64,
+    pub total_energy_uwh: f64,
+    pub accuracy: Option<f64>,
+}
+
+/// Run the cascade over a request stream; blocking, returns when all
+/// requests are answered. `labels` (optional) enables accuracy reporting.
+pub fn run_cascade(
+    little: Arc<QuantizedGraph>,
+    big: Arc<QuantizedGraph>,
+    cfg: &CascadeConfig,
+    requests: Vec<Request>,
+    labels: Option<&[i32]>,
+) -> CascadeStats {
+    let n = requests.len();
+    let (work_tx, work_rx) = mpsc::channel::<Request>();
+    let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+
+    let mut handles = Vec::new();
+    for _ in 0..cfg.workers.max(1) {
+        let rx = work_rx.clone();
+        let tx = resp_tx.clone();
+        let little = little.clone();
+        let big = big.clone();
+        let threshold = cfg.threshold;
+        let (lm, bm, pw) = (cfg.little_ms, cfg.big_ms, cfg.board_power_w);
+        handles.push(thread::spawn(move || loop {
+            let req = match rx.lock().unwrap().recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let logits = int_exec::run(&little, &req.input);
+            let conf = confidence(&logits);
+            let (pred, conf, escalated, ms) = if conf < threshold {
+                let big_logits = int_exec::run(&big, &req.input);
+                (argmax(&big_logits), confidence(&big_logits), true, lm + bm)
+            } else {
+                (argmax(&logits), conf, false, lm)
+            };
+            let energy = ms / 1e3 * pw / 3600.0 * 1e6;
+            let _ = tx.send(Response {
+                id: req.id,
+                prediction: pred,
+                confidence: conf,
+                escalated,
+                device_ms: ms,
+                energy_uwh: energy,
+            });
+        }));
+    }
+    drop(resp_tx);
+
+    for r in requests {
+        work_tx.send(r).unwrap();
+    }
+    drop(work_tx);
+
+    let mut responses: Vec<Response> = resp_rx.iter().collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), n, "router lost requests");
+
+    let lat: Vec<f64> = responses.iter().map(|r| r.device_ms).collect();
+    let esc = responses.iter().filter(|r| r.escalated).count() as f64 / n.max(1) as f64;
+    let energy: f64 = responses.iter().map(|r| r.energy_uwh).sum();
+    let accuracy = labels.map(|ys| {
+        responses
+            .iter()
+            .filter(|r| r.prediction as i32 == ys[r.id as usize])
+            .count() as f64
+            / n.max(1) as f64
+    });
+    CascadeStats {
+        responses,
+        latency: summarize(&lat),
+        escalation_rate: esc,
+        total_energy_uwh: energy,
+        accuracy,
+    }
+}
+
+/// Build a synthetic Poisson request stream from test examples.
+pub fn request_stream(
+    data: &crate::datasets::RawDataModel,
+    n: usize,
+    seed: u64,
+) -> (Vec<Request>, Vec<i32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let mut reqs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for id in 0..n {
+        let i = rng.below(data.n_test() as u32) as usize;
+        reqs.push(Request { id: id as u64, input: data.test_example(i).to_vec() });
+        labels.push(data.test_y[i]);
+    }
+    (reqs, labels)
+}
+
+/// Device latency for a graph under the MicroAI engine on `board` (ms).
+pub fn device_latency_ms(graph: &crate::graph::Graph, board: &Board, dtype: crate::mcu::DType) -> f64 {
+    crate::engines::microai()
+        .latency_s(graph, board, dtype)
+        .map(|s| s * 1e3)
+        .unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::LayerKind;
+    use crate::graph::{deploy_pipeline, resnet_v1_6_shapes};
+    use crate::nn::float_exec::ActStats;
+    use crate::quant::{quantize, QuantSpec};
+
+    fn tiny_qgraph(filters: usize, seed: u64) -> Arc<QuantizedGraph> {
+        let mut g = resnet_v1_6_shapes("t", 1, &[32, 3], 4, filters);
+        let mut rng = Pcg32::seeded(seed);
+        for n in g.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.4;
+                }
+                for v in b.data.iter_mut() {
+                    *v = 0.01;
+                }
+            }
+        }
+        let g = deploy_pipeline(&g);
+        let mut stats = ActStats::new(g.nodes.len());
+        let mut rng = Pcg32::seeded(seed + 9);
+        for _ in 0..6 {
+            let x: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+            crate::nn::float_exec::run(&g, &x, Some(&mut stats));
+        }
+        Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()))
+    }
+
+    fn requests(n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|id| Request {
+                id: id as u64,
+                input: (0..96).map(|_| rng.normal()).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn no_request_lost_and_ordered() {
+        let little = tiny_qgraph(4, 1);
+        let big = tiny_qgraph(8, 2);
+        let cfg = CascadeConfig {
+            threshold: 0.5,
+            workers: 4,
+            little_ms: 10.0,
+            big_ms: 40.0,
+            board_power_w: 0.0027,
+        };
+        let stats = run_cascade(little, big, &cfg, requests(64, 3), None);
+        assert_eq!(stats.responses.len(), 64);
+        for (i, r) in stats.responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn threshold_one_always_escalates_threshold_zero_never() {
+        let little = tiny_qgraph(4, 4);
+        let big = tiny_qgraph(8, 5);
+        let base = CascadeConfig {
+            threshold: 0.0,
+            workers: 2,
+            little_ms: 10.0,
+            big_ms: 40.0,
+            board_power_w: 0.0027,
+        };
+        let s0 = run_cascade(little.clone(), big.clone(), &base, requests(32, 6), None);
+        assert_eq!(s0.escalation_rate, 0.0);
+        let cfg1 = CascadeConfig { threshold: 1.01, ..base };
+        let s1 = run_cascade(little, big, &cfg1, requests(32, 6), None);
+        assert_eq!(s1.escalation_rate, 1.0);
+        // Full escalation costs little+big latency on every request.
+        assert!(s1.latency.p50 > s0.latency.p50);
+    }
+
+    #[test]
+    fn escalated_latency_is_sum_of_both() {
+        let little = tiny_qgraph(4, 7);
+        let big = tiny_qgraph(8, 8);
+        let cfg = CascadeConfig {
+            threshold: 1.01,
+            workers: 1,
+            little_ms: 7.0,
+            big_ms: 13.0,
+            board_power_w: 0.0027,
+        };
+        let s = run_cascade(little, big, &cfg, requests(8, 9), None);
+        for r in &s.responses {
+            assert!((r.device_ms - 20.0).abs() < 1e-9);
+            assert!(r.escalated);
+        }
+    }
+
+    #[test]
+    fn confidence_is_a_probability() {
+        let c = confidence(&[1.0, 2.0, 3.0]);
+        assert!((0.0..=1.0).contains(&c));
+        assert!(confidence(&[10.0, -10.0]) > 0.99);
+    }
+}

@@ -1,0 +1,234 @@
+//! Training driver: runs the AOT-compiled JAX train-step from Rust.
+//!
+//! Python never executes here — the SGD(+momentum, +weight-decay, +mixup)
+//! step was lowered once by aot.py; this module owns the training loop,
+//! the LR schedule (§6: step decays at fixed epochs) and parameter state
+//! (kept as PJRT literals between steps to avoid host round-trips).
+
+use anyhow::{Context, Result};
+
+use crate::datasets::RawDataModel;
+use crate::runtime::exec::{lit_f32, lit_i32, lit_scalar_f32, lit_u32, to_f32};
+use crate::runtime::Runtime;
+use crate::util::prng::Pcg32;
+
+/// The paper's LR schedules (§6.1.*): initial LR multiplied by `factor`
+/// at each milestone, expressed here in steps.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub initial: f32,
+    pub factor: f32,
+    pub milestones: Vec<usize>,
+    /// Linear warmup over the first `warmup` steps (0 = none).
+    pub warmup: usize,
+}
+
+impl LrSchedule {
+    /// UCI-HAR float schedule scaled from epochs to a step budget.
+    pub fn har_like(total_steps: usize) -> Self {
+        // Paper: lr 0.05, x0.13 at 100/200/250 of 300 epochs.
+        LrSchedule {
+            initial: 0.05,
+            factor: 0.13,
+            milestones: vec![total_steps / 3, 2 * total_steps / 3, total_steps * 5 / 6],
+            warmup: total_steps / 20,
+        }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let decays = self.milestones.iter().filter(|&&m| step >= m).count() as i32;
+        let base = self.initial * self.factor.powi(decays);
+        if self.warmup > 0 && step < self.warmup {
+            base * (step + 1) as f32 / self.warmup as f32
+        } else {
+            base
+        }
+    }
+}
+
+/// Model parameters + optimizer state held as literals.
+pub struct TrainState {
+    pub tag: String,
+    pub params: Vec<xla::Literal>,
+    pub mom: Vec<xla::Literal>,
+    pub losses: Vec<f32>,
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub rng: Pcg32,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, seed: u64) -> Self {
+        Trainer { rt, rng: Pcg32::seeded(seed) }
+    }
+
+    /// Initialize parameters by executing the `init` artifact.
+    pub fn init(&mut self, tag: &str) -> Result<TrainState> {
+        let spec = self.rt.spec(tag)?.clone();
+        let exe = self.rt.compile_model(tag, "init")?;
+        let key = [self.rng.next_u32(), self.rng.next_u32()];
+        let params = exe.run(&[lit_u32(&key)])?;
+        anyhow::ensure!(
+            params.len() == spec.n_params(),
+            "init returned {} tensors, expected {}",
+            params.len(),
+            spec.n_params()
+        );
+        let mom = spec
+            .param_shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                lit_f32(&vec![0.0; n], s)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { tag: tag.to_string(), params, mom, losses: Vec::new() })
+    }
+
+    /// Run `steps` SGD steps of `kind` ("train" or "qat8_train") on
+    /// batches sampled from `data`. Returns the per-step losses appended
+    /// to the state.
+    pub fn train(
+        &mut self,
+        state: &mut TrainState,
+        data: &RawDataModel,
+        kind: &str,
+        steps: usize,
+        schedule: &LrSchedule,
+        log_every: usize,
+    ) -> Result<()> {
+        let spec = self.rt.spec(&state.tag)?.clone();
+        let exe = self.rt.compile_model(&state.tag, kind)?;
+        let b = spec.train_batch;
+        let ex_len = spec.example_len();
+        let n_params = spec.n_params();
+        let mut batch_shape = vec![b];
+        batch_shape.extend_from_slice(&spec.input_shape);
+
+        for step in 0..steps {
+            // Sample a batch.
+            let idx = data.sample_batch(&mut self.rng, b);
+            let mut xs = Vec::with_capacity(b * ex_len);
+            let mut ys = Vec::with_capacity(b);
+            for &i in &idx {
+                xs.extend_from_slice(data.train_example(i));
+                ys.push(data.train_y[i]);
+            }
+            let key = [self.rng.next_u32(), self.rng.next_u32()];
+            let lr = schedule.lr_at(step);
+
+            // inputs: params..., mom..., x, y, key, lr
+            let mut inputs: Vec<xla::Literal> =
+                Vec::with_capacity(2 * n_params + 4);
+            for p in &state.params {
+                inputs.push(p.clone());
+            }
+            for m in &state.mom {
+                inputs.push(m.clone());
+            }
+            inputs.push(lit_f32(&xs, &batch_shape)?);
+            inputs.push(lit_i32(&ys));
+            inputs.push(lit_u32(&key));
+            inputs.push(lit_scalar_f32(lr));
+
+            let mut out = exe.run(&inputs)?;
+            anyhow::ensure!(out.len() == 2 * n_params + 1, "train step output arity");
+            let loss_lit = out.pop().unwrap();
+            let loss = loss_lit.get_first_element::<f32>()?;
+            state.mom = out.split_off(n_params);
+            state.params = out;
+            state.losses.push(loss);
+            if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
+                println!("  [{kind}] step {step:>4}/{steps} lr={lr:.4} loss={loss:.4}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract parameters to host float tensors (deployment handoff).
+    pub fn params_to_host(&self, state: &TrainState) -> Result<Vec<crate::tensor::TensorF>> {
+        let spec = self.rt.spec(&state.tag)?;
+        let mut out = Vec::with_capacity(state.params.len());
+        for (lit, shape) in state.params.iter().zip(&spec.param_shapes) {
+            out.push(crate::tensor::Tensor::from_vec(shape, to_f32(lit)?));
+        }
+        Ok(out)
+    }
+
+    /// Batched float-graph inference via the `fwd` (or `qfwd8`) artifact;
+    /// returns test accuracy.
+    pub fn eval_accuracy(
+        &self,
+        state: &TrainState,
+        data: &RawDataModel,
+        kind: &str,
+    ) -> Result<f64> {
+        let spec = self.rt.spec(&state.tag)?.clone();
+        let exe = self.rt.compile_model(&state.tag, kind)?;
+        let b = spec.eval_batch;
+        let ex_len = spec.example_len();
+        let mut batch_shape = vec![b];
+        batch_shape.extend_from_slice(&spec.input_shape);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let n = data.n_test();
+        let mut i = 0usize;
+        while i < n {
+            // Fixed batch size: pad the tail with example 0, ignore pads.
+            let mut xs = Vec::with_capacity(b * ex_len);
+            let take = (n - i).min(b);
+            for j in 0..b {
+                let src = if j < take { i + j } else { 0 };
+                xs.extend_from_slice(data.test_example(src));
+            }
+            let mut inputs: Vec<xla::Literal> = state.params.to_vec();
+            inputs.push(lit_f32(&xs, &batch_shape)?);
+            let out = exe.run(&inputs).context("fwd exec")?;
+            let logits = to_f32(&out[0])?;
+            for j in 0..take {
+                let row = &logits[j * spec.classes..(j + 1) * spec.classes];
+                let pred = crate::nn::argmax(row);
+                if pred as i32 == data.test_y[i + j] {
+                    correct += 1;
+                }
+            }
+            total += take;
+            i += take;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_decays_at_milestones() {
+        let s = LrSchedule { initial: 0.1, factor: 0.1, milestones: vec![10, 20], warmup: 0 };
+        assert_eq!(s.lr_at(0), 0.1);
+        assert!((s.lr_at(10) - 0.01).abs() < 1e-9);
+        assert!((s.lr_at(25) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn har_like_schedule_monotone_after_warmup() {
+        let s = LrSchedule::har_like(300);
+        let mut last = f32::INFINITY;
+        for step in [s.warmup, 99, 100, 200, 250, 299] {
+            let lr = s.lr_at(step);
+            assert!(lr <= last);
+            last = lr;
+        }
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule { initial: 0.1, factor: 0.1, milestones: vec![], warmup: 10 };
+        assert!((s.lr_at(0) - 0.01).abs() < 1e-7);
+        assert!((s.lr_at(4) - 0.05).abs() < 1e-7);
+        assert!((s.lr_at(10) - 0.1).abs() < 1e-7);
+    }
+}

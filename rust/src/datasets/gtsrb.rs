@@ -1,0 +1,156 @@
+//! Synthetic GTSRB: 43 road-sign classes as 32×32 RGB images (§6.1.3).
+//!
+//! Each class is a sign template: background color band (red-rim
+//! prohibitory / blue mandatory / yellow priority), a geometric silhouette
+//! (disc, triangle, diamond, octagon) and a class-specific inner glyph
+//! pattern. Examples vary in position, scale, brightness and noise —
+//! modeling the photometric/geometric variation of the real benchmark
+//! after its 32×32 rescale.
+
+use crate::util::prng::Pcg32;
+
+use super::{RawDataModel, Sizes};
+
+pub const SIZE: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const CLASSES: usize = 43;
+
+pub fn sizes() -> Sizes {
+    // Paper: 39209 train / 12630 test; scaled down, keeping every class.
+    Sizes { train: 1290, test: 430 }
+}
+
+#[derive(Clone, Copy)]
+enum Shape {
+    Disc,
+    Triangle,
+    Diamond,
+    Octagon,
+}
+
+fn class_style(class: usize) -> (Shape, [f32; 3], [f32; 3]) {
+    let shape = match class % 4 {
+        0 => Shape::Disc,
+        1 => Shape::Triangle,
+        2 => Shape::Diamond,
+        _ => Shape::Octagon,
+    };
+    // Rim color family by class band (prohibitory/mandatory/priority/other).
+    let rim = match (class / 4) % 4 {
+        0 => [0.9, 0.1, 0.1],
+        1 => [0.1, 0.2, 0.9],
+        2 => [0.9, 0.8, 0.1],
+        _ => [0.3, 0.3, 0.3],
+    };
+    // Inner glyph tone varies with the class index.
+    let g = (class as f32 * 0.618) % 1.0;
+    let glyph = [g, 1.0 - g, 0.5 + 0.5 * ((class as f32) * 0.37).sin()];
+    (shape, rim, glyph)
+}
+
+fn inside(shape: Shape, dx: f32, dy: f32, r: f32) -> bool {
+    match shape {
+        Shape::Disc => dx * dx + dy * dy <= r * r,
+        Shape::Triangle => dy >= -r * 0.6 && dy <= r && dx.abs() <= (r - dy) * 0.6,
+        Shape::Diamond => dx.abs() + dy.abs() <= r,
+        Shape::Octagon => dx.abs().max(dy.abs()) + 0.41 * (dx.abs() + dy.abs()) <= 1.2 * r,
+    }
+}
+
+fn synth_example(rng: &mut Pcg32, class: usize, out: &mut Vec<f32>) {
+    let (shape, rim, glyph) = class_style(class);
+    let cx = 16.0 + rng.normal() * 1.0;
+    let cy = 16.0 + rng.normal() * 1.0;
+    let r = 11.0 + rng.normal() * 1.2;
+    let brightness = 0.75 + 0.5 * rng.uniform();
+    // Class-specific glyph stripe frequency/orientation.
+    let freq = 0.5 + (class % 7) as f32 * 0.35;
+    let angle = (class % 5) as f32 * 0.6;
+    let (ca, sa) = (angle.cos(), angle.sin());
+    for y in 0..SIZE {
+        for x in 0..SIZE {
+            let dx = x as f32 - cx;
+            let dy = y as f32 - cy;
+            let in_sign = inside(shape, dx, dy, r);
+            let in_core = inside(shape, dx, dy, r * 0.65);
+            for ch in 0..CHANNELS {
+                let mut v = 0.25; // road background
+                if in_sign {
+                    v = rim[ch];
+                    if in_core {
+                        // Glyph: oriented stripes with class frequency.
+                        let u = (dx * ca + dy * sa) * freq;
+                        let stripe = 0.5 + 0.5 * u.sin();
+                        v = glyph[ch] * stripe + 0.9 * (1.0 - stripe);
+                    }
+                }
+                v = v * brightness + rng.normal() * 0.10;
+                out.push(v.clamp(0.0, 1.5));
+            }
+        }
+    }
+}
+
+pub fn generate(seed: u64) -> RawDataModel {
+    let sz = sizes();
+    let mut rng = Pcg32::seeded(seed ^ 0x4754_5352);
+    let gen_split = |rng: &mut Pcg32, n: usize| {
+        let mut xs = Vec::with_capacity(n * SIZE * SIZE * CHANNELS);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % CLASSES;
+            synth_example(rng, class, &mut xs);
+            ys.push(class as i32);
+        }
+        (xs, ys)
+    };
+    let (train_x, train_y) = gen_split(&mut rng, sz.train);
+    let (test_x, test_y) = gen_split(&mut rng, sz.test);
+    let mut d = RawDataModel {
+        name: "gtsrb",
+        shape: vec![SIZE, SIZE, CHANNELS],
+        classes: CLASSES,
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+    };
+    d.normalize();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        let d = generate(1);
+        assert_eq!(d.shape, vec![32, 32, 3]);
+        assert_eq!(d.classes, 43);
+        assert_eq!(d.n_train() % CLASSES, 0);
+    }
+
+    #[test]
+    fn color_bands_differ_between_families() {
+        // Class 0 (red rim) and class 4 (blue rim) must differ strongly in
+        // the R/B channel balance inside the sign area.
+        let d = generate(2);
+        let l = d.example_len();
+        let chan_mean = |i: usize, ch: usize| {
+            let ex = &d.train_x[i * l..(i + 1) * l];
+            let mut s = 0.0f32;
+            let mut n = 0;
+            for p in 0..SIZE * SIZE {
+                s += ex[p * 3 + ch];
+                n += 1;
+            }
+            s / n as f32
+        };
+        let i_red = d.train_y.iter().position(|&y| y == 0).unwrap();
+        let i_blue = d.train_y.iter().position(|&y| y == 4).unwrap();
+        let red_balance = chan_mean(i_red, 0) - chan_mean(i_red, 2);
+        let blue_balance = chan_mean(i_blue, 0) - chan_mean(i_blue, 2);
+        assert!(red_balance > blue_balance + 0.1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Synthetic Spoken-MNIST: 10 spoken digits as 39-step series of 12 MFCC +
+//! 1 energy coefficient (§6.1.2: 50 ms windows, 50% overlap, ~1 s audio).
+//!
+//! Each digit is modeled as a sequence of 2–3 "phoneme" segments with
+//! digit-specific formant targets; MFCC channels follow smooth trajectories
+//! between targets with speaker-dependent offsets, rate jitter, and noise —
+//! the same cepstral-trajectory structure a real keyword CNN keys on.
+
+use crate::util::prng::Pcg32;
+
+use super::{RawDataModel, Sizes};
+
+pub const STEPS: usize = 39;
+pub const COEFFS: usize = 13;
+pub const CLASSES: usize = 10;
+
+pub fn sizes() -> Sizes {
+    // Paper: 60000/10000 after duplication; scaled way down.
+    Sizes { train: 1500, test: 500 }
+}
+
+/// Digit-specific phoneme target matrix: per segment, per coefficient base.
+fn targets(digit: usize, seg: usize, coeff: usize) -> f32 {
+    // Deterministic pseudo-random but fixed structure per (digit, seg, c).
+    let h = (digit * 31 + seg * 7 + coeff * 13) % 17;
+    ((h as f32) / 8.5 - 1.0) * 0.6
+}
+
+fn n_segments(digit: usize) -> usize {
+    2 + (digit % 2) // "one" vs "seven" style lengths
+}
+
+fn synth_example(rng: &mut Pcg32, digit: usize, out: &mut Vec<f32>) {
+    let segs = n_segments(digit);
+    let speaker_off: Vec<f32> = (0..COEFFS).map(|_| rng.normal() * 0.45).collect();
+    let rate = 0.85 + 0.3 * rng.uniform(); // speaking-rate jitter
+    for t in 0..STEPS {
+        // Position within the utterance, jittered.
+        let pos = (t as f32 * rate / STEPS as f32).min(0.999) * segs as f32;
+        let seg = pos as usize;
+        let frac = pos - seg as f32;
+        let seg = seg.min(segs - 1);
+        let nxt = (seg + 1).min(segs - 1);
+        for c in 0..COEFFS {
+            let a = targets(digit, seg, c);
+            let b = targets(digit, nxt, c);
+            // Smoothstep interpolation between phoneme targets.
+            let s = frac * frac * (3.0 - 2.0 * frac);
+            let mut v = a + (b - a) * s + speaker_off[c];
+            if c == 0 {
+                // Energy coefficient: rises then decays over the utterance.
+                let u = t as f32 / STEPS as f32;
+                v += 1.5 * (std::f32::consts::PI * u).sin();
+            }
+            v += rng.normal() * 0.6;
+            out.push(v);
+        }
+    }
+}
+
+pub fn generate(seed: u64) -> RawDataModel {
+    let sz = sizes();
+    let mut rng = Pcg32::seeded(seed ^ 0x534D_4E49);
+    let gen_split = |rng: &mut Pcg32, n: usize| {
+        let mut xs = Vec::with_capacity(n * STEPS * COEFFS);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let digit = i % CLASSES;
+            synth_example(rng, digit, &mut xs);
+            ys.push(digit as i32);
+        }
+        (xs, ys)
+    };
+    let (train_x, train_y) = gen_split(&mut rng, sz.train);
+    let (test_x, test_y) = gen_split(&mut rng, sz.test);
+    let mut d = RawDataModel {
+        name: "smnist",
+        shape: vec![STEPS, COEFFS],
+        classes: CLASSES,
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+    };
+    d.normalize();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        let d = generate(1);
+        assert_eq!(d.shape, vec![39, 13]);
+        assert_eq!(d.classes, 10);
+    }
+
+    #[test]
+    fn digits_have_distinct_mean_trajectories() {
+        let d = generate(2);
+        let l = d.example_len();
+        // Average per-class profiles must differ pairwise (separability).
+        let mut profiles = vec![vec![0.0f32; l]; CLASSES];
+        let mut counts = vec![0usize; CLASSES];
+        for i in 0..d.n_train() {
+            let y = d.train_y[i] as usize;
+            for (j, &v) in d.train_x[i * l..(i + 1) * l].iter().enumerate() {
+                profiles[y][j] += v;
+            }
+            counts[y] += 1;
+        }
+        for (p, &c) in profiles.iter_mut().zip(&counts) {
+            for v in p.iter_mut() {
+                *v /= c as f32;
+            }
+        }
+        for a in 0..CLASSES {
+            for b in (a + 1)..CLASSES {
+                let dist: f32 = profiles[a]
+                    .iter()
+                    .zip(&profiles[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum::<f32>()
+                    .sqrt();
+                assert!(dist > 1.0, "classes {a}/{b} too close: {dist}");
+            }
+        }
+    }
+}

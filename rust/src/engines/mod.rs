@@ -1,0 +1,258 @@
+//! Embedded inference engine models: MicroAI (ours), TensorFlow Lite for
+//! Microcontrollers and STM32Cube.AI (§5.1, Table 4).
+//!
+//! Each engine couples (a) a capability descriptor (supported dtypes,
+//! quantizer, portability — Table 4), (b) calibrated latency/ROM models per
+//! board+dtype (`mcu::cost`), and (c) for the engines we fully implement,
+//! the executor that actually runs: MicroAI's Qm.n integer engine
+//! (`nn::int_exec`) and the TFLite affine scheme (`nn::affine_exec`).
+
+use std::collections::BTreeMap;
+
+use crate::graph::ir::Graph;
+use crate::mcu::board::Board;
+use crate::mcu::cost::{energy_uwh, LatencyModel, RomModel};
+use crate::mcu::paper_data::{self, DType};
+
+/// Quantized-coding style (Table 4 row "Quantized coding").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coding {
+    /// Power-of-two scale, symmetric (MicroAI Qm.n).
+    FixedQmn,
+    /// Offset + non-power-of-two scale (TFLite/Cube.AI affine).
+    OffsetScale,
+}
+
+/// Capability descriptor (Table 4).
+#[derive(Clone, Debug)]
+pub struct Capabilities {
+    pub sources: &'static [&'static str],
+    pub validation: &'static str,
+    pub metrics: &'static str,
+    pub portability: &'static str,
+    pub open_source: bool,
+    pub dtypes: &'static [DType],
+    pub coding: Coding,
+    /// Deploys as generated code (true) or interpreted microcode (false) —
+    /// §5.1.1 vs §5.7.
+    pub compiled: bool,
+}
+
+pub struct Engine {
+    pub name: &'static str,
+    pub caps: Capabilities,
+    /// (board name, dtype) -> calibrated models.
+    latency: BTreeMap<(String, DTypeKey), LatencyModel>,
+    rom: BTreeMap<DTypeKey, RomModel>,
+}
+
+type DTypeKey = &'static str;
+
+fn key(d: DType) -> DTypeKey {
+    d.label()
+}
+
+impl Engine {
+    fn calibrated(name: &'static str, caps: Capabilities) -> Engine {
+        let mut latency = BTreeMap::new();
+        let mut rom = BTreeMap::new();
+        for s in &paper_data::TABLE_A4_MS {
+            if s.framework == name {
+                let board = Board::by_name(s.board).unwrap();
+                latency.insert(
+                    (s.board.to_string(), key(s.dtype)),
+                    LatencyModel::calibrate(s, board),
+                );
+            }
+        }
+        for s in &paper_data::TABLE_A3_KIB {
+            if s.framework == name {
+                rom.entry(key(s.dtype)).or_insert_with(|| RomModel::calibrate(s));
+            }
+        }
+        Engine { name, caps, latency, rom }
+    }
+
+    pub fn supports(&self, dtype: DType) -> bool {
+        self.caps.dtypes.contains(&dtype)
+    }
+
+    pub fn supports_board(&self, board: &Board) -> bool {
+        match self.name {
+            // STM32Cube.AI only targets STM32 parts (§5.1.2).
+            "STM32Cube.AI" => board.mcu.starts_with("STM32"),
+            _ => true,
+        }
+    }
+
+    /// Predicted one-input latency (s). Falls back to the nearest
+    /// calibrated board when this engine was never measured on `board`.
+    pub fn latency_s(&self, graph: &Graph, board: &Board, dtype: DType) -> Option<f64> {
+        if !self.supports(dtype) || !self.supports_board(board) {
+            return None;
+        }
+        let model = self
+            .latency
+            .get(&(board.name.to_string(), key(dtype)))
+            .or_else(|| {
+                self.latency
+                    .iter()
+                    .find(|((_, d), _)| *d == key(dtype))
+                    .map(|(_, m)| m)
+            })?;
+        Some(model.latency_s(graph, board))
+    }
+
+    /// Predicted ROM footprint (bytes).
+    pub fn rom_bytes(&self, graph: &Graph, filters: usize, dtype: DType) -> Option<f64> {
+        if !self.supports(dtype) {
+            return None;
+        }
+        self.rom.get(&key(dtype)).map(|m| m.rom_bytes(graph, filters))
+    }
+
+    /// Predicted energy per inference (µWh).
+    pub fn energy_uwh(&self, graph: &Graph, board: &Board, dtype: DType) -> Option<f64> {
+        self.latency_s(graph, board, dtype).map(|t| energy_uwh(t, board))
+    }
+}
+
+pub fn microai() -> Engine {
+    Engine::calibrated(
+        "MicroAI",
+        Capabilities {
+            sources: &["Keras", "PyTorch"],
+            validation: "Integrated tools",
+            metrics: "ROM footprint, inference time",
+            portability: "Any 32-bit MCU",
+            open_source: true,
+            dtypes: &[DType::F32, DType::I16, DType::I8],
+            coding: Coding::FixedQmn,
+            compiled: true,
+        },
+    )
+}
+
+pub fn tflite_micro() -> Engine {
+    Engine::calibrated(
+        "TFLiteMicro",
+        Capabilities {
+            sources: &["Keras", "TFLite"],
+            validation: "None",
+            metrics: "None",
+            portability: "Any 32-bit MCU",
+            open_source: true,
+            dtypes: &[DType::F32, DType::I8],
+            coding: Coding::OffsetScale,
+            compiled: false, // interpreted microcode, §5.1.1
+        },
+    )
+}
+
+pub fn stm32cube_ai() -> Engine {
+    Engine::calibrated(
+        "STM32Cube.AI",
+        Capabilities {
+            sources: &["Keras", "TFLite"],
+            validation: "Integrated tools",
+            metrics: "RAM/ROM footprint, inference time, MACC",
+            portability: "STM32 only",
+            open_source: false,
+            dtypes: &[DType::F32, DType::I8],
+            coding: Coding::OffsetScale,
+            compiled: true,
+        },
+    )
+}
+
+pub fn all_engines() -> Vec<Engine> {
+    vec![microai(), tflite_micro(), stm32cube_ai()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcu::board::{NUCLEO_L452RE_P, SPARKFUN_EDGE};
+    use crate::mcu::cost::har_graph;
+
+    #[test]
+    fn capability_matrix_table4() {
+        let m = microai();
+        assert!(m.supports(DType::I16)); // the paper's differentiator
+        let t = tflite_micro();
+        assert!(!t.supports(DType::I16));
+        let c = stm32cube_ai();
+        assert!(!c.supports(DType::I16));
+        assert!(!c.caps.open_source);
+        assert_eq!(m.caps.coding, Coding::FixedQmn);
+        assert_eq!(t.caps.coding, Coding::OffsetScale);
+    }
+
+    #[test]
+    fn cube_ai_refuses_non_stm32() {
+        let c = stm32cube_ai();
+        let g = har_graph(16);
+        assert!(c.latency_s(&g, &SPARKFUN_EDGE, DType::I8).is_none());
+        assert!(c.latency_s(&g, &NUCLEO_L452RE_P, DType::I8).is_some());
+    }
+
+    #[test]
+    fn fig12_orderings_at_80_filters() {
+        // Fig 12: CubeAI int8 fastest; TFLM float slowest.
+        let g = har_graph(80);
+        let cube = stm32cube_ai().latency_s(&g, &NUCLEO_L452RE_P, DType::I8).unwrap();
+        let tflm_f = tflite_micro().latency_s(&g, &SPARKFUN_EDGE, DType::F32).unwrap();
+        let micro8 = microai().latency_s(&g, &NUCLEO_L452RE_P, DType::I8).unwrap();
+        assert!(cube < micro8);
+        assert!(micro8 < tflm_f);
+        // Paper headline: 352 ms vs 1034 ms vs 2087 ms.
+        assert!((cube * 1e3 - 352.0).abs() < 5.0, "{}", cube * 1e3);
+        assert!((tflm_f * 1e3 - 2087.0).abs() < 25.0, "{}", tflm_f * 1e3);
+    }
+
+    #[test]
+    fn fig13_sparkfun_most_efficient() {
+        // Fig 13 conclusion: "the SparkFun Edge board provides the best
+        // power efficiency in all situations".
+        let g = har_graph(80);
+        let m = microai();
+        for dt in [DType::F32, DType::I16, DType::I8] {
+            let sf = m.energy_uwh(&g, &SPARKFUN_EDGE, dt).unwrap();
+            let nu = m.energy_uwh(&g, &NUCLEO_L452RE_P, dt).unwrap();
+            assert!(sf < nu, "{dt:?}: {sf} vs {nu}");
+        }
+    }
+
+    #[test]
+    fn fig11_rom_per_dtype_ordering() {
+        // Fig 11: int8 < int16 < float32 ROM for MicroAI.
+        let g = har_graph(80);
+        let m = microai();
+        let r8 = m.rom_bytes(&g, 80, DType::I8).unwrap();
+        let r16 = m.rom_bytes(&g, 80, DType::I16).unwrap();
+        let rf = m.rom_bytes(&g, 80, DType::F32).unwrap();
+        assert!(r8 < r16 && r16 < rf);
+        // TFLM carries a much larger runtime at small models.
+        let t8 = tflite_micro().rom_bytes(&har_graph(16), 16, DType::I8).unwrap();
+        let m8 = m.rom_bytes(&har_graph(16), 16, DType::I8).unwrap();
+        assert!(t8 > 2.0 * m8, "TFLM {t8} vs MicroAI {m8}");
+    }
+
+    #[test]
+    fn int16_beats_float_always_for_microai() {
+        // §7: "fixed-point quantization on 16-bit integers can therefore
+        // always be preferred to a 32-bit floating-point inference".
+        let m = microai();
+        for f in crate::mcu::paper_data::FILTERS {
+            let g = har_graph(f);
+            for b in [&NUCLEO_L452RE_P, &SPARKFUN_EDGE] {
+                let t16 = m.latency_s(&g, b, DType::I16).unwrap();
+                let tf = m.latency_s(&g, b, DType::F32).unwrap();
+                assert!(t16 < tf, "f={f} board={}", b.name);
+                let r16 = m.rom_bytes(&g, f, DType::I16).unwrap();
+                let rf = m.rom_bytes(&g, f, DType::F32).unwrap();
+                assert!(r16 < rf);
+            }
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Fixed-point Qm.n arithmetic (paper §3.2, §4.1, §5.8).
+//!
+//! This module is the numeric substrate of the MicroAI integer inference
+//! engine (`nn::int_ops`) and the quantizer (`quant`). Semantics mirror the
+//! generated C code described in the paper:
+//!
+//! - signed two's-complement payloads in `i8`/`i16` (generically `i32`),
+//! - widening multiply-accumulate into a payload twice the operand width
+//!   (`long_number_t` in the C headers),
+//! - rescale by arithmetic shift right (floor semantics, like `>>` in C),
+//! - saturation on the way back to the narrow type
+//!   (`clamp_to_number_t`, §5.6).
+//!
+//! The scale-factor rule (Eqs 1–4) lives in [`QFormat`]; it is pinned to the
+//! same vectors as `python/compile/kernels/quant_math.py`.
+
+pub mod ops;
+pub mod qformat;
+
+pub use ops::{clamp_to, macc_i32, rescale, sat_add_i32, sat_mul_shift};
+pub use qformat::QFormat;

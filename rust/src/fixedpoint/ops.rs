@@ -1,0 +1,136 @@
+//! Scalar fixed-point primitives with the generated-C semantics of §5.8.
+//!
+//! Payloads are carried as `i32` (operands) and `i64` (accumulators — the
+//! `long_number_t` of the C headers). The hot loops in `nn::int_ops` inline
+//! these; they are kept as free functions so the property tests and the C
+//! code generator share one definition.
+
+/// Saturate an i64 accumulator to a `width`-bit signed payload
+/// (`clamp_to_number_t` in the generated number.h).
+#[inline(always)]
+pub fn clamp_to(acc: i64, width: u32) -> i32 {
+    let lo = -(1i64 << (width - 1));
+    let hi = (1i64 << (width - 1)) - 1;
+    acc.clamp(lo, hi) as i32
+}
+
+/// Multiply-accumulate: acc += a * b, widening (SMLABB on Cortex-M4,
+/// Table A6: 1 cycle).
+#[inline(always)]
+pub fn macc_i32(acc: i64, a: i32, b: i32) -> i64 {
+    acc + (a as i64) * (b as i64)
+}
+
+/// Arithmetic-shift-right rescale with floor semantics; negative `shift`
+/// shifts left (scale up). Matches `>>` on two's-complement C integers.
+#[inline(always)]
+pub fn rescale(acc: i64, shift: i32) -> i64 {
+    if shift >= 0 {
+        acc >> shift.min(63)
+    } else {
+        acc << (-shift).min(63)
+    }
+}
+
+/// Full epilogue: rescale then saturate (the per-output-element tail of the
+/// conv/dense loops — Table A6 counts this as 2 shifts + 1 saturate).
+#[inline(always)]
+pub fn sat_mul_shift(acc: i64, shift: i32, width: u32) -> i32 {
+    clamp_to(rescale(acc, shift), width)
+}
+
+/// Saturating i32 addition at a given width (element-wise Add layer, §4.3).
+#[inline(always)]
+pub fn sat_add_i32(a: i32, b: i32, width: u32) -> i32 {
+    clamp_to(a as i64 + b as i64, width)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::check::property;
+
+    #[test]
+    fn clamp_bounds() {
+        assert_eq!(clamp_to(1_000_000, 8), 127);
+        assert_eq!(clamp_to(-1_000_000, 8), -128);
+        assert_eq!(clamp_to(100, 8), 100);
+        assert_eq!(clamp_to(40_000, 16), 32_767);
+        assert_eq!(clamp_to(-40_000, 16), -32_768);
+    }
+
+    #[test]
+    fn rescale_is_floor_division() {
+        assert_eq!(rescale(7, 1), 3);
+        assert_eq!(rescale(-7, 1), -4); // ASR floors, not truncates
+        assert_eq!(rescale(-1, 4), -1);
+        assert_eq!(rescale(5, -2), 20);
+    }
+
+    #[test]
+    fn macc_widens() {
+        let acc = macc_i32(0, i32::MAX, i32::MAX);
+        assert_eq!(acc, (i32::MAX as i64) * (i32::MAX as i64));
+    }
+
+    #[test]
+    fn sat_add_saturates_like_qadd() {
+        assert_eq!(sat_add_i32(120, 30, 8), 127);
+        assert_eq!(sat_add_i32(-120, -30, 8), -128);
+        assert_eq!(sat_add_i32(50, 20, 8), 70);
+    }
+
+    // Property: rescale+clamp equals exact arithmetic when in range.
+    #[test]
+    fn prop_epilogue_exact_when_in_range() {
+        property(500, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let shift = g.i32_in(0, 12);
+            let (lo, hi) = (-(1i64 << (width - 1)), (1i64 << (width - 1)) - 1);
+            let acc = g.i32_in(-100_000, 100_000) as i64;
+            let exact = (acc as f64 / f64::powi(2.0, shift)).floor() as i64;
+            let got = sat_mul_shift(acc, shift, width) as i64;
+            if (lo..=hi).contains(&exact) {
+                prop_assert!(got == exact, "acc={acc} shift={shift} got={got} exact={exact}");
+            } else {
+                prop_assert!(got == lo || got == hi, "saturation expected");
+            }
+            Ok(())
+        });
+    }
+
+    // Property: saturation is monotone — larger accumulator never maps to a
+    // smaller payload.
+    #[test]
+    fn prop_saturation_monotone() {
+        property(500, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let shift = g.i32_in(0, 8);
+            let a = g.i32_in(-1_000_000, 1_000_000) as i64;
+            let b = g.i32_in(-1_000_000, 1_000_000) as i64;
+            let (x, y) = if a <= b { (a, b) } else { (b, a) };
+            prop_assert!(
+                sat_mul_shift(x, shift, width) <= sat_mul_shift(y, shift, width),
+                "monotonicity violated at {x} vs {y}"
+            );
+            Ok(())
+        });
+    }
+
+    // Property: sat_add is commutative and bounded.
+    #[test]
+    fn prop_sat_add_commutative_bounded() {
+        property(500, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let (lo, hi) = (-(1i32 << (width - 1)), (1i32 << (width - 1)) - 1);
+            let a = g.i32_in(lo, hi);
+            let b = g.i32_in(lo, hi);
+            let ab = sat_add_i32(a, b, width);
+            let ba = sat_add_i32(b, a, width);
+            prop_assert!(ab == ba, "not commutative");
+            prop_assert!((lo..=hi).contains(&ab), "out of range");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,200 @@
+//! The Qm.n format and the paper's scale-factor rule (Eqs 1–4).
+
+/// A signed fixed-point format: `width` total bits (incl. sign) with `n`
+/// fractional bits. `m = width - n - 1` integer bits (Eq 2). `n` may exceed
+/// `width` (small-magnitude vectors recover leading unused bits, §4.1.4) or
+/// be negative (integer part not fully representable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    pub width: u32,
+    pub n: i32,
+}
+
+impl QFormat {
+    pub fn new(width: u32, n: i32) -> Self {
+        assert!((2..=32).contains(&width), "width {width}");
+        Self { width, n }
+    }
+
+    /// The paper's fixed Q7.9-on-16-bit network-wide format (§6: "Quantization
+    /// is performed using the Q7.9 format for the whole network").
+    pub fn q7_9() -> Self {
+        Self::new(16, 9)
+    }
+
+    /// Eqs 1–2: derive the format from the max absolute value of a vector.
+    /// An all-zero vector takes m = 0 (matches quant_math.py).
+    pub fn from_max_abs(max_abs: f32, width: u32) -> Self {
+        let m = if max_abs > 0.0 {
+            1 + max_abs.abs().log2().floor() as i32
+        } else {
+            0
+        };
+        Self::new(width, width as i32 - m - 1)
+    }
+
+    pub fn from_slice(xs: &[f32], width: u32) -> Self {
+        let max_abs = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        Self::from_max_abs(max_abs, width)
+    }
+
+    /// Integer payload limits (two's complement, Eq in §3.2).
+    pub fn limits(&self) -> (i32, i32) {
+        let lo = -(1i64 << (self.width - 1)) as i32;
+        let hi = ((1i64 << (self.width - 1)) - 1) as i32;
+        (lo, hi)
+    }
+
+    /// Scale factor s = 2^-n (Eq 4).
+    pub fn scale(&self) -> f32 {
+        (2.0f32).powi(-self.n)
+    }
+
+    /// Resolution of the format = 2^-n; dynamic range per §3.2.
+    pub fn resolution(&self) -> f32 {
+        self.scale()
+    }
+
+    pub fn dynamic_range(&self) -> (f32, f32) {
+        let (lo, hi) = self.limits();
+        (lo as f32 * self.scale(), hi as f32 * self.scale())
+    }
+
+    /// Eq 3 with saturation: float → integer payload, truncation toward 0.
+    pub fn quantize(&self, x: f32) -> i32 {
+        let (lo, hi) = self.limits();
+        let scaled = (x * (2.0f32).powi(self.n)).trunc();
+        if scaled <= lo as f32 {
+            lo
+        } else if scaled >= hi as f32 {
+            hi
+        } else {
+            scaled as i32
+        }
+    }
+
+    /// Integer payload → float.
+    pub fn dequantize(&self, q: i32) -> f32 {
+        q as f32 * self.scale()
+    }
+
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i32> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    pub fn dequantize_slice(&self, qs: &[i32]) -> Vec<f32> {
+        qs.iter().map(|&q| self.dequantize(q)).collect()
+    }
+
+    /// Worst-case quantization step (useful for error-bound tests).
+    pub fn step(&self) -> f32 {
+        self.scale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pinned to python/tests/test_quant_math.py::PINNED_N — the cross-layer
+    // contract.
+    #[test]
+    fn pinned_scale_vectors() {
+        let cases: &[(f32, u32, i32)] = &[
+            (1.0, 8, 6),
+            (1.98, 8, 6),
+            (2.0, 8, 5),
+            (0.49, 8, 8),
+            (0.25, 8, 8),
+            (100.0, 8, 0),
+            (200.0, 8, -1),
+            (1.0, 16, 14),
+            (3.0, 16, 13),
+            (0.0078125, 16, 21),
+        ];
+        for &(maxabs, width, expect_n) in cases {
+            let q = QFormat::from_max_abs(maxabs, width);
+            assert_eq!(q.n, expect_n, "max_abs={maxabs} width={width}");
+        }
+    }
+
+    #[test]
+    fn zero_vector_convention() {
+        assert_eq!(QFormat::from_max_abs(0.0, 8).n, 7);
+        assert_eq!(QFormat::from_max_abs(0.0, 16).n, 15);
+    }
+
+    #[test]
+    fn q7_9_matches_paper_table2_style() {
+        let q = QFormat::q7_9();
+        let (lo, hi) = q.dynamic_range();
+        assert_eq!(lo, -64.0); // Q7.9: m=6 magnitude bits + sign
+        assert!((hi - (64.0 - q.step())).abs() < 1e-6);
+        assert!((q.resolution() - 0.001953125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn q16_16_table2() {
+        // Table 2: Q16.16 on 32 bits -> range [-32768, 32767.9999847],
+        // resolution 1.5259e-5.
+        let q = QFormat::new(32, 16);
+        let (lo, hi) = q.dynamic_range();
+        assert_eq!(lo, -32768.0);
+        assert!((hi - 32767.99998).abs() < 1e-3);
+        assert!((q.resolution() - 1.5259e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantize_truncates_toward_zero() {
+        let q = QFormat::new(8, 0);
+        assert_eq!(q.quantize(1.9), 1);
+        assert_eq!(q.quantize(-1.9), -1);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let q = QFormat::new(8, 0);
+        assert_eq!(q.quantize(300.0), 127);
+        assert_eq!(q.quantize(-300.0), -128);
+    }
+
+    #[test]
+    fn roundtrip_error_below_step() {
+        use crate::util::check::property;
+        property(200, |g| {
+            let width = *g.pick(&[8u32, 9, 16]);
+            let xs = g.vec_normal(64, 2.0);
+            let q = QFormat::from_slice(&xs, width);
+            for &x in &xs {
+                let rt = q.dequantize(q.quantize(x));
+                let err = (rt - x).abs();
+                crate::prop_assert!(
+                    err < q.step() + 1e-6,
+                    "width={width} n={} x={x} rt={rt} err={err}",
+                    q.n
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn negative_n_loses_low_bits_only() {
+        // max 200 at width 8 -> n = -1: representable multiples of 2.
+        let q = QFormat::from_max_abs(200.0, 8);
+        assert_eq!(q.n, -1);
+        assert_eq!(q.quantize(200.0), 100); // payload 100 * 2^1 = 200
+        assert_eq!(q.dequantize(q.quantize(200.0)), 200.0);
+        assert_eq!(q.dequantize(q.quantize(3.0)), 2.0); // truncated
+    }
+
+    #[test]
+    fn dequantize_slice_roundtrip() {
+        let q = QFormat::new(16, 9);
+        let xs = vec![0.5, -0.25, 1.75, 63.0];
+        let rt = q.dequantize_slice(&q.quantize_slice(&xs));
+        for (a, b) in xs.iter().zip(rt.iter()) {
+            assert!((a - b).abs() <= q.step());
+        }
+    }
+}

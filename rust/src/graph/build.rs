@@ -1,0 +1,222 @@
+//! Model builders — the architecture templates MicroAI ships (§5.4):
+//! MLP, CNN, and the ResNetv1-6 of Fig 4 (the one used in every experiment).
+//!
+//! `resnet_v1_6` mirrors python/compile/model.py::apply EXACTLY — same
+//! topology, same parameter order (model.py::PARAM_NAMES) — so that weights
+//! trained through the HLO artifacts drop straight into this graph.
+
+use crate::tensor::{Tensor, TensorF};
+
+use super::ir::{Graph, LayerKind, Padding};
+
+/// The 14 parameter tensors of ResNetv1-6 in the shared deployment order.
+pub const RESNET_PARAM_NAMES: [&str; 14] = [
+    "c1w", "c1b", "b1c1w", "b1c1b", "b1c2w", "b1c2b", "b2c1w", "b2c1b",
+    "b2c2w", "b2c2b", "scw", "scb", "dw", "db",
+];
+
+fn conv(w: TensorF, b: TensorF, stride: usize) -> LayerKind {
+    LayerKind::Conv { w, b, stride, padding: Padding::Same }
+}
+
+/// Build the ResNetv1-6 graph from its parameter list (model.py order).
+///
+/// dims=1: input (S, C); dims=2: input (H, W, C). `params` must hold the 14
+/// tensors named in RESNET_PARAM_NAMES with JAX shapes ((k,C,F) / (kh,kw,C,F)
+/// convs, (in,out) dense).
+pub fn resnet_v1_6(
+    name: &str,
+    dims: usize,
+    input_shape: &[usize],
+    classes: usize,
+    params: Vec<TensorF>,
+) -> Graph {
+    assert_eq!(params.len(), 14, "expected 14 parameter tensors");
+    let mut it = params.into_iter();
+    let mut next = || it.next().unwrap();
+    let (c1w, c1b) = (next(), next());
+    let (b1c1w, b1c1b) = (next(), next());
+    let (b1c2w, b1c2b) = (next(), next());
+    let (b2c1w, b2c1b) = (next(), next());
+    let (b2c2w, b2c2b) = (next(), next());
+    let (scw, scb) = (next(), next());
+    let (dw, db) = (next(), next());
+
+    let mut g = Graph::new(name, dims, input_shape, classes);
+    let c1 = g.add("conv1", conv(c1w, c1b, 1), vec![0]);
+    let r1 = g.add("relu1", LayerKind::ReLU, vec![c1]);
+    let p1 = g.add("pool1", LayerKind::MaxPool { size: 2 }, vec![r1]);
+
+    // Block 1: identity shortcut.
+    let b1a = g.add("b1conv1", conv(b1c1w, b1c1b, 1), vec![p1]);
+    let b1r = g.add("b1relu", LayerKind::ReLU, vec![b1a]);
+    let b1b = g.add("b1conv2", conv(b1c2w, b1c2b, 1), vec![b1r]);
+    let add1 = g.add("add1", LayerKind::Add, vec![p1, b1b]);
+    let r2 = g.add("relu2", LayerKind::ReLU, vec![add1]);
+    let p2 = g.add("pool2", LayerKind::MaxPool { size: 2 }, vec![r2]);
+
+    // Block 2: stride-2, 1x1-conv shortcut.
+    let b2a = g.add("b2conv1", conv(b2c1w, b2c1b, 2), vec![p2]);
+    let b2r = g.add("b2relu", LayerKind::ReLU, vec![b2a]);
+    let b2b = g.add("b2conv2", conv(b2c2w, b2c2b, 1), vec![b2r]);
+    let sc = g.add("shortcut", conv(scw, scb, 2), vec![p2]);
+    let add2 = g.add("add2", LayerKind::Add, vec![sc, b2b]);
+    let r3 = g.add("relu3", LayerKind::ReLU, vec![add2]);
+
+    let gap = g.add("gap", LayerKind::GlobalAvgPool, vec![r3]);
+    let _fc = g.add("fc", LayerKind::Dense { w: dw, b: db }, vec![gap]);
+    g
+}
+
+/// ResNetv1-6 with zero weights of the right shapes — used by the cost /
+/// ROM models and the allocator, where only the topology matters.
+pub fn resnet_v1_6_shapes(
+    name: &str,
+    dims: usize,
+    input_shape: &[usize],
+    classes: usize,
+    filters: usize,
+) -> Graph {
+    let c = *input_shape.last().unwrap();
+    let f = filters;
+    let k = 3usize;
+    let conv_t = |ci: usize, co: usize, kk: usize| -> TensorF {
+        if dims == 1 {
+            Tensor::zeros(&[kk, ci, co])
+        } else {
+            Tensor::zeros(&[kk, kk, ci, co])
+        }
+    };
+    let params = vec![
+        conv_t(c, f, k), Tensor::zeros(&[f]),
+        conv_t(f, f, k), Tensor::zeros(&[f]),
+        conv_t(f, f, k), Tensor::zeros(&[f]),
+        conv_t(f, f, k), Tensor::zeros(&[f]),
+        conv_t(f, f, k), Tensor::zeros(&[f]),
+        conv_t(f, f, 1), Tensor::zeros(&[f]),
+        Tensor::zeros(&[f, classes]), Tensor::zeros(&[classes]),
+    ];
+    resnet_v1_6(name, dims, input_shape, classes, params)
+}
+
+/// Simple sequential CNN template (§5.4): conv-relu-pool stacks + dense.
+pub fn cnn(
+    name: &str,
+    dims: usize,
+    input_shape: &[usize],
+    classes: usize,
+    conv_filters: &[usize],
+    kernel: usize,
+    dense_units: usize,
+) -> Graph {
+    let mut g = Graph::new(name, dims, input_shape, classes);
+    let mut prev = 0usize;
+    let mut in_ch = *input_shape.last().unwrap();
+    for (i, &f) in conv_filters.iter().enumerate() {
+        let w = if dims == 1 {
+            Tensor::zeros(&[kernel, in_ch, f])
+        } else {
+            Tensor::zeros(&[kernel, kernel, in_ch, f])
+        };
+        let c = g.add(&format!("conv{i}"), conv(w, Tensor::zeros(&[f]), 1), vec![prev]);
+        let r = g.add(&format!("relu{i}"), LayerKind::ReLU, vec![c]);
+        prev = g.add(&format!("pool{i}"), LayerKind::MaxPool { size: 2 }, vec![r]);
+        in_ch = f;
+    }
+    let fl = g.add("flatten", LayerKind::Flatten, vec![prev]);
+    let fl_units: usize = g.node(fl).out_shape.iter().product();
+    let d1 = g.add(
+        "fc1",
+        LayerKind::Dense { w: Tensor::zeros(&[fl_units, dense_units]), b: Tensor::zeros(&[dense_units]) },
+        vec![fl],
+    );
+    let r = g.add("fcrelu", LayerKind::ReLU, vec![d1]);
+    g.add(
+        "fc2",
+        LayerKind::Dense { w: Tensor::zeros(&[dense_units, classes]), b: Tensor::zeros(&[classes]) },
+        vec![r],
+    );
+    g
+}
+
+/// Multi-layer perceptron template (§5.4).
+pub fn mlp(name: &str, input_units: usize, hidden: &[usize], classes: usize) -> Graph {
+    let mut g = Graph::new(name, 1, &[input_units, 1], classes);
+    let mut prev = g.add("flatten", LayerKind::Flatten, vec![0]);
+    let mut in_u = input_units;
+    for (i, &h) in hidden.iter().enumerate() {
+        let d = g.add(
+            &format!("fc{i}"),
+            LayerKind::Dense { w: Tensor::zeros(&[in_u, h]), b: Tensor::zeros(&[h]) },
+            vec![prev],
+        );
+        prev = g.add(&format!("relu{i}"), LayerKind::ReLU, vec![d]);
+        in_u = h;
+    }
+    g.add(
+        "out",
+        LayerKind::Dense { w: Tensor::zeros(&[in_u, classes]), b: Tensor::zeros(&[classes]) },
+        vec![prev],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_har_16_param_count_matches_paper() {
+        // §6.1.1 / Fig 6: 3958 parameters at 16 filters on UCI-HAR.
+        let g = resnet_v1_6_shapes("har", 1, &[128, 9], 6, 16);
+        assert_eq!(g.param_count(), 3958);
+    }
+
+    #[test]
+    fn resnet_shapes_1d() {
+        let g = resnet_v1_6_shapes("har", 1, &[128, 9], 6, 16);
+        let out = &g.nodes[g.output_id()];
+        assert_eq!(out.out_shape, vec![6]);
+        // block2 output spatial: 128 -> pool 64 -> pool 32 -> stride2 16
+        let add2 = g.nodes.iter().find(|n| n.name == "add2").unwrap();
+        assert_eq!(add2.out_shape, vec![16, 16]);
+    }
+
+    #[test]
+    fn resnet_shapes_2d() {
+        let g = resnet_v1_6_shapes("gtsrb", 2, &[32, 32, 3], 43, 8);
+        let add2 = g.nodes.iter().find(|n| n.name == "add2").unwrap();
+        assert_eq!(add2.out_shape, vec![4, 4, 8]);
+        assert_eq!(g.nodes[g.output_id()].out_shape, vec![43]);
+    }
+
+    #[test]
+    fn resnet_smnist_odd_sizes() {
+        let g = resnet_v1_6_shapes("smnist", 1, &[39, 13], 10, 8);
+        // 39 -> pool 19 -> pool 9 -> stride2 SAME ceil(9/2)=5
+        let add2 = g.nodes.iter().find(|n| n.name == "add2").unwrap();
+        assert_eq!(add2.out_shape, vec![5, 8]);
+    }
+
+    #[test]
+    fn cnn_and_mlp_build() {
+        let g = cnn("c", 1, &[64, 4], 5, &[8, 16], 3, 32);
+        assert_eq!(g.nodes[g.output_id()].out_shape, vec![5]);
+        let m = mlp("m", 100, &[32, 16], 4);
+        assert_eq!(m.nodes[m.output_id()].out_shape, vec![4]);
+        assert_eq!(m.param_count(), 100 * 32 + 32 + 32 * 16 + 16 + 16 * 4 + 4);
+    }
+
+    #[test]
+    fn paper_filter_sweep_param_counts_monotone() {
+        let mut last = 0usize;
+        for f in [16, 24, 32, 40, 48, 64, 80] {
+            let g = resnet_v1_6_shapes("har", 1, &[128, 9], 6, f);
+            assert!(g.param_count() > last);
+            last = g.param_count();
+        }
+        // 80 filters: conv1 2240 + 4*19280 + shortcut 6480 + fc 486
+        let g = resnet_v1_6_shapes("har", 1, &[128, 9], 6, 80);
+        assert_eq!(g.param_count(), 2240 + 4 * 19280 + 6480 + 486);
+    }
+}

@@ -1,0 +1,328 @@
+//! Layer-graph intermediate representation (§5.6–5.7).
+//!
+//! KerasCNN2C parses a trained Keras model into "an internal representation
+//! of the topology (i.e., a graph), with each node corresponding to a
+//! layer". This is that IR on the Rust side: nodes are layers, edges are
+//! data dependencies (multi-input nodes — `Add` — enable residual
+//! topologies). Deployment passes (`passes.rs`), the allocator, the integer
+//! engine, the C emitter and the MCU cost model all consume this one IR.
+
+use crate::tensor::TensorF;
+
+/// Spatial padding policy (XLA semantics; SAME matches the JAX model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+/// Explicit zero padding amounts per spatial dim (lo, hi).
+pub type PadSpec = Vec<(usize, usize)>;
+
+#[derive(Clone, Debug)]
+pub enum LayerKind {
+    /// Graph input placeholder.
+    Input,
+    /// Convolution, 1D or 2D according to `Graph::dims`. Weights are
+    /// channels-last: (k, C, F) or (kh, kw, C, F).
+    Conv { w: TensorF, b: TensorF, stride: usize, padding: Padding },
+    /// Fully connected: w (in, out), b (out).
+    Dense { w: TensorF, b: TensorF },
+    /// Max pooling, VALID, stride == size (the paper's usage).
+    MaxPool { size: usize },
+    /// Average pooling, VALID, stride == size.
+    AvgPool { size: usize },
+    /// Mean over all spatial positions.
+    GlobalAvgPool,
+    /// Element-wise residual addition (two inputs).
+    Add,
+    /// Standalone ReLU (§4.3 treats it as a separate layer; passes fuse it).
+    ReLU,
+    /// Softmax (stripped for deployment, §5.4 RemoveKerasSoftmax).
+    Softmax,
+    /// Explicit zero padding (fused into the next conv by passes).
+    ZeroPad { pad: PadSpec },
+    /// Batch normalization; folded to y = w*x + b by passes (Eqs 5–7).
+    BatchNorm { mean: Vec<f32>, var: Vec<f32>, gamma: Vec<f32>, beta: Vec<f32>, eps: f32 },
+    /// Flatten spatial dims (before Dense in the CNN template).
+    Flatten,
+}
+
+impl LayerKind {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            LayerKind::Input => "Input",
+            LayerKind::Conv { .. } => "Conv",
+            LayerKind::Dense { .. } => "Dense",
+            LayerKind::MaxPool { .. } => "MaxPool",
+            LayerKind::AvgPool { .. } => "AvgPool",
+            LayerKind::GlobalAvgPool => "GlobalAvgPool",
+            LayerKind::Add => "Add",
+            LayerKind::ReLU => "ReLU",
+            LayerKind::Softmax => "Softmax",
+            LayerKind::ZeroPad { .. } => "ZeroPad",
+            LayerKind::BatchNorm { .. } => "BatchNorm",
+            LayerKind::Flatten => "Flatten",
+        }
+    }
+
+    pub fn has_weights(&self) -> bool {
+        matches!(self, LayerKind::Conv { .. } | LayerKind::Dense { .. })
+    }
+
+    /// Bytes of parameters at `bytes_per_weight` (ROM model input).
+    pub fn param_count(&self) -> usize {
+        match self {
+            LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => w.len() + b.len(),
+            LayerKind::BatchNorm { mean, .. } => 2 * mean.len(),
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    pub inputs: Vec<usize>,
+    /// Per-example output shape (batch dim excluded): (S, C) / (H, W, C) /
+    /// (units,) after GlobalAvgPool/Flatten/Dense.
+    pub out_shape: Vec<usize>,
+    /// ReLU fused into this node by the deployment pass (§5.7).
+    pub fused_relu: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// 1 or 2 spatial dimensions.
+    pub dims: usize,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub nodes: Vec<Node>,
+    pub name: String,
+}
+
+impl Graph {
+    pub fn new(name: &str, dims: usize, input_shape: &[usize], classes: usize) -> Self {
+        let mut g = Graph {
+            dims,
+            input_shape: input_shape.to_vec(),
+            classes,
+            nodes: Vec::new(),
+            name: name.to_string(),
+        };
+        g.nodes.push(Node {
+            id: 0,
+            name: "input".into(),
+            kind: LayerKind::Input,
+            inputs: vec![],
+            out_shape: input_shape.to_vec(),
+            fused_relu: false,
+        });
+        g
+    }
+
+    /// Append a node; returns its id. Nodes are always in topological order.
+    pub fn add(&mut self, name: &str, kind: LayerKind, inputs: Vec<usize>) -> usize {
+        for &i in &inputs {
+            assert!(i < self.nodes.len(), "forward reference {i}");
+        }
+        let out_shape = self.infer_shape(&kind, &inputs);
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            kind,
+            inputs,
+            out_shape,
+            fused_relu: false,
+        });
+        id
+    }
+
+    pub fn output_id(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    pub fn node(&self, id: usize) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Total parameter count over all layers.
+    pub fn param_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.kind.param_count()).sum()
+    }
+
+    /// Ids of nodes that consume node `id`.
+    pub fn consumers(&self, id: usize) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.contains(&id))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    fn spatial(&self, shape: &[usize]) -> Vec<usize> {
+        shape[..shape.len() - 1].to_vec()
+    }
+
+    fn infer_shape(&self, kind: &LayerKind, inputs: &[usize]) -> Vec<usize> {
+        let in_shape = |i: usize| self.nodes[inputs[i]].out_shape.clone();
+        match kind {
+            LayerKind::Input => self.input_shape.clone(),
+            LayerKind::Conv { w, stride, padding, .. } => {
+                let ish = in_shape(0);
+                let spatial = self.spatial(&ish);
+                assert_eq!(spatial.len(), self.dims, "conv rank mismatch");
+                let filters = *w.shape.last().unwrap();
+                let mut out: Vec<usize> = Vec::new();
+                for (d, &s) in spatial.iter().enumerate() {
+                    let k = w.shape[d];
+                    let o = match padding {
+                        Padding::Same => s.div_ceil(*stride),
+                        Padding::Valid => (s - k) / stride + 1,
+                    };
+                    out.push(o);
+                }
+                out.push(filters);
+                out
+            }
+            LayerKind::Dense { w, .. } => vec![w.shape[1]],
+            LayerKind::MaxPool { size } | LayerKind::AvgPool { size } => {
+                let ish = in_shape(0);
+                let mut out = self.spatial(&ish);
+                for o in out.iter_mut() {
+                    *o /= size; // VALID, stride == size
+                }
+                out.push(*ish.last().unwrap());
+                out
+            }
+            LayerKind::GlobalAvgPool => vec![*in_shape(0).last().unwrap()],
+            LayerKind::Add => {
+                let a = in_shape(0);
+                let b = in_shape(1);
+                assert_eq!(a, b, "Add shape mismatch");
+                a
+            }
+            LayerKind::ReLU | LayerKind::Softmax | LayerKind::BatchNorm { .. } => in_shape(0),
+            LayerKind::ZeroPad { pad } => {
+                let ish = in_shape(0);
+                let mut out = self.spatial(&ish);
+                assert_eq!(pad.len(), out.len());
+                for (o, (lo, hi)) in out.iter_mut().zip(pad.iter()) {
+                    *o += lo + hi;
+                }
+                out.push(*ish.last().unwrap());
+                out
+            }
+            LayerKind::Flatten => vec![in_shape(0).iter().product()],
+        }
+    }
+
+    /// Per-spatial-dim SAME padding (lo, hi) for a conv node — XLA rule.
+    pub fn same_padding(in_size: usize, kernel: usize, stride: usize) -> (usize, usize) {
+        let out = in_size.div_ceil(stride);
+        let total = ((out - 1) * stride + kernel).saturating_sub(in_size);
+        (total / 2, total - total / 2)
+    }
+
+    /// Human-readable topology dump (debugging / docs).
+    pub fn summary(&self) -> String {
+        let mut s = format!("Graph {} (dims={}, classes={})\n", self.name, self.dims, self.classes);
+        for n in &self.nodes {
+            s.push_str(&format!(
+                "  [{:>2}] {:<14} {:<12} in={:?} out={:?} params={}{}\n",
+                n.id,
+                n.name,
+                n.kind.type_name(),
+                n.inputs,
+                n.out_shape,
+                n.kind.param_count(),
+                if n.fused_relu { " +ReLU" } else { "" },
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn conv_kind(k: usize, c: usize, f: usize, stride: usize) -> LayerKind {
+        LayerKind::Conv {
+            w: Tensor::zeros(&[k, c, f]),
+            b: Tensor::zeros(&[f]),
+            stride,
+            padding: Padding::Same,
+        }
+    }
+
+    #[test]
+    fn shape_inference_1d_chain() {
+        let mut g = Graph::new("t", 1, &[128, 9], 6);
+        let c = g.add("c1", conv_kind(3, 9, 16, 1), vec![0]);
+        assert_eq!(g.node(c).out_shape, vec![128, 16]);
+        let p = g.add("p1", LayerKind::MaxPool { size: 2 }, vec![c]);
+        assert_eq!(g.node(p).out_shape, vec![64, 16]);
+        let s = g.add("c2", conv_kind(3, 16, 16, 2), vec![p]);
+        assert_eq!(g.node(s).out_shape, vec![32, 16]);
+        let gap = g.add("gap", LayerKind::GlobalAvgPool, vec![s]);
+        assert_eq!(g.node(gap).out_shape, vec![16]);
+        let d = g.add(
+            "fc",
+            LayerKind::Dense { w: Tensor::zeros(&[16, 6]), b: Tensor::zeros(&[6]) },
+            vec![gap],
+        );
+        assert_eq!(g.node(d).out_shape, vec![6]);
+    }
+
+    #[test]
+    fn same_padding_matches_xla() {
+        assert_eq!(Graph::same_padding(128, 3, 1), (1, 1));
+        assert_eq!(Graph::same_padding(9, 3, 2), (1, 1)); // out = 5
+        assert_eq!(Graph::same_padding(8, 3, 2), (0, 1)); // out = 4
+        assert_eq!(Graph::same_padding(39, 3, 1), (1, 1));
+    }
+
+    #[test]
+    fn odd_pool_floors() {
+        let mut g = Graph::new("t", 1, &[39, 13], 10);
+        let p = g.add("p", LayerKind::MaxPool { size: 2 }, vec![0]);
+        assert_eq!(g.node(p).out_shape, vec![19, 13]);
+    }
+
+    #[test]
+    fn add_requires_same_shape() {
+        let mut g = Graph::new("t", 1, &[16, 4], 2);
+        let c1 = g.add("c1", conv_kind(3, 4, 8, 1), vec![0]);
+        let c2 = g.add("c2", conv_kind(3, 4, 8, 1), vec![0]);
+        let a = g.add("add", LayerKind::Add, vec![c1, c2]);
+        assert_eq!(g.node(a).out_shape, vec![16, 8]);
+    }
+
+    #[test]
+    fn consumers_are_found() {
+        let mut g = Graph::new("t", 1, &[16, 4], 2);
+        let c1 = g.add("c1", conv_kind(3, 4, 8, 1), vec![0]);
+        let _r = g.add("r", LayerKind::ReLU, vec![c1]);
+        let _p = g.add("p", LayerKind::MaxPool { size: 2 }, vec![c1]);
+        assert_eq!(g.consumers(c1).len(), 2);
+    }
+
+    #[test]
+    fn zeropad_shape() {
+        let mut g = Graph::new("t", 1, &[10, 2], 2);
+        let z = g.add("z", LayerKind::ZeroPad { pad: vec![(1, 2)] }, vec![0]);
+        assert_eq!(g.node(z).out_shape, vec![13, 2]);
+    }
+
+    #[test]
+    fn flatten_2d() {
+        let mut g = Graph::new("t", 2, &[8, 8, 3], 2);
+        let f = g.add("f", LayerKind::Flatten, vec![0]);
+        assert_eq!(g.node(f).out_shape, vec![192]);
+    }
+}

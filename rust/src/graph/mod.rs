@@ -1,0 +1,9 @@
+//! Layer-graph IR, model builders and deployment passes (§5.6–5.7).
+
+pub mod build;
+pub mod ir;
+pub mod passes;
+
+pub use build::{cnn, mlp, resnet_v1_6, resnet_v1_6_shapes, RESNET_PARAM_NAMES};
+pub use ir::{Graph, LayerKind, Node, Padding};
+pub use passes::deploy_pipeline;

@@ -1,0 +1,30 @@
+//! MicroAI: an end-to-end framework for training, quantization and
+//! deployment of deep neural networks on microcontrollers.
+//!
+//! Rust + JAX + Pallas reproduction of:
+//! Novac et al., "Quantization and Deployment of Deep Neural Networks on
+//! Microcontrollers", Sensors 2021, 21, 2984.
+//!
+//! Architecture (see DESIGN.md):
+//! - L3 (this crate): the MicroAI framework — quantizer, graph compiler,
+//!   integer inference engine, RAM allocator, C code generator, MCU cost /
+//!   ROM / energy models, engine baselines, experiment flow, serving.
+//! - L2/L1 (python/compile): JAX ResNetv1-6 + Pallas kernels, AOT-lowered
+//!   to HLO text artifacts executed through `runtime` (PJRT). Python never
+//!   runs on the request path.
+
+pub mod allocator;
+pub mod codegen;
+pub mod coordinator;
+pub mod datasets;
+pub mod engines;
+pub mod fixedpoint;
+pub mod graph;
+pub mod mcu;
+pub mod metrics;
+pub mod nn;
+pub mod quant;
+pub mod reproduce;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

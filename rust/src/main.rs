@@ -1,0 +1,239 @@
+//! MicroAI command-line interface — the Appendix C commands plus the
+//! reproduction harnesses:
+//!
+//!   microai experiment <config.toml> [--quiet]    full Fig-3 flow
+//!   microai train --dataset har --filters 16 --steps 200
+//!   microai deploy --dataset har --filters 16     engines x boards matrix
+//!   microai codegen --dataset har --filters 16 --width 8 --out dir/
+//!   microai reproduce <fig1|fig5|fig7|fig9|figa1|all> [--steps N]
+//!   microai serve-demo [--requests N]             big/LITTLE cascade
+//!   microai summary                               graph/topology dump
+
+use anyhow::{Context, Result};
+
+use microai::coordinator::trainer::{LrSchedule, Trainer};
+use microai::coordinator::{deployer, flow, serving};
+use microai::datasets;
+use microai::engines::all_engines;
+use microai::mcu::board::{BOARDS, SPARKFUN_EDGE};
+use microai::quant::QuantSpec;
+use microai::reproduce;
+use microai::runtime::Runtime;
+use microai::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("experiment") => cmd_experiment(args),
+        Some("train") => cmd_train(args),
+        Some("deploy") => cmd_deploy(args),
+        Some("codegen") => cmd_codegen(args),
+        Some("reproduce") => cmd_reproduce(args),
+        Some("serve-demo") => cmd_serve(args),
+        Some("summary") => cmd_summary(args),
+        _ => {
+            println!(
+                "MicroAI — quantization and deployment of DNNs on microcontrollers\n\
+                 (Rust+JAX+Pallas reproduction of Novac et al., Sensors 2021)\n\n\
+                 subcommands: experiment train deploy codegen reproduce serve-demo summary\n\
+                 run `make artifacts` first to build the HLO artifacts."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let path = args.positional.first().context("usage: microai experiment <config.toml>")?;
+    let text = std::fs::read_to_string(path)?;
+    let cfg = flow::ExperimentCfg::parse(&text)?;
+    let rt = Runtime::open_default()?;
+    let res = flow::run(&rt, &cfg, !args.flag("quiet"))?;
+    println!("\n== experiment results ({} f={}) ==", cfg.dataset, cfg.filters);
+    println!("{:<14} {:<14} {:>9} {:>12}", "model", "mode", "accuracy", "weights(B)");
+    for r in &res.results {
+        println!("{:<14} {:<14} {:>9.4} {:>12}", r.name, r.mode, r.accuracy, r.weight_bytes);
+    }
+    if !res.deployment.is_empty() {
+        println!("\n== deployment matrix ==\n{}", res.deployment);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = args.opt_or("dataset", "har").to_string();
+    let filters = args.opt_usize("filters", 16);
+    let steps = args.opt_usize("steps", 200);
+    let seed = args.opt_usize("seed", 42) as u64;
+    let tag = format!("{dataset}_f{filters}");
+    let rt = Runtime::open_default()?;
+    let data = datasets::load(&dataset, seed).context("unknown dataset")?;
+    let mut trainer = Trainer::new(&rt, seed);
+    let mut state = trainer.init(&tag)?;
+    let sched = LrSchedule {
+        initial: args.opt_f64("lr", 0.05) as f32,
+        factor: 0.13,
+        milestones: vec![steps * 5 / 8, steps * 3 / 4, steps * 7 / 8], warmup: 10 };
+    println!("training {tag} for {steps} steps on synthetic {dataset}...");
+    trainer.train(&mut state, &data, "train", steps, &sched, (steps / 10).max(1))?;
+    let acc = trainer.eval_accuracy(&state, &data, "fwd")?;
+    println!("float32 test accuracy (fwd artifact): {acc:.4}");
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let dataset = args.opt_or("dataset", "har").to_string();
+    let filters = args.opt_usize("filters", 16);
+    let (dims, shape, classes): (usize, Vec<usize>, usize) = match dataset.as_str() {
+        "har" => (1, vec![128, 9], 6),
+        "smnist" => (1, vec![39, 13], 10),
+        "gtsrb" => (2, vec![32, 32, 3], 43),
+        d => anyhow::bail!("unknown dataset {d}"),
+    };
+    let g = microai::graph::deploy_pipeline(&microai::graph::resnet_v1_6_shapes(
+        &dataset, dims, &shape, classes, filters,
+    ));
+    let rows = deployer::deployment_matrix(&g, filters, &all_engines(), &BOARDS);
+    println!("{}", deployer::render_matrix(&rows));
+    let alloc = microai::allocator::allocate(&g);
+    println!(
+        "allocator: {} pools, {} elements total",
+        alloc.n_pools(),
+        alloc.pool_elems.iter().sum::<usize>()
+    );
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> Result<()> {
+    let dataset = args.opt_or("dataset", "har").to_string();
+    let filters = args.opt_usize("filters", 16);
+    let width = args.opt_usize("width", 8) as u32;
+    let steps = args.opt_usize("steps", 120);
+    let out = args.opt_or("out", "results/generated_c").to_string();
+    let tag = format!("{dataset}_f{filters}");
+    let rt = Runtime::open_default()?;
+    let spec = rt.spec(&tag)?.clone();
+    anyhow::ensure!(spec.dims == 1, "C generation targets 1-D models (paper §5.6)");
+    let data = datasets::load(&dataset, 42).context("dataset")?;
+    let mut trainer = Trainer::new(&rt, 42);
+    let mut state = trainer.init(&tag)?;
+    let sched = LrSchedule { initial: 0.05, factor: 0.13, milestones: vec![steps / 2], warmup: 10 };
+    println!("training {tag} ({steps} steps) before codegen...");
+    trainer.train(&mut state, &data, "train", steps, &sched, 0)?;
+    let params = trainer.params_to_host(&state)?;
+    let graph = deployer::build_deployed_graph(&spec, params);
+    let stats = deployer::calibrate(&graph, &data, 64);
+    let qspec = if width == 16 { QuantSpec::int16_per_layer() } else { QuantSpec::int8_per_layer() };
+    let qg = microai::quant::quantize(&graph, &stats, qspec);
+    let lib = microai::codegen::generate(&qg);
+    let paths = microai::codegen::write_to(&lib, std::path::Path::new(&out))?;
+    for p in &paths {
+        println!("wrote {}", p.display());
+    }
+    println!("INPUT_SCALE_FACTOR = {}", qg.input_n());
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let what = args.positional.first().map(String::as_str).unwrap_or("all");
+    let cfg = reproduce::RepConfig {
+        steps: args.opt_usize("steps", 200),
+        qat_steps: args.opt_usize("qat-steps", 50),
+        seed: args.opt_usize("seed", 42) as u64,
+        out_dir: args.opt_or("out", "results").to_string(),
+        calib: args.opt_usize("calib", 64),
+    };
+    let rt = Runtime::open_default()?;
+    reproduce::run(&rt, what, &cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.opt_usize("requests", 200);
+    let threshold = args.opt_f64("threshold", 0.8) as f32;
+    let steps = args.opt_usize("steps", 150);
+    let rt = Runtime::open_default()?;
+    let data = datasets::load("har", 42).unwrap();
+
+    println!("training little (f=8) and big (f=32) models...");
+    let mut graphs = Vec::new();
+    for f in [8usize, 32] {
+        let tag = format!("har_f{f}");
+        let spec = rt.spec(&tag)?.clone();
+        let mut trainer = Trainer::new(&rt, 42 + f as u64);
+        let mut state = trainer.init(&tag)?;
+        let sched = LrSchedule { initial: 0.05, factor: 0.13, milestones: vec![steps / 2], warmup: 10 };
+        trainer.train(&mut state, &data, "train", steps, &sched, 0)?;
+        let params = trainer.params_to_host(&state)?;
+        let g = deployer::build_deployed_graph(&spec, params);
+        let stats = deployer::calibrate(&g, &data, 64);
+        graphs.push(std::sync::Arc::new(microai::quant::quantize(
+            &g, &stats, QuantSpec::int8_per_layer())));
+    }
+    let big = graphs.pop().unwrap();
+    let little = graphs.pop().unwrap();
+
+    let little_ms = serving::device_latency_ms(&little.graph, &SPARKFUN_EDGE, microai::mcu::DType::I8);
+    let big_ms = serving::device_latency_ms(&big.graph, &SPARKFUN_EDGE, microai::mcu::DType::I8);
+    let (reqs, labels) = serving::request_stream(&data, n, 7);
+    let cfg = serving::CascadeConfig {
+        threshold,
+        workers: 4,
+        little_ms,
+        big_ms,
+        board_power_w: SPARKFUN_EDGE.power_w(),
+    };
+    let stats = serving::run_cascade(little.clone(), big.clone(), &cfg, reqs.clone(), Some(&labels));
+    println!("\n== big/LITTLE cascade on simulated SparkFun Edge ==");
+    println!("little={little_ms:.1} ms  big={big_ms:.1} ms  threshold={threshold}");
+    println!(
+        "requests={n} escalation={:.1}%  accuracy={:.4}",
+        stats.escalation_rate * 100.0,
+        stats.accuracy.unwrap()
+    );
+    println!(
+        "device latency p50={:.1} ms p90={:.1} ms  total energy={:.2} µWh",
+        stats.latency.p50, stats.latency.p90, stats.total_energy_uwh
+    );
+    // Comparison: big-only baseline.
+    let cfg_all_big = serving::CascadeConfig { threshold: 1.01, ..cfg };
+    let sb = serving::run_cascade(little, big, &cfg_all_big, reqs, Some(&labels));
+    println!(
+        "big-only baseline: p50={:.1} ms  accuracy={:.4}  energy={:.2} µWh",
+        sb.latency.p50 + 0.0,
+        sb.accuracy.unwrap(),
+        sb.total_energy_uwh
+    );
+    Ok(())
+}
+
+fn cmd_summary(args: &Args) -> Result<()> {
+    let dataset = args.opt_or("dataset", "har").to_string();
+    let filters = args.opt_usize("filters", 16);
+    let (dims, shape, classes): (usize, Vec<usize>, usize) = match dataset.as_str() {
+        "har" => (1, vec![128, 9], 6),
+        "smnist" => (1, vec![39, 13], 10),
+        "gtsrb" => (2, vec![32, 32, 3], 43),
+        d => anyhow::bail!("unknown dataset {d}"),
+    };
+    let g = microai::graph::resnet_v1_6_shapes(&dataset, dims, &shape, classes, filters);
+    println!("{}", g.summary());
+    let d = microai::graph::deploy_pipeline(&g);
+    println!("after deployment passes:\n{}", d.summary());
+    let ops = microai::mcu::graph_ops(&d);
+    println!(
+        "ops: MACC={} add={} shift={} sat/max={} div={}  ideal cycles={}",
+        ops.macc, ops.add, ops.shift, ops.sat, ops.div, ops.ideal_cycles()
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Embedded platform models (paper Table 3).
+
+/// A microcontroller board as the paper characterizes it: core, clock,
+/// memories, CoreMark score and measured run current at the evaluation
+/// operating point (3.3 V, 48 MHz).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Board {
+    pub name: &'static str,
+    pub mcu: &'static str,
+    pub core: &'static str,
+    /// Evaluation clock (both boards are run at 48 MHz in §6.2).
+    pub clock_hz: f64,
+    pub max_clock_hz: f64,
+    pub ram_bytes: usize,
+    pub flash_bytes: usize,
+    pub coremark_per_mhz: f64,
+    /// Run current at 3.3 V, 48 MHz (A). SparkFun Edge value is after
+    /// removing on-board peripherals, as in the paper.
+    pub run_current_a: f64,
+    pub supply_v: f64,
+}
+
+/// Nucleo-L452RE-P (STM32L452RE, Cortex-M4F).
+pub const NUCLEO_L452RE_P: Board = Board {
+    name: "NucleoL452REP",
+    mcu: "STM32L452RE",
+    core: "Cortex-M4F",
+    clock_hz: 48.0e6,
+    max_clock_hz: 80.0e6,
+    ram_bytes: 128 * 1024,
+    flash_bytes: 512 * 1024,
+    coremark_per_mhz: 3.42,
+    run_current_a: 4.80e-3,
+    supply_v: 3.3,
+};
+
+/// SparkFun Edge (Ambiq Apollo3, Cortex-M4F, subthreshold operation).
+pub const SPARKFUN_EDGE: Board = Board {
+    name: "SparkFunEdge",
+    mcu: "Ambiq Apollo3",
+    core: "Cortex-M4F",
+    clock_hz: 48.0e6,
+    max_clock_hz: 96.0e6, // "Burst Mode"
+    ram_bytes: 384 * 1024,
+    flash_bytes: 1024 * 1024,
+    coremark_per_mhz: 2.479,
+    run_current_a: 0.82e-3,
+    supply_v: 3.3,
+};
+
+pub const BOARDS: [&Board; 2] = [&NUCLEO_L452RE_P, &SPARKFUN_EDGE];
+
+impl Board {
+    pub fn by_name(name: &str) -> Option<&'static Board> {
+        BOARDS.iter().copied().find(|b| {
+            b.name.eq_ignore_ascii_case(name) || b.mcu.eq_ignore_ascii_case(name)
+        })
+    }
+
+    /// Seconds for a cycle count at the evaluation clock.
+    pub fn seconds(&self, cycles: f64) -> f64 {
+        cycles / self.clock_hz
+    }
+
+    /// Run power at the evaluation operating point (W).
+    pub fn power_w(&self) -> f64 {
+        self.supply_v * self.run_current_a
+    }
+
+    /// Does a deployment fit? (ROM in flash, RAM within budget.)
+    pub fn fits(&self, rom_bytes: usize, ram_bytes: usize) -> bool {
+        rom_bytes <= self.flash_bytes && ram_bytes <= self.ram_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_values() {
+        assert_eq!(NUCLEO_L452RE_P.ram_bytes, 131072);
+        assert_eq!(SPARKFUN_EDGE.flash_bytes, 1048576);
+        assert!((NUCLEO_L452RE_P.power_w() - 15.84e-3).abs() < 1e-6);
+        assert!((SPARKFUN_EDGE.power_w() - 2.706e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparkfun_is_6x_lower_power() {
+        // §6.2: "the SparkFun Edge board power consumption is approximately
+        // 6 times lower compared to the Nucleo-L452RE-P".
+        let ratio = NUCLEO_L452RE_P.power_w() / SPARKFUN_EDGE.power_w();
+        assert!((5.0..7.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Board::by_name("sparkfunedge").unwrap().mcu, "Ambiq Apollo3");
+        assert_eq!(Board::by_name("STM32L452RE").unwrap().name, "NucleoL452REP");
+        assert!(Board::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn timing_at_48mhz() {
+        let t = NUCLEO_L452RE_P.seconds(48.0e6);
+        assert!((t - 1.0).abs() < 1e-12);
+    }
+}

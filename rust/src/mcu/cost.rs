@@ -1,0 +1,253 @@
+//! MCU latency / ROM / energy cost models.
+//!
+//! Latency: cycles(G) = k · ideal_cycles(G) + dispatch · n_layers(G),
+//! where ideal_cycles comes from Table A6's op counts over the real graph
+//! and (k, dispatch) are the per-(framework, board, dtype) constants
+//! calibrated from the series endpoints (see `paper_data`). k absorbs
+//! loads/stores/loop overhead around each ALU op; dispatch absorbs
+//! per-layer runtime cost (interpreter dispatch for TFLM, function-call
+//! setup for compiled engines).
+//!
+//! ROM: weights·bytes(dtype) + code(f) with code affine in the filter
+//! count, fitted from the same endpoints.
+//!
+//! Energy: E = t · V · I — the paper's own §6.2 method, no fitting.
+
+use crate::graph::ir::Graph;
+use crate::graph::resnet_v1_6_shapes;
+
+use super::board::Board;
+use super::opcounts::{graph_ops, layer_count};
+use super::paper_data::{DType, Series, FILTERS};
+#[cfg(test)]
+use super::paper_data;
+
+/// Calibrated latency model for one (framework, board, dtype) series.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel {
+    pub k: f64,
+    pub dispatch_cycles: f64,
+}
+
+/// Calibrated ROM model: code_bytes(filters) = a + b * filters.
+#[derive(Clone, Copy, Debug)]
+pub struct RomModel {
+    pub code_a: f64,
+    pub code_b: f64,
+    pub dtype: DType,
+}
+
+/// The UCI-HAR ResNet the paper's §6.2 sweep uses, post-deployment.
+pub fn har_graph(filters: usize) -> Graph {
+    crate::graph::deploy_pipeline(&resnet_v1_6_shapes("har", 1, &[128, 9], 6, filters))
+}
+
+fn ideal_cycles_har(filters: usize) -> f64 {
+    graph_ops(&har_graph(filters)).ideal_cycles() as f64
+}
+
+fn layers_har(filters: usize) -> f64 {
+    layer_count(&har_graph(filters)) as f64
+}
+
+impl LatencyModel {
+    /// Fit from a paper series' f=16 and f=80 endpoints.
+    pub fn calibrate(series: &Series, board: &Board) -> LatencyModel {
+        let c16 = series.values[0] / 1e3 * board.clock_hz;
+        let c80 = series.values[6] / 1e3 * board.clock_hz;
+        let (i16_, i80) = (ideal_cycles_har(16), ideal_cycles_har(80));
+        let n_layers = layers_har(16); // constant across the sweep
+        let k = (c80 - c16) / (i80 - i16_);
+        let dispatch = (c16 - k * i16_) / n_layers;
+        // The affine fit is unconstrained: a negative dispatch term means
+        // the small-model endpoint runs sub-linearly (flash caches cover
+        // the whole model at f=16 — the paper observes such memory-system
+        // effects in §6.2). Predictions are floored at a fraction of the
+        // ideal cycle count so the model stays physical off the fitted
+        // family.
+        LatencyModel { k, dispatch_cycles: dispatch }
+    }
+
+    /// Predicted cycles for an arbitrary deployed graph.
+    pub fn cycles(&self, graph: &Graph) -> f64 {
+        let ideal = graph_ops(graph).ideal_cycles() as f64;
+        let affine = self.k * ideal + self.dispatch_cycles * layer_count(graph) as f64;
+        affine.max(ideal)
+    }
+
+    pub fn latency_s(&self, graph: &Graph, board: &Board) -> f64 {
+        board.seconds(self.cycles(graph))
+    }
+}
+
+impl RomModel {
+    /// Fit from a paper ROM series' endpoints, subtracting exact weight
+    /// bytes of the HAR ResNet.
+    pub fn calibrate(series: &Series) -> RomModel {
+        let wbytes = |f: usize| {
+            (har_graph(f).param_count() * series.dtype.bytes()) as f64
+        };
+        let code16 = series.values[0] * 1024.0 - wbytes(16);
+        let code80 = series.values[6] * 1024.0 - wbytes(80);
+        let b = (code80 - code16) / (80.0 - 16.0);
+        let a = code16 - b * 16.0;
+        RomModel { code_a: a, code_b: b, dtype: series.dtype }
+    }
+
+    /// Predicted ROM bytes for a deployed graph with `filters` per conv.
+    pub fn rom_bytes(&self, graph: &Graph, filters: usize) -> f64 {
+        (graph.param_count() * self.dtype.bytes()) as f64
+            + self.code_a
+            + self.code_b * filters as f64
+    }
+}
+
+/// Energy for one inference: E[µWh] = t[s] · P[W] / 3600 · 1e6 (§6.2).
+pub fn energy_uwh(latency_s: f64, board: &Board) -> f64 {
+    latency_s * board.power_w() / 3600.0 * 1e6
+}
+
+/// Validation record comparing model predictions to the paper's rows.
+#[derive(Clone, Debug)]
+pub struct SeriesValidation {
+    pub framework: String,
+    pub board: String,
+    pub dtype: DType,
+    pub predicted: Vec<f64>,
+    pub paper: Vec<f64>,
+    /// Max relative error over the 5 held-out filter counts.
+    pub max_held_out_rel_err: f64,
+}
+
+/// Predict a full Table A4-style latency series and compare to the paper.
+pub fn validate_latency(series: &Series) -> SeriesValidation {
+    let board = Board::by_name(series.board).unwrap();
+    let model = LatencyModel::calibrate(series, board);
+    let mut predicted = Vec::new();
+    let mut max_err = 0.0f64;
+    for (i, &f) in FILTERS.iter().enumerate() {
+        let ms = model.latency_s(&har_graph(f), board) * 1e3;
+        predicted.push(ms);
+        if i != 0 && i != 6 {
+            max_err = max_err.max((ms - series.values[i]).abs() / series.values[i]);
+        }
+    }
+    SeriesValidation {
+        framework: series.framework.to_string(),
+        board: series.board.to_string(),
+        dtype: series.dtype,
+        predicted,
+        paper: series.values.to_vec(),
+        max_held_out_rel_err: max_err,
+    }
+}
+
+/// Predict a Table A3-style ROM series and compare to the paper.
+pub fn validate_rom(series: &Series) -> SeriesValidation {
+    let model = RomModel::calibrate(series);
+    let mut predicted = Vec::new();
+    let mut max_err = 0.0f64;
+    for (i, &f) in FILTERS.iter().enumerate() {
+        let kib = model.rom_bytes(&har_graph(f), f) / 1024.0;
+        predicted.push(kib);
+        if i != 0 && i != 6 {
+            max_err = max_err.max((kib - series.values[i]).abs() / series.values[i]);
+        }
+    }
+    SeriesValidation {
+        framework: series.framework.to_string(),
+        board: series.board.to_string(),
+        dtype: series.dtype,
+        predicted,
+        paper: series.values.to_vec(),
+        max_held_out_rel_err: max_err,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_endpoints() {
+        for s in &paper_data::TABLE_A4_MS {
+            let v = validate_latency(s);
+            let rel16 = (v.predicted[0] - s.values[0]).abs() / s.values[0];
+            let rel80 = (v.predicted[6] - s.values[6]).abs() / s.values[6];
+            // Affine fit reproduces both endpoints exactly.
+            assert!(rel80 < 1e-6, "{} {} {:?}: f80 {rel80}", s.framework, s.board, s.dtype);
+            assert!(rel16 < 1e-6, "{} {} {:?}: f16 {rel16}", s.framework, s.board, s.dtype);
+        }
+    }
+
+    #[test]
+    fn held_out_filter_counts_within_tolerance() {
+        // The shape claim: intermediate filter counts, never fitted, stay
+        // within a modest error band.
+        for s in &paper_data::TABLE_A4_MS {
+            let v = validate_latency(s);
+            assert!(
+                v.max_held_out_rel_err < 0.22,
+                "{} {} {:?}: held-out err {}",
+                s.framework, s.board, s.dtype, v.max_held_out_rel_err
+            );
+        }
+    }
+
+    #[test]
+    fn rom_model_held_out_error() {
+        for s in &paper_data::TABLE_A3_KIB {
+            let v = validate_rom(s);
+            assert!(
+                v.max_held_out_rel_err < 0.12,
+                "{} {} {:?}: ROM held-out err {}",
+                s.framework, s.board, s.dtype, v.max_held_out_rel_err
+            );
+        }
+    }
+
+    #[test]
+    fn energy_matches_paper_method() {
+        // MicroAI float32 SparkFun f=80: 1.561264 s * 2.706 mW -> 1.174 µWh.
+        let b = Board::by_name("SparkFunEdge").unwrap();
+        let e = energy_uwh(1.561264, b);
+        assert!((e - 1.174).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn who_wins_is_preserved() {
+        // The paper's ordering claims at f=80, reproduced by the model:
+        // int8 CubeAI < int8 TFLM < int8 MicroAI (§6.2).
+        use paper_data::{find, TABLE_A4_MS};
+        let get = |fw: &str, board: &str, dt: DType| {
+            let s = find(&TABLE_A4_MS, fw, board, dt).unwrap();
+            validate_latency(s).predicted[6]
+        };
+        let cube = get("STM32Cube.AI", "NucleoL452REP", DType::I8);
+        let tflm = get("TFLiteMicro", "SparkFunEdge", DType::I8);
+        let micro = get("MicroAI", "NucleoL452REP", DType::I8);
+        assert!(cube < tflm && tflm < micro, "{cube} {tflm} {micro}");
+        // And float is slower than int for every MicroAI series.
+        let mf = get("MicroAI", "NucleoL452REP", DType::F32);
+        assert!(micro < mf);
+    }
+
+    #[test]
+    fn latency_model_generalizes_to_other_graphs() {
+        // Prediction must be positive, monotone in filters for a 2D net.
+        let s = find_micro_int8();
+        let board = Board::by_name(s.board).unwrap();
+        let model = LatencyModel::calibrate(s, board);
+        let g8 = crate::graph::deploy_pipeline(
+            &resnet_v1_6_shapes("g", 2, &[32, 32, 3], 43, 8));
+        let g16 = crate::graph::deploy_pipeline(
+            &resnet_v1_6_shapes("g", 2, &[32, 32, 3], 43, 16));
+        let (t8, t16) = (model.latency_s(&g8, board), model.latency_s(&g16, board));
+        assert!(t8 > 0.0 && t16 > t8);
+    }
+
+    fn find_micro_int8() -> &'static Series {
+        paper_data::find(&paper_data::TABLE_A4_MS, "MicroAI", "NucleoL452REP", DType::I8).unwrap()
+    }
+
+}

@@ -1,0 +1,14 @@
+//! MCU deployment-target models: boards (Table 3), Cortex-M4 op counts
+//! (Table A6), and the calibrated latency / ROM / energy cost models that
+//! substitute for the paper's physical Nucleo-L452RE-P and SparkFun Edge
+//! measurements (DESIGN.md §3).
+
+pub mod board;
+pub mod cost;
+pub mod opcounts;
+pub mod paper_data;
+
+pub use board::{Board, BOARDS, NUCLEO_L452RE_P, SPARKFUN_EDGE};
+pub use cost::{energy_uwh, har_graph, LatencyModel, RomModel};
+pub use opcounts::{graph_ops, layer_count, node_ops, OpCounts};
+pub use paper_data::DType;

@@ -1,0 +1,173 @@
+//! The paper's published measurements (Tables A2–A5), embedded as the
+//! calibration + validation reference for the MCU cost models.
+//!
+//! Calibration policy (DESIGN.md §8): each (framework, board, dtype) series
+//! uses ONLY its f=16 and f=80 endpoints to fit the two model constants
+//! (effective cycles-per-ideal-cycle and per-layer dispatch overhead; code
+//! size affine terms for ROM). The five intermediate filter counts are
+//! never fitted — they validate the model's shape.
+
+/// The paper's filter sweep for the framework comparison (§6.2).
+pub const FILTERS: [usize; 7] = [16, 24, 32, 40, 48, 64, 80];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I16,
+    I8,
+}
+
+impl DType {
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::I16 => 2,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I16 => "int16",
+            DType::I8 => "int8",
+        }
+    }
+}
+
+/// One measured series: framework, board, dtype, 7 values over FILTERS.
+pub struct Series {
+    pub framework: &'static str,
+    pub board: &'static str,
+    pub dtype: DType,
+    pub values: [f64; 7],
+}
+
+/// Table A4 — inference time for one input (ms).
+pub const TABLE_A4_MS: [Series; 10] = [
+    Series { framework: "TFLiteMicro", board: "SparkFunEdge", dtype: DType::F32,
+             values: [179.633, 294.157, 438.541, 624.172, 860.835, 1406.945, 2087.241] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::F32,
+             values: [53.247, 153.732, 259.212, 394.494, 569.852, 1017.118, 1561.264] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::F32,
+             values: [55.762, 152.426, 259.160, 395.721, 559.249, 976.732, 1512.143] },
+    Series { framework: "STM32Cube.AI", board: "NucleoL452REP", dtype: DType::F32,
+             values: [85.359, 174.082, 271.362, 403.898, 544.406, 921.646, 1387.083] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::I16,
+             values: [40.867, 113.035, 191.439, 287.655, 389.450, 667.547, 1041.617] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::I16,
+             values: [44.915, 120.308, 205.499, 318.310, 459.880, 796.310, 1223.513] },
+    Series { framework: "TFLiteMicro", board: "SparkFunEdge", dtype: DType::I8,
+             values: [92.529, 130.760, 172.673, 225.092, 280.942, 418.198, 591.785] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::I8,
+             values: [39.417, 101.704, 172.551, 259.830, 375.840, 658.441, 1003.365] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::I8,
+             values: [43.003, 107.705, 180.830, 272.986, 383.761, 659.996, 1034.033] },
+    Series { framework: "STM32Cube.AI", board: "NucleoL452REP", dtype: DType::I8,
+             values: [32.297, 53.871, 80.388, 111.635, 146.022, 242.002, 352.079] },
+];
+
+/// Table A3 — ROM footprint (kiB).
+pub const TABLE_A3_KIB: [Series; 10] = [
+    Series { framework: "TFLiteMicro", board: "SparkFunEdge", dtype: DType::F32,
+             values: [116.520, 133.988, 157.957, 188.426, 225.395, 318.926, 438.363] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::F32,
+             values: [54.316, 67.066, 91.035, 121.512, 158.473, 251.863, 371.332] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::F32,
+             values: [55.770, 68.145, 92.129, 122.582, 159.559, 253.004, 372.434] },
+    Series { framework: "STM32Cube.AI", board: "NucleoL452REP", dtype: DType::F32,
+             values: [61.965, 79.449, 103.410, 133.898, 170.859, 264.289, 383.742] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::I16,
+             values: [46.952, 50.629, 62.629, 77.832, 96.355, 142.973, 202.699] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::I16,
+             values: [48.129, 51.629, 63.613, 78.855, 97.340, 144.051, 203.770] },
+    Series { framework: "TFLiteMicro", board: "SparkFunEdge", dtype: DType::I8,
+             values: [111.051, 117.066, 124.691, 133.957, 144.832, 171.473, 204.613] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::I8,
+             values: [43.256, 42.249, 48.229, 55.854, 65.089, 88.343, 118.202] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::I8,
+             values: [45.038, 43.474, 49.464, 57.078, 66.322, 89.683, 119.541] },
+    Series { framework: "STM32Cube.AI", board: "NucleoL452REP", dtype: DType::I8,
+             values: [72.742, 77.746, 84.336, 92.582, 102.430, 126.996, 158.098] },
+];
+
+/// Table A5 — energy for one input (µWh).
+pub const TABLE_A5_UWH: [Series; 10] = [
+    Series { framework: "TFLiteMicro", board: "SparkFunEdge", dtype: DType::F32,
+             values: [0.135, 0.221, 0.330, 0.469, 0.647, 1.058, 1.569] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::F32,
+             values: [0.040, 0.116, 0.195, 0.297, 0.428, 0.765, 1.174] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::F32,
+             values: [0.247, 0.675, 1.148, 1.753, 2.478, 4.327, 6.700] },
+    Series { framework: "STM32Cube.AI", board: "NucleoL452REP", dtype: DType::F32,
+             values: [0.378, 0.771, 1.202, 1.789, 2.412, 4.083, 6.146] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::I16,
+             values: [0.031, 0.085, 0.144, 0.216, 0.293, 0.502, 0.783] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::I16,
+             values: [0.199, 0.533, 0.910, 1.410, 2.038, 3.528, 5.421] },
+    Series { framework: "TFLiteMicro", board: "SparkFunEdge", dtype: DType::I8,
+             values: [0.070, 0.098, 0.130, 0.169, 0.211, 0.314, 0.445] },
+    Series { framework: "MicroAI", board: "SparkFunEdge", dtype: DType::I8,
+             values: [0.030, 0.076, 0.130, 0.195, 0.283, 0.495, 0.754] },
+    Series { framework: "MicroAI", board: "NucleoL452REP", dtype: DType::I8,
+             values: [0.191, 0.477, 0.801, 1.209, 1.700, 2.924, 4.581] },
+    Series { framework: "STM32Cube.AI", board: "NucleoL452REP", dtype: DType::I8,
+             values: [0.143, 0.239, 0.356, 0.495, 0.647, 1.072, 1.560] },
+];
+
+/// Table A2 — float32 inference time (ms) on MCU / CPU / GPU.
+pub const TABLE_A2_MCU_MS: [f64; 7] = [85.0, 174.0, 271.0, 404.0, 544.0, 921.0, 1387.0];
+pub const TABLE_A2_CPU_MS: [f64; 7] = [0.0396, 0.0552, 0.0720, 0.0937, 0.1134, 0.1538, 0.2046];
+pub const TABLE_A2_GPU_MS: [f64; 7] = [0.0227, 0.0197, 0.0223, 0.0284, 0.0317, 0.0395, 0.0515];
+
+pub fn find<'a>(
+    table: &'a [Series],
+    framework: &str,
+    board: &str,
+    dtype: DType,
+) -> Option<&'a Series> {
+    table
+        .iter()
+        .find(|s| s.framework == framework && s.board == board && s.dtype == dtype)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_table_is_consistent_with_time_and_power() {
+        // Table A5 == Table A4 * V * I / 3600 (the paper's own method).
+        use crate::mcu::board::Board;
+        for (a4, a5) in TABLE_A4_MS.iter().zip(TABLE_A5_UWH.iter()) {
+            let b = Board::by_name(a4.board).unwrap();
+            for i in 0..7 {
+                let predicted_uwh = a4.values[i] / 1000.0 * b.power_w() / 3600.0 * 1e6;
+                let rel = (predicted_uwh - a5.values[i]).abs() / a5.values[i];
+                assert!(
+                    rel < 0.08,
+                    "{} {} {:?} f={} predicted {predicted_uwh} vs {}",
+                    a4.framework, a4.board, a4.dtype, FILTERS[i], a5.values[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tables_align() {
+        for (a, b) in TABLE_A4_MS.iter().zip(TABLE_A5_UWH.iter()) {
+            assert_eq!(a.framework, b.framework);
+            assert_eq!(a.board, b.board);
+            assert_eq!(a.dtype, b.dtype);
+        }
+    }
+
+    #[test]
+    fn headline_values_present() {
+        // §6.2 headline numbers appear in the tables.
+        let cube8 = find(&TABLE_A4_MS, "STM32Cube.AI", "NucleoL452REP", DType::I8).unwrap();
+        assert!((cube8.values[6] - 352.079).abs() < 1e-9);
+        let tflm8 = find(&TABLE_A5_UWH, "TFLiteMicro", "SparkFunEdge", DType::I8).unwrap();
+        assert!((tflm8.values[6] - 0.445).abs() < 1e-9);
+    }
+}

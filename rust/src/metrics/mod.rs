@@ -1,0 +1,86 @@
+//! Evaluation metrics: accuracy, confusion matrix, latency aggregation.
+
+/// Classification accuracy from predictions and labels.
+pub fn accuracy(pred: &[usize], labels: &[i32]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let correct = pred
+        .iter()
+        .zip(labels)
+        .filter(|(&p, &y)| p as i32 == y)
+        .count();
+    correct as f64 / pred.len() as f64
+}
+
+/// Row-major confusion matrix: rows = truth, cols = prediction.
+#[derive(Clone, Debug)]
+pub struct Confusion {
+    pub classes: usize,
+    pub counts: Vec<u32>,
+}
+
+impl Confusion {
+    pub fn new(classes: usize) -> Self {
+        Self { classes, counts: vec![0; classes * classes] }
+    }
+
+    pub fn record(&mut self, truth: i32, pred: usize) {
+        self.counts[truth as usize * self.classes + pred] += 1;
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total: u32 = self.counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let diag: u32 = (0..self.classes).map(|i| self.counts[i * self.classes + i]).sum();
+        diag as f64 / total as f64
+    }
+
+    /// Per-class recall.
+    pub fn recall(&self, class: usize) -> f64 {
+        let row: u32 = self.counts[class * self.classes..(class + 1) * self.classes]
+            .iter()
+            .sum();
+        if row == 0 {
+            return 0.0;
+        }
+        self.counts[class * self.classes + class] as f64 / row as f64
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for r in 0..self.classes {
+            for c in 0..self.classes {
+                s.push_str(&format!("{:>5}", self.counts[r * self.classes + c]));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 2], &[0, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_tracks_diag() {
+        let mut c = Confusion::new(3);
+        c.record(0, 0);
+        c.record(1, 1);
+        c.record(2, 0);
+        assert!((c.accuracy() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(c.recall(2), 0.0);
+        assert_eq!(c.recall(0), 1.0);
+        assert!(c.render().lines().count() == 3);
+    }
+}

@@ -1,0 +1,277 @@
+//! Float32 graph executor — runs one example through a deployed `Graph`.
+//!
+//! Serves three roles: (a) the float32 deployment target of MicroAI, (b)
+//! the calibration pass for post-training quantization (records per-node
+//! activation ranges, §5.8), and (c) the semantic reference the integer
+//! engines are validated against.
+
+use crate::graph::ir::{Graph, LayerKind};
+
+use super::float_ops as ops;
+
+/// Per-node activation statistics collected during calibration (§5.8).
+/// `max_abs` feeds the Qm.n scheme; `min`/`max` feed the affine
+/// (TFLite-style) scheme's asymmetric ranges.
+#[derive(Clone, Debug, Default)]
+pub struct ActStats {
+    pub max_abs: Vec<f32>,
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
+}
+
+impl ActStats {
+    pub fn new(n_nodes: usize) -> Self {
+        Self {
+            max_abs: vec![0.0; n_nodes],
+            min: vec![f32::INFINITY; n_nodes],
+            max: vec![f32::NEG_INFINITY; n_nodes],
+        }
+    }
+
+    fn record(&mut self, node: usize, data: &[f32]) {
+        for &x in data {
+            if x.abs() > self.max_abs[node] {
+                self.max_abs[node] = x.abs();
+            }
+            if x < self.min[node] {
+                self.min[node] = x;
+            }
+            if x > self.max[node] {
+                self.max[node] = x;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: &ActStats) {
+        for i in 0..self.max_abs.len() {
+            self.max_abs[i] = self.max_abs[i].max(other.max_abs[i]);
+            self.min[i] = self.min[i].min(other.min[i]);
+            self.max[i] = self.max[i].max(other.max[i]);
+        }
+    }
+}
+
+/// Execute `graph` on a single example (flattened input, channels-last).
+/// Returns the output of the last node. If `stats` is provided, per-node
+/// max-abs values are recorded (calibration mode).
+pub fn run(graph: &Graph, input: &[f32], mut stats: Option<&mut ActStats>) -> Vec<f32> {
+    assert_eq!(input.len(), graph.input_shape.iter().product::<usize>());
+    let mut acts: Vec<Vec<f32>> = vec![Vec::new(); graph.nodes.len()];
+    let mut scratch: Vec<f32> = Vec::new();
+    for node in &graph.nodes {
+        let out: Vec<f32> = match &node.kind {
+            LayerKind::Input => input.to_vec(),
+            LayerKind::Conv { w, b, stride, padding } => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                scratch.clear();
+                if graph.dims == 1 {
+                    ops::conv1d(
+                        src, ish[0], ish[1], &w.data, w.shape[0], w.shape[2], &b.data,
+                        *stride, *padding, node.fused_relu, &mut scratch,
+                    );
+                } else {
+                    ops::conv2d(
+                        src, ish[0], ish[1], ish[2], &w.data, w.shape[0], w.shape[1],
+                        w.shape[3], &b.data, *stride, *padding, node.fused_relu,
+                        &mut scratch,
+                    );
+                }
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::Dense { w, b } => {
+                let src = &acts[node.inputs[0]];
+                ops::dense(src, &w.data, &b.data, w.shape[1], node.fused_relu, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::MaxPool { size } => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                let c = *ish.last().unwrap();
+                ops::maxpool(src, &ish[..ish.len() - 1], c, *size, node.fused_relu, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::AvgPool { size } => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                let c = *ish.last().unwrap();
+                ops::avgpool(src, &ish[..ish.len() - 1], c, *size, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::GlobalAvgPool => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                let c = *ish.last().unwrap();
+                let positions: usize = ish[..ish.len() - 1].iter().product();
+                ops::global_avgpool(src, positions, c, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::Add => {
+                let a = &acts[node.inputs[0]];
+                let b = &acts[node.inputs[1]];
+                ops::add(a, b, node.fused_relu, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::ReLU => {
+                ops::relu(&acts[node.inputs[0]], &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::Softmax => {
+                ops::softmax(&acts[node.inputs[0]], &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::ZeroPad { pad } => {
+                // Materialized zero padding (only when not fused away).
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                zero_pad(src, ish, pad)
+            }
+            LayerKind::BatchNorm { mean, var, gamma, beta, eps } => {
+                let (w, b) = crate::graph::passes::batchnorm_affine(mean, var, gamma, beta, *eps);
+                let src = &acts[node.inputs[0]];
+                let c = *graph.nodes[node.inputs[0]].out_shape.last().unwrap();
+                ops::batchnorm_affine(src, c, &w, &b, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::Flatten => acts[node.inputs[0]].clone(),
+        };
+        if let Some(stats) = stats.as_deref_mut() {
+            stats.record(node.id, &out);
+        }
+        acts[node.id] = out;
+    }
+    acts.pop().unwrap()
+}
+
+fn zero_pad(src: &[f32], ish: &[usize], pad: &[(usize, usize)]) -> Vec<f32> {
+    let c = *ish.last().unwrap();
+    match pad.len() {
+        1 => {
+            let (lo, hi) = pad[0];
+            let s = ish[0];
+            let mut out = vec![0.0; (s + lo + hi) * c];
+            out[lo * c..(lo + s) * c].copy_from_slice(src);
+            out
+        }
+        2 => {
+            let (hlo, hhi) = pad[0];
+            let (wlo, whi) = pad[1];
+            let (h, w) = (ish[0], ish[1]);
+            let (nh, nw) = (h + hlo + hhi, w + wlo + whi);
+            let mut out = vec![0.0; nh * nw * c];
+            for r in 0..h {
+                let dst = ((r + hlo) * nw + wlo) * c;
+                out[dst..dst + w * c].copy_from_slice(&src[r * w * c..(r + 1) * w * c]);
+            }
+            out
+        }
+        r => panic!("zero_pad rank {r}"),
+    }
+}
+
+/// Argmax helper for classification.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build::resnet_v1_6_shapes;
+    use crate::graph::deploy_pipeline;
+    use crate::util::prng::Pcg32;
+
+    fn random_resnet(filters: usize, seed: u64) -> Graph {
+        let mut g = resnet_v1_6_shapes("t", 1, &[32, 3], 4, filters);
+        let mut rng = Pcg32::seeded(seed);
+        for n in g.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn resnet_runs_and_outputs_classes() {
+        let g = random_resnet(8, 1);
+        let x: Vec<f32> = (0..96).map(|i| (i as f32 * 0.1).sin()).collect();
+        let out = run(&g, &x, None);
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deploy_pipeline_preserves_float_semantics() {
+        let g = random_resnet(8, 2);
+        let fused = deploy_pipeline(&g);
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..5 {
+            let x: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+            let a = run(&g, &x, None);
+            let b = run(&fused, &x, None);
+            for (u, v) in a.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-5, "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_records_ranges() {
+        let g = random_resnet(8, 4);
+        let mut stats = ActStats::new(g.nodes.len());
+        let x: Vec<f32> = (0..96).map(|i| i as f32 * 0.01).collect();
+        run(&g, &x, Some(&mut stats));
+        assert!(stats.max_abs.iter().skip(1).any(|&m| m > 0.0));
+        // Input node records the input range.
+        assert!((stats.max_abs[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_merge_takes_max() {
+        let mut a = ActStats::new(2);
+        a.record(0, &[1.0]);
+        a.record(1, &[-2.0]);
+        let mut b = ActStats::new(2);
+        b.record(0, &[-3.0]);
+        b.record(1, &[1.0]);
+        a.merge(&b);
+        assert_eq!(a.max_abs, vec![3.0, 2.0]);
+        assert_eq!(a.min, vec![-3.0, -2.0]);
+        assert_eq!(a.max, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+    }
+
+    #[test]
+    fn gtsrb_2d_resnet_runs() {
+        let mut g = resnet_v1_6_shapes("g", 2, &[16, 16, 3], 5, 4);
+        let mut rng = Pcg32::seeded(9);
+        for n in g.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = 0.01;
+                }
+            }
+        }
+        let x: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.normal()).collect();
+        let out = run(&g, &x, None);
+        assert_eq!(out.len(), 5);
+    }
+}

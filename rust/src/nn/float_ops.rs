@@ -1,0 +1,364 @@
+//! Float32 layer implementations (channels-last), matching XLA semantics so
+//! Rust-side inference reproduces the HLO `fwd` artifacts bit-for-bit up to
+//! summation order.
+
+use crate::graph::ir::Padding;
+use crate::graph::Graph;
+
+/// 1-D convolution: x (S, C), w (K, C, F), b (F) -> (S_out, F).
+pub fn conv1d(
+    x: &[f32],
+    s: usize,
+    c: usize,
+    w: &[f32],
+    k: usize,
+    f: usize,
+    b: &[f32],
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    out: &mut Vec<f32>,
+) -> usize {
+    let (pad_lo, s_out) = match padding {
+        Padding::Same => (Graph::same_padding(s, k, stride).0, s.div_ceil(stride)),
+        Padding::Valid => (0, (s - k) / stride + 1),
+    };
+    out.clear();
+    out.reserve(s_out * f);
+    for o in 0..s_out {
+        let base = (o * stride) as isize - pad_lo as isize;
+        for fi in 0..f {
+            let mut acc = b[fi];
+            for ki in 0..k {
+                let xi = base + ki as isize;
+                if xi < 0 || xi >= s as isize {
+                    continue;
+                }
+                let xrow = &x[(xi as usize) * c..(xi as usize + 1) * c];
+                let wrow = &w[(ki * c) * f..];
+                for ci in 0..c {
+                    acc += xrow[ci] * wrow[ci * f + fi];
+                }
+            }
+            out.push(if relu { acc.max(0.0) } else { acc });
+        }
+    }
+    s_out
+}
+
+/// 2-D convolution: x (H, W, C), w (KH, KW, C, F), b (F) -> (H_out, W_out, F).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    x: &[f32],
+    h: usize,
+    wdt: usize,
+    c: usize,
+    w: &[f32],
+    kh: usize,
+    kw: usize,
+    f: usize,
+    b: &[f32],
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    let ((ph, _), h_out) = match padding {
+        Padding::Same => (Graph::same_padding(h, kh, stride), h.div_ceil(stride)),
+        Padding::Valid => ((0, 0), (h - kh) / stride + 1),
+    };
+    let ((pw, _), w_out) = match padding {
+        Padding::Same => (Graph::same_padding(wdt, kw, stride), wdt.div_ceil(stride)),
+        Padding::Valid => ((0, 0), (wdt - kw) / stride + 1),
+    };
+    out.clear();
+    out.reserve(h_out * w_out * f);
+    for oh in 0..h_out {
+        let hbase = (oh * stride) as isize - ph as isize;
+        for ow in 0..w_out {
+            let wbase = (ow * stride) as isize - pw as isize;
+            for fi in 0..f {
+                let mut acc = b[fi];
+                for ki in 0..kh {
+                    let hi = hbase + ki as isize;
+                    if hi < 0 || hi >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let wi = wbase + kj as isize;
+                        if wi < 0 || wi >= wdt as isize {
+                            continue;
+                        }
+                        let xrow = &x[((hi as usize) * wdt + wi as usize) * c..];
+                        let wrow = &w[((ki * kw + kj) * c) * f..];
+                        for ci in 0..c {
+                            acc += xrow[ci] * wrow[ci * f + fi];
+                        }
+                    }
+                }
+                out.push(if relu { acc.max(0.0) } else { acc });
+            }
+        }
+    }
+    (h_out, w_out)
+}
+
+/// Dense: x (I,), w (I, O), b (O) -> (O,).
+pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, out: &mut Vec<f32>) {
+    let i = x.len();
+    out.clear();
+    out.reserve(o);
+    for oi in 0..o {
+        let mut acc = b[oi];
+        for ii in 0..i {
+            acc += x[ii] * w[ii * o + oi];
+        }
+        out.push(if relu { acc.max(0.0) } else { acc });
+    }
+}
+
+/// Max pooling over `spatial` dims, VALID, stride == size, fused ReLU option.
+pub fn maxpool(x: &[f32], spatial: &[usize], c: usize, size: usize, relu: bool, out: &mut Vec<f32>) {
+    out.clear();
+    match spatial.len() {
+        1 => {
+            let s = spatial[0];
+            let s_out = s / size;
+            for o in 0..s_out {
+                for ci in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for ki in 0..size {
+                        m = m.max(x[(o * size + ki) * c + ci]);
+                    }
+                    out.push(if relu { m.max(0.0) } else { m });
+                }
+            }
+        }
+        2 => {
+            let (h, w) = (spatial[0], spatial[1]);
+            let (ho, wo) = (h / size, w / size);
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    for ci in 0..c {
+                        let mut m = f32::NEG_INFINITY;
+                        for ki in 0..size {
+                            for kj in 0..size {
+                                m = m.max(x[((oh * size + ki) * w + ow * size + kj) * c + ci]);
+                            }
+                        }
+                        out.push(if relu { m.max(0.0) } else { m });
+                    }
+                }
+            }
+        }
+        r => panic!("maxpool rank {r}"),
+    }
+}
+
+/// Average pooling, VALID, stride == size.
+pub fn avgpool(x: &[f32], spatial: &[usize], c: usize, size: usize, out: &mut Vec<f32>) {
+    out.clear();
+    match spatial.len() {
+        1 => {
+            let s_out = spatial[0] / size;
+            for o in 0..s_out {
+                for ci in 0..c {
+                    let mut a = 0.0;
+                    for ki in 0..size {
+                        a += x[(o * size + ki) * c + ci];
+                    }
+                    out.push(a / size as f32);
+                }
+            }
+        }
+        2 => {
+            let (h, w) = (spatial[0], spatial[1]);
+            let (ho, wo) = (h / size, w / size);
+            let denom = (size * size) as f32;
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    for ci in 0..c {
+                        let mut a = 0.0;
+                        for ki in 0..size {
+                            for kj in 0..size {
+                                a += x[((oh * size + ki) * w + ow * size + kj) * c + ci];
+                            }
+                        }
+                        out.push(a / denom);
+                    }
+                }
+            }
+        }
+        r => panic!("avgpool rank {r}"),
+    }
+}
+
+/// Global average pool: mean over all spatial positions per channel.
+pub fn global_avgpool(x: &[f32], positions: usize, c: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(c, 0.0);
+    for p in 0..positions {
+        for ci in 0..c {
+            out[ci] += x[p * c + ci];
+        }
+    }
+    for v in out.iter_mut() {
+        *v /= positions as f32;
+    }
+}
+
+/// Element-wise add with optional fused ReLU.
+pub fn add(a: &[f32], b: &[f32], relu: bool, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(a.iter().zip(b.iter()).map(|(&x, &y)| {
+        let s = x + y;
+        if relu {
+            s.max(0.0)
+        } else {
+            s
+        }
+    }));
+}
+
+pub fn relu(x: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(x.iter().map(|&v| v.max(0.0)));
+}
+
+pub fn softmax(x: &[f32], out: &mut Vec<f32>) {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let exps: Vec<f32> = x.iter().map(|&v| (v - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    out.clear();
+    out.extend(exps.iter().map(|&e| e / sum));
+}
+
+/// BatchNorm as affine y = w*x + b per channel.
+pub fn batchnorm_affine(x: &[f32], c: usize, w: &[f32], b: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(x.len());
+    for (i, &v) in x.iter().enumerate() {
+        let ci = i % c;
+        out.push(v * w[ci] + b[ci]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1d_identity_kernel() {
+        // k=1 identity over 2 channels.
+        let x = [1.0, 2.0, 3.0, 4.0]; // (2, 2)
+        let w = [1.0, 0.0, 0.0, 1.0]; // (1, 2, 2) identity
+        let b = [0.0, 0.0];
+        let mut out = Vec::new();
+        let s_out = conv1d(&x, 2, 2, &w, 1, 2, &b, 1, Padding::Same, false, &mut out);
+        assert_eq!(s_out, 2);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn conv1d_same_padding_sums() {
+        // k=3 all-ones kernel, single channel: y[i] = x[i-1] + x[i] + x[i+1]
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let w = [1.0, 1.0, 1.0];
+        let b = [0.0];
+        let mut out = Vec::new();
+        conv1d(&x, 4, 1, &w, 3, 1, &b, 1, Padding::Same, false, &mut out);
+        assert_eq!(out, vec![3.0, 6.0, 9.0, 7.0]);
+    }
+
+    #[test]
+    fn conv1d_stride2_same() {
+        let x = [1.0; 9];
+        let w = [1.0, 1.0, 1.0];
+        let b = [0.0];
+        let mut out = Vec::new();
+        let s_out = conv1d(&x, 9, 1, &w, 3, 1, &b, 2, Padding::Same, false, &mut out);
+        assert_eq!(s_out, 5); // ceil(9/2)
+    }
+
+    #[test]
+    fn conv_relu_fusion() {
+        let x = [-1.0, -2.0];
+        let w = [1.0];
+        let b = [0.0];
+        let mut out = Vec::new();
+        conv1d(&x, 2, 1, &w, 1, 1, &b, 1, Padding::Same, true, &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        let x = [1.0, 2.0];
+        let w = [1.0, 3.0, 2.0, 4.0]; // (2, 2): w[i][o]
+        let b = [0.5, -0.5];
+        let mut out = Vec::new();
+        dense(&x, &w, &b, 2, false, &mut out);
+        assert_eq!(out, vec![1.0 + 4.0 + 0.5, 3.0 + 8.0 - 0.5]);
+    }
+
+    #[test]
+    fn maxpool_1d() {
+        let x = [1.0, 5.0, 3.0, 2.0, 9.0, 0.0]; // (3, 2)
+        let mut out = Vec::new();
+        maxpool(&x, &[3], 2, 2, false, &mut out);
+        assert_eq!(out, vec![3.0, 5.0]); // floor(3/2)=1 window over first 2 rows
+    }
+
+    #[test]
+    fn maxpool_2d() {
+        #[rustfmt::skip]
+        let x = [
+            1.0, 2.0,
+            3.0, 4.0,
+        ]; // (2, 2, 1)
+        let mut out = Vec::new();
+        maxpool(&x, &[2, 2], 1, 2, false, &mut out);
+        assert_eq!(out, vec![4.0]);
+    }
+
+    #[test]
+    fn global_avgpool_means() {
+        let x = [1.0, 10.0, 3.0, 20.0]; // (2, 2)
+        let mut out = Vec::new();
+        global_avgpool(&x, 2, 2, &mut out);
+        assert_eq!(out, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut out = Vec::new();
+        softmax(&[1.0, 2.0, 3.0], &mut out);
+        let s: f32 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(out[2] > out[1] && out[1] > out[0]);
+    }
+
+    #[test]
+    fn add_and_relu() {
+        let mut out = Vec::new();
+        add(&[1.0, -3.0], &[1.0, 1.0], true, &mut out);
+        assert_eq!(out, vec![2.0, 0.0]);
+        relu(&[-1.0, 2.0], &mut out);
+        assert_eq!(out, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn avgpool_1d() {
+        let x = [2.0, 4.0, 6.0, 8.0]; // (4,1)
+        let mut out = Vec::new();
+        avgpool(&x, &[4], 1, 2, &mut out);
+        assert_eq!(out, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn batchnorm_affine_applies_per_channel() {
+        let x = [1.0, 2.0, 3.0, 4.0]; // (2, 2)
+        let mut out = Vec::new();
+        batchnorm_affine(&x, 2, &[2.0, 0.5], &[0.0, 1.0], &mut out);
+        assert_eq!(out, vec![2.0, 2.0, 6.0, 3.0]);
+    }
+}

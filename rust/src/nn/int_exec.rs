@@ -1,0 +1,283 @@
+//! Fixed-point graph executor: runs a [`QuantizedGraph`] on one example,
+//! reproducing the generated-C dataflow end to end (input quantization at
+//! INPUT_SCALE_FACTOR, integer layers, dequantized logits out).
+
+use crate::fixedpoint::QFormat;
+use crate::graph::ir::LayerKind;
+use crate::quant::ptq::QuantizedGraph;
+
+use super::int_ops as ops;
+
+/// Execute the quantized graph on a float input; returns float logits
+/// (payloads of the last node dequantized at its activation format).
+pub fn run(qg: &QuantizedGraph, input: &[f32]) -> Vec<f32> {
+    let graph = &qg.graph;
+    let width = qg.width;
+    assert_eq!(input.len(), graph.input_shape.iter().product::<usize>());
+
+    let in_fmt = QFormat::new(width, qg.act_n[0]);
+    let mut acts: Vec<Vec<i32>> = vec![Vec::new(); graph.nodes.len()];
+    let mut scratch: Vec<i32> = Vec::new();
+
+    for node in &graph.nodes {
+        let out: Vec<i32> = match &node.kind {
+            LayerKind::Input => input.iter().map(|&x| in_fmt.quantize(x)).collect(),
+            LayerKind::Conv { w, stride, padding, .. } => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                let qw = &qg.weights[&node.id];
+                scratch.clear();
+                if graph.dims == 1 {
+                    ops::conv1d_q(
+                        src, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
+                        *padding, node.fused_relu, width, &mut scratch,
+                    );
+                } else {
+                    ops::conv2d_q(
+                        src, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
+                        w.shape[3], *stride, *padding, node.fused_relu, width,
+                        &mut scratch,
+                    );
+                }
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::Dense { w, .. } => {
+                let src = &acts[node.inputs[0]];
+                let qw = &qg.weights[&node.id];
+                ops::dense_q(src, qw, w.shape[1], node.fused_relu, width, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::MaxPool { size } => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                let c = *ish.last().unwrap();
+                ops::maxpool_q(src, &ish[..ish.len() - 1], c, *size, node.fused_relu, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::AvgPool { size } => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                let c = *ish.last().unwrap();
+                ops::avgpool_q(src, &ish[..ish.len() - 1], c, *size, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::GlobalAvgPool => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                let c = *ish.last().unwrap();
+                let positions: usize = ish[..ish.len() - 1].iter().product();
+                ops::global_avgpool_q(src, positions, c, &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::Add => {
+                let (ia, ib) = (node.inputs[0], node.inputs[1]);
+                ops::add_q(
+                    &acts[ia], qg.act_n[ia], &acts[ib], qg.act_n[ib],
+                    qg.act_n[node.id], node.fused_relu, width, &mut scratch,
+                );
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::ReLU => {
+                ops::relu_q(&acts[node.inputs[0]], &mut scratch);
+                std::mem::take(&mut scratch)
+            }
+            LayerKind::Flatten => acts[node.inputs[0]].clone(),
+            LayerKind::Softmax => acts[node.inputs[0]].clone(), // argmax-invariant
+            LayerKind::ZeroPad { pad } => {
+                let src = &acts[node.inputs[0]];
+                let ish = &graph.nodes[node.inputs[0]].out_shape;
+                zero_pad_q(src, ish, pad)
+            }
+            LayerKind::BatchNorm { .. } => {
+                panic!("BatchNorm must be folded before integer execution (run deploy_pipeline)")
+            }
+        };
+        acts[node.id] = out;
+    }
+
+    let out_id = graph.output_id();
+    let out_fmt = QFormat::new(width, qg.act_n[out_id]);
+    acts[out_id].iter().map(|&q| out_fmt.dequantize(q)).collect()
+}
+
+fn zero_pad_q(src: &[i32], ish: &[usize], pad: &[(usize, usize)]) -> Vec<i32> {
+    let c = *ish.last().unwrap();
+    match pad.len() {
+        1 => {
+            let (lo, hi) = pad[0];
+            let s = ish[0];
+            let mut out = vec![0; (s + lo + hi) * c];
+            out[lo * c..(lo + s) * c].copy_from_slice(src);
+            out
+        }
+        2 => {
+            let (hlo, hhi) = pad[0];
+            let (wlo, whi) = pad[1];
+            let (h, w) = (ish[0], ish[1]);
+            let nw = w + wlo + whi;
+            let mut out = vec![0; (h + hlo + hhi) * nw * c];
+            for r in 0..h {
+                let dst = ((r + hlo) * nw + wlo) * c;
+                out[dst..dst + w * c].copy_from_slice(&src[r * w * c..(r + 1) * w * c]);
+            }
+            out
+        }
+        r => panic!("zero_pad rank {r}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build::resnet_v1_6_shapes;
+    use crate::graph::deploy_pipeline;
+    use crate::graph::ir::{Graph, LayerKind};
+    use crate::nn::float_exec::{self, ActStats};
+    use crate::quant::{quantize, QuantSpec};
+    use crate::util::prng::Pcg32;
+
+    fn randomized_resnet(seed: u64) -> Graph {
+        let mut g = resnet_v1_6_shapes("t", 1, &[32, 3], 4, 8);
+        let mut rng = Pcg32::seeded(seed);
+        for n in g.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.4;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+        }
+        deploy_pipeline(&g)
+    }
+
+    fn calib(g: &Graph, inputs: &[Vec<f32>]) -> ActStats {
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in inputs {
+            float_exec::run(g, x, Some(&mut stats));
+        }
+        stats
+    }
+
+    fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
+    }
+
+    #[test]
+    fn int16_logits_close_to_float() {
+        let g = randomized_resnet(1);
+        let inputs = random_inputs(8, 96, 2);
+        let stats = calib(&g, &inputs);
+        let qg = quantize(&g, &stats, QuantSpec::int16_per_layer());
+        for x in &inputs {
+            let fl = float_exec::run(&g, x, None);
+            let ql = run(&qg, x);
+            let max_diff = fl
+                .iter()
+                .zip(&ql)
+                .fold(0.0f32, |a, (u, v)| a.max((u - v).abs()));
+            let span = fl.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+            assert!(max_diff / span < 0.02, "diff {max_diff} span {span}");
+        }
+    }
+
+    #[test]
+    fn int8_preserves_argmax_mostly() {
+        let g = randomized_resnet(3);
+        let inputs = random_inputs(16, 96, 4);
+        let stats = calib(&g, &inputs);
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let mut agree = 0;
+        for x in &inputs {
+            let fl = float_exec::run(&g, x, None);
+            let ql = run(&qg, x);
+            if float_exec::argmax(&fl) == float_exec::argmax(&ql) {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 12, "argmax agreement {agree}/16");
+    }
+
+    #[test]
+    fn q7_9_network_wide_runs() {
+        let g = randomized_resnet(5);
+        let inputs = random_inputs(4, 96, 6);
+        let stats = calib(&g, &inputs);
+        let qg = quantize(&g, &stats, QuantSpec::int16_q7_9());
+        for x in &inputs {
+            let fl = float_exec::run(&g, x, None);
+            let ql = run(&qg, x);
+            // Q7.9 resolution is ~2e-3 but truncation error accumulates
+            // across the 7 integer layers; logits are O(1).
+            let max_diff = fl.iter().zip(&ql).fold(0.0f32, |a, (u, v)| a.max((u - v).abs()));
+            assert!(max_diff < 0.2, "diff {max_diff}");
+        }
+    }
+
+    #[test]
+    fn per_filter_at_least_as_accurate_as_per_layer() {
+        let g = randomized_resnet(7);
+        let inputs = random_inputs(12, 96, 8);
+        let stats = calib(&g, &inputs);
+        let ql_spec = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let qf_spec = quantize(&g, &stats, QuantSpec::int8_per_filter());
+        let mut err_l = 0.0f64;
+        let mut err_f = 0.0f64;
+        for x in &inputs {
+            let fl = float_exec::run(&g, x, None);
+            let l = run(&ql_spec, x);
+            let f = run(&qf_spec, x);
+            for i in 0..fl.len() {
+                err_l += ((fl[i] - l[i]) as f64).powi(2);
+                err_f += ((fl[i] - f[i]) as f64).powi(2);
+            }
+        }
+        // Per-filter should not be dramatically worse (usually better).
+        assert!(err_f <= err_l * 1.5, "per-filter {err_f} vs per-layer {err_l}");
+    }
+
+    #[test]
+    fn int9_beats_int8_on_logit_error() {
+        let g = randomized_resnet(9);
+        let inputs = random_inputs(12, 96, 10);
+        let stats = calib(&g, &inputs);
+        let q8 = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let q9 = quantize(&g, &stats, QuantSpec::int9_per_layer());
+        let (mut e8, mut e9) = (0.0f64, 0.0f64);
+        for x in &inputs {
+            let fl = float_exec::run(&g, x, None);
+            for (i, &v) in run(&q8, x).iter().enumerate() {
+                e8 += ((fl[i] - v) as f64).powi(2);
+            }
+            for (i, &v) in run(&q9, x).iter().enumerate() {
+                e9 += ((fl[i] - v) as f64).powi(2);
+            }
+        }
+        assert!(e9 < e8, "int9 {e9} should beat int8 {e8}");
+    }
+
+    #[test]
+    fn gtsrb_2d_int_path_runs() {
+        let mut g = resnet_v1_6_shapes("g", 2, &[16, 16, 3], 5, 4);
+        let mut rng = Pcg32::seeded(11);
+        for n in g.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = 0.02;
+                }
+            }
+        }
+        let g = deploy_pipeline(&g);
+        let inputs = random_inputs(4, 16 * 16 * 3, 12);
+        let stats = calib(&g, &inputs);
+        let qg = quantize(&g, &stats, QuantSpec::int16_per_layer());
+        let out = run(&qg, &inputs[0]);
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,477 @@
+//! Fixed-point integer layer kernels — the Rust twin of the generated C
+//! inner loops (§5.8, Table A6): widen → MACC → arithmetic-shift-right →
+//! saturate, with optional fused ReLU. This is the HOT PATH of the whole
+//! reproduction (see EXPERIMENTS.md §Perf).
+
+use crate::fixedpoint::ops::{clamp_to, rescale};
+use crate::graph::ir::Padding;
+use crate::graph::Graph;
+use crate::quant::ptq::QNodeWeights;
+
+/// 1-D fixed-point convolution on integer payloads.
+/// x: (S, C) payloads at n_in; w/b/shift per `qw`; out at n_out.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_q(
+    x: &[i32],
+    s: usize,
+    c: usize,
+    qw: &QNodeWeights,
+    k: usize,
+    f: usize,
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    width: u32,
+    out: &mut Vec<i32>,
+) -> usize {
+    let (pad_lo, s_out) = match padding {
+        Padding::Same => (Graph::same_padding(s, k, stride).0, s.div_ceil(stride)),
+        Padding::Valid => (0, (s - k) / stride + 1),
+    };
+    out.clear();
+    out.reserve(s_out * f);
+    let w = &qw.w;
+    let uniform_shift = qw.shift.len() == 1;
+    // Perf pass P1 (EXPERIMENTS.md §Perf): filter-contiguous accumulation.
+    // The weight layout (k, c, f) is contiguous in f, so accumulating a
+    // whole filter row per (tap, channel) turns the inner loop into a
+    // vectorizable acc[f] += x * w[f] sweep instead of a stride-f gather.
+    //
+    // Perf pass P2: when the worst-case accumulator provably fits i32
+    // (int8 operands), accumulate in i32 lanes — twice the SIMD width of
+    // the generic i64 path. Semantically identical (no saturation can be
+    // hit before the epilogue).
+    if accum_fits_i32(qw, k * c, width) {
+        let mut acc = vec![0i32; f];
+        for o in 0..s_out {
+            let base = (o * stride) as isize - pad_lo as isize;
+            let k_lo = (-base).max(0) as usize;
+            let k_hi = ((s as isize - base).min(k as isize)).max(0) as usize;
+            for (a, &b) in acc.iter_mut().zip(&qw.b_acc) {
+                *a = b as i32;
+            }
+            for ki in k_lo..k_hi {
+                let xi = (base + ki as isize) as usize;
+                let xrow = &x[xi * c..(xi + 1) * c];
+                for (ci, &xv) in xrow.iter().enumerate() {
+                    if xv == 0 {
+                        continue; // ReLU sparsity: skip zero activations
+                    }
+                    let wrow = &w[(ki * c + ci) * f..(ki * c + ci + 1) * f];
+                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+            for fi in 0..f {
+                let sh = if uniform_shift { qw.shift[0] } else { qw.shift[fi] };
+                let mut v = clamp_to(rescale(acc[fi] as i64, sh), width);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out.push(v);
+            }
+        }
+        return s_out;
+    }
+    let mut acc = vec![0i64; f];
+    for o in 0..s_out {
+        let base = (o * stride) as isize - pad_lo as isize;
+        // Valid tap range for this output position (hoists the bounds
+        // check out of the MACC loop).
+        let k_lo = (-base).max(0) as usize;
+        let k_hi = ((s as isize - base).min(k as isize)).max(0) as usize;
+        acc.copy_from_slice(&qw.b_acc);
+        for ki in k_lo..k_hi {
+            let xi = (base + ki as isize) as usize;
+            let xrow = &x[xi * c..(xi + 1) * c];
+            for (ci, &xv) in xrow.iter().enumerate() {
+                if xv == 0 {
+                    continue; // ReLU sparsity: skip zero activations
+                }
+                let xv = xv as i64;
+                let wrow = &w[(ki * c + ci) * f..(ki * c + ci + 1) * f];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * (wv as i64);
+                }
+            }
+        }
+        for fi in 0..f {
+            let sh = if uniform_shift { qw.shift[0] } else { qw.shift[fi] };
+            let mut v = clamp_to(rescale(acc[fi], sh), width);
+            if relu && v < 0 {
+                v = 0;
+            }
+            out.push(v);
+        }
+    }
+    s_out
+}
+
+/// P2 safety check: worst-case |accumulator| for `taps` MACCs of
+/// `width`-bit operands plus the bias magnitude must fit in i32.
+#[inline]
+fn accum_fits_i32(qw: &QNodeWeights, taps: usize, width: u32) -> bool {
+    if width > 8 {
+        return false;
+    }
+    let max_prod = (1i64 << (width - 1)) * (1i64 << (width - 1));
+    let max_bias = qw.b_acc.iter().map(|b| b.abs()).max().unwrap_or(0);
+    (taps as i64) * max_prod + max_bias < i32::MAX as i64 / 2
+}
+
+/// 2-D fixed-point convolution.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_q(
+    x: &[i32],
+    h: usize,
+    wdt: usize,
+    c: usize,
+    qw: &QNodeWeights,
+    kh: usize,
+    kw: usize,
+    f: usize,
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    width: u32,
+    out: &mut Vec<i32>,
+) -> (usize, usize) {
+    let ((ph, _), h_out) = match padding {
+        Padding::Same => (Graph::same_padding(h, kh, stride), h.div_ceil(stride)),
+        Padding::Valid => ((0, 0), (h - kh) / stride + 1),
+    };
+    let ((pw, _), w_out) = match padding {
+        Padding::Same => (Graph::same_padding(wdt, kw, stride), wdt.div_ceil(stride)),
+        Padding::Valid => ((0, 0), (wdt - kw) / stride + 1),
+    };
+    out.clear();
+    out.reserve(h_out * w_out * f);
+    let w = &qw.w;
+    let uniform_shift = qw.shift.len() == 1;
+    // Perf passes P1 (filter-contiguous accumulation) + P3 (i32 lanes for
+    // provably-safe int8 accumulators) — see conv1d_q.
+    let fits_i32 = accum_fits_i32(qw, kh * kw * c, width);
+    let mut acc64 = vec![0i64; f];
+    let mut acc32 = vec![0i32; f];
+    for oh in 0..h_out {
+        let hbase = (oh * stride) as isize - ph as isize;
+        for ow in 0..w_out {
+            let wbase = (ow * stride) as isize - pw as isize;
+            if fits_i32 {
+                for (a, &b) in acc32.iter_mut().zip(&qw.b_acc) {
+                    *a = b as i32;
+                }
+            } else {
+                acc64.copy_from_slice(&qw.b_acc);
+            }
+            for ki in 0..kh {
+                let hi = hbase + ki as isize;
+                if hi < 0 || hi >= h as isize {
+                    continue;
+                }
+                for kj in 0..kw {
+                    let wi = wbase + kj as isize;
+                    if wi < 0 || wi >= wdt as isize {
+                        continue;
+                    }
+                    let xrow = &x[((hi as usize) * wdt + wi as usize) * c..];
+                    for ci in 0..c {
+                        let xv = xrow[ci];
+                        if xv == 0 {
+                            continue;
+                        }
+                        let woff = ((ki * kw + kj) * c + ci) * f;
+                        let wrow = &w[woff..woff + f];
+                        if fits_i32 {
+                            for (a, &wv) in acc32.iter_mut().zip(wrow) {
+                                *a += xv * wv;
+                            }
+                        } else {
+                            let xv = xv as i64;
+                            for (a, &wv) in acc64.iter_mut().zip(wrow) {
+                                *a += xv * (wv as i64);
+                            }
+                        }
+                    }
+                }
+            }
+            for fi in 0..f {
+                let a = if fits_i32 { acc32[fi] as i64 } else { acc64[fi] };
+                let sh = if uniform_shift { qw.shift[0] } else { qw.shift[fi] };
+                let mut v = clamp_to(rescale(a, sh), width);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out.push(v);
+            }
+        }
+    }
+    (h_out, w_out)
+}
+
+/// Fixed-point dense layer.
+pub fn dense_q(
+    x: &[i32],
+    qw: &QNodeWeights,
+    o: usize,
+    relu: bool,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
+    let i = x.len();
+    out.clear();
+    out.reserve(o);
+    let uniform_shift = qw.shift.len() == 1;
+    // Perf pass P1: output-contiguous accumulation over the (i, o) layout.
+    let mut acc: Vec<i64> = qw.b_acc.clone();
+    for (ii, &xv) in x.iter().enumerate().take(i) {
+        if xv == 0 {
+            continue;
+        }
+        let xv = xv as i64;
+        let wrow = &qw.w[ii * o..(ii + 1) * o];
+        for (a, &wv) in acc.iter_mut().zip(wrow) {
+            *a += xv * (wv as i64);
+        }
+    }
+    for oi in 0..o {
+        let sh = if uniform_shift { qw.shift[0] } else { qw.shift[oi] };
+        let mut v = clamp_to(rescale(acc[oi], sh), width);
+        if relu && v < 0 {
+            v = 0;
+        }
+        out.push(v);
+    }
+}
+
+/// Max pooling on payloads (no requantization, §4.3).
+pub fn maxpool_q(x: &[i32], spatial: &[usize], c: usize, size: usize, relu: bool, out: &mut Vec<i32>) {
+    out.clear();
+    match spatial.len() {
+        1 => {
+            let s_out = spatial[0] / size;
+            for o in 0..s_out {
+                for ci in 0..c {
+                    let mut m = i32::MIN;
+                    for ki in 0..size {
+                        m = m.max(x[(o * size + ki) * c + ci]);
+                    }
+                    out.push(if relu { m.max(0) } else { m });
+                }
+            }
+        }
+        2 => {
+            let (h, w) = (spatial[0], spatial[1]);
+            for oh in 0..h / size {
+                for ow in 0..w / size {
+                    for ci in 0..c {
+                        let mut m = i32::MIN;
+                        for ki in 0..size {
+                            for kj in 0..size {
+                                m = m.max(x[((oh * size + ki) * w + ow * size + kj) * c + ci]);
+                            }
+                        }
+                        out.push(if relu { m.max(0) } else { m });
+                    }
+                }
+            }
+        }
+        r => panic!("maxpool rank {r}"),
+    }
+}
+
+/// Average pooling: i64 sum, integer division (truncation, like C `/`).
+pub fn avgpool_q(x: &[i32], spatial: &[usize], c: usize, size: usize, out: &mut Vec<i32>) {
+    out.clear();
+    match spatial.len() {
+        1 => {
+            let s_out = spatial[0] / size;
+            for o in 0..s_out {
+                for ci in 0..c {
+                    let mut a: i64 = 0;
+                    for ki in 0..size {
+                        a += x[(o * size + ki) * c + ci] as i64;
+                    }
+                    out.push((a / size as i64) as i32);
+                }
+            }
+        }
+        2 => {
+            let (h, w) = (spatial[0], spatial[1]);
+            let denom = (size * size) as i64;
+            for oh in 0..h / size {
+                for ow in 0..w / size {
+                    for ci in 0..c {
+                        let mut a: i64 = 0;
+                        for ki in 0..size {
+                            for kj in 0..size {
+                                a += x[((oh * size + ki) * w + ow * size + kj) * c + ci] as i64;
+                            }
+                        }
+                        out.push((a / denom) as i32);
+                    }
+                }
+            }
+        }
+        r => panic!("avgpool rank {r}"),
+    }
+}
+
+/// Global average pool on payloads (format preserved; truncating division).
+pub fn global_avgpool_q(x: &[i32], positions: usize, c: usize, out: &mut Vec<i32>) {
+    out.clear();
+    let mut sums = vec![0i64; c];
+    for p in 0..positions {
+        for ci in 0..c {
+            sums[ci] += x[p * c + ci] as i64;
+        }
+    }
+    out.extend(sums.iter().map(|&s| (s / positions as i64) as i32));
+}
+
+/// Element-wise Add: realign both operands to the output format, then
+/// saturating add (Table A6: i shifts + (i-1) adds + saturate per element).
+#[allow(clippy::too_many_arguments)]
+pub fn add_q(
+    a: &[i32],
+    n_a: i32,
+    b: &[i32],
+    n_b: i32,
+    n_out: i32,
+    relu: bool,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
+    out.clear();
+    out.reserve(a.len());
+    let sh_a = n_a - n_out;
+    let sh_b = n_b - n_out;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let xa = rescale(x as i64, sh_a);
+        let yb = rescale(y as i64, sh_b);
+        let mut v = clamp_to(xa + yb, width);
+        if relu && v < 0 {
+            v = 0;
+        }
+        out.push(v);
+    }
+}
+
+pub fn relu_q(x: &[i32], out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(x.iter().map(|&v| v.max(0)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ptq::QNodeWeights;
+
+    fn qw(w: Vec<i32>, b_acc: Vec<i64>, shift: i32) -> QNodeWeights {
+        QNodeWeights { w, w_n: vec![0], b_acc, shift: vec![shift] }
+    }
+
+    #[test]
+    fn conv1d_q_identity() {
+        // k=1, single channel, weight payload 1, shift 0.
+        let x = [10, -20, 30];
+        let q = qw(vec![1], vec![0], 0);
+        let mut out = Vec::new();
+        let s = conv1d_q(&x, 3, 1, &q, 1, 1, 1, Padding::Same, false, 8, &mut out);
+        assert_eq!(s, 3);
+        assert_eq!(out, vec![10, -20, 30]);
+    }
+
+    #[test]
+    fn conv1d_q_shifts_and_saturates() {
+        let x = [100, 100];
+        let q = qw(vec![100], vec![0], 1); // acc = 10000, >>1 = 5000 -> sat 127
+        let mut out = Vec::new();
+        conv1d_q(&x, 2, 1, &q, 1, 1, 1, Padding::Same, false, 8, &mut out);
+        assert_eq!(out, vec![127, 127]);
+    }
+
+    #[test]
+    fn conv1d_q_relu() {
+        let x = [-50];
+        let q = qw(vec![1], vec![0], 0);
+        let mut out = Vec::new();
+        conv1d_q(&x, 1, 1, &q, 1, 1, 1, Padding::Same, true, 8, &mut out);
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn conv1d_q_same_padding_zero_taps() {
+        // k=3 sum kernel: edges see two taps (pad contributes 0 payload).
+        let x = [1, 2, 3];
+        let q = qw(vec![1, 1, 1], vec![0], 0);
+        let mut out = Vec::new();
+        conv1d_q(&x, 3, 1, &q, 3, 1, 1, Padding::Same, false, 16, &mut out);
+        assert_eq!(out, vec![3, 6, 5]);
+    }
+
+    #[test]
+    fn dense_q_matches_manual() {
+        let x = [2, 3];
+        let q = QNodeWeights {
+            w: vec![1, 10, 2, 20], // (2 in, 2 out)
+            w_n: vec![0],
+            b_acc: vec![4, -4],
+            shift: vec![1],
+        };
+        let mut out = Vec::new();
+        dense_q(&x, &q, 2, false, 16, &mut out);
+        // o0: 2*1+3*2+4 = 12 >>1 = 6 ; o1: 2*10+3*20-4 = 76 >>1 = 38
+        assert_eq!(out, vec![6, 38]);
+    }
+
+    #[test]
+    fn add_q_realigns_formats() {
+        // a at n=4, b at n=2, out at n=2: a>>2 + b.
+        let a = [16]; // 1.0 at n=4
+        let b = [4]; // 1.0 at n=2
+        let mut out = Vec::new();
+        add_q(&a, 4, &b, 2, 2, false, 8, &mut out);
+        assert_eq!(out, vec![8]); // 2.0 at n=2
+    }
+
+    #[test]
+    fn add_q_saturates() {
+        let a = [120];
+        let b = [120];
+        let mut out = Vec::new();
+        add_q(&a, 0, &b, 0, 0, false, 8, &mut out);
+        assert_eq!(out, vec![127]);
+    }
+
+    #[test]
+    fn global_avgpool_q_truncates() {
+        let x = [1, 2, 2, 3]; // (2, 2): ch sums 3, 5 -> /2 -> 1, 2
+        let mut out = Vec::new();
+        global_avgpool_q(&x, 2, 2, &mut out);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn maxpool_q_takes_max() {
+        let x = [5, -1, 3, 7]; // (2, 2)
+        let mut out = Vec::new();
+        maxpool_q(&x, &[2], 2, 2, false, &mut out);
+        assert_eq!(out, vec![5, 7]);
+    }
+
+    #[test]
+    fn per_filter_shift_applied() {
+        let x = [8];
+        let q = QNodeWeights {
+            w: vec![1, 1],
+            w_n: vec![0, 0],
+            b_acc: vec![0, 0],
+            shift: vec![0, 3],
+        };
+        let mut out = Vec::new();
+        conv1d_q(&x, 1, 1, &q, 1, 2, 1, Padding::Same, false, 8, &mut out);
+        assert_eq!(out, vec![8, 1]);
+    }
+}

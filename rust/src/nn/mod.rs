@@ -1,0 +1,11 @@
+//! The MicroAI inference engine: float32, fixed-point Qm.n (int8/int9/
+//! int16) and affine int8 (TFLite-semantics) executors over the layer
+//! graph IR — the Rust twin of the C library KerasCNN2C generates.
+
+pub mod affine_exec;
+pub mod float_exec;
+pub mod float_ops;
+pub mod int_exec;
+pub mod int_ops;
+
+pub use float_exec::{argmax, ActStats};

@@ -1,0 +1,260 @@
+//! TFLite-style affine int8 quantization (the comparison scheme of
+//! Appendix B / §7): per-tensor ASYMMETRIC activations (scale + zero
+//! point), per-filter SYMMETRIC weights, int32 biases, and gemmlowp-style
+//! integer requantization (rounding doubling high-mul + rounding shift).
+//!
+//! This is a faithful re-implementation of the TFLite 8-bit quantization
+//! spec referenced by the paper [42, 43], used both as the Appendix B
+//! baseline and to model the STM32Cube.AI engine (which reuses TFLite's
+//! quantizer).
+
+use std::collections::BTreeMap;
+
+use crate::graph::ir::{Graph, LayerKind};
+use crate::nn::float_exec::ActStats;
+
+/// Per-tensor activation quantization: real = scale * (q - zero_point).
+#[derive(Clone, Copy, Debug)]
+pub struct AffineParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl AffineParams {
+    /// TFLite rule for int8: nudge so that 0.0 is exactly representable.
+    pub fn from_range(min: f32, max: f32) -> Self {
+        let min = min.min(0.0);
+        let max = max.max(0.0);
+        let scale = if max > min { (max - min) / 255.0 } else { 1.0 };
+        let zp_real = -128.0 - min / scale;
+        let zero_point = zp_real.round().clamp(-128.0, 127.0) as i32;
+        Self { scale, zero_point }
+    }
+
+    #[inline(always)]
+    pub fn quantize(&self, x: f32) -> i32 {
+        ((x / self.scale).round() as i32 + self.zero_point).clamp(-128, 127)
+    }
+
+    #[inline(always)]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        (q - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// gemmlowp: SaturatingRoundingDoublingHighMul.
+#[inline(always)]
+pub fn srdhm(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let ab = (a as i64) * (b as i64);
+    let nudge = if ab >= 0 { 1i64 << 30 } else { 1 - (1i64 << 30) };
+    ((ab + nudge) >> 31) as i32
+}
+
+/// gemmlowp: RoundingDivideByPOT (round-half-away from zero).
+#[inline(always)]
+pub fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
+    assert!((0..=31).contains(&exponent));
+    if exponent == 0 {
+        return x;
+    }
+    let mask = (1i64 << exponent) - 1;
+    let remainder = (x as i64) & mask;
+    let threshold = (mask >> 1) + i64::from(x < 0);
+    ((x as i64 >> exponent) + i64::from(remainder > threshold)) as i32
+}
+
+/// Decompose a real multiplier in (0, 1) as (int32 Q31 mantissa, right
+/// shift): M ≈ M0 * 2^-shift with M0 in [2^30, 2^31).
+pub fn quantize_multiplier(m: f64) -> (i32, i32) {
+    assert!(m > 0.0 && m < 1.0, "multiplier {m} out of (0,1)");
+    let mut shift = 0;
+    let mut q = m;
+    while q < 0.5 {
+        q *= 2.0;
+        shift += 1;
+    }
+    let mut mantissa = (q * (1i64 << 31) as f64).round() as i64;
+    if mantissa == 1i64 << 31 {
+        mantissa /= 2;
+        shift -= 1;
+    }
+    (mantissa as i32, shift)
+}
+
+/// Apply the full requantization: acc (int32) -> int8 payload.
+#[inline(always)]
+pub fn requantize(acc: i32, mult: i32, shift: i32, zero_point: i32) -> i32 {
+    let x = srdhm(acc, mult);
+    let x = rounding_divide_by_pot(x, shift);
+    (x + zero_point).clamp(-128, 127)
+}
+
+/// Quantized weights of one Conv/Dense node in the affine scheme.
+#[derive(Clone, Debug)]
+pub struct AffineNodeWeights {
+    pub w: Vec<i32>,
+    /// Per-filter symmetric weight scales.
+    pub w_scale: Vec<f32>,
+    /// int32 biases at scale s_in * s_w[f].
+    pub b: Vec<i64>,
+    /// Requantization multiplier/shift per filter: s_in*s_w[f]/s_out.
+    pub mult: Vec<i32>,
+    pub shift: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct AffineQuantizedGraph {
+    pub graph: Graph,
+    pub act: Vec<AffineParams>,
+    pub weights: BTreeMap<usize, AffineNodeWeights>,
+}
+
+fn passthrough(kind: &LayerKind) -> bool {
+    matches!(
+        kind,
+        LayerKind::MaxPool { .. }
+            | LayerKind::ReLU
+            | LayerKind::Flatten
+            | LayerKind::ZeroPad { .. }
+            | LayerKind::Softmax
+            | LayerKind::GlobalAvgPool
+            | LayerKind::AvgPool { .. }
+    )
+}
+
+/// Quantize a calibrated graph into the affine scheme.
+pub fn quantize_affine(graph: &Graph, stats: &ActStats) -> AffineQuantizedGraph {
+    let mut act: Vec<AffineParams> = Vec::with_capacity(graph.nodes.len());
+    for node in &graph.nodes {
+        let p = if passthrough(&node.kind) {
+            act[node.inputs[0]]
+        } else {
+            AffineParams::from_range(stats.min[node.id], stats.max[node.id])
+        };
+        act.push(p);
+    }
+
+    let mut weights = BTreeMap::new();
+    for node in &graph.nodes {
+        let (w, b, filters) = match &node.kind {
+            LayerKind::Conv { w, b, .. } => (w, b, *w.shape.last().unwrap()),
+            LayerKind::Dense { w, b } => (w, b, w.shape[1]),
+            _ => continue,
+        };
+        let s_in = act[node.inputs[0]].scale;
+        let s_out = act[node.id].scale;
+        let per_filter = w.len() / filters;
+        let mut w_scale = Vec::with_capacity(filters);
+        let mut payload = vec![0i32; w.len()];
+        let mut bias = Vec::with_capacity(filters);
+        let mut mult = Vec::with_capacity(filters);
+        let mut shift = Vec::with_capacity(filters);
+        for f in 0..filters {
+            let mut max_abs = 0.0f32;
+            for e in 0..per_filter {
+                max_abs = max_abs.max(w.data[e * filters + f].abs());
+            }
+            let sw = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+            w_scale.push(sw);
+            for e in 0..per_filter {
+                payload[e * filters + f] =
+                    (w.data[e * filters + f] / sw).round().clamp(-127.0, 127.0) as i32;
+            }
+            bias.push((b.data[f] as f64 / (s_in as f64 * sw as f64)).round() as i64);
+            let m = (s_in as f64 * sw as f64) / s_out as f64;
+            // Clamp into (0,1): layers with huge scale ratios are clipped
+            // (mirrors TFLite's multiplier check).
+            let m = m.clamp(1e-9, 0.999_999_999);
+            let (m0, sh) = quantize_multiplier(m);
+            mult.push(m0);
+            shift.push(sh);
+        }
+        weights.insert(
+            node.id,
+            AffineNodeWeights { w: payload, w_scale, b: bias, mult, shift },
+        );
+    }
+    AffineQuantizedGraph { graph: graph.clone(), act, weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::check::property;
+
+    #[test]
+    fn affine_params_represent_zero_exactly() {
+        let p = AffineParams::from_range(-1.3, 2.6);
+        let q0 = p.quantize(0.0);
+        assert!((p.dequantize(q0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn affine_roundtrip_error_bounded() {
+        property(200, |g| {
+            let lo = g.f32_in(-10.0, 0.0);
+            let hi = g.f32_in(0.0, 10.0);
+            let p = AffineParams::from_range(lo, hi);
+            for _ in 0..32 {
+                let x = g.f32_in(lo, hi);
+                let rt = p.dequantize(p.quantize(x));
+                prop_assert!(
+                    (rt - x).abs() <= p.scale * 0.51 + 1e-6,
+                    "x={x} rt={rt} scale={}",
+                    p.scale
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn srdhm_matches_reference_values() {
+        // Known gemmlowp identities.
+        assert_eq!(srdhm(i32::MIN, i32::MIN), i32::MAX);
+        assert_eq!(srdhm(1 << 30, 1 << 30), 1 << 29);
+        assert_eq!(srdhm(0, 12345), 0);
+    }
+
+    #[test]
+    fn rounding_divide_rounds_half_away() {
+        assert_eq!(rounding_divide_by_pot(5, 1), 3); // 2.5 -> 3
+        assert_eq!(rounding_divide_by_pot(-5, 1), -3); // -2.5 -> -3 (away)
+        assert_eq!(rounding_divide_by_pot(4, 1), 2);
+        assert_eq!(rounding_divide_by_pot(7, 2), 2); // 1.75 -> 2
+    }
+
+    #[test]
+    fn quantize_multiplier_reconstructs() {
+        property(200, |g| {
+            let m = g.f32_in(1e-6, 0.999) as f64;
+            let (m0, shift) = quantize_multiplier(m);
+            let recon = m0 as f64 / (1i64 << 31) as f64 / f64::powi(2.0, shift);
+            prop_assert!(
+                (recon - m).abs() / m < 1e-6,
+                "m={m} recon={recon} m0={m0} shift={shift}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn requantize_approximates_real_arithmetic() {
+        property(300, |g| {
+            let m = g.f32_in(1e-4, 0.9) as f64;
+            let (m0, sh) = quantize_multiplier(m);
+            let acc = g.i32_in(-100_000, 100_000);
+            let got = requantize(acc, m0, sh, 0);
+            let want = (acc as f64 * m).round().clamp(-128.0, 127.0) as i32;
+            prop_assert!(
+                (got - want).abs() <= 1,
+                "acc={acc} m={m} got={got} want={want}"
+            );
+            Ok(())
+        });
+    }
+}

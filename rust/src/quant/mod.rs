@@ -1,0 +1,11 @@
+//! Quantization (§4, §5.8): the Qm.n post-training quantizer (per-network /
+//! per-layer / per-filter, 8/9/16-bit) and the TFLite-style affine scheme
+//! used as the Appendix B comparison baseline.
+
+pub mod affine;
+pub mod ptq;
+pub mod scheme;
+
+pub use affine::{quantize_affine, AffineQuantizedGraph};
+pub use ptq::{quantize, QuantizedGraph};
+pub use scheme::{Granularity, QuantSpec};

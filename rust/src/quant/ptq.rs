@@ -1,0 +1,308 @@
+//! Post-training quantization for the Qm.n scheme (§4.2, §5.8).
+//!
+//! Produces a [`QuantizedGraph`]: integer weight payloads, per-filter or
+//! per-layer weight formats, biases pre-converted to the accumulator scale,
+//! and per-node activation formats derived from calibration statistics
+//! (or a fixed network-wide format such as Q7.9).
+
+use std::collections::BTreeMap;
+
+use crate::fixedpoint::QFormat;
+use crate::graph::ir::{Graph, LayerKind};
+use crate::nn::float_exec::ActStats;
+
+use super::scheme::{Granularity, QuantSpec};
+
+/// Quantized weights of one Conv/Dense node.
+#[derive(Clone, Debug)]
+pub struct QNodeWeights {
+    /// Integer payloads, same layout as the float tensor.
+    pub w: Vec<i32>,
+    /// Fractional bits of the weight format; len == 1 (per-layer/network)
+    /// or == filters (per-filter).
+    pub w_n: Vec<i32>,
+    /// Bias in the ACCUMULATOR scale: b_acc[f] = trunc(b * 2^(n_in + n_w[f])).
+    pub b_acc: Vec<i64>,
+    /// Output rescale shift per filter: n_in + n_w[f] - n_out.
+    pub shift: Vec<i32>,
+}
+
+impl QNodeWeights {
+    #[inline(always)]
+    pub fn w_n_for(&self, filter: usize) -> i32 {
+        if self.w_n.len() == 1 {
+            self.w_n[0]
+        } else {
+            self.w_n[filter]
+        }
+    }
+
+    #[inline(always)]
+    pub fn shift_for(&self, filter: usize) -> i32 {
+        if self.shift.len() == 1 {
+            self.shift[0]
+        } else {
+            self.shift[filter]
+        }
+    }
+}
+
+/// A graph plus everything the integer engine needs to run it.
+#[derive(Clone, Debug)]
+pub struct QuantizedGraph {
+    pub graph: Graph,
+    pub width: u32,
+    /// Fractional bits of each node's output activation format.
+    pub act_n: Vec<i32>,
+    pub weights: BTreeMap<usize, QNodeWeights>,
+    pub spec: QuantSpec,
+}
+
+impl QuantizedGraph {
+    /// Input scale factor (the INPUT_SCALE_FACTOR of the generated model.h).
+    pub fn input_n(&self) -> i32 {
+        self.act_n[0]
+    }
+
+    /// Bytes to store the weights at this width (ROM contribution).
+    pub fn weight_bytes(&self) -> usize {
+        let per = if self.width <= 8 { 1 } else if self.width <= 16 { 2 } else { 4 };
+        self.graph.param_count() * per
+    }
+}
+
+/// Nodes whose output format must equal their input's (no requantization:
+/// max-pool "can only shrink data", ReLU, reshapes — §4.3).
+fn passthrough(kind: &LayerKind) -> bool {
+    matches!(
+        kind,
+        LayerKind::MaxPool { .. }
+            | LayerKind::ReLU
+            | LayerKind::Flatten
+            | LayerKind::ZeroPad { .. }
+            | LayerKind::Softmax
+    )
+}
+
+/// Quantize a calibrated float graph.
+///
+/// `stats` must come from `nn::float_exec::run` over a calibration set on
+/// the SAME (deployed) graph. With `spec.fixed_format` set, activation and
+/// weight formats are all forced to it (per-network mode).
+pub fn quantize(graph: &Graph, stats: &ActStats, spec: QuantSpec) -> QuantizedGraph {
+    assert_eq!(stats.max_abs.len(), graph.nodes.len(), "stats/graph mismatch");
+    let width = spec.width;
+
+    // --- activation formats ---
+    let mut act_n: Vec<i32> = vec![0; graph.nodes.len()];
+    for node in &graph.nodes {
+        act_n[node.id] = match (&spec.fixed_format, passthrough(&node.kind)) {
+            (Some(q), _) => q.n,
+            (None, true) => act_n[node.inputs[0]],
+            (None, false) => {
+                if matches!(node.kind, LayerKind::GlobalAvgPool | LayerKind::AvgPool { .. }) {
+                    // Averaging cannot expand the range; keep the input
+                    // format so the engine divides payloads directly.
+                    act_n[node.inputs[0]]
+                } else {
+                    QFormat::from_max_abs(stats.max_abs[node.id], width).n
+                }
+            }
+        };
+    }
+
+    // --- weights ---
+    let mut weights = BTreeMap::new();
+    for node in &graph.nodes {
+        let (w, b, filters) = match &node.kind {
+            LayerKind::Conv { w, b, .. } => (w, b, *w.shape.last().unwrap()),
+            LayerKind::Dense { w, b } => (w, b, w.shape[1]),
+            _ => continue,
+        };
+        let n_in = act_n[node.inputs[0]];
+        let n_out = act_n[node.id];
+        let per_filter = w.len() / filters;
+
+        let (w_n, payload): (Vec<i32>, Vec<i32>) = match (spec.fixed_format, spec.granularity) {
+            (Some(q), _) => {
+                let fmt = QFormat::new(width, q.n);
+                (vec![q.n], w.data.iter().map(|&x| fmt.quantize(x)).collect())
+            }
+            (None, Granularity::PerFilter) => {
+                // Channels-last layout: filter index is the fastest axis.
+                let mut ns = Vec::with_capacity(filters);
+                let mut payload = vec![0i32; w.len()];
+                for f in 0..filters {
+                    let mut max_abs = 0.0f32;
+                    for e in 0..per_filter {
+                        max_abs = max_abs.max(w.data[e * filters + f].abs());
+                    }
+                    let fmt = QFormat::from_max_abs(max_abs, width);
+                    ns.push(fmt.n);
+                    for e in 0..per_filter {
+                        payload[e * filters + f] = fmt.quantize(w.data[e * filters + f]);
+                    }
+                }
+                (ns, payload)
+            }
+            (None, _) => {
+                let fmt = QFormat::from_slice(&w.data, width);
+                (vec![fmt.n], w.data.iter().map(|&x| fmt.quantize(x)).collect())
+            }
+        };
+
+        let mut b_acc = Vec::with_capacity(filters);
+        let mut shift = Vec::with_capacity(w_n.len().max(1));
+        for f in 0..filters {
+            let n_w = if w_n.len() == 1 { w_n[0] } else { w_n[f] };
+            b_acc.push((b.data[f] as f64 * f64::powi(2.0, n_in + n_w)).trunc() as i64);
+        }
+        for &n_w in &w_n {
+            shift.push(n_in + n_w - n_out);
+        }
+        weights.insert(node.id, QNodeWeights { w: payload, w_n, b_acc, shift });
+    }
+
+    QuantizedGraph { graph: graph.clone(), width, act_n, weights, spec }
+}
+
+/// Mean squared quantization error of the weights (diagnostics, Fig 1 era).
+pub fn weight_mse(graph: &Graph, qg: &QuantizedGraph) -> f64 {
+    let mut se = 0.0f64;
+    let mut count = 0usize;
+    for node in &graph.nodes {
+        let (w, filters) = match &node.kind {
+            LayerKind::Conv { w, .. } => (w, *w.shape.last().unwrap()),
+            LayerKind::Dense { w, .. } => (w, w.shape[1]),
+            _ => continue,
+        };
+        let qw = &qg.weights[&node.id];
+        for (i, &x) in w.data.iter().enumerate() {
+            let f = i % filters;
+            let n = qw.w_n_for(f);
+            let deq = qw.w[i] as f32 * (2.0f32).powi(-n);
+            se += ((x - deq) as f64).powi(2);
+            count += 1;
+        }
+    }
+    se / count.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build::resnet_v1_6_shapes;
+    use crate::graph::deploy_pipeline;
+    use crate::nn::float_exec;
+    use crate::util::prng::Pcg32;
+
+    fn randomized(seed: u64) -> Graph {
+        let mut g = resnet_v1_6_shapes("t", 1, &[32, 3], 4, 8);
+        let mut rng = Pcg32::seeded(seed);
+        for n in g.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.4;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.1;
+                }
+            }
+        }
+        deploy_pipeline(&g)
+    }
+
+    fn calibrated(g: &Graph, seed: u64) -> ActStats {
+        let mut stats = ActStats::new(g.nodes.len());
+        let mut rng = Pcg32::seeded(seed);
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+            float_exec::run(g, &x, Some(&mut stats));
+        }
+        stats
+    }
+
+    #[test]
+    fn per_layer_quantize_builds_all_weighted_nodes() {
+        let g = randomized(1);
+        let stats = calibrated(&g, 2);
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let weighted = g.nodes.iter().filter(|n| n.kind.has_weights()).count();
+        assert_eq!(qg.weights.len(), weighted);
+        for qw in qg.weights.values() {
+            assert_eq!(qw.w_n.len(), 1);
+            assert!(qw.w.iter().all(|&p| (-128..=127).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn per_filter_has_one_format_per_filter() {
+        let g = randomized(3);
+        let stats = calibrated(&g, 4);
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_filter());
+        for (id, qw) in &qg.weights {
+            let filters = match &g.nodes[*id].kind {
+                LayerKind::Conv { w, .. } => *w.shape.last().unwrap(),
+                LayerKind::Dense { w, .. } => w.shape[1],
+                _ => unreachable!(),
+            };
+            assert_eq!(qw.w_n.len(), filters);
+            assert_eq!(qw.shift.len(), filters);
+        }
+    }
+
+    #[test]
+    fn fixed_q7_9_forces_all_formats() {
+        let g = randomized(5);
+        let stats = calibrated(&g, 6);
+        let qg = quantize(&g, &stats, QuantSpec::int16_q7_9());
+        assert!(qg.act_n.iter().all(|&n| n == 9));
+        for qw in qg.weights.values() {
+            assert_eq!(qw.w_n, vec![9]);
+            assert_eq!(qw.shift, vec![9]); // 9 + 9 - 9
+        }
+    }
+
+    #[test]
+    fn passthrough_nodes_inherit_format() {
+        let g = randomized(7);
+        let stats = calibrated(&g, 8);
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        for node in &g.nodes {
+            if passthrough(&node.kind) {
+                assert_eq!(qg.act_n[node.id], qg.act_n[node.inputs[0]], "{}", node.name);
+            }
+        }
+    }
+
+    #[test]
+    fn per_filter_mse_not_worse_than_per_layer() {
+        let g = randomized(9);
+        let stats = calibrated(&g, 10);
+        let per_layer = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let per_filter = quantize(&g, &stats, QuantSpec::int8_per_filter());
+        let mse_l = weight_mse(&g, &per_layer);
+        let mse_f = weight_mse(&g, &per_filter);
+        assert!(mse_f <= mse_l * 1.0001, "per-filter {mse_f} vs per-layer {mse_l}");
+    }
+
+    #[test]
+    fn wider_widths_reduce_mse() {
+        let g = randomized(11);
+        let stats = calibrated(&g, 12);
+        let m8 = weight_mse(&g, &quantize(&g, &stats, QuantSpec::int8_per_layer()));
+        let m9 = weight_mse(&g, &quantize(&g, &stats, QuantSpec::int9_per_layer()));
+        let m16 = weight_mse(&g, &quantize(&g, &stats, QuantSpec::int16_per_layer()));
+        assert!(m9 < m8);
+        assert!(m16 < m9);
+    }
+
+    #[test]
+    fn weight_bytes_scale_with_width() {
+        let g = randomized(13);
+        let stats = calibrated(&g, 14);
+        let q8 = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let q16 = quantize(&g, &stats, QuantSpec::int16_per_layer());
+        assert_eq!(q16.weight_bytes(), 2 * q8.weight_bytes());
+    }
+}

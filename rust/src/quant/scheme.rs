@@ -1,0 +1,87 @@
+//! Quantization scheme descriptors (§4.1.2–§4.1.3).
+
+use crate::fixedpoint::QFormat;
+
+/// Scale-factor granularity (§4.1.3). The paper's released implementation
+/// supports per-network and per-layer; per-filter is the extension the
+/// discussion (§7) identifies as required to match TFLite — implemented
+/// here for both the Qm.n and affine schemes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerNetwork,
+    PerLayer,
+    PerFilter,
+}
+
+/// Post-training quantization configuration for the Qm.n scheme.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantSpec {
+    /// Payload width in bits: 8, 9 (Appendix B) or 16.
+    pub width: u32,
+    pub granularity: Granularity,
+    /// Force a single network-wide format (the paper's int16 mode uses
+    /// Q7.9 for the whole network, §6). When set, calibration is skipped
+    /// for format selection.
+    pub fixed_format: Option<QFormat>,
+}
+
+impl QuantSpec {
+    /// The paper's int16 deployment: Q7.9 across the network.
+    pub fn int16_q7_9() -> Self {
+        Self { width: 16, granularity: Granularity::PerNetwork, fixed_format: Some(QFormat::q7_9()) }
+    }
+
+    /// int16 with per-layer calibrated formats.
+    pub fn int16_per_layer() -> Self {
+        Self { width: 16, granularity: Granularity::PerLayer, fixed_format: None }
+    }
+
+    /// int8 per-layer PTQ (the baseline the paper's QAT improves on).
+    pub fn int8_per_layer() -> Self {
+        Self { width: 8, granularity: Granularity::PerLayer, fixed_format: None }
+    }
+
+    /// int9 per-layer PTQ (Appendix B: beats TFLite's int8 PTQ).
+    pub fn int9_per_layer() -> Self {
+        Self { width: 9, granularity: Granularity::PerLayer, fixed_format: None }
+    }
+
+    /// int8 with per-filter weight formats (§7 extension).
+    pub fn int8_per_filter() -> Self {
+        Self { width: 8, granularity: Granularity::PerFilter, fixed_format: None }
+    }
+
+    pub fn label(&self) -> String {
+        let g = match self.granularity {
+            Granularity::PerNetwork => "net",
+            Granularity::PerLayer => "layer",
+            Granularity::PerFilter => "filter",
+        };
+        match self.fixed_format {
+            // Paper Q-notation: m includes the sign bit, m + n = width (§3.2).
+            Some(q) => format!("int{}-Q{}.{}", self.width, self.width as i32 - q.n, q.n),
+            None => format!("int{}-per-{}", self.width, g),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(QuantSpec::int16_q7_9().label(), "int16-Q7.9");
+        assert_eq!(QuantSpec::int8_per_layer().label(), "int8-per-layer");
+        assert_eq!(QuantSpec::int9_per_layer().label(), "int9-per-layer");
+        assert_eq!(QuantSpec::int8_per_filter().label(), "int8-per-filter");
+    }
+
+    #[test]
+    fn q7_9_format() {
+        let s = QuantSpec::int16_q7_9();
+        let f = s.fixed_format.unwrap();
+        assert_eq!(f.width, 16);
+        assert_eq!(f.n, 9);
+    }
+}

@@ -1,0 +1,226 @@
+//! Regeneration harnesses — one entry per paper figure/table (DESIGN.md §5).
+//!
+//! Timing/footprint/energy tables (Figs 11–13, Tables A2–A6) are printed by
+//! `cargo bench`; the accuracy figures (Figs 5–10, A1) require training and
+//! live here, invoked via `microai reproduce <fig> [--steps N] [--out DIR]`.
+//! Each harness prints the paper-style series and writes a CSV.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::deployer;
+use crate::coordinator::trainer::{LrSchedule, Trainer};
+use crate::datasets;
+use crate::quant::QuantSpec;
+use crate::runtime::Runtime;
+
+pub struct RepConfig {
+    pub steps: usize,
+    pub qat_steps: usize,
+    pub seed: u64,
+    pub out_dir: String,
+    pub calib: usize,
+}
+
+impl Default for RepConfig {
+    fn default() -> Self {
+        Self { steps: 200, qat_steps: 50, seed: 42, out_dir: "results".into(), calib: 64 }
+    }
+}
+
+fn write_csv(dir: &str, name: &str, header: &str, rows: &[String]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = Path::new(dir).join(name);
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    println!("  wrote {}", path.display());
+    Ok(())
+}
+
+/// Train a float model for (dataset, filters); return (trainer graph, data,
+/// trained state) for downstream quantization arms.
+struct Trained {
+    graph: crate::graph::Graph,
+    qat_graph: crate::graph::Graph,
+    data: datasets::RawDataModel,
+}
+
+fn train_arms(rt: &Runtime, dataset: &str, filters: usize, cfg: &RepConfig) -> Result<Trained> {
+    let tag = format!("{dataset}_f{filters}");
+    let spec = rt.spec(&tag)?.clone();
+    let data = datasets::load(dataset, cfg.seed).context("dataset")?;
+    let mut trainer = Trainer::new(rt, cfg.seed ^ filters as u64);
+    let mut state = trainer.init(&tag)?;
+    // GTSRB (43 classes, 2D) needs a longer budget to clear the ln(C)
+    // plateau — the paper trains it for 120 epochs on a training set 5x
+    // larger than UCI-HAR's.
+    let steps = if dataset == "gtsrb" { cfg.steps * 2 } else { cfg.steps };
+    let sched = LrSchedule {
+        initial: 0.05,
+        factor: 0.13,
+        milestones: vec![steps * 5 / 8, steps * 3 / 4, steps * 7 / 8], warmup: 10 };
+    trainer.train(&mut state, &data, "train", steps, &sched, 0)?;
+    let params = trainer.params_to_host(&state)?;
+    let graph = deployer::build_deployed_graph(&spec, params);
+
+    // QAT fine-tune (int8, §4.3) from the float weights.
+    let mut qat_state = crate::coordinator::trainer::TrainState {
+        tag: state.tag.clone(),
+        params: state.params.clone(),
+        mom: state.mom.clone(),
+        losses: Vec::new(),
+    };
+    let qat_sched = LrSchedule { initial: 0.01, factor: 0.1, milestones: vec![cfg.qat_steps / 2], warmup: 10 };
+    trainer.train(&mut qat_state, &data, "qat8_train", cfg.qat_steps, &qat_sched, 0)?;
+    let qat_params = trainer.params_to_host(&qat_state)?;
+    let qat_graph = deployer::build_deployed_graph(&spec, qat_params);
+    Ok(Trained { graph, qat_graph, data })
+}
+
+/// Figs 5/6 (UCI-HAR), 7/8 (SMNIST), 9/10 (GTSRB): accuracy vs filters and
+/// vs parameter memory for float32 / int16 PTQ / int8 QAT.
+pub fn accuracy_figs(rt: &Runtime, dataset: &str, cfg: &RepConfig) -> Result<()> {
+    let filters: Vec<usize> = rt
+        .manifest
+        .models
+        .values()
+        .filter(|m| m.dataset == dataset)
+        .map(|m| m.filters)
+        .collect();
+    let mut filters = filters;
+    filters.sort_unstable();
+    anyhow::ensure!(!filters.is_empty(), "no artifacts for {dataset}");
+    println!("== {dataset}: accuracy vs filters (float32 / int16 PTQ / int8 QAT) ==");
+    println!("{:>7} {:>9} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "filters", "params", "float32", "int16", "int8-QAT", "mem16(B)", "mem8(B)");
+    let mut rows = Vec::new();
+    for &f in &filters {
+        let t = train_arms(rt, dataset, f, cfg)?;
+        let acc_f = deployer::float_accuracy(&t.graph, &t.data);
+        let (q16, acc16) =
+            deployer::ptq_accuracy(&t.graph, &t.data, QuantSpec::int16_per_layer(), cfg.calib);
+        let (q8, acc8) =
+            deployer::ptq_accuracy(&t.qat_graph, &t.data, QuantSpec::int8_per_layer(), cfg.calib);
+        let params = t.graph.param_count();
+        println!(
+            "{f:>7} {params:>9} {acc_f:>10.4} {acc16:>10.4} {acc8:>10.4} {:>12} {:>12}",
+            q16.weight_bytes(),
+            q8.weight_bytes()
+        );
+        rows.push(format!(
+            "{f},{params},{acc_f:.4},{acc16:.4},{acc8:.4},{},{}",
+            q16.weight_bytes(),
+            q8.weight_bytes()
+        ));
+    }
+    write_csv(
+        &cfg.out_dir,
+        &format!("fig_accuracy_{dataset}.csv"),
+        "filters,params,float32,int16_ptq,int8_qat,mem_int16_bytes,mem_int8_bytes",
+        &rows,
+    )?;
+    println!(
+        "(paper shape: int16 tracks float32 everywhere; int8 QAT drops up to ~1%)\n"
+    );
+    Ok(())
+}
+
+/// Fig A1 (Appendix B): int8 affine PTQ (TFLite scheme) vs int8 MicroAI QAT
+/// vs int9 MicroAI PTQ vs float32 baseline, on UCI-HAR.
+pub fn fig_a1(rt: &Runtime, cfg: &RepConfig) -> Result<()> {
+    let dataset = "har";
+    let filters: Vec<usize> = rt
+        .manifest
+        .models
+        .values()
+        .filter(|m| m.dataset == dataset && m.filters >= 16)
+        .map(|m| m.filters)
+        .collect();
+    let mut filters = filters;
+    filters.sort_unstable();
+    println!("== Fig A1: quantization scheme comparison (UCI-HAR) ==");
+    println!("{:>7} {:>10} {:>14} {:>14} {:>14}",
+        "filters", "float32", "int8-TFLitePTQ", "int8-MicroAIQAT", "int9-MicroAIPTQ");
+    let mut rows = Vec::new();
+    for &f in &filters {
+        let t = train_arms(rt, dataset, f, cfg)?;
+        let acc_f = deployer::float_accuracy(&t.graph, &t.data);
+        let acc_affine = deployer::affine_accuracy(&t.graph, &t.data, cfg.calib);
+        let (_q8, acc_qat) =
+            deployer::ptq_accuracy(&t.qat_graph, &t.data, QuantSpec::int8_per_layer(), cfg.calib);
+        let (_q9, acc9) =
+            deployer::ptq_accuracy(&t.graph, &t.data, QuantSpec::int9_per_layer(), cfg.calib);
+        println!("{f:>7} {acc_f:>10.4} {acc_affine:>14.4} {acc_qat:>14.4} {acc9:>14.4}");
+        rows.push(format!("{f},{acc_f:.4},{acc_affine:.4},{acc_qat:.4},{acc9:.4}"));
+    }
+    write_csv(
+        &cfg.out_dir,
+        "fig_a1_schemes.csv",
+        "filters,float32,int8_tflite_ptq,int8_microai_qat,int9_microai_ptq",
+        &rows,
+    )?;
+    println!("(paper shape: int9 PTQ ≥ TFLite int8 PTQ ≥ MicroAI int8 QAT)\n");
+    Ok(())
+}
+
+/// Fig 1: distribution of a trained conv kernel's weights (printed as an
+/// ASCII histogram + CSV of bin counts).
+pub fn fig1(rt: &Runtime, cfg: &RepConfig) -> Result<()> {
+    let t = train_arms(rt, "har", 16, cfg)?;
+    let conv = t
+        .graph
+        .nodes
+        .iter()
+        .find(|n| n.name == "b1conv1")
+        .context("conv node")?;
+    let w = match &conv.kind {
+        crate::graph::LayerKind::Conv { w, .. } => &w.data,
+        _ => unreachable!(),
+    };
+    let max_abs = w.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-6);
+    let bins = 41usize;
+    let mut hist = vec![0usize; bins];
+    for &x in w {
+        let b = (((x / max_abs) + 1.0) / 2.0 * (bins - 1) as f32).round() as usize;
+        hist[b.min(bins - 1)] += 1;
+    }
+    println!("== Fig 1: conv kernel weight distribution (trained, b1conv1) ==");
+    let peak = *hist.iter().max().unwrap() as f32;
+    let mut rows = Vec::new();
+    for (i, &h) in hist.iter().enumerate() {
+        let x = -max_abs + 2.0 * max_abs * i as f32 / (bins - 1) as f32;
+        let bar = "#".repeat(((h as f32 / peak) * 50.0) as usize);
+        println!("{x:>8.3} | {bar}");
+        rows.push(format!("{x:.5},{h}"));
+    }
+    write_csv(&cfg.out_dir, "fig1_weight_hist.csv", "weight,count", &rows)?;
+    println!("(paper: approximately Gaussian, centered near 0)\n");
+    Ok(())
+}
+
+/// Dispatch by figure name. "all" runs everything.
+pub fn run(rt: &Runtime, what: &str, cfg: &RepConfig) -> Result<()> {
+    match what {
+        "fig1" => fig1(rt, cfg),
+        "fig5" | "fig6" | "har" => accuracy_figs(rt, "har", cfg),
+        "fig7" | "fig8" | "smnist" => accuracy_figs(rt, "smnist", cfg),
+        "fig9" | "fig10" | "gtsrb" => accuracy_figs(rt, "gtsrb", cfg),
+        "figa1" => fig_a1(rt, cfg),
+        "all" => {
+            fig1(rt, cfg)?;
+            accuracy_figs(rt, "har", cfg)?;
+            accuracy_figs(rt, "smnist", cfg)?;
+            accuracy_figs(rt, "gtsrb", cfg)?;
+            fig_a1(rt, cfg)
+        }
+        other => anyhow::bail!(
+            "unknown target {other:?} (fig1|fig5|fig7|fig9|figa1|all; \
+             tables A2-A6 + figs 11-13 come from `cargo bench`)"
+        ),
+    }
+}

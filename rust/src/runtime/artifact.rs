@@ -1,0 +1,220 @@
+//! Artifact manifest + compiled-executable cache.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One model entry from artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub tag: String,
+    pub dataset: String,
+    pub filters: usize,
+    pub dims: usize,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    /// artifact kind -> file name (init/train/qat8_train/fwd/qfwd8).
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelSpec {
+    pub fn n_params(&self) -> usize {
+        self.param_shapes.len()
+    }
+
+    pub fn example_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelSpec>,
+    pub kernels: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut models = BTreeMap::new();
+        for (tag, m) in v.get("models").and_then(Json::as_obj).context("models")? {
+            let arr_usize = |key: &str| -> Vec<usize> {
+                m.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default()
+            };
+            let spec = ModelSpec {
+                tag: tag.clone(),
+                dataset: m.get("dataset").and_then(Json::as_str).unwrap_or("").to_string(),
+                filters: m.get("filters").and_then(Json::as_usize).context("filters")?,
+                dims: m.get("dims").and_then(Json::as_usize).context("dims")?,
+                input_shape: arr_usize("input_shape"),
+                classes: m.get("classes").and_then(Json::as_usize).context("classes")?,
+                train_batch: m.get("train_batch").and_then(Json::as_usize).unwrap_or(64),
+                eval_batch: m.get("eval_batch").and_then(Json::as_usize).unwrap_or(128),
+                param_names: m
+                    .get("param_names")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                    .unwrap_or_default(),
+                param_shapes: m
+                    .get("param_shapes")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .map(|s| {
+                                s.as_arr()
+                                    .map(|d| d.iter().filter_map(Json::as_usize).collect())
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                artifacts: m
+                    .get("artifacts")
+                    .and_then(Json::as_obj)
+                    .map(|o| {
+                        o.iter()
+                            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            };
+            models.insert(tag.clone(), spec);
+        }
+        let kernels = v
+            .get("kernels")
+            .and_then(Json::as_obj)
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| {
+                        v.get("file").and_then(Json::as_str).map(|f| (k.clone(), f.to_string()))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Manifest { models, kernels })
+    }
+}
+
+/// A compiled artifact ready to execute. Inputs are passed as literals;
+/// the output tuple is decomposed into flat literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let mut lit = result[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+}
+
+/// The process-wide PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects manifest.json inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Runtime> {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+        }
+        Self::open("artifacts")
+    }
+
+    pub fn spec(&self, tag: &str) -> Result<&ModelSpec> {
+        self.manifest
+            .models
+            .get(tag)
+            .with_context(|| format!("unknown model tag {tag:?} (have: {:?})",
+                self.manifest.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Compile (or fetch from cache) an artifact by file name.
+    pub fn compile(&self, file: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        let exe = Rc::new(Executable { exe, name: file.to_string() });
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile a model's artifact by (tag, kind).
+    pub fn compile_model(&self, tag: &str, kind: &str) -> Result<Rc<Executable>> {
+        let spec = self.spec(tag)?;
+        let file = spec
+            .artifacts
+            .get(kind)
+            .with_context(|| format!("model {tag} has no {kind} artifact"))?
+            .clone();
+        self.compile(&file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_minimal() {
+        let text = r#"{"version":1,"models":{"har_f8":{"dataset":"har",
+            "filters":8,"dims":1,"input_shape":[128,9],"classes":6,
+            "train_batch":64,"eval_batch":128,
+            "param_names":["c1w"],"param_shapes":[[3,9,8]],
+            "artifacts":{"init":"init_har_f8.hlo.txt"}}},
+            "kernels":{"fixed_matmul":{"file":"k.hlo.txt","m":32}}}"#;
+        let m = Manifest::parse(text).unwrap();
+        let spec = &m.models["har_f8"];
+        assert_eq!(spec.filters, 8);
+        assert_eq!(spec.input_shape, vec![128, 9]);
+        assert_eq!(spec.param_shapes[0], vec![3, 9, 8]);
+        assert_eq!(m.kernels["fixed_matmul"], "k.hlo.txt");
+        assert_eq!(spec.example_len(), 1152);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("{").is_err());
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! Literal marshalling helpers between Rust buffers and PJRT.
+
+use anyhow::Result;
+
+/// Shaped f32 literal from a flat buffer.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} vs len {}", data.len());
+    let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i)?)
+}
+
+/// Rank-1 i32 literal (labels).
+pub fn lit_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Rank-1 u32 literal (PRNG key payloads).
+pub fn lit_u32(data: &[u32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Scalar f32 literal (learning rate).
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Flatten a literal back to f32.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

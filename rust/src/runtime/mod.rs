@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! The interchange format is HLO TEXT (`HloModuleProto::from_text_file`),
+//! not a serialized proto: jax ≥ 0.5 emits 64-bit instruction ids that the
+//! bundled xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see /opt/xla-example/README.md). One `PjRtClient` is shared per
+//! process; compiled executables are cached per artifact file.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{Manifest, ModelSpec, Runtime};
+pub use exec::{lit_f32, lit_i32, lit_scalar_f32, lit_u32, to_f32};

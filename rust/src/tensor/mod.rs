@@ -1,0 +1,119 @@
+//! Shaped tensors for the inference engine. Row-major (C-order) layout,
+//! channels-last spatial convention (NWC / NHWC) matching the JAX model and
+//! the generated C code (`input[channels][samples]` transposed note: the
+//! paper's C uses channel-major for input delivery; internally we stay
+//! channels-last and convert at the boundary).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl<T: Clone + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![T::default(); shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs len {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+impl TensorF {
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> TensorF {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Max |diff| against another tensor of the same shape.
+    pub fn max_diff(&self, other: &TensorF) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()))
+    }
+}
+
+/// 3-D index helper for (B, S, C) tensors.
+#[inline(always)]
+pub fn idx3(s: usize, c: usize, i0: usize, i1: usize, i2: usize) -> usize {
+    (i0 * s + i1) * c + i2
+}
+
+/// 4-D index helper for (B, H, W, C) tensors.
+#[inline(always)]
+pub fn idx4(h: usize, w: usize, c: usize, i0: usize, i1: usize, i2: usize, i3: usize) -> usize {
+    ((i0 * h + i1) * w + i2) * c + i3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_from_vec() {
+        let t: TensorF = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        let u = Tensor::from_vec(&[2, 2], vec![1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(u.shape, vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0f32]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[4], vec![1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]);
+        assert_eq!(t.data[3], 4.0);
+    }
+
+    #[test]
+    fn index_helpers_are_row_major() {
+        assert_eq!(idx3(5, 3, 1, 2, 0), (1 * 5 + 2) * 3);
+        assert_eq!(idx4(4, 5, 3, 1, 2, 3, 0), ((1 * 4 + 2) * 5 + 3) * 3);
+    }
+
+    #[test]
+    fn max_abs_and_diff() {
+        let a = Tensor::from_vec(&[3], vec![1.0f32, -4.0, 2.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0f32, -4.5, 2.0]);
+        assert_eq!(a.max_abs(), 4.0);
+        assert_eq!(a.max_diff(&b), 0.5);
+    }
+}

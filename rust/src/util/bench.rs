@@ -1,0 +1,154 @@
+//! Criterion-free micro-benchmark harness (criterion is unavailable
+//! offline). Warmup + timed iterations, robust statistics (median/MAD),
+//! and a compact report format shared by all `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub mean_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let unit = |ns: f64| {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        let mut line = format!(
+            "{:<44} {:>12} ± {:<10} ({} iters)",
+            self.name,
+            unit(self.median_ns),
+            unit(self.mad_ns),
+            self.iters
+        );
+        if let Some((v, u)) = self.throughput {
+            line.push_str(&format!("  [{v:.2} {u}]"));
+        }
+        line
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Time `f` repeatedly; returns robust per-iteration statistics.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0usize;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        if samples_ns.is_empty() {
+            // One mandatory sample for very slow bodies.
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            median_ns: stats::median(&samples_ns),
+            mad_ns: stats::mad(&samples_ns),
+            mean_ns: stats::mean(&samples_ns),
+            throughput: None,
+        }
+    }
+
+    /// Like `run`, attaching an ops/sec-style throughput annotation:
+    /// `ops_per_iter` units of `unit` happen per call.
+    pub fn run_throughput<F: FnMut()>(
+        &self,
+        name: &str,
+        ops_per_iter: f64,
+        unit: &'static str,
+        f: F,
+    ) -> BenchResult {
+        let mut r = self.run(name, f);
+        if r.median_ns > 0.0 {
+            r.throughput = Some((ops_per_iter / (r.median_ns / 1e9), unit));
+        }
+        r
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept behind one name so benches read uniformly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let r = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let b = Bencher::quick();
+        let r = b.run_throughput("tp", 1000.0, "ops/s", || {
+            black_box((0..500).sum::<u64>());
+        });
+        assert!(r.throughput.is_some());
+        assert!(r.report().contains("ops/s"));
+    }
+}

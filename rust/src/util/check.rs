@@ -1,0 +1,105 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `property(cases, |rng| { ... })` runs a closure over `cases` seeded RNG
+//! draws. On failure the seed is reported so the case can be replayed with
+//! `property_seeded`. Generators live on `Gen`, a thin wrapper over Pcg32.
+
+use super::prng::Pcg32;
+
+pub struct Gen {
+    pub rng: Pcg32,
+}
+
+impl Gen {
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + self.rng.below((hi - lo + 1) as u32) as i32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() * scale).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Run `f` over `cases` random cases; panic with the failing seed on error.
+pub fn property<F: FnMut(&mut Gen) -> Result<(), String>>(cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FF_EE00 + case;
+        let mut g = Gen { rng: Pcg32::seeded(seed) };
+        if let Err(msg) = f(&mut g) {
+            panic!("property failed (replay with seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn property_seeded<F: FnMut(&mut Gen) -> Result<(), String>>(seed: u64, mut f: F) {
+    let mut g = Gen { rng: Pcg32::seeded(seed) };
+    if let Err(msg) = f(&mut g) {
+        panic!("property failed (seed {seed}): {msg}");
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        property(50, |g| {
+            let x = g.f32_in(-10.0, 10.0);
+            prop_assert!(x.abs() <= 10.0, "out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        property(50, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x < 90, "x = {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_ranges_inclusive() {
+        property(100, |g| {
+            let v = g.usize_in(3, 5);
+            prop_assert!((3..=5).contains(&v), "v = {v}");
+            let w = g.i32_in(-2, 2);
+            prop_assert!((-2..=2).contains(&w), "w = {w}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // --key value  or  --flag
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let val = iter.next().unwrap();
+                        out.options.insert(name.to_string(), val);
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // Convention: boolean flags go last or before another `--option`
+        // (a bare token after `--name` is taken as its value).
+        let a = parse("train --dataset har --filters 16 out.bin --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("dataset"), Some("har"));
+        assert_eq!(a.opt_usize("filters", 0), 16);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.bin"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench --quick");
+        assert!(a.flag("quick"));
+        assert!(a.opt("quick").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.opt_or("x", "d"), "d");
+        assert_eq!(a.opt_f64("lr", 0.05), 0.05);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+    }
+}

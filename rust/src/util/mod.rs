@@ -1,0 +1,13 @@
+//! Hand-rolled substrates for the offline environment: PRNG, JSON, TOML,
+//! CLI parsing, statistics, property-test and bench harnesses.
+//!
+//! These replace `rand`, `serde_json`, `toml`, `clap`, `proptest` and
+//! `criterion`, which are not available without network access.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,269 @@
+//! Minimal TOML parser for MicroAI experiment configuration files (§5.3).
+//!
+//! Supports the subset the paper's configuration format needs: top-level
+//! key/value pairs, `[table]`, `[[array-of-tables]]` (the paper's
+//! `[[model]]` blocks), strings, integers, floats, booleans, and flat
+//! arrays. Dotted keys and inline tables are out of scope (the experiment
+//! schema does not use them); unknown syntax is reported with a line number.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// A parsed TOML document: top-level keys, named tables, arrays of tables.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub root: TomlTable,
+    pub tables: BTreeMap<String, TomlTable>,
+    pub table_arrays: BTreeMap<String, Vec<TomlTable>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        // Where key/value pairs currently land.
+        enum Target {
+            Root,
+            Table(String),
+            ArrayElem(String),
+        }
+        let mut target = Target::Root;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                doc.table_arrays.entry(name.clone()).or_default().push(TomlTable::new());
+                target = Target::ArrayElem(name);
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                doc.tables.entry(name.clone()).or_default();
+                target = Target::Table(name);
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().trim_matches('"').to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let table = match &target {
+                Target::Root => &mut doc.root,
+                Target::Table(name) => doc.tables.get_mut(name).unwrap(),
+                Target::ArrayElem(name) => {
+                    doc.table_arrays.get_mut(name).unwrap().last_mut().unwrap()
+                }
+            };
+            table.insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn table(&self, name: &str) -> Option<&TomlTable> {
+        self.tables.get(name)
+    }
+
+    pub fn array(&self, name: &str) -> &[TomlTable] {
+        self.table_arrays.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let mut items = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+/// Split on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# MicroAI experiment (paper Appendix C style)
+iterations = 15
+dataset = "uci-har"
+seed = 42
+
+[preprocessing]
+normalize = "z-score"
+
+[model_template]
+epochs = 300
+batch_size = 64
+lr = 0.05
+lr_steps = [100, 200, 250]
+
+[[model]]
+name = "float32"
+quantize = false
+
+[[model]]
+name = "int8"
+quantize = true
+bits = 8
+
+[target]
+boards = ["nucleo-l452re-p", "sparkfun-edge"]
+"#;
+
+    #[test]
+    fn parses_experiment_config() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.root["iterations"].as_i64(), Some(15));
+        assert_eq!(doc.root["dataset"].as_str(), Some("uci-har"));
+        assert_eq!(
+            doc.table("model_template").unwrap()["lr"].as_f64(),
+            Some(0.05)
+        );
+        let steps = doc.table("model_template").unwrap()["lr_steps"].as_arr().unwrap();
+        assert_eq!(steps.len(), 3);
+        assert_eq!(steps[2].as_i64(), Some(250));
+        let models = doc.array("model");
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0]["name"].as_str(), Some("float32"));
+        assert_eq!(models[1]["bits"].as_i64(), Some(8));
+        let boards = doc.table("target").unwrap()["boards"].as_arr().unwrap();
+        assert_eq!(boards[1].as_str(), Some("sparkfun-edge"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_are_ignored() {
+        let doc = TomlDoc::parse("a = 1 # c\n\n# whole line\nb = \"x # y\"\n").unwrap();
+        assert_eq!(doc.root["a"].as_i64(), Some(1));
+        assert_eq!(doc.root["b"].as_str(), Some("x # y"));
+    }
+
+    #[test]
+    fn rejects_missing_equals() {
+        assert!(TomlDoc::parse("justakey\n").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("a = [[1, 2], [3]]\n").unwrap();
+        let a = doc.root["a"].as_arr().unwrap();
+        assert_eq!(a[0].as_arr().unwrap().len(), 2);
+        assert_eq!(a[1].as_arr().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("i = 5\nf = 5.0\ne = 1e-3\n").unwrap();
+        assert!(matches!(doc.root["i"], TomlValue::Int(5)));
+        assert!(matches!(doc.root["f"], TomlValue::Float(_)));
+        assert_eq!(doc.root["e"].as_f64(), Some(1e-3));
+    }
+}

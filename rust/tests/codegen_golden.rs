@@ -1,0 +1,139 @@
+//! Golden test for the C code generator: compile the emitted library with
+//! the host C compiler and check bit-exactness against the Rust integer
+//! engine on random inputs. Skipped when no `cc` is available.
+
+use std::process::Command;
+
+use microai::graph::ir::LayerKind;
+use microai::graph::{deploy_pipeline, resnet_v1_6_shapes};
+use microai::nn::float_exec::ActStats;
+use microai::quant::{quantize, QuantSpec, QuantizedGraph};
+use microai::util::prng::Pcg32;
+
+fn find_cc() -> Option<String> {
+    for cc in ["cc", "gcc", "clang"] {
+        if Command::new(cc).arg("--version").output().map(|o| o.status.success()).unwrap_or(false)
+        {
+            return Some(cc.to_string());
+        }
+    }
+    None
+}
+
+fn quantized_resnet(seed: u64, width: u32) -> QuantizedGraph {
+    let mut g = resnet_v1_6_shapes("t", 1, &[32, 3], 4, 8);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.4;
+            }
+            for v in b.data.iter_mut() {
+                *v = rng.normal() * 0.05;
+            }
+        }
+    }
+    let g = deploy_pipeline(&g);
+    let mut stats = ActStats::new(g.nodes.len());
+    for _ in 0..6 {
+        let x: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+        microai::nn::float_exec::run(&g, &x, Some(&mut stats));
+    }
+    let spec = if width == 8 {
+        QuantSpec::int8_per_layer()
+    } else {
+        QuantSpec::int16_per_layer()
+    };
+    quantize(&g, &stats, spec)
+}
+
+fn run_golden(width: u32, seed: u64) {
+    let Some(cc) = find_cc() else {
+        eprintln!("SKIP: no host C compiler");
+        return;
+    };
+    let qg = quantized_resnet(seed, width);
+    let lib = microai::codegen::generate(&qg);
+    let dir = std::env::temp_dir().join(format!("microai_golden_{width}_{seed}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    microai::codegen::write_to(&lib, &dir).unwrap();
+
+    // Test harness main.c: reads payload input values on stdin, prints the
+    // output payloads.
+    let main_c = r#"
+#include <stdio.h>
+#include "model.h"
+int main(void) {
+    static number_t input[MODEL_INPUT_SAMPLES][MODEL_INPUT_CHANNELS];
+    static number_t output[MODEL_OUTPUT_UNITS];
+    for (int s = 0; s < MODEL_INPUT_SAMPLES; s++)
+        for (int c = 0; c < MODEL_INPUT_CHANNELS; c++) {
+            long v; if (scanf("%ld", &v) != 1) return 1;
+            input[s][c] = (number_t)v;
+        }
+    cnn(input, output);
+    for (int i = 0; i < MODEL_OUTPUT_UNITS; i++) printf("%d\n", (int)output[i]);
+    return 0;
+}
+"#;
+    std::fs::write(dir.join("main.c"), main_c).unwrap();
+    let bin = dir.join("golden");
+    let out = Command::new(&cc)
+        .args(["-O2", "-o"])
+        .arg(&bin)
+        .arg(dir.join("main.c"))
+        .arg(dir.join("model.c"))
+        .arg("-I")
+        .arg(&dir)
+        .output()
+        .expect("cc run");
+    assert!(
+        out.status.success(),
+        "cc failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // Random float inputs -> quantize at INPUT_SCALE_FACTOR -> feed C.
+    let mut rng = Pcg32::seeded(seed + 77);
+    let in_fmt = microai::fixedpoint::QFormat::new(width, qg.act_n[0]);
+    for _ in 0..5 {
+        let xf: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+        let payload: Vec<i32> = xf.iter().map(|&v| in_fmt.quantize(v)).collect();
+        let stdin_text: String =
+            payload.iter().map(|p| p.to_string()).collect::<Vec<_>>().join("\n");
+        let out = {
+            use std::io::Write;
+            let mut child = Command::new(&bin)
+                .stdin(std::process::Stdio::piped())
+                .stdout(std::process::Stdio::piped())
+                .spawn()
+                .unwrap();
+            child.stdin.as_mut().unwrap().write_all(stdin_text.as_bytes()).unwrap();
+            let out = child.wait_with_output().unwrap();
+            assert!(out.status.success());
+            String::from_utf8(out.stdout).unwrap()
+        };
+        let c_payloads: Vec<i32> =
+            out.lines().map(|l| l.trim().parse().unwrap()).collect();
+
+        // Rust engine on the same float input; compare output payloads.
+        let rust_logits = microai::nn::int_exec::run(&qg, &xf);
+        let out_fmt = microai::fixedpoint::QFormat::new(width, qg.act_n[qg.graph.output_id()]);
+        let rust_payloads: Vec<i32> =
+            rust_logits.iter().map(|&v| out_fmt.quantize(v)).collect();
+        assert_eq!(
+            c_payloads, rust_payloads,
+            "C and Rust integer engines disagree (width {width})"
+        );
+    }
+}
+
+#[test]
+fn c_int8_bit_exact_with_rust_engine() {
+    run_golden(8, 1);
+}
+
+#[test]
+fn c_int16_bit_exact_with_rust_engine() {
+    run_golden(16, 2);
+}

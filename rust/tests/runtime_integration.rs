@@ -1,0 +1,159 @@
+//! Integration tests over the PJRT runtime + coordinator: these exercise
+//! the REAL artifacts produced by `make artifacts` (skipped when absent).
+//!
+//! The key cross-layer contract tested here: the Rust float executor
+//! (`nn::float_exec`) reproduces the JAX `fwd` artifact's logits on the
+//! same weights, so PTQ calibration and integer inference in Rust operate
+//! on the exact network that was trained through the HLO path.
+
+use microai::coordinator::deployer;
+use microai::coordinator::trainer::{LrSchedule, Trainer};
+use microai::datasets;
+use microai::runtime::exec::{lit_f32, to_f32};
+use microai::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn kernel_artifact_matches_rust_fixed_point_semantics() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // kernel_fixed_matmul.hlo.txt: (32,24)x(24,16) int8 fixed matmul with
+    // bias, shift via multiplier, ReLU — the L1 Pallas kernel. Compare
+    // against the Rust scalar reference from fixedpoint::ops.
+    let exe = rt.compile("kernel_fixed_matmul.hlo.txt").expect("compile kernel");
+    let (m, k, n) = (32usize, 24usize, 16usize);
+    let mut rng = microai::util::prng::Pcg32::seeded(7);
+    let xq: Vec<f32> = (0..m * k).map(|_| (rng.below(255) as i32 - 128) as f32).collect();
+    let wq: Vec<f32> = (0..k * n).map(|_| (rng.below(255) as i32 - 128) as f32).collect();
+    let bq: Vec<f32> = (0..n).map(|_| (rng.below(4096) as i32 - 2048) as f32).collect();
+    let shift = 5i32;
+    let mult = (2.0f32).powi(-shift);
+    let out = exe
+        .run(&[
+            lit_f32(&xq, &[m, k]).unwrap(),
+            lit_f32(&wq, &[k, n]).unwrap(),
+            lit_f32(&bq, &[n]).unwrap(),
+            xla::Literal::scalar(mult),
+        ])
+        .expect("run kernel");
+    let got = to_f32(&out[0]).unwrap();
+    assert_eq!(got.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i64 = bq[j] as i64;
+            for t in 0..k {
+                acc += (xq[i * k + t] as i64) * (wq[t * n + j] as i64);
+            }
+            let v = microai::fixedpoint::ops::sat_mul_shift(acc, shift, 8).max(0);
+            assert_eq!(
+                got[i * n + j], v as f32,
+                "mismatch at ({i},{j}): kernel {} vs rust {v}",
+                got[i * n + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_float_engine_matches_fwd_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let tag = "har_f8";
+    let spec = rt.spec(tag).expect("spec").clone();
+    let mut trainer = Trainer::new(&rt, 3);
+    let state = trainer.init(tag).expect("init");
+    let params = trainer.params_to_host(&state).expect("params");
+    // Float graph WITHOUT fusion first, then deployed (fused) — both must
+    // match the artifact.
+    let graph = microai::graph::resnet_v1_6(
+        tag, spec.dims, &spec.input_shape, spec.classes, params.clone());
+    let deployed = microai::graph::deploy_pipeline(&graph);
+
+    // One eval batch through the fwd artifact.
+    let exe = rt.compile_model(tag, "fwd").expect("fwd");
+    let b = spec.eval_batch;
+    let ex_len = spec.example_len();
+    let mut rng = microai::util::prng::Pcg32::seeded(11);
+    let xs: Vec<f32> = (0..b * ex_len).map(|_| rng.normal()).collect();
+    let mut shape = vec![b];
+    shape.extend_from_slice(&spec.input_shape);
+    let mut inputs: Vec<xla::Literal> = state.params.to_vec();
+    inputs.push(lit_f32(&xs, &shape).unwrap());
+    let logits = to_f32(&exe.run(&inputs).expect("fwd run")[0]).unwrap();
+
+    for ex in 0..4 {
+        let x = &xs[ex * ex_len..(ex + 1) * ex_len];
+        let want = &logits[ex * spec.classes..(ex + 1) * spec.classes];
+        for g in [&graph, &deployed] {
+            let got = microai::nn::float_exec::run(g, x, None);
+            for (u, v) in got.iter().zip(want) {
+                assert!(
+                    (u - v).abs() < 1e-3,
+                    "engine {} vs artifact {} (example {ex})",
+                    u, v
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn training_reduces_loss_on_synthetic_har() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let tag = "har_f8";
+    let data = datasets::load("har", 5).unwrap();
+    let mut trainer = Trainer::new(&rt, 5);
+    let mut state = trainer.init(tag).expect("init");
+    let sched = LrSchedule { initial: 0.05, factor: 0.13, milestones: vec![40], warmup: 10 };
+    trainer.train(&mut state, &data, "train", 50, &sched, 0).expect("train");
+    let first: f32 = state.losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = state.losses[state.losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first * 0.8,
+        "loss did not drop: first {first} last {last}"
+    );
+}
+
+#[test]
+fn qat_training_step_runs_from_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let tag = "har_f8";
+    let data = datasets::load("har", 6).unwrap();
+    let mut trainer = Trainer::new(&rt, 6);
+    let mut state = trainer.init(tag).expect("init");
+    let sched = LrSchedule { initial: 0.01, factor: 0.1, milestones: vec![], warmup: 10 };
+    trainer.train(&mut state, &data, "qat8_train", 3, &sched, 0).expect("qat");
+    assert_eq!(state.losses.len(), 3);
+    assert!(state.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn end_to_end_ptq_pipeline_accuracy_above_chance() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let tag = "har_f8";
+    let spec = rt.spec(tag).unwrap().clone();
+    let data = datasets::load("har", 7).unwrap();
+    let mut trainer = Trainer::new(&rt, 7);
+    let mut state = trainer.init(tag).unwrap();
+    let sched = LrSchedule { initial: 0.05, factor: 0.13, milestones: vec![60, 90], warmup: 10 };
+    trainer.train(&mut state, &data, "train", 100, &sched, 0).unwrap();
+
+    let params = trainer.params_to_host(&state).unwrap();
+    let graph = deployer::build_deployed_graph(&spec, params);
+    let float_acc = deployer::float_accuracy(&graph, &data);
+    let (_q16, acc16) = deployer::ptq_accuracy(
+        &graph, &data, microai::quant::QuantSpec::int16_per_layer(), 64);
+    assert!(float_acc > 0.4, "float acc {float_acc} (chance = 0.167)");
+    // The paper's central claim: int16 PTQ tracks float accuracy.
+    assert!(
+        (float_acc - acc16).abs() < 0.05,
+        "int16 {acc16} vs float {float_acc}"
+    );
+}
