@@ -5,13 +5,11 @@
 //!
 //! Run: `make artifacts && cargo run --release --example biglittle_serving`
 
-use std::sync::Arc;
-
 use microai::coordinator::trainer::{LrSchedule, Trainer};
 use microai::coordinator::{deployer, serving};
 use microai::datasets;
 use microai::mcu::board::SPARKFUN_EDGE;
-use microai::mcu::DType;
+use microai::nn::SessionBuilder;
 use microai::quant::QuantSpec;
 use microai::runtime::Runtime;
 
@@ -38,14 +36,21 @@ fn main() -> anyhow::Result<()> {
         let g = deployer::build_deployed_graph(&spec, trainer.params_to_host(&state)?);
         let (qg, acc) = deployer::ptq_accuracy(&g, &data, QuantSpec::int8_per_layer(), 64);
         println!("  f={f}: int8 accuracy {acc:.4}");
-        qgraphs.push(Arc::new(qg));
+        qgraphs.push(qg);
     }
     let big = qgraphs.pop().unwrap();
     let little = qgraphs.pop().unwrap();
 
-    let little_ms = serving::device_latency_ms(&little.graph, &SPARKFUN_EDGE, DType::I8);
-    let big_ms = serving::device_latency_ms(&big.graph, &SPARKFUN_EDGE, DType::I8);
-    println!("\nsimulated device latency: little {little_ms:.1} ms, big {big_ms:.1} ms");
+    // Sessions carry the deployment price (mcu::cost via metadata); the
+    // cascade workers fork their own sessions from the same weights.
+    let little_sess = SessionBuilder::fixed_qmn(little.clone()).board(&SPARKFUN_EDGE).build();
+    let big_sess = SessionBuilder::fixed_qmn(big.clone()).board(&SPARKFUN_EDGE).build();
+    println!(
+        "\npredicted device latency: little {:.1} ms, big {:.1} ms (session metadata, {})",
+        little_sess.meta().device_latency_ms.unwrap_or(0.0),
+        big_sess.meta().device_latency_ms.unwrap_or(0.0),
+        SPARKFUN_EDGE.name,
+    );
 
     let (reqs, labels) = serving::request_stream(&data, n_requests, 7);
     println!(
@@ -53,13 +58,7 @@ fn main() -> anyhow::Result<()> {
         "threshold", "escalation", "p50(ms)", "p90(ms)", "energy(µWh)", "accuracy"
     );
     for &threshold in &[0.0f32, 0.5, 0.7, 0.8, 0.9, 0.95, 1.01] {
-        let cfg = serving::CascadeConfig {
-            threshold,
-            workers: 4,
-            little_ms,
-            big_ms,
-            board_power_w: SPARKFUN_EDGE.power_w(),
-        };
+        let cfg = serving::CascadeConfig { threshold, workers: 4, board: &SPARKFUN_EDGE };
         let stats = serving::run_cascade(
             little.clone(),
             big.clone(),

@@ -88,8 +88,9 @@ int main(void) {
         .map(|l| l.trim().parse().unwrap())
         .collect();
 
-    let rust_logits = microai::nn::int_exec::run(&qg, x);
     let out_fmt = microai::fixedpoint::QFormat::new(8, qg.act_n[qg.graph.output_id()]);
+    let mut sess = microai::nn::SessionBuilder::fixed_qmn(qg).build();
+    let rust_logits = sess.run(x).to_vec();
     let rust_out: Vec<i32> = rust_logits.iter().map(|&v| out_fmt.quantize(v)).collect();
 
     println!("C payloads:    {c_out:?}");

@@ -15,7 +15,8 @@ use microai::coordinator::deployer;
 use microai::coordinator::trainer::{LrSchedule, Trainer};
 use microai::datasets;
 use microai::engines::all_engines;
-use microai::mcu::board::BOARDS;
+use microai::mcu::board::{BOARDS, SPARKFUN_EDGE};
+use microai::nn::SessionBuilder;
 use microai::quant::QuantSpec;
 use microai::runtime::Runtime;
 
@@ -97,6 +98,33 @@ fn main() -> anyhow::Result<()> {
     println!("{:<26} {:>9.4} {:>12}", "int8 PTQ", acc8p, q8p.weight_bytes());
     println!("{:<26} {:>9.4} {:>12}", "int8 QAT", acc8qat, q8p.weight_bytes());
     println!("{:<26} {:>9.4} {:>12}", "int8 affine (TFLite-PTQ)", acc_affine, graph.param_count());
+
+    // ---- Phase 3b: one model, three engines, one Session API ----
+    println!("\n-- phase 3b: cross-backend sessions (unified inference API) --");
+    let stats = deployer::calibrate(&graph, &data, 64);
+    let aq = microai::quant::quantize_affine(&graph, &stats);
+    let mut sessions = vec![
+        SessionBuilder::float32(graph.clone()).board(&SPARKFUN_EDGE).build(),
+        SessionBuilder::fixed_qmn(q16.clone()).board(&SPARKFUN_EDGE).build(),
+        SessionBuilder::fixed_qmn(q8p.clone()).board(&SPARKFUN_EDGE).build(),
+        SessionBuilder::affine_i8(aq).board(&SPARKFUN_EDGE).build(),
+    ];
+    let probe = data.test_example(0);
+    for sess in sessions.iter_mut() {
+        let pred = sess.classify(probe);
+        let m = sess.meta();
+        println!(
+            "  {:<16} -> class {} (conf {:.2})  {:>7} B weights  {:>6} B RAM  \
+             {:>7.1} ms  {:>6.3} µWh",
+            m.backend,
+            pred.class,
+            pred.confidence,
+            m.weight_bytes,
+            m.device_ram_bytes,
+            m.device_latency_ms.unwrap_or(0.0),
+            m.device_energy_uwh.unwrap_or(0.0),
+        );
+    }
 
     // ---- Phase 4: deployment matrix (Figs 11-13 cells) ----
     println!("\n-- phase 4: deployment matrix (engines x boards) --");

@@ -14,6 +14,7 @@ use microai::graph::{deploy_pipeline, resnet_v1_6_shapes};
 use microai::mcu::board::{NUCLEO_L452RE_P, SPARKFUN_EDGE};
 use microai::mcu::DType;
 use microai::nn::float_exec::ActStats;
+use microai::nn::SessionBuilder;
 use microai::quant::{quantize, QuantSpec};
 use microai::runtime::exec::{lit_f32, to_f32};
 use microai::runtime::Runtime;
@@ -52,24 +53,43 @@ fn main() -> anyhow::Result<()> {
     let g = deploy_pipeline(&g);
     println!("\nResNetv1-6 (paper Fig 4), {} parameters", g.param_count());
 
+    // Compile once: a float session (doubling as the calibration pass)
+    // and an int8 session; run many without per-request allocation.
+    let mut float_sess = SessionBuilder::float32(g.clone())
+        .board(&SPARKFUN_EDGE)
+        .build();
     let mut stats = ActStats::new(g.nodes.len());
     let calib: Vec<Vec<f32>> = (0..8)
         .map(|_| (0..128 * 9).map(|_| rng.normal()).collect())
         .collect();
     for x in &calib {
-        microai::nn::float_exec::run(&g, x, Some(&mut stats));
+        float_sess.calibrate(x, &mut stats);
     }
     let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+    let mut int8_sess = SessionBuilder::fixed_qmn(qg)
+        .board(&SPARKFUN_EDGE)
+        .build();
+
     let x: Vec<f32> = (0..128 * 9).map(|_| rng.normal()).collect();
-    let fl = microai::nn::float_exec::run(&g, &x, None);
-    let il = microai::nn::int_exec::run(&qg, &x);
+    let fl = float_sess.run(&x).to_vec();
+    let il = int8_sess.run(&x).to_vec();
     println!("float  logits: {fl:?}");
     println!("int8   logits: {il:?}");
-    println!(
-        "weights: {} B (int8) vs {} B (float32)",
-        qg.weight_bytes(),
-        g.param_count() * 4
-    );
+    for s in [&float_sess, &int8_sess] {
+        let m = s.meta();
+        println!(
+            "session {:<15} weights {:>7} B  device RAM {:>6} B  host arena {:>6} B \
+             ({} pools)  predicted {:>7.1} ms / {:>6.3} µWh on {}",
+            m.backend,
+            m.weight_bytes,
+            m.device_ram_bytes,
+            m.arena_bytes,
+            m.n_pools,
+            m.device_latency_ms.unwrap_or(0.0),
+            m.device_energy_uwh.unwrap_or(0.0),
+            m.board.map(|b| b.name).unwrap_or("-"),
+        );
+    }
 
     // ---- 3. deployment cost on the paper's boards ----
     let e = microai();

@@ -8,7 +8,7 @@
 use microai::graph::ir::LayerKind;
 use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
 use microai::nn::float_exec::{self, ActStats};
-use microai::nn::{affine_exec, int_exec};
+use microai::nn::{affine_exec, int_exec, SessionBuilder};
 use microai::quant::{quantize, quantize_affine, QuantSpec};
 use microai::util::bench::{black_box, print_header, Bencher};
 use microai::util::prng::Pcg32;
@@ -43,7 +43,7 @@ fn main() {
     let b = Bencher::default();
     let mut rng = Pcg32::seeded(3);
 
-    print_header("whole-graph single-input inference (UCI-HAR ResNet)");
+    print_header("whole-graph single-input inference (UCI-HAR ResNet, Session API)");
     for filters in [16usize, 80] {
         let g = randomized_har(filters);
         let ex_len = 128 * 9;
@@ -51,8 +51,9 @@ fn main() {
         let x: Vec<f32> = (0..ex_len).map(|_| rng.normal()).collect();
         let macc = microai::mcu::graph_ops(&g).macc as f64;
 
+        let mut fsess = SessionBuilder::float32(g.clone()).build();
         let r = b.run_throughput(&format!("float32 f={filters}"), macc, "MACC/s", || {
-            black_box(float_exec::run(&g, &x, None));
+            black_box(fsess.run(&x));
         });
         println!("{}", r.report());
 
@@ -61,16 +62,61 @@ fn main() {
             ("int16", QuantSpec::int16_per_layer()),
         ] {
             let qg = quantize(&g, &stats, spec);
+            let mut sess = SessionBuilder::fixed_qmn(qg).build();
             let r = b.run_throughput(&format!("{label} f={filters}"), macc, "MACC/s", || {
-                black_box(int_exec::run(&qg, &x));
+                black_box(sess.run(&x));
             });
             println!("{}", r.report());
         }
 
         let aq = quantize_affine(&g, &stats);
+        let mut asess = SessionBuilder::affine_i8(aq).build();
         let r = b.run_throughput(&format!("affine int8 f={filters}"), macc, "MACC/s", || {
-            black_box(affine_exec::run(&aq, &x));
+            black_box(asess.run(&x));
         });
+        println!("{}", r.report());
+    }
+
+    // The arena win: a reused Session performs zero per-request
+    // activation-buffer allocation; the legacy free functions redo the
+    // lifetime analysis and reallocate every pool on every call.
+    print_header("session reuse vs per-call allocation (int8, single input)");
+    for filters in [16usize, 80] {
+        let g = randomized_har(filters);
+        let ex_len = 128 * 9;
+        let stats = calibrated_stats(&g, ex_len);
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let x: Vec<f32> = (0..ex_len).map(|_| rng.normal()).collect();
+        let macc = microai::mcu::graph_ops(&g).macc as f64;
+
+        let mut sess = SessionBuilder::fixed_qmn(qg.clone()).build();
+        let r = b.run_throughput(
+            &format!("session reuse (arena)    f={filters}"), macc, "MACC/s",
+            || {
+                black_box(sess.run(&x));
+            },
+        );
+        println!("{}", r.report());
+
+        let r = b.run_throughput(
+            &format!("per-call exec (allocs)   f={filters}"), macc, "MACC/s",
+            || {
+                black_box(int_exec::run(&qg, &x));
+            },
+        );
+        println!("{}", r.report());
+
+        // Batch execution amortizes the borrow/setup per example too.
+        let batch: Vec<f32> = (0..8 * ex_len).map(|_| rng.normal()).collect();
+        let mut out = Vec::new();
+        let r = b.run_throughput(
+            &format!("session run_batch(8)     f={filters}"), 8.0 * macc, "MACC/s",
+            || {
+                out.clear();
+                sess.run_batch_into(&batch, &mut out);
+                black_box(&out);
+            },
+        );
         println!("{}", r.report());
     }
 

@@ -3,12 +3,15 @@
 //! library.
 
 
+use std::sync::Arc;
+
 use crate::datasets::RawDataModel;
 use crate::engines::Engine;
 use crate::graph::{deploy_pipeline, resnet_v1_6, Graph};
 use crate::mcu::board::Board;
 use crate::mcu::paper_data::DType;
-use crate::nn::float_exec::{self, ActStats};
+use crate::nn::float_exec::ActStats;
+use crate::nn::session::{Session, SessionBuilder};
 use crate::quant::{quantize, QuantSpec, QuantizedGraph};
 use crate::runtime::ModelSpec;
 use crate::tensor::TensorF;
@@ -25,58 +28,56 @@ pub fn build_deployed_graph(spec: &ModelSpec, params: Vec<TensorF>) -> Graph {
     deploy_pipeline(&g)
 }
 
-/// Calibrate activation ranges over `n` training examples (§5.8 PTQ).
+/// Calibrate activation ranges over `n` training examples (§5.8 PTQ),
+/// through one reused float [`Session`].
 pub fn calibrate(graph: &Graph, data: &RawDataModel, n: usize) -> ActStats {
     let mut stats = ActStats::new(graph.nodes.len());
+    let mut sess = SessionBuilder::float32(graph.clone()).build();
     for i in 0..n.min(data.n_train()) {
-        float_exec::run(graph, data.train_example(i), Some(&mut stats));
+        sess.calibrate(data.train_example(i), &mut stats);
     }
     stats
 }
 
-/// PTQ + integer-engine test accuracy in one call.
+/// Test accuracy of one session over the whole test set (run-many half of
+/// the compile-once/run-many contract).
+pub fn session_accuracy(sess: &mut Session, data: &RawDataModel) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..data.n_test() {
+        if sess.classify(data.test_example(i)).class as i32 == data.test_y[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / data.n_test().max(1) as f64
+}
+
+/// PTQ + integer-engine test accuracy in one call. The returned graph is
+/// shared (`Arc`) so callers can keep serving from it without re-quantizing.
 pub fn ptq_accuracy(
     graph: &Graph,
     data: &RawDataModel,
     spec: QuantSpec,
     calib_examples: usize,
-) -> (QuantizedGraph, f64) {
+) -> (Arc<QuantizedGraph>, f64) {
     let stats = calibrate(graph, data, calib_examples);
-    let qg = quantize(graph, &stats, spec);
-    let mut correct = 0usize;
-    for i in 0..data.n_test() {
-        let logits = crate::nn::int_exec::run(&qg, data.test_example(i));
-        if crate::nn::argmax(&logits) as i32 == data.test_y[i] {
-            correct += 1;
-        }
-    }
-    (qg, correct as f64 / data.n_test().max(1) as f64)
+    let qg = Arc::new(quantize(graph, &stats, spec));
+    let mut sess = SessionBuilder::fixed_qmn(qg.clone()).build();
+    let acc = session_accuracy(&mut sess, data);
+    (qg, acc)
 }
 
 /// Float-engine test accuracy (Rust reference path).
 pub fn float_accuracy(graph: &Graph, data: &RawDataModel) -> f64 {
-    let mut correct = 0usize;
-    for i in 0..data.n_test() {
-        let logits = float_exec::run(graph, data.test_example(i), None);
-        if crate::nn::argmax(&logits) as i32 == data.test_y[i] {
-            correct += 1;
-        }
-    }
-    correct as f64 / data.n_test().max(1) as f64
+    let mut sess = SessionBuilder::float32(graph.clone()).build();
+    session_accuracy(&mut sess, data)
 }
 
 /// Affine (TFLite-scheme) PTQ accuracy — the Appendix B comparison arm.
 pub fn affine_accuracy(graph: &Graph, data: &RawDataModel, calib_examples: usize) -> f64 {
     let stats = calibrate(graph, data, calib_examples);
     let aq = crate::quant::quantize_affine(graph, &stats);
-    let mut correct = 0usize;
-    for i in 0..data.n_test() {
-        let logits = crate::nn::affine_exec::run(&aq, data.test_example(i));
-        if crate::nn::argmax(&logits) as i32 == data.test_y[i] {
-            correct += 1;
-        }
-    }
-    correct as f64 / data.n_test().max(1) as f64
+    let mut sess = SessionBuilder::affine_i8(aq).build();
+    session_accuracy(&mut sess, data)
 }
 
 /// One row of a deployment report (Figs 11–13 cells).

@@ -9,7 +9,8 @@ use crate::coordinator::deployer;
 use crate::coordinator::trainer::{LrSchedule, Trainer};
 use crate::datasets;
 use crate::engines::all_engines;
-use crate::mcu::board::BOARDS;
+use crate::mcu::board::{BOARDS, SPARKFUN_EDGE};
+use crate::nn::session::SessionBuilder;
 use crate::quant::QuantSpec;
 use crate::runtime::Runtime;
 use crate::util::toml::{TomlDoc, TomlTable};
@@ -90,6 +91,9 @@ pub struct ModelResult {
     pub mode: String,
     pub accuracy: f64,
     pub weight_bytes: usize,
+    /// Predicted per-inference latency (ms) on the SparkFun Edge, from
+    /// the model's session metadata (`mcu::cost`).
+    pub device_ms: Option<f64>,
 }
 
 pub struct ExperimentResult {
@@ -118,33 +122,35 @@ pub fn run(rt: &Runtime, cfg: &ExperimentCfg, verbose: bool) -> Result<Experimen
     let params = trainer.params_to_host(&state)?;
     let graph = deployer::build_deployed_graph(&spec, params);
 
+    // Arm helper: a Qm.n PTQ arm is (accuracy, ROM bytes, predicted ms)
+    // with the latency coming from the session metadata on the paper's
+    // most efficient board (Fig 13).
+    let ptq_arm = |spec: QuantSpec, g: &crate::graph::Graph| {
+        let (qg, acc) = deployer::ptq_accuracy(g, &data, spec, cfg.calib_examples);
+        let sess = SessionBuilder::fixed_qmn(qg.clone()).board(&SPARKFUN_EDGE).build();
+        (acc, qg.weight_bytes(), sess.meta().device_latency_ms)
+    };
+
     let mut results = Vec::new();
     for m in &cfg.models {
-        let (acc, bytes) = match m.mode.as_str() {
-            "float32" => (deployer::float_accuracy(&graph, &data), graph.param_count() * 4),
-            "int16" => {
-                let (qg, acc) =
-                    deployer::ptq_accuracy(&graph, &data, QuantSpec::int16_per_layer(), cfg.calib_examples);
-                (acc, qg.weight_bytes())
+        let (acc, bytes, device_ms) = match m.mode.as_str() {
+            "float32" => {
+                let sess =
+                    SessionBuilder::float32(graph.clone()).board(&SPARKFUN_EDGE).build();
+                let ms = sess.meta().device_latency_ms;
+                (deployer::float_accuracy(&graph, &data), graph.param_count() * 4, ms)
             }
-            "int16-q7.9" => {
-                let (qg, acc) =
-                    deployer::ptq_accuracy(&graph, &data, QuantSpec::int16_q7_9(), cfg.calib_examples);
-                (acc, qg.weight_bytes())
-            }
-            "int9" => {
-                let (qg, acc) =
-                    deployer::ptq_accuracy(&graph, &data, QuantSpec::int9_per_layer(), cfg.calib_examples);
-                (acc, qg.weight_bytes())
-            }
-            "int8" => {
-                let (qg, acc) =
-                    deployer::ptq_accuracy(&graph, &data, QuantSpec::int8_per_layer(), cfg.calib_examples);
-                (acc, qg.weight_bytes())
-            }
+            "int16" => ptq_arm(QuantSpec::int16_per_layer(), &graph),
+            "int16-q7.9" => ptq_arm(QuantSpec::int16_q7_9(), &graph),
+            "int9" => ptq_arm(QuantSpec::int9_per_layer(), &graph),
+            "int8" => ptq_arm(QuantSpec::int8_per_layer(), &graph),
             "int8-affine" => {
-                let acc = deployer::affine_accuracy(&graph, &data, cfg.calib_examples);
-                (acc, graph.param_count())
+                let stats = deployer::calibrate(&graph, &data, cfg.calib_examples);
+                let aq = crate::quant::quantize_affine(&graph, &stats);
+                let mut sess =
+                    SessionBuilder::affine_i8(aq).board(&SPARKFUN_EDGE).build();
+                let acc = deployer::session_accuracy(&mut sess, &data);
+                (acc, graph.param_count(), sess.meta().device_latency_ms)
             }
             "int8-qat" => {
                 // QAT fine-tune on top of the float model (§4.3), then
@@ -162,20 +168,23 @@ pub fn run(rt: &Runtime, cfg: &ExperimentCfg, verbose: bool) -> Result<Experimen
                 trainer.train(&mut qat_state, &data, "qat8_train", m.qat_steps, &qat_sched, 0)?;
                 let qat_params = trainer.params_to_host(&qat_state)?;
                 let qat_graph = deployer::build_deployed_graph(&spec, qat_params);
-                let (qg, acc) = deployer::ptq_accuracy(
-                    &qat_graph, &data, QuantSpec::int8_per_layer(), cfg.calib_examples);
-                (acc, qg.weight_bytes())
+                ptq_arm(QuantSpec::int8_per_layer(), &qat_graph)
             }
             other => anyhow::bail!("unknown model mode {other:?}"),
         };
         if verbose {
-            println!("  model {:<12} mode {:<12} acc {:.4}", m.name, m.mode, acc);
+            let ms = device_ms.map_or("-".to_string(), |v| format!("{v:.1}"));
+            println!(
+                "  model {:<12} mode {:<12} acc {:.4}  pred {ms} ms @SparkFunEdge",
+                m.name, m.mode, acc
+            );
         }
         results.push(ModelResult {
             name: m.name.clone(),
             mode: m.mode.clone(),
             accuracy: acc,
             weight_bytes: bytes,
+            device_ms,
         });
     }
 

@@ -1,20 +1,23 @@
 //! Serving coordinator with the big/LITTLE DNN cascade (§8 future work,
 //! citing Park et al. [58]): every request first runs a small model; when
 //! the classifier's confidence is below a threshold, it escalates to the
-//! large model. The router tracks per-request latency and energy using the
-//! MCU cost models, so the demo reports the paper-style "fast path for
-//! most inputs" effect.
+//! large model.
+//!
+//! Workers own [`Session`]s (compile-once/run-many: weights shared via
+//! `Arc`, activation arenas preallocated per worker), and per-request
+//! latency/energy comes from the session metadata — i.e. from the
+//! calibrated `mcu::cost` models for the configured board — instead of
+//! hand-wired simulation constants.
 //!
 //! Implementation is std-threads + channels (tokio is unavailable
-//! offline): a router thread feeds a worker pool; each worker owns clones
-//! of the quantized graphs (weights are shared via Arc).
+//! offline): a router thread feeds a worker pool.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 
-use crate::mcu::board::Board;
-use crate::nn::{argmax, int_exec};
+use crate::mcu::board::{Board, SPARKFUN_EDGE};
+use crate::nn::session::{Session, SessionBuilder};
 use crate::quant::QuantizedGraph;
 use crate::util::prng::Pcg32;
 use crate::util::stats::{summarize, Summary};
@@ -31,26 +34,29 @@ pub struct Response {
     pub prediction: usize,
     pub confidence: f32,
     pub escalated: bool,
-    /// Simulated on-device latency (ms) for this request.
+    /// Predicted on-device latency (ms) for this request, from the
+    /// session metadata (little, plus big when escalated).
     pub device_ms: f64,
     pub energy_uwh: f64,
 }
 
 /// Softmax max-probability confidence.
 pub fn confidence(logits: &[f32]) -> f32 {
-    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-    let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
-    let sum: f32 = exps.iter().sum();
-    exps.iter().fold(0.0f32, |a, &e| a.max(e)) / sum
+    crate::nn::session::confidence(logits)
 }
 
 pub struct CascadeConfig {
     pub threshold: f32,
     pub workers: usize,
-    /// Simulated per-inference device latency (ms) for little/big models.
-    pub little_ms: f64,
-    pub big_ms: f64,
-    pub board_power_w: f64,
+    /// Deployment board the cascade is priced on; session metadata
+    /// supplies per-model latency/energy via `mcu::cost`.
+    pub board: &'static Board,
+}
+
+impl Default for CascadeConfig {
+    fn default() -> Self {
+        CascadeConfig { threshold: 0.8, workers: 4, board: &SPARKFUN_EDGE }
+    }
 }
 
 pub struct CascadeStats {
@@ -59,6 +65,54 @@ pub struct CascadeStats {
     pub escalation_rate: f64,
     pub total_energy_uwh: f64,
     pub accuracy: Option<f64>,
+}
+
+/// One worker's pair of sessions plus their metadata-derived prices.
+struct CascadeWorker {
+    little: Session,
+    big: Session,
+    threshold: f32,
+    little_ms: f64,
+    big_ms: f64,
+    little_uwh: f64,
+    big_uwh: f64,
+}
+
+impl CascadeWorker {
+    fn new(little: &Session, big: &Session, threshold: f32) -> CascadeWorker {
+        let (lm, bm) = (little.meta(), big.meta());
+        CascadeWorker {
+            little_ms: lm.device_latency_ms.unwrap_or(0.0),
+            big_ms: bm.device_latency_ms.unwrap_or(0.0),
+            little_uwh: lm.device_energy_uwh.unwrap_or(0.0),
+            big_uwh: bm.device_energy_uwh.unwrap_or(0.0),
+            little: little.fork(),
+            big: big.fork(),
+            threshold,
+        }
+    }
+
+    fn serve(&mut self, req: &Request) -> Response {
+        let pred = self.little.classify(&req.input);
+        let (pred, escalated, ms, uwh) = if pred.confidence < self.threshold {
+            (
+                self.big.classify(&req.input),
+                true,
+                self.little_ms + self.big_ms,
+                self.little_uwh + self.big_uwh,
+            )
+        } else {
+            (pred, false, self.little_ms, self.little_uwh)
+        };
+        Response {
+            id: req.id,
+            prediction: pred.class,
+            confidence: pred.confidence,
+            escalated,
+            device_ms: ms,
+            energy_uwh: uwh,
+        }
+    }
 }
 
 /// Run the cascade over a request stream; blocking, returns when all
@@ -71,6 +125,11 @@ pub fn run_cascade(
     labels: Option<&[i32]>,
 ) -> CascadeStats {
     let n = requests.len();
+    // Compile once: template sessions carry the cost metadata; workers
+    // fork them (shared weights, private arenas).
+    let little_t = SessionBuilder::fixed_qmn(little).board(cfg.board).build();
+    let big_t = SessionBuilder::fixed_qmn(big).board(cfg.board).build();
+
     let (work_tx, work_rx) = mpsc::channel::<Request>();
     let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
@@ -79,32 +138,13 @@ pub fn run_cascade(
     for _ in 0..cfg.workers.max(1) {
         let rx = work_rx.clone();
         let tx = resp_tx.clone();
-        let little = little.clone();
-        let big = big.clone();
-        let threshold = cfg.threshold;
-        let (lm, bm, pw) = (cfg.little_ms, cfg.big_ms, cfg.board_power_w);
+        let mut worker = CascadeWorker::new(&little_t, &big_t, cfg.threshold);
         handles.push(thread::spawn(move || loop {
             let req = match rx.lock().unwrap().recv() {
                 Ok(r) => r,
                 Err(_) => break,
             };
-            let logits = int_exec::run(&little, &req.input);
-            let conf = confidence(&logits);
-            let (pred, conf, escalated, ms) = if conf < threshold {
-                let big_logits = int_exec::run(&big, &req.input);
-                (argmax(&big_logits), confidence(&big_logits), true, lm + bm)
-            } else {
-                (argmax(&logits), conf, false, lm)
-            };
-            let energy = ms / 1e3 * pw / 3600.0 * 1e6;
-            let _ = tx.send(Response {
-                id: req.id,
-                prediction: pred,
-                confidence: conf,
-                escalated,
-                device_ms: ms,
-                energy_uwh: energy,
-            });
+            let _ = tx.send(worker.serve(&req));
         }));
     }
     drop(resp_tx);
@@ -170,6 +210,7 @@ mod tests {
     use super::*;
     use crate::graph::ir::LayerKind;
     use crate::graph::{deploy_pipeline, resnet_v1_6_shapes};
+    use crate::mcu::board::NUCLEO_L452RE_P;
     use crate::nn::float_exec::ActStats;
     use crate::quant::{quantize, QuantSpec};
 
@@ -210,13 +251,7 @@ mod tests {
     fn no_request_lost_and_ordered() {
         let little = tiny_qgraph(4, 1);
         let big = tiny_qgraph(8, 2);
-        let cfg = CascadeConfig {
-            threshold: 0.5,
-            workers: 4,
-            little_ms: 10.0,
-            big_ms: 40.0,
-            board_power_w: 0.0027,
-        };
+        let cfg = CascadeConfig { threshold: 0.5, workers: 4, board: &SPARKFUN_EDGE };
         let stats = run_cascade(little, big, &cfg, requests(64, 3), None);
         assert_eq!(stats.responses.len(), 64);
         for (i, r) in stats.responses.iter().enumerate() {
@@ -228,13 +263,7 @@ mod tests {
     fn threshold_one_always_escalates_threshold_zero_never() {
         let little = tiny_qgraph(4, 4);
         let big = tiny_qgraph(8, 5);
-        let base = CascadeConfig {
-            threshold: 0.0,
-            workers: 2,
-            little_ms: 10.0,
-            big_ms: 40.0,
-            board_power_w: 0.0027,
-        };
+        let base = CascadeConfig { threshold: 0.0, workers: 2, board: &SPARKFUN_EDGE };
         let s0 = run_cascade(little.clone(), big.clone(), &base, requests(32, 6), None);
         assert_eq!(s0.escalation_rate, 0.0);
         let cfg1 = CascadeConfig { threshold: 1.01, ..base };
@@ -245,21 +274,37 @@ mod tests {
     }
 
     #[test]
-    fn escalated_latency_is_sum_of_both() {
+    fn latency_and_energy_come_from_session_metadata() {
         let little = tiny_qgraph(4, 7);
         let big = tiny_qgraph(8, 8);
-        let cfg = CascadeConfig {
-            threshold: 1.01,
-            workers: 1,
-            little_ms: 7.0,
-            big_ms: 13.0,
-            board_power_w: 0.0027,
-        };
+        // Expected prices straight from session metadata on this board.
+        let lm = SessionBuilder::fixed_qmn(little.clone()).board(&NUCLEO_L452RE_P).build();
+        let bm = SessionBuilder::fixed_qmn(big.clone()).board(&NUCLEO_L452RE_P).build();
+        let exp_ms = lm.meta().device_latency_ms.unwrap() + bm.meta().device_latency_ms.unwrap();
+        let exp_uwh = lm.meta().device_energy_uwh.unwrap() + bm.meta().device_energy_uwh.unwrap();
+        assert!(exp_ms > 0.0 && exp_uwh > 0.0);
+
+        let cfg = CascadeConfig { threshold: 1.01, workers: 1, board: &NUCLEO_L452RE_P };
         let s = run_cascade(little, big, &cfg, requests(8, 9), None);
         for r in &s.responses {
-            assert!((r.device_ms - 20.0).abs() < 1e-9);
             assert!(r.escalated);
+            assert!((r.device_ms - exp_ms).abs() < 1e-9);
+            assert!((r.energy_uwh - exp_uwh).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn bigger_model_costs_more_on_the_same_board() {
+        let little = tiny_qgraph(4, 10);
+        let big = tiny_qgraph(16, 11);
+        let ls = SessionBuilder::fixed_qmn(little).board(&SPARKFUN_EDGE).build();
+        let bs = SessionBuilder::fixed_qmn(big).board(&SPARKFUN_EDGE).build();
+        assert!(
+            bs.meta().device_latency_ms.unwrap() > ls.meta().device_latency_ms.unwrap()
+        );
+        assert!(
+            bs.meta().device_energy_uwh.unwrap() > ls.meta().device_energy_uwh.unwrap()
+        );
     }
 
     #[test]

@@ -61,9 +61,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let rt = Runtime::open_default()?;
     let res = flow::run(&rt, &cfg, !args.flag("quiet"))?;
     println!("\n== experiment results ({} f={}) ==", cfg.dataset, cfg.filters);
-    println!("{:<14} {:<14} {:>9} {:>12}", "model", "mode", "accuracy", "weights(B)");
+    println!(
+        "{:<14} {:<14} {:>9} {:>12} {:>14}",
+        "model", "mode", "accuracy", "weights(B)", "pred ms (SFE)"
+    );
     for r in &res.results {
-        println!("{:<14} {:<14} {:>9.4} {:>12}", r.name, r.mode, r.accuracy, r.weight_bytes);
+        let ms = r.device_ms.map_or("-".into(), |v| format!("{v:.1}"));
+        println!(
+            "{:<14} {:<14} {:>9.4} {:>12} {:>14}",
+            r.name, r.mode, r.accuracy, r.weight_bytes, ms
+        );
     }
     if !res.deployment.is_empty() {
         println!("\n== deployment matrix ==\n{}", res.deployment);
@@ -183,16 +190,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let big = graphs.pop().unwrap();
     let little = graphs.pop().unwrap();
 
-    let little_ms = serving::device_latency_ms(&little.graph, &SPARKFUN_EDGE, microai::mcu::DType::I8);
-    let big_ms = serving::device_latency_ms(&big.graph, &SPARKFUN_EDGE, microai::mcu::DType::I8);
+    // Session metadata prices the two models on the target board.
+    let little_sess = microai::nn::SessionBuilder::fixed_qmn(little.clone())
+        .board(&SPARKFUN_EDGE)
+        .build();
+    let big_sess = microai::nn::SessionBuilder::fixed_qmn(big.clone())
+        .board(&SPARKFUN_EDGE)
+        .build();
+    let little_ms = little_sess.meta().device_latency_ms.unwrap_or(0.0);
+    let big_ms = big_sess.meta().device_latency_ms.unwrap_or(0.0);
     let (reqs, labels) = serving::request_stream(&data, n, 7);
-    let cfg = serving::CascadeConfig {
-        threshold,
-        workers: 4,
-        little_ms,
-        big_ms,
-        board_power_w: SPARKFUN_EDGE.power_w(),
-    };
+    let cfg = serving::CascadeConfig { threshold, workers: 4, board: &SPARKFUN_EDGE };
     let stats = serving::run_cascade(little.clone(), big.clone(), &cfg, reqs.clone(), Some(&labels));
     println!("\n== big/LITTLE cascade on simulated SparkFun Edge ==");
     println!("little={little_ms:.1} ms  big={big_ms:.1} ms  threshold={threshold}");

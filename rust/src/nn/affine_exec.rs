@@ -8,88 +8,139 @@ use crate::quant::affine::{requantize, AffineQuantizedGraph};
 
 /// Execute the affine-quantized graph on a float input; returns float
 /// logits (dequantized at the output tensor's affine params).
+///
+/// Deprecated in favour of [`crate::nn::session::Session`]: this wrapper
+/// re-runs the §5.7 lifetime analysis and reallocates the activation
+/// pools on every call. A `Session` does both once and reuses the arena
+/// across `run` calls.
 pub fn run(aq: &AffineQuantizedGraph, input: &[f32]) -> Vec<f32> {
     let graph = &aq.graph;
+    let alloc = crate::allocator::allocate(graph);
+    let node_elems = crate::nn::session::node_elems(graph);
+    let mut pools: Vec<Vec<i32>> = vec![Vec::new(); alloc.n_pools()];
+    let mut qinput = Vec::new();
+    let mut output = Vec::new();
+    run_pooled(aq, input, &alloc, &node_elems, &mut qinput, &mut pools, &mut output);
+    output
+}
+
+/// Pooled core shared by [`run`] and the affine [`crate::nn::session`]
+/// backend (see `int_exec::run_pooled` for the pool discipline).
+pub(crate) fn run_pooled(
+    aq: &AffineQuantizedGraph,
+    input: &[f32],
+    alloc: &crate::allocator::Allocation,
+    node_elems: &[usize],
+    qinput: &mut Vec<i32>,
+    pools: &mut [Vec<i32>],
+    output: &mut Vec<f32>,
+) {
+    let graph = &aq.graph;
     assert_eq!(input.len(), graph.input_shape.iter().product::<usize>());
-    let mut acts: Vec<Vec<i32>> = vec![Vec::new(); graph.nodes.len()];
+
+    let in_params = aq.act[0];
+    qinput.clear();
+    qinput.extend(input.iter().map(|&x| in_params.quantize(x)));
 
     for node in &graph.nodes {
-        let out: Vec<i32> = match &node.kind {
-            LayerKind::Input => {
-                let p = aq.act[0];
-                input.iter().map(|&x| p.quantize(x)).collect()
-            }
-            LayerKind::Conv { w, stride, padding, .. } => {
-                let src_id = node.inputs[0];
-                let ish = &graph.nodes[src_id].out_shape;
-                conv_affine(
-                    aq, node.id, src_id, &acts[src_id], ish, w.shape.as_slice(),
-                    *stride, *padding, node.fused_relu, graph.dims,
-                )
-            }
-            LayerKind::Dense { w, .. } => {
-                dense_affine(aq, node.id, node.inputs[0], &acts[node.inputs[0]], w.shape[1], node.fused_relu)
-            }
-            LayerKind::MaxPool { size } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                let mut out = Vec::new();
-                crate::nn::int_ops::maxpool_q(src, &ish[..ish.len() - 1], c, *size, false, &mut out);
-                if node.fused_relu {
-                    let zp = aq.act[node.id].zero_point;
-                    for v in out.iter_mut() {
-                        *v = (*v).max(zp);
+        if matches!(node.kind, LayerKind::Input) {
+            continue;
+        }
+        let p = alloc.pool_of[node.id];
+        let mut out = std::mem::take(&mut pools[p]);
+        {
+            let qin: &[i32] = qinput;
+            let src = |i: usize| {
+                crate::nn::session::pool_src(pools, qin, &alloc.pool_of, node_elems, i)
+            };
+            match &node.kind {
+                LayerKind::Input => unreachable!(),
+                LayerKind::Conv { w, stride, padding, .. } => {
+                    let src_id = node.inputs[0];
+                    let ish = &graph.nodes[src_id].out_shape;
+                    conv_affine(
+                        aq, node.id, src_id, src(src_id), ish, w.shape.as_slice(),
+                        *stride, *padding, node.fused_relu, graph.dims, &mut out,
+                    );
+                }
+                LayerKind::Dense { w, .. } => {
+                    dense_affine(
+                        aq, node.id, node.inputs[0], src(node.inputs[0]), w.shape[1],
+                        node.fused_relu, &mut out,
+                    );
+                }
+                LayerKind::MaxPool { size } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    crate::nn::int_ops::maxpool_q(
+                        src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, false, &mut out,
+                    );
+                    if node.fused_relu {
+                        let zp = aq.act[node.id].zero_point;
+                        for v in out.iter_mut() {
+                            *v = (*v).max(zp);
+                        }
                     }
                 }
-                out
-            }
-            LayerKind::GlobalAvgPool => {
-                // Mean of payloads; zero point is unchanged (same params in
-                // and out — TFLite AVERAGE_POOL_2D requirement).
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                let positions: usize = ish[..ish.len() - 1].iter().product();
-                let mut sums = vec![0i64; c];
-                for p in 0..positions {
+                LayerKind::GlobalAvgPool => {
+                    // Mean of payloads; zero point is unchanged (same params in
+                    // and out — TFLite AVERAGE_POOL_2D requirement).
+                    // Channel-major accumulation: no per-request allocation.
+                    let x = src(node.inputs[0]);
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    let positions: usize = ish[..ish.len() - 1].iter().product();
+                    out.clear();
+                    out.reserve(c);
+                    let n = positions as i64;
                     for ci in 0..c {
-                        sums[ci] += src[p * c + ci] as i64;
+                        let mut s = 0i64;
+                        for p in 0..positions {
+                            s += x[p * c + ci] as i64;
+                        }
+                        // Round-to-nearest division, per TFLite.
+                        let r = if s >= 0 { (s + n / 2) / n } else { (s - n / 2) / n };
+                        out.push(r.clamp(-128, 127) as i32);
                     }
                 }
-                sums.iter()
-                    .map(|&s| {
-                        // Round-to-nearest division, per TFLite.
-                        let n = positions as i64;
-                        let r = if s >= 0 { (s + n / 2) / n } else { (s - n / 2) / n };
-                        r.clamp(-128, 127) as i32
-                    })
-                    .collect()
+                LayerKind::AvgPool { size } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    crate::nn::int_ops::avgpool_q(
+                        src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, &mut out,
+                    );
+                }
+                LayerKind::Add => {
+                    add_affine(
+                        aq, node.id, node.inputs[0], node.inputs[1],
+                        src(node.inputs[0]), src(node.inputs[1]),
+                        node.fused_relu, &mut out,
+                    );
+                }
+                LayerKind::ReLU => {
+                    let zp = aq.act[node.id].zero_point;
+                    out.clear();
+                    out.extend(src(node.inputs[0]).iter().map(|&v| v.max(zp)));
+                }
+                LayerKind::Flatten | LayerKind::Softmax => {
+                    out.clear();
+                    out.extend_from_slice(src(node.inputs[0]));
+                }
+                other => panic!("affine executor: unsupported layer {}", other.type_name()),
             }
-            LayerKind::AvgPool { size } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                let mut out = Vec::new();
-                crate::nn::int_ops::avgpool_q(src, &ish[..ish.len() - 1], c, *size, &mut out);
-                out
-            }
-            LayerKind::Add => {
-                add_affine(aq, node.id, node.inputs[0], node.inputs[1], &acts, node.fused_relu)
-            }
-            LayerKind::ReLU => {
-                let zp = aq.act[node.id].zero_point;
-                acts[node.inputs[0]].iter().map(|&v| v.max(zp)).collect()
-            }
-            LayerKind::Flatten | LayerKind::Softmax => acts[node.inputs[0]].clone(),
-            other => panic!("affine executor: unsupported layer {}", other.type_name()),
-        };
-        acts[node.id] = out;
+        }
+        pools[p] = out;
     }
 
     let out_id = graph.output_id();
-    let p = aq.act[out_id];
-    acts[out_id].iter().map(|&q| p.dequantize(q)).collect()
+    let params = aq.act[out_id];
+    output.clear();
+    let p = alloc.pool_of[out_id];
+    if p == usize::MAX {
+        output.extend(qinput.iter().map(|&q| params.dequantize(q)));
+    } else {
+        output.extend(pools[p][..node_elems[out_id]].iter().map(|&q| params.dequantize(q)));
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -104,11 +155,12 @@ fn conv_affine(
     padding: Padding,
     relu: bool,
     dims: usize,
-) -> Vec<i32> {
+    out: &mut Vec<i32>,
+) {
     let qw = &aq.weights[&id];
     let zp_in = aq.act[src_id].zero_point;
     let zp_out = aq.act[id].zero_point;
-    let mut out = Vec::new();
+    out.clear();
     if dims == 1 {
         let (s, c) = (ish[0], ish[1]);
         let (k, f) = (wshape[0], wshape[2]);
@@ -185,9 +237,9 @@ fn conv_affine(
             }
         }
     }
-    out
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dense_affine(
     aq: &AffineQuantizedGraph,
     id: usize,
@@ -195,12 +247,14 @@ fn dense_affine(
     x: &[i32],
     o: usize,
     relu: bool,
-) -> Vec<i32> {
+    out: &mut Vec<i32>,
+) {
     let qw = &aq.weights[&id];
     let zp_in = aq.act[src_id].zero_point;
     let zp_out = aq.act[id].zero_point;
     let i = x.len();
-    let mut out = Vec::with_capacity(o);
+    out.clear();
+    out.reserve(o);
     for oi in 0..o {
         let mut acc: i64 = qw.b[oi];
         for ii in 0..i {
@@ -212,35 +266,34 @@ fn dense_affine(
         }
         out.push(v);
     }
-    out
 }
 
+#[allow(clippy::too_many_arguments)]
 fn add_affine(
     aq: &AffineQuantizedGraph,
     id: usize,
     ia: usize,
     ib: usize,
-    acts: &[Vec<i32>],
+    a: &[i32],
+    b: &[i32],
     relu: bool,
-) -> Vec<i32> {
+    out: &mut Vec<i32>,
+) {
     // Float-rescale-free integer add (TFLite's ADD kernel simplified to
     // double-precision scale ratios, then rounded — accurate enough for a
     // baseline model; the paper's comparison is about quantizer quality).
     let (pa, pb, po) = (aq.act[ia], aq.act[ib], aq.act[id]);
     let ra = pa.scale / po.scale;
     let rb = pb.scale / po.scale;
-    acts[ia]
-        .iter()
-        .zip(&acts[ib])
-        .map(|(&x, &y)| {
-            let real = (x - pa.zero_point) as f32 * ra + (y - pb.zero_point) as f32 * rb;
-            let mut v = (real.round() as i32 + po.zero_point).clamp(-128, 127);
-            if relu {
-                v = v.max(po.zero_point);
-            }
-            v
-        })
-        .collect()
+    out.clear();
+    out.extend(a.iter().zip(b.iter()).map(|(&x, &y)| {
+        let real = (x - pa.zero_point) as f32 * ra + (y - pb.zero_point) as f32 * rb;
+        let mut v = (real.round() as i32 + po.zero_point).clamp(-128, 127);
+        if relu {
+            v = v.max(po.zero_point);
+        }
+        v
+    }));
 }
 
 #[cfg(test)]

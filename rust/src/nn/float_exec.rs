@@ -54,116 +54,153 @@ impl ActStats {
 /// Execute `graph` on a single example (flattened input, channels-last).
 /// Returns the output of the last node. If `stats` is provided, per-node
 /// max-abs values are recorded (calibration mode).
-pub fn run(graph: &Graph, input: &[f32], mut stats: Option<&mut ActStats>) -> Vec<f32> {
+///
+/// Deprecated in favour of [`crate::nn::session::Session`]: this wrapper
+/// re-runs the §5.7 lifetime analysis and reallocates the activation
+/// pools on every call. A `Session` does both once and reuses the arena
+/// across `run` calls.
+pub fn run(graph: &Graph, input: &[f32], stats: Option<&mut ActStats>) -> Vec<f32> {
+    let alloc = crate::allocator::allocate(graph);
+    let node_elems = super::session::node_elems(graph);
+    let mut pools: Vec<Vec<f32>> = vec![Vec::new(); alloc.n_pools()];
+    let mut output = Vec::new();
+    run_pooled(graph, input, &alloc, &node_elems, &mut pools, stats, &mut output);
+    output
+}
+
+/// Pooled core shared by [`run`] and the float [`crate::nn::session`]
+/// backend: node outputs live in the allocator's §5.7 pools (`pools[p]`
+/// holds the output of the pool's current occupant), so a reused arena
+/// performs zero per-request heap allocation.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_pooled(
+    graph: &Graph,
+    input: &[f32],
+    alloc: &crate::allocator::Allocation,
+    node_elems: &[usize],
+    pools: &mut [Vec<f32>],
+    mut stats: Option<&mut ActStats>,
+    output: &mut Vec<f32>,
+) {
     assert_eq!(input.len(), graph.input_shape.iter().product::<usize>());
-    let mut acts: Vec<Vec<f32>> = vec![Vec::new(); graph.nodes.len()];
-    let mut scratch: Vec<f32> = Vec::new();
     for node in &graph.nodes {
-        let out: Vec<f32> = match &node.kind {
-            LayerKind::Input => input.to_vec(),
-            LayerKind::Conv { w, b, stride, padding } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                scratch.clear();
-                if graph.dims == 1 {
-                    ops::conv1d(
-                        src, ish[0], ish[1], &w.data, w.shape[0], w.shape[2], &b.data,
-                        *stride, *padding, node.fused_relu, &mut scratch,
-                    );
-                } else {
-                    ops::conv2d(
-                        src, ish[0], ish[1], ish[2], &w.data, w.shape[0], w.shape[1],
-                        w.shape[3], &b.data, *stride, *padding, node.fused_relu,
-                        &mut scratch,
+        if matches!(node.kind, LayerKind::Input) {
+            if let Some(stats) = stats.as_deref_mut() {
+                stats.record(node.id, input);
+            }
+            continue;
+        }
+        let p = alloc.pool_of[node.id];
+        let mut out = std::mem::take(&mut pools[p]);
+        {
+            // Input slices: the graph input is the caller's buffer; every
+            // other producer's output sits at the head of its pool. The
+            // allocator invariant guarantees none of them share pool `p`.
+            let src = |i: usize| super::session::pool_src(pools, input, &alloc.pool_of, node_elems, i);
+            match &node.kind {
+                LayerKind::Input => unreachable!(),
+                LayerKind::Conv { w, b, stride, padding } => {
+                    let x = src(node.inputs[0]);
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    if graph.dims == 1 {
+                        ops::conv1d(
+                            x, ish[0], ish[1], &w.data, w.shape[0], w.shape[2], &b.data,
+                            *stride, *padding, node.fused_relu, &mut out,
+                        );
+                    } else {
+                        ops::conv2d(
+                            x, ish[0], ish[1], ish[2], &w.data, w.shape[0], w.shape[1],
+                            w.shape[3], &b.data, *stride, *padding, node.fused_relu,
+                            &mut out,
+                        );
+                    }
+                }
+                LayerKind::Dense { w, b } => {
+                    ops::dense(
+                        src(node.inputs[0]), &w.data, &b.data, w.shape[1],
+                        node.fused_relu, &mut out,
                     );
                 }
-                std::mem::take(&mut scratch)
+                LayerKind::MaxPool { size } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    ops::maxpool(
+                        src(node.inputs[0]), &ish[..ish.len() - 1], c, *size,
+                        node.fused_relu, &mut out,
+                    );
+                }
+                LayerKind::AvgPool { size } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    ops::avgpool(src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, &mut out);
+                }
+                LayerKind::GlobalAvgPool => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    let positions: usize = ish[..ish.len() - 1].iter().product();
+                    ops::global_avgpool(src(node.inputs[0]), positions, c, &mut out);
+                }
+                LayerKind::Add => {
+                    ops::add(src(node.inputs[0]), src(node.inputs[1]), node.fused_relu, &mut out);
+                }
+                LayerKind::ReLU => {
+                    ops::relu(src(node.inputs[0]), &mut out);
+                }
+                LayerKind::Softmax => {
+                    ops::softmax(src(node.inputs[0]), &mut out);
+                }
+                LayerKind::ZeroPad { pad } => {
+                    // Materialized zero padding (only when not fused away).
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    zero_pad_into(src(node.inputs[0]), ish, pad, &mut out);
+                }
+                LayerKind::BatchNorm { mean, var, gamma, beta, eps } => {
+                    let (w, b) =
+                        crate::graph::passes::batchnorm_affine(mean, var, gamma, beta, *eps);
+                    let c = *graph.nodes[node.inputs[0]].out_shape.last().unwrap();
+                    ops::batchnorm_affine(src(node.inputs[0]), c, &w, &b, &mut out);
+                }
+                LayerKind::Flatten => {
+                    out.clear();
+                    out.extend_from_slice(src(node.inputs[0]));
+                }
             }
-            LayerKind::Dense { w, b } => {
-                let src = &acts[node.inputs[0]];
-                ops::dense(src, &w.data, &b.data, w.shape[1], node.fused_relu, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::MaxPool { size } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                ops::maxpool(src, &ish[..ish.len() - 1], c, *size, node.fused_relu, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::AvgPool { size } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                ops::avgpool(src, &ish[..ish.len() - 1], c, *size, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::GlobalAvgPool => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                let positions: usize = ish[..ish.len() - 1].iter().product();
-                ops::global_avgpool(src, positions, c, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::Add => {
-                let a = &acts[node.inputs[0]];
-                let b = &acts[node.inputs[1]];
-                ops::add(a, b, node.fused_relu, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::ReLU => {
-                ops::relu(&acts[node.inputs[0]], &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::Softmax => {
-                ops::softmax(&acts[node.inputs[0]], &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::ZeroPad { pad } => {
-                // Materialized zero padding (only when not fused away).
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                zero_pad(src, ish, pad)
-            }
-            LayerKind::BatchNorm { mean, var, gamma, beta, eps } => {
-                let (w, b) = crate::graph::passes::batchnorm_affine(mean, var, gamma, beta, *eps);
-                let src = &acts[node.inputs[0]];
-                let c = *graph.nodes[node.inputs[0]].out_shape.last().unwrap();
-                ops::batchnorm_affine(src, c, &w, &b, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::Flatten => acts[node.inputs[0]].clone(),
-        };
+        }
         if let Some(stats) = stats.as_deref_mut() {
             stats.record(node.id, &out);
         }
-        acts[node.id] = out;
+        pools[p] = out;
     }
-    acts.pop().unwrap()
+    let out_id = graph.output_id();
+    output.clear();
+    let p = alloc.pool_of[out_id];
+    if p == usize::MAX {
+        output.extend_from_slice(input); // degenerate input-only graph
+    } else {
+        output.extend_from_slice(&pools[p][..node_elems[out_id]]);
+    }
 }
 
-fn zero_pad(src: &[f32], ish: &[usize], pad: &[(usize, usize)]) -> Vec<f32> {
+fn zero_pad_into(src: &[f32], ish: &[usize], pad: &[(usize, usize)], out: &mut Vec<f32>) {
     let c = *ish.last().unwrap();
+    out.clear();
     match pad.len() {
         1 => {
             let (lo, hi) = pad[0];
             let s = ish[0];
-            let mut out = vec![0.0; (s + lo + hi) * c];
+            out.resize((s + lo + hi) * c, 0.0);
             out[lo * c..(lo + s) * c].copy_from_slice(src);
-            out
         }
         2 => {
             let (hlo, hhi) = pad[0];
             let (wlo, whi) = pad[1];
             let (h, w) = (ish[0], ish[1]);
             let (nh, nw) = (h + hlo + hhi, w + wlo + whi);
-            let mut out = vec![0.0; nh * nw * c];
+            out.resize(nh * nw * c, 0.0);
             for r in 0..h {
                 let dst = ((r + hlo) * nw + wlo) * c;
                 out[dst..dst + w * c].copy_from_slice(&src[r * w * c..(r + 1) * w * c]);
             }
-            out
         }
         r => panic!("zero_pad rank {r}"),
     }

@@ -10,117 +10,155 @@ use super::int_ops as ops;
 
 /// Execute the quantized graph on a float input; returns float logits
 /// (payloads of the last node dequantized at its activation format).
+///
+/// Deprecated in favour of [`crate::nn::session::Session`]: this wrapper
+/// re-runs the §5.7 lifetime analysis and reallocates the activation
+/// pools on every call. A `Session` does both once and reuses the arena
+/// across `run` calls.
 pub fn run(qg: &QuantizedGraph, input: &[f32]) -> Vec<f32> {
+    let graph = &qg.graph;
+    let alloc = crate::allocator::allocate(graph);
+    let node_elems = super::session::node_elems(graph);
+    let mut pools: Vec<Vec<i32>> = vec![Vec::new(); alloc.n_pools()];
+    let mut qinput = Vec::new();
+    let mut output = Vec::new();
+    run_pooled(qg, input, &alloc, &node_elems, &mut qinput, &mut pools, &mut output);
+    output
+}
+
+/// Pooled core shared by [`run`] and the Qm.n [`crate::nn::session`]
+/// backend: integer payloads live in the allocator's §5.7 pools, the
+/// quantized input in `qinput`, the dequantized logits in `output`. With
+/// a preallocated arena no per-request heap allocation occurs.
+pub(crate) fn run_pooled(
+    qg: &QuantizedGraph,
+    input: &[f32],
+    alloc: &crate::allocator::Allocation,
+    node_elems: &[usize],
+    qinput: &mut Vec<i32>,
+    pools: &mut [Vec<i32>],
+    output: &mut Vec<f32>,
+) {
     let graph = &qg.graph;
     let width = qg.width;
     assert_eq!(input.len(), graph.input_shape.iter().product::<usize>());
 
     let in_fmt = QFormat::new(width, qg.act_n[0]);
-    let mut acts: Vec<Vec<i32>> = vec![Vec::new(); graph.nodes.len()];
-    let mut scratch: Vec<i32> = Vec::new();
+    qinput.clear();
+    qinput.extend(input.iter().map(|&x| in_fmt.quantize(x)));
 
     for node in &graph.nodes {
-        let out: Vec<i32> = match &node.kind {
-            LayerKind::Input => input.iter().map(|&x| in_fmt.quantize(x)).collect(),
-            LayerKind::Conv { w, stride, padding, .. } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let qw = &qg.weights[&node.id];
-                scratch.clear();
-                if graph.dims == 1 {
-                    ops::conv1d_q(
-                        src, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
-                        *padding, node.fused_relu, width, &mut scratch,
-                    );
-                } else {
-                    ops::conv2d_q(
-                        src, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
-                        w.shape[3], *stride, *padding, node.fused_relu, width,
-                        &mut scratch,
+        if matches!(node.kind, LayerKind::Input) {
+            continue;
+        }
+        let p = alloc.pool_of[node.id];
+        let mut out = std::mem::take(&mut pools[p]);
+        {
+            let qin: &[i32] = qinput;
+            let src =
+                |i: usize| super::session::pool_src(pools, qin, &alloc.pool_of, node_elems, i);
+            match &node.kind {
+                LayerKind::Input => unreachable!(),
+                LayerKind::Conv { w, stride, padding, .. } => {
+                    let x = src(node.inputs[0]);
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let qw = &qg.weights[&node.id];
+                    if graph.dims == 1 {
+                        ops::conv1d_q(
+                            x, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
+                            *padding, node.fused_relu, width, &mut out,
+                        );
+                    } else {
+                        ops::conv2d_q(
+                            x, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
+                            w.shape[3], *stride, *padding, node.fused_relu, width,
+                            &mut out,
+                        );
+                    }
+                }
+                LayerKind::Dense { w, .. } => {
+                    let qw = &qg.weights[&node.id];
+                    ops::dense_q(
+                        src(node.inputs[0]), qw, w.shape[1], node.fused_relu, width, &mut out,
                     );
                 }
-                std::mem::take(&mut scratch)
+                LayerKind::MaxPool { size } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    ops::maxpool_q(
+                        src(node.inputs[0]), &ish[..ish.len() - 1], c, *size,
+                        node.fused_relu, &mut out,
+                    );
+                }
+                LayerKind::AvgPool { size } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    ops::avgpool_q(src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, &mut out);
+                }
+                LayerKind::GlobalAvgPool => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    let positions: usize = ish[..ish.len() - 1].iter().product();
+                    ops::global_avgpool_q(src(node.inputs[0]), positions, c, &mut out);
+                }
+                LayerKind::Add => {
+                    let (ia, ib) = (node.inputs[0], node.inputs[1]);
+                    ops::add_q(
+                        src(ia), qg.act_n[ia], src(ib), qg.act_n[ib],
+                        qg.act_n[node.id], node.fused_relu, width, &mut out,
+                    );
+                }
+                LayerKind::ReLU => {
+                    ops::relu_q(src(node.inputs[0]), &mut out);
+                }
+                LayerKind::Flatten | LayerKind::Softmax => {
+                    // Softmax is argmax-invariant on payloads.
+                    out.clear();
+                    out.extend_from_slice(src(node.inputs[0]));
+                }
+                LayerKind::ZeroPad { pad } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    zero_pad_q_into(src(node.inputs[0]), ish, pad, &mut out);
+                }
+                LayerKind::BatchNorm { .. } => {
+                    panic!("BatchNorm must be folded before integer execution (run deploy_pipeline)")
+                }
             }
-            LayerKind::Dense { w, .. } => {
-                let src = &acts[node.inputs[0]];
-                let qw = &qg.weights[&node.id];
-                ops::dense_q(src, qw, w.shape[1], node.fused_relu, width, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::MaxPool { size } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                ops::maxpool_q(src, &ish[..ish.len() - 1], c, *size, node.fused_relu, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::AvgPool { size } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                ops::avgpool_q(src, &ish[..ish.len() - 1], c, *size, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::GlobalAvgPool => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                let c = *ish.last().unwrap();
-                let positions: usize = ish[..ish.len() - 1].iter().product();
-                ops::global_avgpool_q(src, positions, c, &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::Add => {
-                let (ia, ib) = (node.inputs[0], node.inputs[1]);
-                ops::add_q(
-                    &acts[ia], qg.act_n[ia], &acts[ib], qg.act_n[ib],
-                    qg.act_n[node.id], node.fused_relu, width, &mut scratch,
-                );
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::ReLU => {
-                ops::relu_q(&acts[node.inputs[0]], &mut scratch);
-                std::mem::take(&mut scratch)
-            }
-            LayerKind::Flatten => acts[node.inputs[0]].clone(),
-            LayerKind::Softmax => acts[node.inputs[0]].clone(), // argmax-invariant
-            LayerKind::ZeroPad { pad } => {
-                let src = &acts[node.inputs[0]];
-                let ish = &graph.nodes[node.inputs[0]].out_shape;
-                zero_pad_q(src, ish, pad)
-            }
-            LayerKind::BatchNorm { .. } => {
-                panic!("BatchNorm must be folded before integer execution (run deploy_pipeline)")
-            }
-        };
-        acts[node.id] = out;
+        }
+        pools[p] = out;
     }
 
     let out_id = graph.output_id();
     let out_fmt = QFormat::new(width, qg.act_n[out_id]);
-    acts[out_id].iter().map(|&q| out_fmt.dequantize(q)).collect()
+    output.clear();
+    let p = alloc.pool_of[out_id];
+    if p == usize::MAX {
+        output.extend(qinput.iter().map(|&q| out_fmt.dequantize(q)));
+    } else {
+        output.extend(pools[p][..node_elems[out_id]].iter().map(|&q| out_fmt.dequantize(q)));
+    }
 }
 
-fn zero_pad_q(src: &[i32], ish: &[usize], pad: &[(usize, usize)]) -> Vec<i32> {
+fn zero_pad_q_into(src: &[i32], ish: &[usize], pad: &[(usize, usize)], out: &mut Vec<i32>) {
     let c = *ish.last().unwrap();
+    out.clear();
     match pad.len() {
         1 => {
             let (lo, hi) = pad[0];
             let s = ish[0];
-            let mut out = vec![0; (s + lo + hi) * c];
+            out.resize((s + lo + hi) * c, 0);
             out[lo * c..(lo + s) * c].copy_from_slice(src);
-            out
         }
         2 => {
             let (hlo, hhi) = pad[0];
             let (wlo, whi) = pad[1];
             let (h, w) = (ish[0], ish[1]);
             let nw = w + wlo + whi;
-            let mut out = vec![0; (h + hlo + hhi) * nw * c];
+            out.resize((h + hlo + hhi) * nw * c, 0);
             for r in 0..h {
                 let dst = ((r + hlo) * nw + wlo) * c;
                 out[dst..dst + w * c].copy_from_slice(&src[r * w * c..(r + 1) * w * c]);
             }
-            out
         }
         r => panic!("zero_pad rank {r}"),
     }

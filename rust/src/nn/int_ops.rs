@@ -319,15 +319,18 @@ pub fn avgpool_q(x: &[i32], spatial: &[usize], c: usize, size: usize, out: &mut 
 }
 
 /// Global average pool on payloads (format preserved; truncating division).
+/// Channel-major accumulation keeps the hot path allocation-free (the
+/// Session arena contract); c is small, positions*c touches are the same.
 pub fn global_avgpool_q(x: &[i32], positions: usize, c: usize, out: &mut Vec<i32>) {
     out.clear();
-    let mut sums = vec![0i64; c];
-    for p in 0..positions {
-        for ci in 0..c {
-            sums[ci] += x[p * c + ci] as i64;
+    out.reserve(c);
+    for ci in 0..c {
+        let mut sum = 0i64;
+        for p in 0..positions {
+            sum += x[p * c + ci] as i64;
         }
+        out.push((sum / positions as i64) as i32);
     }
-    out.extend(sums.iter().map(|&s| (s / positions as i64) as i32));
 }
 
 /// Element-wise Add: realign both operands to the output format, then

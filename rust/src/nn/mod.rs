@@ -7,5 +7,10 @@ pub mod float_exec;
 pub mod float_ops;
 pub mod int_exec;
 pub mod int_ops;
+pub mod session;
 
 pub use float_exec::{argmax, ActStats};
+pub use session::{
+    AffineI8Backend, Arena, FixedQmnBackend, Float32Backend, InferenceBackend, Plan,
+    Prediction, Session, SessionBuilder, SessionMeta,
+};

@@ -1,0 +1,700 @@
+//! Unified inference sessions: one backend trait, preallocated arenas,
+//! batch execution — across the float32, fixed-point Qm.n and affine int8
+//! engines.
+//!
+//! The paper positions MicroAI as "easily adjusted and/or extended"; this
+//! module is that seam on the Rust side. A [`Session`] is built once per
+//! (model, backend, board) via [`SessionBuilder`] and then serves many
+//! requests:
+//!
+//! - **compile once**: [`InferenceBackend::prepare`] runs the §5.7
+//!   lifetime analysis ([`crate::allocator`]) and produces a [`Plan`];
+//!   [`InferenceBackend::new_arena`] preallocates the activation pools to
+//!   their worst-case sizes.
+//! - **run many**: [`Session::run`] executes one example with no
+//!   per-request activation-buffer allocation (the arena pools are
+//!   reused; see `bench_hotpath` for the measured win),
+//!   [`Session::run_batch`] maps a flattened batch.
+//! - **priced**: [`SessionMeta`] carries the deployment facts every
+//!   consumer used to hand-wire — dtype, weight bytes, device activation
+//!   RAM, and (when a [`Board`] is attached) predicted per-inference
+//!   latency and energy from the calibrated `mcu::cost` models.
+//!
+//! The serving cascade, the experiment flow, the reproduction harnesses
+//! and the examples all run through this API; the legacy free functions
+//! (`float_exec::run`, `int_exec::run`, `affine_exec::run`) remain as
+//! thin wrappers for one release.
+
+use std::sync::Arc;
+
+use crate::allocator::{allocate, Allocation};
+use crate::graph::ir::Graph;
+use crate::mcu::board::Board;
+use crate::mcu::DType;
+use crate::quant::affine::AffineQuantizedGraph;
+use crate::quant::ptq::QuantizedGraph;
+
+use super::float_exec::{self, ActStats};
+use super::{affine_exec, argmax, int_exec};
+
+/// Per-node output element counts (pool slice lengths).
+pub(crate) fn node_elems(graph: &Graph) -> Vec<usize> {
+    graph.nodes.iter().map(|n| n.out_shape.iter().product()).collect()
+}
+
+/// Producer slice for node `i` during pooled execution: the caller's
+/// input buffer for the graph input (pool `usize::MAX`), otherwise the
+/// head of the §5.7 pool node `i`'s output currently occupies. The
+/// allocator invariant guarantees that slice is still live.
+#[inline]
+pub(crate) fn pool_src<'a, T>(
+    pools: &'a [Vec<T>],
+    input: &'a [T],
+    pool_of: &[usize],
+    node_elems: &[usize],
+    i: usize,
+) -> &'a [T] {
+    let q = pool_of[i];
+    if q == usize::MAX {
+        input
+    } else {
+        &pools[q][..node_elems[i]]
+    }
+}
+
+/// Compile-once execution plan: the §5.7 buffer assignment plus the shape
+/// facts the pooled executors need per run.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub alloc: Allocation,
+    pub node_elems: Vec<usize>,
+    pub input_len: usize,
+    pub output_len: usize,
+    /// Bytes per activation element at the DEVICE dtype (1/2/4); the host
+    /// arena always stores i32/f32 lanes.
+    pub device_bytes_per_elem: usize,
+}
+
+impl Plan {
+    pub fn for_graph(graph: &Graph, device_bytes_per_elem: usize) -> Plan {
+        let alloc = allocate(graph);
+        let node_elems = node_elems(graph);
+        let input_len = graph.input_shape.iter().product();
+        let output_len = node_elems[graph.output_id()];
+        Plan { alloc, node_elems, input_len, output_len, device_bytes_per_elem }
+    }
+
+    /// Predicted device activation RAM: allocator pools + the input
+    /// buffer held by the caller, at the device dtype width (§5.7).
+    pub fn device_ram_bytes(&self) -> usize {
+        self.alloc.ram_bytes(self.device_bytes_per_elem)
+            + self.input_len * self.device_bytes_per_elem
+    }
+}
+
+/// Preallocated activation buffers for one session. Built once by
+/// [`InferenceBackend::new_arena`]; every pool is sized to its worst-case
+/// occupant so `run` never reallocates.
+pub struct Arena {
+    pub(crate) f32_pools: Vec<Vec<f32>>,
+    pub(crate) i32_pools: Vec<Vec<i32>>,
+    /// Quantized input payloads (integer backends only).
+    pub(crate) qinput: Vec<i32>,
+    /// Dequantized output logits of the latest run.
+    pub(crate) output: Vec<f32>,
+}
+
+impl Arena {
+    fn preallocated(plan: &Plan, float: bool) -> Arena {
+        let pools = &plan.alloc.pool_elems;
+        let (f32_pools, i32_pools, qinput) = if float {
+            (pools.iter().map(|&n| Vec::with_capacity(n)).collect(), Vec::new(), Vec::new())
+        } else {
+            (
+                Vec::new(),
+                pools.iter().map(|&n| Vec::with_capacity(n)).collect(),
+                Vec::with_capacity(plan.input_len),
+            )
+        };
+        Arena { f32_pools, i32_pools, qinput, output: Vec::with_capacity(plan.output_len) }
+    }
+
+    /// Host bytes this arena holds (capacity, not current lengths).
+    pub fn host_bytes(&self) -> usize {
+        self.f32_pools.iter().map(|p| p.capacity() * 4).sum::<usize>()
+            + self.i32_pools.iter().map(|p| p.capacity() * 4).sum::<usize>()
+            + self.qinput.capacity() * 4
+            + self.output.capacity() * 4
+    }
+
+    /// Buffer base addresses — stable across `run` calls iff the arena is
+    /// truly reused without reallocation (asserted by the session tests).
+    pub fn buffer_ptrs(&self) -> Vec<usize> {
+        self.f32_pools
+            .iter()
+            .map(|p| p.as_ptr() as usize)
+            .chain(self.i32_pools.iter().map(|p| p.as_ptr() as usize))
+            .chain(std::iter::once(self.qinput.as_ptr() as usize))
+            .chain(std::iter::once(self.output.as_ptr() as usize))
+            .collect()
+    }
+}
+
+/// One inference engine behind the unified session API. Implementations:
+/// [`Float32Backend`], [`FixedQmnBackend`], [`AffineI8Backend`]; external
+/// engines plug in via [`SessionBuilder::from_backend`].
+pub trait InferenceBackend: Send + Sync {
+    /// Short engine label ("float32", "int8-per-layer", "int8-affine").
+    fn label(&self) -> String;
+
+    /// Deployment dtype this backend executes at (drives the cost model).
+    fn dtype(&self) -> DType;
+
+    /// Quantized-coding style (Table 4), used to pick the matching cost
+    /// model: the MicroAI engine for float/fixed Qm.n backends, TFLite
+    /// Micro for offset-scale (affine) backends.
+    fn coding(&self) -> crate::engines::Coding {
+        crate::engines::Coding::FixedQmn
+    }
+
+    fn graph(&self) -> &Graph;
+
+    /// ROM weight bytes at the deployment dtype.
+    fn weight_bytes(&self) -> usize;
+
+    /// Compile-once step: §5.7 lifetime analysis → buffer plan.
+    fn prepare(&self) -> Plan {
+        Plan::for_graph(self.graph(), self.dtype().bytes())
+    }
+
+    /// Preallocate an activation arena for `plan`.
+    fn new_arena(&self, plan: &Plan) -> Arena;
+
+    /// Run one example; logits land in (and are returned from) the arena.
+    fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32];
+
+    /// Run a flattened batch (`inputs.len()` must be a multiple of the
+    /// input length), appending each example's logits to `out`.
+    fn run_batch(&self, plan: &Plan, arena: &mut Arena, inputs: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(inputs.len() % plan.input_len.max(1), 0, "ragged batch");
+        for ex in inputs.chunks_exact(plan.input_len) {
+            let logits = self.run(plan, arena, ex);
+            out.extend_from_slice(logits);
+        }
+    }
+
+    /// Calibration run (float reference backend only): records per-node
+    /// activation ranges. Returns false when the backend cannot calibrate.
+    fn run_calibrate(
+        &self,
+        _plan: &Plan,
+        _arena: &mut Arena,
+        _input: &[f32],
+        _stats: &mut ActStats,
+    ) -> bool {
+        false
+    }
+}
+
+/// The float32 reference engine (also the PTQ calibration pass).
+pub struct Float32Backend {
+    pub graph: Arc<Graph>,
+}
+
+impl InferenceBackend for Float32Backend {
+    fn label(&self) -> String {
+        "float32".into()
+    }
+
+    fn dtype(&self) -> DType {
+        DType::F32
+    }
+
+    fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.graph.param_count() * 4
+    }
+
+    fn new_arena(&self, plan: &Plan) -> Arena {
+        Arena::preallocated(plan, true)
+    }
+
+    fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
+        float_exec::run_pooled(
+            &self.graph, input, &plan.alloc, &plan.node_elems,
+            &mut arena.f32_pools, None, &mut arena.output,
+        );
+        &arena.output
+    }
+
+    fn run_calibrate(
+        &self,
+        plan: &Plan,
+        arena: &mut Arena,
+        input: &[f32],
+        stats: &mut ActStats,
+    ) -> bool {
+        float_exec::run_pooled(
+            &self.graph, input, &plan.alloc, &plan.node_elems,
+            &mut arena.f32_pools, Some(stats), &mut arena.output,
+        );
+        true
+    }
+}
+
+/// The MicroAI fixed-point Qm.n engine (int8 / int9 / int16).
+pub struct FixedQmnBackend {
+    pub qg: Arc<QuantizedGraph>,
+}
+
+impl InferenceBackend for FixedQmnBackend {
+    fn label(&self) -> String {
+        self.qg.spec.label()
+    }
+
+    fn dtype(&self) -> DType {
+        // int9 deploys in 16-bit containers, as the generated C does.
+        if self.qg.width <= 8 {
+            DType::I8
+        } else {
+            DType::I16
+        }
+    }
+
+    fn graph(&self) -> &Graph {
+        &self.qg.graph
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.qg.weight_bytes()
+    }
+
+    fn new_arena(&self, plan: &Plan) -> Arena {
+        Arena::preallocated(plan, false)
+    }
+
+    fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
+        int_exec::run_pooled(
+            &self.qg, input, &plan.alloc, &plan.node_elems,
+            &mut arena.qinput, &mut arena.i32_pools, &mut arena.output,
+        );
+        &arena.output
+    }
+}
+
+/// The TFLite-semantics affine int8 engine (Appendix B baseline).
+pub struct AffineI8Backend {
+    pub aq: Arc<AffineQuantizedGraph>,
+}
+
+impl InferenceBackend for AffineI8Backend {
+    fn label(&self) -> String {
+        "int8-affine".into()
+    }
+
+    fn dtype(&self) -> DType {
+        DType::I8
+    }
+
+    fn coding(&self) -> crate::engines::Coding {
+        crate::engines::Coding::OffsetScale
+    }
+
+    fn graph(&self) -> &Graph {
+        &self.aq.graph
+    }
+
+    fn weight_bytes(&self) -> usize {
+        // int8 weight payloads only; the per-filter scale/bias records
+        // the affine scheme additionally ships are not counted here.
+        self.aq.graph.param_count()
+    }
+
+    fn new_arena(&self, plan: &Plan) -> Arena {
+        Arena::preallocated(plan, false)
+    }
+
+    fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
+        affine_exec::run_pooled(
+            &self.aq, input, &plan.alloc, &plan.node_elems,
+            &mut arena.qinput, &mut arena.i32_pools, &mut arena.output,
+        );
+        &arena.output
+    }
+}
+
+/// Deployment facts carried by every session, replacing the simulated
+/// constants consumers used to hand-wire.
+#[derive(Clone, Debug)]
+pub struct SessionMeta {
+    pub backend: String,
+    pub dtype: DType,
+    pub board: Option<&'static Board>,
+    /// Predicted single-inference device latency (ms) on `board`, from
+    /// the calibrated `mcu::cost` model of the engine matching this
+    /// backend's coding scheme. None when no board is attached (or the
+    /// engine model does not cover the board/dtype).
+    pub device_latency_ms: Option<f64>,
+    /// Predicted per-inference energy (µWh) on `board` (§6.2 E = t·V·I).
+    pub device_energy_uwh: Option<f64>,
+    pub weight_bytes: usize,
+    /// Device activation RAM (§5.7 pools + input buffer) at dtype width.
+    pub device_ram_bytes: usize,
+    pub n_pools: usize,
+    /// Host bytes preallocated in this session's arena.
+    pub arena_bytes: usize,
+}
+
+/// Builder: pick a backend, optionally attach a deployment board, build.
+pub struct SessionBuilder {
+    backend: Arc<dyn InferenceBackend>,
+    board: Option<&'static Board>,
+}
+
+impl SessionBuilder {
+    /// Float32 reference engine.
+    pub fn float32(graph: impl Into<Arc<Graph>>) -> SessionBuilder {
+        Self::from_backend(Arc::new(Float32Backend { graph: graph.into() }))
+    }
+
+    /// MicroAI fixed-point Qm.n engine (width taken from the quantized
+    /// graph: 8, 9 or 16 bits).
+    pub fn fixed_qmn(qg: impl Into<Arc<QuantizedGraph>>) -> SessionBuilder {
+        Self::from_backend(Arc::new(FixedQmnBackend { qg: qg.into() }))
+    }
+
+    /// TFLite-semantics affine int8 engine.
+    pub fn affine_i8(aq: impl Into<Arc<AffineQuantizedGraph>>) -> SessionBuilder {
+        Self::from_backend(Arc::new(AffineI8Backend { aq: aq.into() }))
+    }
+
+    /// Any custom [`InferenceBackend`] implementation.
+    pub fn from_backend(backend: Arc<dyn InferenceBackend>) -> SessionBuilder {
+        SessionBuilder { backend, board: None }
+    }
+
+    /// Attach a deployment board: the session metadata then carries
+    /// predicted latency/energy from the calibrated `mcu::cost` models.
+    pub fn board(mut self, board: &'static Board) -> SessionBuilder {
+        self.board = Some(board);
+        self
+    }
+
+    pub fn build(self) -> Session {
+        let plan = self.backend.prepare();
+        let arena = self.backend.new_arena(&plan);
+        let dtype = self.backend.dtype();
+        let (device_latency_ms, device_energy_uwh) = match self.board {
+            None => (None, None),
+            Some(board) => {
+                // Cost model matching the backend's coding scheme: the
+                // MicroAI engine for float/Qm.n, TFLite Micro for the
+                // offset-scale affine engine.
+                let engine = match self.backend.coding() {
+                    crate::engines::Coding::OffsetScale => crate::engines::tflite_micro(),
+                    crate::engines::Coding::FixedQmn => crate::engines::microai(),
+                };
+                let lat = engine.latency_s(self.backend.graph(), board, dtype);
+                (
+                    lat.map(|s| s * 1e3),
+                    lat.map(|s| crate::mcu::cost::energy_uwh(s, board)),
+                )
+            }
+        };
+        let meta = SessionMeta {
+            backend: self.backend.label(),
+            dtype,
+            board: self.board,
+            device_latency_ms,
+            device_energy_uwh,
+            weight_bytes: self.backend.weight_bytes(),
+            device_ram_bytes: plan.device_ram_bytes(),
+            n_pools: plan.alloc.n_pools(),
+            arena_bytes: arena.host_bytes(),
+        };
+        Session { backend: self.backend, plan, arena, meta, runs: 0 }
+    }
+}
+
+/// Classification outcome of [`Session::classify`].
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub class: usize,
+    /// Softmax max-probability confidence of the logits.
+    pub confidence: f32,
+}
+
+/// Softmax max-probability confidence. The max logit contributes
+/// exp(0) = 1 after shifting, so this is 1/Σexp(v−m) — allocation-free
+/// (it runs per request in the serving cascade).
+pub fn confidence(logits: &[f32]) -> f32 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let sum: f32 = logits.iter().map(|&v| (v - m).exp()).sum();
+    1.0 / sum
+}
+
+/// A compiled, preallocated inference session (compile once, run many).
+pub struct Session {
+    backend: Arc<dyn InferenceBackend>,
+    plan: Plan,
+    arena: Arena,
+    meta: SessionMeta,
+    runs: u64,
+}
+
+impl Session {
+    /// Run one example; the returned logits borrow the session arena.
+    pub fn run(&mut self, input: &[f32]) -> &[f32] {
+        self.runs += 1;
+        self.backend.run(&self.plan, &mut self.arena, input)
+    }
+
+    /// Run one example and classify it.
+    pub fn classify(&mut self, input: &[f32]) -> Prediction {
+        let logits = self.run(input);
+        Prediction { class: argmax(logits), confidence: confidence(logits) }
+    }
+
+    /// Run a flattened batch; returns `n_examples * output_len` logits.
+    pub fn run_batch(&mut self, inputs: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(inputs.len() / self.plan.input_len.max(1)
+            * self.plan.output_len);
+        self.run_batch_into(inputs, &mut out);
+        out
+    }
+
+    /// Batch into a caller-owned buffer (appends; no arena allocation).
+    pub fn run_batch_into(&mut self, inputs: &[f32], out: &mut Vec<f32>) {
+        self.runs += (inputs.len() / self.plan.input_len.max(1)) as u64;
+        self.backend.run_batch(&self.plan, &mut self.arena, inputs, out);
+    }
+
+    /// Calibration run (float backend): records activation ranges into
+    /// `stats`. Returns false for backends that cannot calibrate.
+    pub fn calibrate(&mut self, input: &[f32], stats: &mut ActStats) -> bool {
+        let ok = self.backend.run_calibrate(&self.plan, &mut self.arena, input, stats);
+        if ok {
+            self.runs += 1;
+        }
+        ok
+    }
+
+    /// A new session sharing this one's backend (and therefore weights)
+    /// and plan, with a freshly preallocated arena — one per worker
+    /// thread. The §5.7 lifetime analysis is not recomputed.
+    pub fn fork(&self) -> Session {
+        let plan = self.plan.clone();
+        let arena = self.backend.new_arena(&plan);
+        Session {
+            backend: self.backend.clone(),
+            plan,
+            arena,
+            meta: self.meta.clone(),
+            runs: 0,
+        }
+    }
+
+    pub fn meta(&self) -> &SessionMeta {
+        &self.meta
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    pub fn arena(&self) -> &Arena {
+        &self.arena
+    }
+
+    pub fn backend(&self) -> &Arc<dyn InferenceBackend> {
+        &self.backend
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.plan.input_len
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.plan.output_len
+    }
+
+    /// Number of examples this session has executed.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build::resnet_v1_6_shapes;
+    use crate::graph::deploy_pipeline;
+    use crate::graph::ir::LayerKind;
+    use crate::quant::{quantize, quantize_affine, QuantSpec};
+    use crate::util::prng::Pcg32;
+
+    fn randomized_graph(seed: u64) -> Graph {
+        let mut g = resnet_v1_6_shapes("t", 1, &[32, 3], 4, 8);
+        let mut rng = Pcg32::seeded(seed);
+        for n in g.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.4;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+        }
+        deploy_pipeline(&g)
+    }
+
+    fn inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
+    }
+
+    #[test]
+    fn float_session_matches_legacy_run() {
+        let g = randomized_graph(1);
+        let mut sess = SessionBuilder::float32(g.clone()).build();
+        for x in inputs(5, 96, 2) {
+            let legacy = float_exec::run(&g, &x, None);
+            let s = sess.run(&x).to_vec();
+            assert_eq!(legacy, s);
+        }
+        assert_eq!(sess.runs(), 5);
+    }
+
+    #[test]
+    fn qmn_session_matches_legacy_run() {
+        let g = randomized_graph(3);
+        let xs = inputs(6, 96, 4);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        for spec in [QuantSpec::int8_per_layer(), QuantSpec::int16_per_layer()] {
+            let qg = quantize(&g, &stats, spec);
+            let mut sess = SessionBuilder::fixed_qmn(qg.clone()).build();
+            for x in &xs {
+                assert_eq!(int_exec::run(&qg, x), sess.run(x).to_vec());
+            }
+        }
+    }
+
+    #[test]
+    fn affine_session_matches_legacy_run() {
+        let g = randomized_graph(5);
+        let xs = inputs(6, 96, 6);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let aq = quantize_affine(&g, &stats);
+        let mut sess = SessionBuilder::affine_i8(aq.clone()).build();
+        for x in &xs {
+            assert_eq!(affine_exec::run(&aq, x), sess.run(x).to_vec());
+        }
+    }
+
+    #[test]
+    fn arena_buffers_are_reused_across_runs() {
+        let g = randomized_graph(7);
+        let xs = inputs(4, 96, 8);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let mut sess = SessionBuilder::fixed_qmn(qg).build();
+        sess.run(&xs[0]);
+        let ptrs = sess.arena().buffer_ptrs();
+        let bytes = sess.arena().host_bytes();
+        for x in &xs {
+            for _ in 0..3 {
+                sess.run(x);
+            }
+        }
+        assert_eq!(ptrs, sess.arena().buffer_ptrs(), "arena reallocated between runs");
+        assert_eq!(bytes, sess.arena().host_bytes());
+    }
+
+    #[test]
+    fn run_batch_equals_single_runs() {
+        let g = randomized_graph(9);
+        let xs = inputs(3, 96, 10);
+        let mut sess = SessionBuilder::float32(g).build();
+        let singles: Vec<f32> = {
+            let mut v = Vec::new();
+            for x in &xs {
+                v.extend_from_slice(sess.run(x));
+            }
+            v
+        };
+        let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+        let batched = sess.run_batch(&flat);
+        assert_eq!(singles, batched);
+        assert_eq!(batched.len(), 3 * sess.output_len());
+    }
+
+    #[test]
+    fn calibration_through_session_matches_legacy() {
+        let g = randomized_graph(11);
+        let xs = inputs(4, 96, 12);
+        let mut legacy = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut legacy));
+        }
+        let mut sess = SessionBuilder::float32(g.clone()).build();
+        let mut via_sess = ActStats::new(g.nodes.len());
+        for x in &xs {
+            assert!(sess.calibrate(x, &mut via_sess));
+        }
+        assert_eq!(legacy.max_abs, via_sess.max_abs);
+        assert_eq!(legacy.min, via_sess.min);
+        assert_eq!(legacy.max, via_sess.max);
+    }
+
+    #[test]
+    fn meta_carries_cost_model_predictions() {
+        let g = randomized_graph(13);
+        let xs = inputs(4, 96, 14);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let sess = SessionBuilder::fixed_qmn(qg)
+            .board(&crate::mcu::board::SPARKFUN_EDGE)
+            .build();
+        let m = sess.meta();
+        assert_eq!(m.dtype, DType::I8);
+        let lat = m.device_latency_ms.expect("latency prediction");
+        let en = m.device_energy_uwh.expect("energy prediction");
+        assert!(lat > 0.0 && en > 0.0);
+        assert!(m.device_ram_bytes > 0);
+        assert!(m.arena_bytes > 0);
+        assert!(m.n_pools >= 2);
+
+        // Without a board there is no cost prediction.
+        let g2 = randomized_graph(15);
+        let s2 = SessionBuilder::float32(g2).build();
+        assert!(s2.meta().device_latency_ms.is_none());
+    }
+
+    #[test]
+    fn fork_shares_weights_but_not_arena() {
+        let g = randomized_graph(17);
+        let mut a = SessionBuilder::float32(g).build();
+        let mut b = a.fork();
+        let xs = inputs(1, 96, 18);
+        let ra = a.run(&xs[0]).to_vec();
+        let rb = b.run(&xs[0]).to_vec();
+        assert_eq!(ra, rb);
+        assert_ne!(a.arena().buffer_ptrs(), b.arena().buffer_ptrs());
+    }
+}

@@ -13,6 +13,8 @@ use anyhow::{Context, Result};
 use crate::coordinator::deployer;
 use crate::coordinator::trainer::{LrSchedule, Trainer};
 use crate::datasets;
+use crate::mcu::board::SPARKFUN_EDGE;
+use crate::nn::session::SessionBuilder;
 use crate::quant::QuantSpec;
 use crate::runtime::Runtime;
 
@@ -96,8 +98,9 @@ pub fn accuracy_figs(rt: &Runtime, dataset: &str, cfg: &RepConfig) -> Result<()>
     filters.sort_unstable();
     anyhow::ensure!(!filters.is_empty(), "no artifacts for {dataset}");
     println!("== {dataset}: accuracy vs filters (float32 / int16 PTQ / int8 QAT) ==");
-    println!("{:>7} {:>9} {:>10} {:>10} {:>10} {:>12} {:>12}",
-        "filters", "params", "float32", "int16", "int8-QAT", "mem16(B)", "mem8(B)");
+    println!("{:>7} {:>9} {:>10} {:>10} {:>10} {:>12} {:>12} {:>9} {:>9}",
+        "filters", "params", "float32", "int16", "int8-QAT", "mem16(B)", "mem8(B)",
+        "ms16", "ms8");
     let mut rows = Vec::new();
     for &f in &filters {
         let t = train_arms(rt, dataset, f, cfg)?;
@@ -106,14 +109,21 @@ pub fn accuracy_figs(rt: &Runtime, dataset: &str, cfg: &RepConfig) -> Result<()>
             deployer::ptq_accuracy(&t.graph, &t.data, QuantSpec::int16_per_layer(), cfg.calib);
         let (q8, acc8) =
             deployer::ptq_accuracy(&t.qat_graph, &t.data, QuantSpec::int8_per_layer(), cfg.calib);
+        // Device cost from session metadata (mcu::cost on the SparkFun
+        // Edge, the paper's most efficient board).
+        let s16 = SessionBuilder::fixed_qmn(q16.clone()).board(&SPARKFUN_EDGE).build();
+        let s8 = SessionBuilder::fixed_qmn(q8.clone()).board(&SPARKFUN_EDGE).build();
+        let ms16 = s16.meta().device_latency_ms.unwrap_or(0.0);
+        let ms8 = s8.meta().device_latency_ms.unwrap_or(0.0);
         let params = t.graph.param_count();
         println!(
-            "{f:>7} {params:>9} {acc_f:>10.4} {acc16:>10.4} {acc8:>10.4} {:>12} {:>12}",
+            "{f:>7} {params:>9} {acc_f:>10.4} {acc16:>10.4} {acc8:>10.4} {:>12} {:>12} \
+             {ms16:>9.1} {ms8:>9.1}",
             q16.weight_bytes(),
             q8.weight_bytes()
         );
         rows.push(format!(
-            "{f},{params},{acc_f:.4},{acc16:.4},{acc8:.4},{},{}",
+            "{f},{params},{acc_f:.4},{acc16:.4},{acc8:.4},{},{},{ms16:.2},{ms8:.2}",
             q16.weight_bytes(),
             q8.weight_bytes()
         ));
@@ -121,7 +131,7 @@ pub fn accuracy_figs(rt: &Runtime, dataset: &str, cfg: &RepConfig) -> Result<()>
     write_csv(
         &cfg.out_dir,
         &format!("fig_accuracy_{dataset}.csv"),
-        "filters,params,float32,int16_ptq,int8_qat,mem_int16_bytes,mem_int8_bytes",
+        "filters,params,float32,int16_ptq,int8_qat,mem_int16_bytes,mem_int8_bytes,ms16_sfe,ms8_sfe",
         &rows,
     )?;
     println!(

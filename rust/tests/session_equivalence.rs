@@ -1,0 +1,165 @@
+//! Cross-backend session equivalence: the same deployed graph served
+//! through Float32 / FixedQmn(int16) / FixedQmn(int8) / AffineI8 sessions
+//! must agree on argmax (within the tolerance each scheme is known to
+//! hold, §6 / Appendix B), and the unified API must match the legacy free
+//! functions bit-for-bit while reusing its arena.
+
+use std::sync::Arc;
+
+use microai::graph::ir::LayerKind;
+use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
+use microai::nn::float_exec::ActStats;
+use microai::nn::{argmax, SessionBuilder};
+use microai::quant::{quantize, quantize_affine, QuantSpec};
+use microai::util::prng::Pcg32;
+
+fn fixture_graph(dims: usize, shape: &[usize], classes: usize, filters: usize, seed: u64) -> Graph {
+    let mut g = resnet_v1_6_shapes("fix", dims, shape, classes, filters);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.35;
+            }
+            for v in b.data.iter_mut() {
+                *v = rng.normal() * 0.05;
+            }
+        }
+    }
+    deploy_pipeline(&g)
+}
+
+fn fixture_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
+}
+
+fn calibrate(g: &Graph, inputs: &[Vec<f32>]) -> ActStats {
+    let mut sess = SessionBuilder::float32(g.clone()).build();
+    let mut stats = ActStats::new(g.nodes.len());
+    for x in inputs {
+        assert!(sess.calibrate(x, &mut stats));
+    }
+    stats
+}
+
+#[test]
+fn cross_backend_argmax_agreement_on_fixture_inputs() {
+    // HAR-shaped 1-D fixture; 16 inputs through all four backends.
+    let g = fixture_graph(1, &[64, 6], 5, 8, 42);
+    let inputs = fixture_inputs(16, 64 * 6, 7);
+    let stats = calibrate(&g, &inputs);
+
+    let q16 = Arc::new(quantize(&g, &stats, QuantSpec::int16_per_layer()));
+    let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+    let aq = Arc::new(quantize_affine(&g, &stats));
+
+    let mut s_float = SessionBuilder::float32(g.clone()).build();
+    let mut s_16 = SessionBuilder::fixed_qmn(q16).build();
+    let mut s_8 = SessionBuilder::fixed_qmn(q8).build();
+    let mut s_aff = SessionBuilder::affine_i8(aq).build();
+
+    let (mut agree16, mut agree8, mut agree_aff) = (0usize, 0usize, 0usize);
+    for x in &inputs {
+        let reference = argmax(&s_float.run(x).to_vec());
+        agree16 += (argmax(s_16.run(x)) == reference) as usize;
+        agree8 += (argmax(s_8.run(x)) == reference) as usize;
+        agree_aff += (argmax(s_aff.run(x)) == reference) as usize;
+    }
+    // §6: int16 tracks float essentially everywhere.
+    assert_eq!(agree16, inputs.len(), "int16 argmax agreement {agree16}/{}", inputs.len());
+    // 8-bit schemes may drop a little accuracy (PTQ without QAT).
+    assert!(agree8 * 4 >= inputs.len() * 3, "int8 agreement {agree8}/{}", inputs.len());
+    assert!(agree_aff * 4 >= inputs.len() * 3, "affine agreement {agree_aff}/{}", inputs.len());
+}
+
+#[test]
+fn cross_backend_agreement_2d_topology() {
+    let g = fixture_graph(2, &[12, 12, 3], 4, 4, 9);
+    let inputs = fixture_inputs(8, 12 * 12 * 3, 11);
+    let stats = calibrate(&g, &inputs);
+    let q16 = Arc::new(quantize(&g, &stats, QuantSpec::int16_per_layer()));
+
+    let mut s_float = SessionBuilder::float32(g.clone()).build();
+    let mut s_16 = SessionBuilder::fixed_qmn(q16).build();
+    for x in &inputs {
+        let a = argmax(&s_float.run(x).to_vec());
+        let b = argmax(s_16.run(x));
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn sessions_match_legacy_free_functions_bit_for_bit() {
+    let g = fixture_graph(1, &[32, 3], 4, 8, 5);
+    let inputs = fixture_inputs(6, 96, 6);
+    let stats = calibrate(&g, &inputs);
+    let q8 = quantize(&g, &stats, QuantSpec::int8_per_layer());
+    let aq = quantize_affine(&g, &stats);
+
+    let mut s_float = SessionBuilder::float32(g.clone()).build();
+    let mut s_8 = SessionBuilder::fixed_qmn(q8.clone()).build();
+    let mut s_aff = SessionBuilder::affine_i8(aq.clone()).build();
+    for x in &inputs {
+        assert_eq!(microai::nn::float_exec::run(&g, x, None), s_float.run(x).to_vec());
+        assert_eq!(microai::nn::int_exec::run(&q8, x), s_8.run(x).to_vec());
+        assert_eq!(microai::nn::affine_exec::run(&aq, x), s_aff.run(x).to_vec());
+    }
+}
+
+#[test]
+fn session_arena_is_not_reallocated_across_requests() {
+    let g = fixture_graph(1, &[64, 6], 5, 8, 3);
+    let inputs = fixture_inputs(12, 64 * 6, 4);
+    let stats = calibrate(&g, &inputs);
+    let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+
+    for mut sess in [
+        SessionBuilder::float32(g.clone()).build(),
+        SessionBuilder::fixed_qmn(q8).build(),
+    ] {
+        sess.run(&inputs[0]);
+        let ptrs = sess.arena().buffer_ptrs();
+        let bytes = sess.arena().host_bytes();
+        for x in &inputs {
+            sess.run(x);
+        }
+        let flat: Vec<f32> = inputs.iter().flatten().copied().collect();
+        let batched = sess.run_batch(&flat);
+        assert_eq!(batched.len(), inputs.len() * sess.output_len());
+        assert_eq!(ptrs, sess.arena().buffer_ptrs(), "{}: arena reallocated", sess.meta().backend);
+        assert_eq!(bytes, sess.arena().host_bytes());
+        assert_eq!(sess.runs(), 1 + inputs.len() as u64 + inputs.len() as u64);
+    }
+}
+
+#[test]
+fn session_metadata_tracks_deployment_costs() {
+    use microai::mcu::board::{NUCLEO_L452RE_P, SPARKFUN_EDGE};
+
+    let g = fixture_graph(1, &[128, 9], 6, 16, 21);
+    let inputs = fixture_inputs(4, 128 * 9, 22);
+    let stats = calibrate(&g, &inputs);
+    let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+    let q16 = Arc::new(quantize(&g, &stats, QuantSpec::int16_per_layer()));
+
+    let s8 = SessionBuilder::fixed_qmn(q8.clone()).board(&SPARKFUN_EDGE).build();
+    let s16 = SessionBuilder::fixed_qmn(q16).board(&SPARKFUN_EDGE).build();
+    let sf = SessionBuilder::float32(g.clone()).board(&SPARKFUN_EDGE).build();
+
+    // §7: int16 always beats float32 on the MicroAI engine; int8 is the
+    // cheapest; ROM ordering follows dtype width.
+    let (m8, m16, mf) = (s8.meta(), s16.meta(), sf.meta());
+    let lat = |m: &microai::nn::SessionMeta| m.device_latency_ms.unwrap();
+    assert!(lat(m8) < lat(m16) && lat(m16) < lat(mf), "{} {} {}", lat(m8), lat(m16), lat(mf));
+    assert!(m8.weight_bytes < m16.weight_bytes && m16.weight_bytes < mf.weight_bytes);
+    assert!(m8.device_ram_bytes < m16.device_ram_bytes);
+    assert_eq!(m16.device_ram_bytes * 2, mf.device_ram_bytes);
+
+    // Energy scales with board power at equal cycle model: the SparkFun
+    // Edge is the most efficient board (Fig 13).
+    let s8n = SessionBuilder::fixed_qmn(q8).board(&NUCLEO_L452RE_P).build();
+    assert!(
+        s8.meta().device_energy_uwh.unwrap() < s8n.meta().device_energy_uwh.unwrap()
+    );
+}

@@ -1,0 +1,216 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored so the
+//! workspace builds without network access. Implements exactly what the
+//! `microai` crate uses:
+//!
+//! - [`Error`]: a message + context chain (no backtraces, no downcasting)
+//! - [`Result<T>`] with the `Error` default
+//! - [`Context`] on `Result` and `Option` (`context` / `with_context`)
+//! - `anyhow!`, `bail!`, `ensure!` macros
+//! - `{e}` prints the outermost message, `{e:#}` the full context chain
+//!
+//! Swap for the real crate by pointing the `anyhow` dependency at the
+//! registry; no source changes are required.
+
+use std::fmt::{self, Debug, Display};
+
+/// An error with an optional chain of causes (outermost context first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: whole chain, outermost first, ": "-joined.
+            let mut first = true;
+            for e in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&Error> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {}", c.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve std sources as chain entries.
+        let mut msgs = Vec::new();
+        msgs.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.unwrap()
+    }
+}
+
+/// `Result` with `anyhow::Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension (subset of `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: Display>(self, c: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Assert-or-bail.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = io_err().into();
+        let e = e.context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let v = 3;
+        let e = anyhow!("bad value {v}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e = anyhow!("bad {}: {}", "slot", 7);
+        assert_eq!(format!("{e}"), "bad slot: 7");
+        let s = String::from("stringy");
+        let e = anyhow!(s);
+        assert_eq!(format!("{e}"), "stringy");
+
+        fn guarded(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(guarded(5).is_ok());
+        assert!(guarded(-1).is_err());
+        assert!(guarded(101).is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The container this workspace builds in has no xla_extension runtime, so
+//! this crate provides:
+//!
+//! - [`Literal`]: a REAL host-side implementation (shape + typed buffer,
+//!   `vec1`/`scalar`/`reshape`/`to_vec`/`get_first_element`), enough for
+//!   all marshalling in `microai::runtime::exec`;
+//! - [`PjRtClient`] and friends whose constructors return a descriptive
+//!   [`Error`], so `Runtime::open` fails gracefully and every
+//!   PJRT-dependent test/example takes its existing skip path (the same
+//!   behaviour as running without `make artifacts`).
+//!
+//! Swap in the real bindings by pointing the `xla` dependency at an
+//! xla-rs checkout; the API subset here matches it.
+
+use std::fmt::{self, Debug, Display};
+
+#[derive(Clone)]
+pub struct Error(pub String);
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla/PJRT runtime unavailable (offline stub build — link the real xla-rs crate to execute HLO artifacts)"
+    ))
+}
+
+/// Element buffer of a [`Literal`].
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Sized + Copy {
+    fn into_data(v: Vec<Self>) -> Data;
+    fn from_data(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn from_data(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn from_data(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::U32(v)
+    }
+    fn from_data(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor: dims + typed element buffer.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::into_data(data.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::into_data(vec![v]) }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Reshape without changing the buffer; element counts must agree.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count {} != {n}",
+                self.dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Flatten to a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::from_data(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("to_vec: literal element type mismatch".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        T::from_data(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("get_first_element: empty or type mismatch".into()))
+    }
+
+    /// Split a tuple literal into its elements. Stub literals are never
+    /// tuples (they only come from stub execution, which cannot happen).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("decompose_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        let _ = path;
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_first_element() {
+        let s = Literal::scalar(0.25f32);
+        assert_eq!(s.dims().len(), 0);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 0.25);
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("unavailable"));
+    }
+}
