@@ -118,6 +118,19 @@ fn main() {
             },
         );
         println!("{}", r.report());
+
+        // classify_batch: the serving cascade's per-batch hot path (one
+        // arena, one reused prediction buffer, no per-request alloc).
+        let mut preds = Vec::new();
+        let r = b.run_throughput(
+            &format!("session classify_batch(8) f={filters}"), 8.0 * macc, "MACC/s",
+            || {
+                preds.clear();
+                sess.classify_batch_into(&batch, &mut preds);
+                black_box(&preds);
+            },
+        );
+        println!("{}", r.report());
     }
 
     print_header("quantizer (PTQ over full graph, f=32)");

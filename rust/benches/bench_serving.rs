@@ -1,0 +1,132 @@
+//! Serving scheduler benchmark: the sharded, batch-aware cascade
+//! scheduler vs the single-channel worker pool it replaced (one shared
+//! `Mutex<Receiver>`, one request per dispatch).
+//!
+//! The interesting column is host-side throughput (requests/s of the
+//! scheduler itself): sharding removes the lock convoy on the shared
+//! receiver and micro-batching amortizes dispatch + arena setup, so the
+//! sharded scheduler should win from ~4 workers up.
+//!
+//! Run: `cargo bench --bench bench_serving`
+//! CI smoke (1 timed iteration per arm): `cargo bench --bench bench_serving -- --smoke`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use microai::coordinator::serving::{
+    run_cascade_sessions, run_cascade_single_channel, CascadeConfig, Request,
+};
+use microai::graph::ir::LayerKind;
+use microai::graph::{deploy_pipeline, resnet_v1_6_shapes};
+use microai::mcu::board::SPARKFUN_EDGE;
+use microai::nn::float_exec::{self, ActStats};
+use microai::nn::SessionBuilder;
+use microai::quant::{quantize, QuantSpec, QuantizedGraph};
+use microai::util::bench::{black_box, print_header, Bencher};
+use microai::util::prng::Pcg32;
+
+fn tiny_qgraph(filters: usize, seed: u64) -> Arc<QuantizedGraph> {
+    let mut g = resnet_v1_6_shapes("t", 1, &[32, 3], 4, filters);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.4;
+            }
+            for v in b.data.iter_mut() {
+                *v = 0.01;
+            }
+        }
+    }
+    let g = deploy_pipeline(&g);
+    let mut stats = ActStats::new(g.nodes.len());
+    let mut rng = Pcg32::seeded(seed + 9);
+    for _ in 0..6 {
+        let x: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+        float_exec::run(&g, &x, Some(&mut stats));
+    }
+    Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()))
+}
+
+fn requests(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|id| Request { id: id as u64, input: (0..96).map(|_| rng.normal()).collect() })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("MICROAI_BENCH_SMOKE").is_ok();
+    // --smoke: exactly one timed iteration per arm (CI exercises the
+    // whole path without paying for statistics).
+    let b = if smoke {
+        Bencher { warmup: Duration::ZERO, measure: Duration::ZERO, max_iters: 1 }
+    } else {
+        Bencher::default()
+    };
+    let n_requests = if smoke { 96 } else { 1024 };
+
+    let little = tiny_qgraph(8, 1);
+    let big = tiny_qgraph(16, 2);
+    let little_t = SessionBuilder::fixed_qmn(little).board(&SPARKFUN_EDGE).build();
+    let big_t = SessionBuilder::fixed_qmn(big).board(&SPARKFUN_EDGE).build();
+    let reqs = requests(n_requests, 3);
+
+    print_header(&format!(
+        "cascade scheduler throughput ({n_requests} requests, threshold 0.8)"
+    ));
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = CascadeConfig { threshold: 0.8, workers, ..CascadeConfig::default() };
+        let r = b.run_throughput(
+            &format!("sharded+batched   w={workers}"),
+            n_requests as f64,
+            "req/s",
+            || {
+                let s = run_cascade_sessions(&little_t, &big_t, &cfg, reqs.clone(), None);
+                black_box(s.responses.len());
+            },
+        );
+        println!("{}", r.report());
+        let sharded_ns = r.median_ns;
+
+        let r = b.run_throughput(
+            &format!("single-channel    w={workers}"),
+            n_requests as f64,
+            "req/s",
+            || {
+                let out = run_cascade_single_channel(&little_t, &big_t, 0.8, workers, reqs.clone());
+                black_box(out.len());
+            },
+        );
+        println!("{}", r.report());
+        println!(
+            "  -> sharded/single speedup at w={workers}: {:.2}x",
+            r.median_ns / sharded_ns.max(1.0)
+        );
+    }
+
+    // Queueing-model flavor: one saturated run, reported not timed.
+    let cfg = CascadeConfig {
+        threshold: 0.8,
+        workers: 4,
+        arrival_rate_hz: 1e5,
+        ..CascadeConfig::default()
+    };
+    let s = run_cascade_sessions(&little_t, &big_t, &cfg, reqs.clone(), None);
+    let lat = s.latency.expect("board-priced sessions");
+    let dev = s.device_latency.expect("board-priced sessions");
+    println!(
+        "\nsaturated arrivals (100k req/s, 4 workers): total p50 {:.1} ms = queue p50 {:.1} ms \
+         + device p50 {:.1} ms; queue depth p99 {:.0}; utilization {}",
+        lat.p50,
+        s.queue_latency.p50,
+        dev.p50,
+        s.queue_depth.p99,
+        s.worker_utilization
+            .iter()
+            .map(|u| format!("{:.0}%", u * 100.0))
+            .collect::<Vec<_>>()
+            .join(" "),
+    );
+}

@@ -40,14 +40,17 @@ pub fn calibrate(graph: &Graph, data: &RawDataModel, n: usize) -> ActStats {
 }
 
 /// Test accuracy of one session over the whole test set (run-many half of
-/// the compile-once/run-many contract).
+/// the compile-once/run-many contract). `test_x` is contiguous, so it
+/// feeds [`Session::classify_batch_into`] directly: the whole set is
+/// evaluated through one arena, zero-copy.
 pub fn session_accuracy(sess: &mut Session, data: &RawDataModel) -> f64 {
-    let mut correct = 0usize;
-    for i in 0..data.n_test() {
-        if sess.classify(data.test_example(i)).class as i32 == data.test_y[i] {
-            correct += 1;
-        }
-    }
+    let mut preds = Vec::with_capacity(data.n_test());
+    sess.classify_batch_into(&data.test_x, &mut preds);
+    let correct = preds
+        .iter()
+        .zip(&data.test_y)
+        .filter(|(p, &y)| p.class as i32 == y)
+        .count();
     correct as f64 / data.n_test().max(1) as f64
 }
 

@@ -2,6 +2,11 @@
 //! drives preprocess → train → post-process (PTQ / QAT) → deploy →
 //! evaluate, matching the `microai <config.toml> ...` commands of
 //! Appendix C.
+//!
+//! Every evaluation arm runs through the Session API's batched path
+//! (`deployer::session_accuracy` → [`crate::nn::Session::classify_batch_into`]):
+//! one compiled session, one arena, the whole test set in flattened
+//! chunks.
 
 use anyhow::{Context, Result};
 

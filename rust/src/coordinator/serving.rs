@@ -3,21 +3,62 @@
 //! the classifier's confidence is below a threshold, it escalates to the
 //! large model.
 //!
-//! Workers own [`Session`]s (compile-once/run-many: weights shared via
-//! `Arc`, activation arenas preallocated per worker), and per-request
-//! latency/energy comes from the session metadata — i.e. from the
-//! calibrated `mcu::cost` models for the configured board — instead of
-//! hand-wired simulation constants.
+//! # Scheduler
+//!
+//! Requests flow through a **sharded, batch-aware scheduler**:
+//!
+//! - one bounded queue per worker ([`std::sync::mpsc::sync_channel`]), so
+//!   a slow worker exerts backpressure on the router instead of growing an
+//!   unbounded backlog — there is no shared `Mutex<Receiver>` lock convoy;
+//! - the router groups consecutive requests into micro-batches of up to
+//!   [`CascadeConfig::max_batch`] and dispatches each batch to the
+//!   **least-loaded** worker (pending-request count), breaking ties
+//!   round-robin so equal load still spreads;
+//! - workers own forked [`Session`]s (weights shared via `Arc`, activation
+//!   arenas preallocated per worker) and run the little model over the
+//!   whole batch through one arena ([`Session::classify_each_into`]),
+//!   then escalate the low-confidence subset to the big model as a second
+//!   batch.
+//!
+//! # Simulated time: `queue_ms` vs `device_ms`
+//!
+//! Latency/energy prices come from the session metadata (the calibrated
+//! `mcu::cost` models), not from host wall time. An **open-loop Poisson
+//! arrival clock** ([`CascadeConfig::arrival_rate_hz`]) stamps each
+//! request with an arrival time; every worker advances a private virtual
+//! clock by the device latency of each request it serves, in FIFO order.
+//! A [`Response`] therefore reports
+//!
+//! - `queue_ms` — time between arrival and service start (the worker was
+//!   still draining earlier requests), and
+//! - `device_ms` — predicted on-device inference time (little, plus big
+//!   when escalated),
+//!
+//! separately; total simulated latency is their sum. When a session
+//! carries **no cost model** (no board attached), `device_ms`/`energy_uwh`
+//! are `None` and the virtual clock cannot advance — the cascade still
+//! classifies, but reports no latency/energy instead of silently pricing
+//! requests at 0.0 (see [`CascadeStats`]).
+//!
+//! One deliberate approximation: request→worker assignment is made by
+//! the *host* scheduler (live pending counts), while queue delays are
+//! computed on the per-worker *virtual* clocks that assignment produces.
+//! `CascadeConfig::seed` therefore makes the arrival process reproducible
+//! but not the queue statistics — they are conditioned on the actual
+//! host-time assignment of that run. Predictions, escalations and device
+//! prices are always deterministic.
 //!
 //! Implementation is std-threads + channels (tokio is unavailable
-//! offline): a router thread feeds a worker pool.
+//! offline).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
+use std::time::Instant;
 
 use crate::mcu::board::{Board, SPARKFUN_EDGE};
-use crate::nn::session::{Session, SessionBuilder};
+use crate::nn::session::{Prediction, Session, SessionBuilder};
 use crate::quant::QuantizedGraph;
 use crate::util::prng::Pcg32;
 use crate::util::stats::{summarize, Summary};
@@ -34,10 +75,24 @@ pub struct Response {
     pub prediction: usize,
     pub confidence: f32,
     pub escalated: bool,
+    /// Simulated queueing delay (ms): arrival → service start on the
+    /// worker's virtual clock. 0.0 when the worker was idle at arrival,
+    /// and always 0.0 when the sessions carry no cost model (service
+    /// times are unknown, so the virtual clock cannot advance).
+    pub queue_ms: f64,
     /// Predicted on-device latency (ms) for this request, from the
-    /// session metadata (little, plus big when escalated).
-    pub device_ms: f64,
-    pub energy_uwh: f64,
+    /// session metadata (little, plus big when escalated). `None` when
+    /// the sessions carry no board cost model — never silently 0.0.
+    pub device_ms: Option<f64>,
+    /// Predicted energy (µWh); same `None` semantics as `device_ms`.
+    pub energy_uwh: Option<f64>,
+}
+
+impl Response {
+    /// Total simulated latency: queueing delay + device time.
+    pub fn total_ms(&self) -> Option<f64> {
+        self.device_ms.map(|d| d + self.queue_ms)
+    }
 }
 
 /// Softmax max-probability confidence.
@@ -45,78 +100,212 @@ pub fn confidence(logits: &[f32]) -> f32 {
     crate::nn::session::confidence(logits)
 }
 
+#[derive(Clone, Copy, Debug)]
 pub struct CascadeConfig {
     pub threshold: f32,
     pub workers: usize,
     /// Deployment board the cascade is priced on; session metadata
     /// supplies per-model latency/energy via `mcu::cost`.
     pub board: &'static Board,
+    /// Micro-batch size: consecutive requests dispatched to one worker as
+    /// a unit and run through one arena. 1 = unbatched.
+    pub max_batch: usize,
+    /// Per-worker queue bound, in batches. A full queue blocks the router
+    /// (backpressure) instead of growing an unbounded backlog.
+    pub queue_cap: usize,
+    /// Open-loop Poisson arrival rate (requests/s) for the simulated
+    /// arrival clock. `<= 0.0` means all requests arrive at t = 0 (pure
+    /// backlog drain — maximum queueing).
+    pub arrival_rate_hz: f64,
+    /// Seed for the arrival clock's exponential inter-arrival draws.
+    pub seed: u64,
 }
 
 impl Default for CascadeConfig {
     fn default() -> Self {
-        CascadeConfig { threshold: 0.8, workers: 4, board: &SPARKFUN_EDGE }
+        CascadeConfig {
+            threshold: 0.8,
+            workers: 4,
+            board: &SPARKFUN_EDGE,
+            max_batch: 8,
+            queue_cap: 4,
+            arrival_rate_hz: 0.0,
+            seed: 0x5EED,
+        }
     }
 }
 
+/// Aggregate serving statistics.
+///
+/// Cost-derived fields are `Option`: they are `Some` only when both
+/// cascade sessions carry a board cost model. A cascade over board-less
+/// sessions (built via [`run_cascade_sessions`] without
+/// [`SessionBuilder::board`]) reports `None` — it does NOT report
+/// zero-cost serving.
 pub struct CascadeStats {
     pub responses: Vec<Response>,
-    pub latency: Summary,
+    /// Total simulated latency (queue + device) per request.
+    pub latency: Option<Summary>,
+    /// Device-only latency per request.
+    pub device_latency: Option<Summary>,
+    /// Queueing delay per request (all-zero when unpriced).
+    pub queue_latency: Summary,
+    /// Pending-request depth of the chosen worker's queue, sampled at
+    /// each batch dispatch (includes the batch just enqueued).
+    pub queue_depth: Summary,
+    /// Per-worker fraction of the simulated makespan spent serving.
+    pub worker_utilization: Vec<f64>,
     pub escalation_rate: f64,
-    pub total_energy_uwh: f64,
+    pub total_energy_uwh: Option<f64>,
+    /// Accuracy over requests whose id has a label (`None` when no label
+    /// matched any request id).
     pub accuracy: Option<f64>,
+    /// How many responses were matched against a label.
+    pub matched_labels: usize,
+    /// Host wall-clock time of the whole run (scheduler throughput, NOT
+    /// simulated device time).
+    pub wall_ms: f64,
+    /// Host-side requests/s of the scheduler (`n / wall`).
+    pub throughput_rps: f64,
 }
 
-/// One worker's pair of sessions plus their metadata-derived prices.
-struct CascadeWorker {
-    little: Session,
-    big: Session,
-    threshold: f32,
+/// Per-model prices from session metadata; present only when both
+/// sessions carry a cost model.
+#[derive(Clone, Copy, Debug)]
+struct CascadePrices {
     little_ms: f64,
     big_ms: f64,
     little_uwh: f64,
     big_uwh: f64,
 }
 
+/// A request stamped with its simulated arrival time.
+struct Scheduled {
+    req: Request,
+    arrival_ms: f64,
+}
+
+/// One worker's pair of sessions, prices, virtual clock and reusable
+/// batch scratch buffers.
+struct CascadeWorker {
+    little: Session,
+    big: Session,
+    threshold: f32,
+    prices: Option<CascadePrices>,
+    /// Virtual clock: when this worker finishes its last accepted request.
+    clock_ms: f64,
+    /// Total device time served (utilization numerator).
+    busy_ms: f64,
+    preds: Vec<Prediction>,
+    esc_idx: Vec<usize>,
+    esc_preds: Vec<Prediction>,
+}
+
 impl CascadeWorker {
     fn new(little: &Session, big: &Session, threshold: f32) -> CascadeWorker {
         let (lm, bm) = (little.meta(), big.meta());
+        // A board-attached session whose engine failed to price it is a
+        // configuration bug (cost model not covering the board/dtype) —
+        // surface it instead of serving silent zeros.
+        debug_assert!(
+            lm.board.is_none() || (lm.device_latency_ms.is_some() && lm.device_energy_uwh.is_some()),
+            "little session has a board but no cost model (engine does not cover board/dtype)"
+        );
+        debug_assert!(
+            bm.board.is_none() || (bm.device_latency_ms.is_some() && bm.device_energy_uwh.is_some()),
+            "big session has a board but no cost model (engine does not cover board/dtype)"
+        );
+        let prices = match (
+            lm.device_latency_ms,
+            bm.device_latency_ms,
+            lm.device_energy_uwh,
+            bm.device_energy_uwh,
+        ) {
+            (Some(little_ms), Some(big_ms), Some(little_uwh), Some(big_uwh)) => {
+                Some(CascadePrices { little_ms, big_ms, little_uwh, big_uwh })
+            }
+            _ => None,
+        };
         CascadeWorker {
-            little_ms: lm.device_latency_ms.unwrap_or(0.0),
-            big_ms: bm.device_latency_ms.unwrap_or(0.0),
-            little_uwh: lm.device_energy_uwh.unwrap_or(0.0),
-            big_uwh: bm.device_energy_uwh.unwrap_or(0.0),
             little: little.fork(),
             big: big.fork(),
             threshold,
+            prices,
+            clock_ms: 0.0,
+            busy_ms: 0.0,
+            preds: Vec::new(),
+            esc_idx: Vec::new(),
+            esc_preds: Vec::new(),
         }
     }
 
-    fn serve(&mut self, req: &Request) -> Response {
-        let pred = self.little.classify(&req.input);
-        let (pred, escalated, ms, uwh) = if pred.confidence < self.threshold {
-            (
-                self.big.classify(&req.input),
-                true,
-                self.little_ms + self.big_ms,
-                self.little_uwh + self.big_uwh,
-            )
-        } else {
-            (pred, false, self.little_ms, self.little_uwh)
-        };
-        Response {
-            id: req.id,
-            prediction: pred.class,
-            confidence: pred.confidence,
-            escalated,
-            device_ms: ms,
-            energy_uwh: uwh,
+    /// Serve one micro-batch: little over the whole batch through one
+    /// arena, then the low-confidence subset through big as a second
+    /// batch. Queue accounting is FIFO on this worker's virtual clock.
+    fn serve_batch(&mut self, batch: &[Scheduled], out: &mut Vec<Response>) {
+        self.preds.clear();
+        self.little.classify_each_into(
+            batch.iter().map(|s| s.req.input.as_slice()),
+            &mut self.preds,
+        );
+
+        self.esc_idx.clear();
+        for (i, p) in self.preds.iter().enumerate() {
+            if p.confidence < self.threshold {
+                self.esc_idx.push(i);
+            }
+        }
+        self.esc_preds.clear();
+        self.big.classify_each_into(
+            self.esc_idx.iter().map(|&i| batch[i].req.input.as_slice()),
+            &mut self.esc_preds,
+        );
+
+        let mut esc_cursor = 0usize;
+        for (i, s) in batch.iter().enumerate() {
+            let escalated = self.esc_idx.get(esc_cursor) == Some(&i);
+            let pred = if escalated {
+                let p = self.esc_preds[esc_cursor];
+                esc_cursor += 1;
+                p
+            } else {
+                self.preds[i]
+            };
+            let (device_ms, energy_uwh) = match self.prices {
+                Some(p) if escalated => {
+                    (Some(p.little_ms + p.big_ms), Some(p.little_uwh + p.big_uwh))
+                }
+                Some(p) => (Some(p.little_ms), Some(p.little_uwh)),
+                None => (None, None),
+            };
+            let start = self.clock_ms.max(s.arrival_ms);
+            let service = device_ms.unwrap_or(0.0);
+            self.clock_ms = start + service;
+            self.busy_ms += service;
+            out.push(Response {
+                id: s.req.id,
+                prediction: pred.class,
+                confidence: pred.confidence,
+                escalated,
+                queue_ms: start - s.arrival_ms,
+                device_ms,
+                energy_uwh,
+            });
         }
     }
 }
 
+/// Final accounting a worker thread returns when its queue closes.
+struct WorkerReport {
+    busy_ms: f64,
+    clock_ms: f64,
+}
+
 /// Run the cascade over a request stream; blocking, returns when all
-/// requests are answered. `labels` (optional) enables accuracy reporting.
+/// requests are answered. `labels` (optional) enables accuracy reporting:
+/// `labels[id]` is matched per response by checked lookup, so a label
+/// slice shorter than the stream (or sparse request ids) only shrinks the
+/// matched count — it never panics.
 pub fn run_cascade(
     little: Arc<QuantizedGraph>,
     big: Arc<QuantizedGraph>,
@@ -124,27 +313,188 @@ pub fn run_cascade(
     requests: Vec<Request>,
     labels: Option<&[i32]>,
 ) -> CascadeStats {
-    let n = requests.len();
     // Compile once: template sessions carry the cost metadata; workers
     // fork them (shared weights, private arenas).
     let little_t = SessionBuilder::fixed_qmn(little).board(cfg.board).build();
     let big_t = SessionBuilder::fixed_qmn(big).board(cfg.board).build();
+    run_cascade_sessions(&little_t, &big_t, cfg, requests, labels)
+}
 
+/// Like [`run_cascade`], over caller-built template sessions (any boards —
+/// including none, in which case all cost-derived stats are `None`).
+pub fn run_cascade_sessions(
+    little: &Session,
+    big: &Session,
+    cfg: &CascadeConfig,
+    requests: Vec<Request>,
+    labels: Option<&[i32]>,
+) -> CascadeStats {
+    let n = requests.len();
+    let workers = cfg.workers.max(1);
+    let max_batch = cfg.max_batch.max(1);
+    let queue_cap = cfg.queue_cap.max(1);
+    let t0 = Instant::now();
+
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let mut work_txs = Vec::with_capacity(workers);
+    let mut pending: Vec<Arc<AtomicUsize>> = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = mpsc::sync_channel::<Vec<Scheduled>>(queue_cap);
+        work_txs.push(tx);
+        let depth = Arc::new(AtomicUsize::new(0));
+        pending.push(depth.clone());
+        let resp = resp_tx.clone();
+        let mut worker = CascadeWorker::new(little, big, cfg.threshold);
+        handles.push(thread::spawn(move || {
+            let mut out = Vec::new();
+            while let Ok(batch) = rx.recv() {
+                out.clear();
+                worker.serve_batch(&batch, &mut out);
+                for r in out.drain(..) {
+                    let _ = resp.send(r);
+                }
+                depth.fetch_sub(batch.len(), Ordering::AcqRel);
+            }
+            WorkerReport { busy_ms: worker.busy_ms, clock_ms: worker.clock_ms }
+        }));
+    }
+    drop(resp_tx);
+
+    // Router: stamp arrivals, micro-batch, dispatch least-loaded with a
+    // round-robin tiebreak cursor. A full target queue blocks the send —
+    // that is the backpressure path.
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut arrival_ms = 0.0f64;
+    let mut cursor = 0usize;
+    let mut depth_samples: Vec<f64> = Vec::with_capacity(n / max_batch + 1);
+    let mut it = requests.into_iter();
+    loop {
+        let batch: Vec<Scheduled> = it
+            .by_ref()
+            .take(max_batch)
+            .map(|req| {
+                if cfg.arrival_rate_hz > 0.0 {
+                    arrival_ms += rng.exponential(cfg.arrival_rate_hz) * 1e3;
+                }
+                Scheduled { req, arrival_ms }
+            })
+            .collect();
+        if batch.is_empty() {
+            break;
+        }
+        let mut best = cursor;
+        let mut best_depth = usize::MAX;
+        for k in 0..workers {
+            let w = (cursor + k) % workers;
+            let d = pending[w].load(Ordering::Acquire);
+            if d < best_depth {
+                best_depth = d;
+                best = w;
+            }
+        }
+        cursor = (best + 1) % workers;
+        let len = batch.len();
+        pending[best].fetch_add(len, Ordering::AcqRel);
+        depth_samples.push((best_depth + len) as f64);
+        work_txs[best].send(batch).expect("worker queue closed early");
+    }
+    drop(work_txs);
+
+    let mut responses: Vec<Response> = resp_rx.iter().collect();
+    let mut reports = Vec::with_capacity(workers);
+    for h in handles {
+        reports.push(h.join().expect("worker panicked"));
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), n, "scheduler lost requests");
+
+    let priced = !responses.is_empty() && responses.iter().all(|r| r.device_ms.is_some());
+    let device: Vec<f64> = responses.iter().filter_map(|r| r.device_ms).collect();
+    let total: Vec<f64> = responses.iter().filter_map(|r| r.total_ms()).collect();
+    let queue: Vec<f64> = responses.iter().map(|r| r.queue_ms).collect();
+    let esc = responses.iter().filter(|r| r.escalated).count() as f64 / n.max(1) as f64;
+    let total_energy_uwh = if priced {
+        Some(responses.iter().filter_map(|r| r.energy_uwh).sum())
+    } else {
+        None
+    };
+
+    // Checked label lookup: only pairs where the response id indexes into
+    // `labels` count; short or sparse label slices are fine.
+    let mut matched = 0usize;
+    let mut correct = 0usize;
+    if let Some(ys) = labels {
+        for r in &responses {
+            if let Some(&y) = usize::try_from(r.id).ok().and_then(|i| ys.get(i)) {
+                matched += 1;
+                if r.prediction as i32 == y {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    let accuracy = (matched > 0).then(|| correct as f64 / matched as f64);
+
+    let makespan = reports.iter().fold(0.0f64, |a, r| a.max(r.clock_ms));
+    let worker_utilization = reports
+        .iter()
+        .map(|r| if makespan > 0.0 { r.busy_ms / makespan } else { 0.0 })
+        .collect();
+
+    CascadeStats {
+        latency: priced.then(|| summarize(&total)),
+        device_latency: priced.then(|| summarize(&device)),
+        queue_latency: summarize(&queue),
+        queue_depth: summarize(&depth_samples),
+        worker_utilization,
+        escalation_rate: esc,
+        total_energy_uwh,
+        accuracy,
+        matched_labels: matched,
+        wall_ms,
+        throughput_rps: if wall_ms > 0.0 { n as f64 / (wall_ms / 1e3) } else { 0.0 },
+        responses,
+    }
+}
+
+/// The PR-1 scheduler, kept as the benchmark baseline: ONE shared channel
+/// behind a `Mutex<Receiver>` (a lock convoy at high worker counts),
+/// strictly one request per dispatch, no arrival clock and therefore no
+/// queue accounting (`queue_ms` is 0.0 on every response).
+/// `bench_serving` compares [`run_cascade_sessions`] against this.
+pub fn run_cascade_single_channel(
+    little: &Session,
+    big: &Session,
+    threshold: f32,
+    workers: usize,
+    requests: Vec<Request>,
+) -> Vec<Response> {
+    let n = requests.len();
     let (work_tx, work_rx) = mpsc::channel::<Request>();
     let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
 
     let mut handles = Vec::new();
-    for _ in 0..cfg.workers.max(1) {
+    for _ in 0..workers.max(1) {
         let rx = work_rx.clone();
         let tx = resp_tx.clone();
-        let mut worker = CascadeWorker::new(&little_t, &big_t, cfg.threshold);
-        handles.push(thread::spawn(move || loop {
-            let req = match rx.lock().unwrap().recv() {
-                Ok(r) => r,
-                Err(_) => break,
-            };
-            let _ = tx.send(worker.serve(&req));
+        let mut worker = CascadeWorker::new(little, big, threshold);
+        handles.push(thread::spawn(move || {
+            let mut out = Vec::new();
+            loop {
+                let req = match rx.lock().unwrap().recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                };
+                out.clear();
+                worker.serve_batch(&[Scheduled { req, arrival_ms: 0.0 }], &mut out);
+                for mut r in out.drain(..) {
+                    r.queue_ms = 0.0; // no arrival clock in this baseline
+                    let _ = tx.send(r);
+                }
+            }
         }));
     }
     drop(resp_tx);
@@ -160,27 +510,11 @@ pub fn run_cascade(
     }
     responses.sort_by_key(|r| r.id);
     assert_eq!(responses.len(), n, "router lost requests");
-
-    let lat: Vec<f64> = responses.iter().map(|r| r.device_ms).collect();
-    let esc = responses.iter().filter(|r| r.escalated).count() as f64 / n.max(1) as f64;
-    let energy: f64 = responses.iter().map(|r| r.energy_uwh).sum();
-    let accuracy = labels.map(|ys| {
-        responses
-            .iter()
-            .filter(|r| r.prediction as i32 == ys[r.id as usize])
-            .count() as f64
-            / n.max(1) as f64
-    });
-    CascadeStats {
-        responses,
-        latency: summarize(&lat),
-        escalation_rate: esc,
-        total_energy_uwh: energy,
-        accuracy,
-    }
+    responses
 }
 
-/// Build a synthetic Poisson request stream from test examples.
+/// Build a synthetic request stream from test examples (ids are dense;
+/// labels align with ids).
 pub fn request_stream(
     data: &crate::datasets::RawDataModel,
     n: usize,
@@ -247,12 +581,15 @@ mod tests {
             .collect()
     }
 
+    fn cfg(threshold: f32, workers: usize) -> CascadeConfig {
+        CascadeConfig { threshold, workers, ..CascadeConfig::default() }
+    }
+
     #[test]
     fn no_request_lost_and_ordered() {
         let little = tiny_qgraph(4, 1);
         let big = tiny_qgraph(8, 2);
-        let cfg = CascadeConfig { threshold: 0.5, workers: 4, board: &SPARKFUN_EDGE };
-        let stats = run_cascade(little, big, &cfg, requests(64, 3), None);
+        let stats = run_cascade(little, big, &cfg(0.5, 4), requests(64, 3), None);
         assert_eq!(stats.responses.len(), 64);
         for (i, r) in stats.responses.iter().enumerate() {
             assert_eq!(r.id, i as u64);
@@ -263,14 +600,13 @@ mod tests {
     fn threshold_one_always_escalates_threshold_zero_never() {
         let little = tiny_qgraph(4, 4);
         let big = tiny_qgraph(8, 5);
-        let base = CascadeConfig { threshold: 0.0, workers: 2, board: &SPARKFUN_EDGE };
-        let s0 = run_cascade(little.clone(), big.clone(), &base, requests(32, 6), None);
+        let s0 = run_cascade(little.clone(), big.clone(), &cfg(0.0, 2), requests(32, 6), None);
         assert_eq!(s0.escalation_rate, 0.0);
-        let cfg1 = CascadeConfig { threshold: 1.01, ..base };
-        let s1 = run_cascade(little, big, &cfg1, requests(32, 6), None);
+        let s1 = run_cascade(little, big, &cfg(1.01, 2), requests(32, 6), None);
         assert_eq!(s1.escalation_rate, 1.0);
-        // Full escalation costs little+big latency on every request.
-        assert!(s1.latency.p50 > s0.latency.p50);
+        // Full escalation costs little+big device latency on every request.
+        let (d0, d1) = (s0.device_latency.unwrap(), s1.device_latency.unwrap());
+        assert!(d1.p50 > d0.p50);
     }
 
     #[test]
@@ -284,13 +620,136 @@ mod tests {
         let exp_uwh = lm.meta().device_energy_uwh.unwrap() + bm.meta().device_energy_uwh.unwrap();
         assert!(exp_ms > 0.0 && exp_uwh > 0.0);
 
-        let cfg = CascadeConfig { threshold: 1.01, workers: 1, board: &NUCLEO_L452RE_P };
-        let s = run_cascade(little, big, &cfg, requests(8, 9), None);
+        let c = CascadeConfig { board: &NUCLEO_L452RE_P, ..cfg(1.01, 1) };
+        let s = run_cascade(little, big, &c, requests(8, 9), None);
         for r in &s.responses {
             assert!(r.escalated);
-            assert!((r.device_ms - exp_ms).abs() < 1e-9);
-            assert!((r.energy_uwh - exp_uwh).abs() < 1e-12);
+            assert!((r.device_ms.unwrap() - exp_ms).abs() < 1e-9);
+            assert!((r.energy_uwh.unwrap() - exp_uwh).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn total_latency_is_queue_plus_device() {
+        let little = tiny_qgraph(4, 30);
+        let big = tiny_qgraph(8, 31);
+        // Saturating arrival rate so queueing actually happens.
+        let c = CascadeConfig { arrival_rate_hz: 1e6, ..cfg(0.8, 2) };
+        let s = run_cascade(little, big, &c, requests(48, 32), None);
+        let mut queued = 0usize;
+        for r in &s.responses {
+            let total = r.total_ms().expect("priced cascade");
+            assert!((total - (r.queue_ms + r.device_ms.unwrap())).abs() < 1e-12);
+            assert!(r.queue_ms >= 0.0);
+            if r.queue_ms > 0.0 {
+                queued += 1;
+            }
+        }
+        // At a near-infinite arrival rate, almost everything queues
+        // behind the first request each worker serves.
+        assert!(queued > 0, "no request ever waited under saturation");
+        let lat = s.latency.unwrap();
+        let dev = s.device_latency.unwrap();
+        assert!(lat.p50 >= dev.p50);
+        assert!(s.queue_latency.max > 0.0);
+        assert!(s.queue_depth.max >= 1.0);
+    }
+
+    #[test]
+    fn slow_poisson_arrivals_do_not_queue() {
+        let little = tiny_qgraph(4, 33);
+        let big = tiny_qgraph(8, 34);
+        // Device latency is a few ms; at 1 request per 1000 simulated
+        // seconds every worker is long idle before the next arrival.
+        let c = CascadeConfig { arrival_rate_hz: 1e-3, ..cfg(0.8, 2) };
+        let s = run_cascade(little, big, &c, requests(16, 35), None);
+        for r in &s.responses {
+            assert_eq!(r.queue_ms, 0.0, "request {} queued unexpectedly", r.id);
+        }
+    }
+
+    #[test]
+    fn boardless_sessions_report_none_not_zero_cost() {
+        let little = tiny_qgraph(4, 10);
+        let big = tiny_qgraph(8, 11);
+        // Sessions WITHOUT a board: no cost model. The cascade must not
+        // invent 0.0 ms / 0.0 µWh prices.
+        let lt = SessionBuilder::fixed_qmn(little).build();
+        let bt = SessionBuilder::fixed_qmn(big).build();
+        let s = run_cascade_sessions(&lt, &bt, &cfg(0.8, 2), requests(16, 12), None);
+        assert_eq!(s.responses.len(), 16);
+        for r in &s.responses {
+            assert!(r.device_ms.is_none());
+            assert!(r.energy_uwh.is_none());
+            assert!(r.total_ms().is_none());
+        }
+        assert!(s.latency.is_none());
+        assert!(s.device_latency.is_none());
+        assert!(s.total_energy_uwh.is_none());
+        // Classification itself still works.
+        assert!(s.responses.iter().all(|r| r.prediction < 4));
+    }
+
+    #[test]
+    fn short_or_sparse_labels_use_checked_lookup() {
+        let little = tiny_qgraph(4, 13);
+        let big = tiny_qgraph(8, 14);
+        // 32 requests but only 10 labels: pre-fix this indexed
+        // ys[r.id] and panicked out of bounds.
+        let labels: Vec<i32> = vec![0; 10];
+        let s = run_cascade(
+            little.clone(),
+            big.clone(),
+            &cfg(0.5, 2),
+            requests(32, 15),
+            Some(&labels),
+        );
+        assert_eq!(s.matched_labels, 10);
+        let acc = s.accuracy.expect("some labels matched");
+        assert!((0.0..=1.0).contains(&acc));
+
+        // Sparse, non-dense ids beyond the label range: no panic, no match.
+        let mut reqs = requests(4, 16);
+        for (k, r) in reqs.iter_mut().enumerate() {
+            r.id = 1000 + k as u64;
+        }
+        let s = run_cascade(little, big, &cfg(0.5, 2), reqs, Some(&labels));
+        assert_eq!(s.matched_labels, 0);
+        assert!(s.accuracy.is_none());
+    }
+
+    #[test]
+    fn sharded_and_single_channel_agree_on_predictions() {
+        let little = tiny_qgraph(4, 17);
+        let big = tiny_qgraph(8, 18);
+        let lt = SessionBuilder::fixed_qmn(little).board(&SPARKFUN_EDGE).build();
+        let bt = SessionBuilder::fixed_qmn(big).board(&SPARKFUN_EDGE).build();
+        let reqs = requests(40, 19);
+        let a = run_cascade_sessions(&lt, &bt, &cfg(0.8, 3), reqs.clone(), None);
+        let b = run_cascade_single_channel(&lt, &bt, 0.8, 3, reqs);
+        assert_eq!(a.responses.len(), b.len());
+        for (x, y) in a.responses.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.prediction, y.prediction);
+            assert_eq!(x.escalated, y.escalated);
+            assert_eq!(x.device_ms, y.device_ms);
+        }
+    }
+
+    #[test]
+    fn utilization_and_depth_are_reported() {
+        let little = tiny_qgraph(4, 20);
+        let big = tiny_qgraph(8, 21);
+        let c = cfg(0.8, 3);
+        let s = run_cascade(little, big, &c, requests(60, 22), None);
+        assert_eq!(s.worker_utilization.len(), 3);
+        assert!(s.worker_utilization.iter().all(|&u| (0.0..=1.0 + 1e-9).contains(&u)));
+        // All requests arrive at t=0 (default rate 0): the busiest worker
+        // is the makespan definition, so utilization peaks at 1.
+        let peak = s.worker_utilization.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!((peak - 1.0).abs() < 1e-9, "peak utilization {peak}");
+        assert!(s.queue_depth.n > 0);
+        assert!(s.throughput_rps > 0.0);
     }
 
     #[test]

@@ -215,10 +215,10 @@ pub fn batchnorm_affine(
 ) -> (Vec<f32>, Vec<f32>) {
     let mut w = Vec::with_capacity(mean.len());
     let mut b = Vec::with_capacity(mean.len());
-    for i in 0..mean.len() {
-        let sigma = (var[i] + eps).sqrt();
-        w.push(gamma[i] / sigma);
-        b.push(beta[i] - gamma[i] * mean[i] / sigma);
+    for (((&m, &v), &g), &bt) in mean.iter().zip(var).zip(gamma).zip(beta) {
+        let sigma = (v + eps).sqrt();
+        w.push(g / sigma);
+        b.push(bt - g * m / sigma);
     }
     (w, b)
 }

@@ -43,10 +43,14 @@ impl ActStats {
     }
 
     pub fn merge(&mut self, other: &ActStats) {
-        for i in 0..self.max_abs.len() {
-            self.max_abs[i] = self.max_abs[i].max(other.max_abs[i]);
-            self.min[i] = self.min[i].min(other.min[i]);
-            self.max[i] = self.max[i].max(other.max[i]);
+        for (a, &b) in self.max_abs.iter_mut().zip(&other.max_abs) {
+            *a = a.max(b);
+        }
+        for (a, &b) in self.min.iter_mut().zip(&other.min) {
+            *a = a.min(b);
+        }
+        for (a, &b) in self.max.iter_mut().zip(&other.max) {
+            *a = a.max(b);
         }
     }
 }

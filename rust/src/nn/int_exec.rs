@@ -267,9 +267,9 @@ mod tests {
             let fl = float_exec::run(&g, x, None);
             let l = run(&ql_spec, x);
             let f = run(&qf_spec, x);
-            for i in 0..fl.len() {
-                err_l += ((fl[i] - l[i]) as f64).powi(2);
-                err_f += ((fl[i] - f[i]) as f64).powi(2);
+            for ((&flv, &lv), &fv) in fl.iter().zip(&l).zip(&f) {
+                err_l += ((flv - lv) as f64).powi(2);
+                err_f += ((flv - fv) as f64).powi(2);
             }
         }
         // Per-filter should not be dramatically worse (usually better).

@@ -30,50 +30,92 @@ pub fn conv1d_q(
     };
     out.clear();
     out.reserve(s_out * f);
+    // Perf pass P2: when the worst-case accumulator provably fits i32
+    // (int8 operands), accumulate in i32 lanes — twice the SIMD width of
+    // the generic i64 path. Semantically identical (no saturation can be
+    // hit before the epilogue); the boundary property test pins the two
+    // paths bit-identical right at the admission threshold.
+    if accum_fits_i32(qw, k * c, width) {
+        conv1d_q_i32(x, s, c, qw, k, f, stride, pad_lo, s_out, relu, width, out);
+    } else {
+        conv1d_q_i64(x, s, c, qw, k, f, stride, pad_lo, s_out, relu, width, out);
+    }
+    s_out
+}
+
+/// P2 fast path: i32 accumulator lanes. ONLY valid when
+/// [`accum_fits_i32`] admits the node (no intermediate overflow possible).
+#[allow(clippy::too_many_arguments)]
+fn conv1d_q_i32(
+    x: &[i32],
+    s: usize,
+    c: usize,
+    qw: &QNodeWeights,
+    k: usize,
+    f: usize,
+    stride: usize,
+    pad_lo: usize,
+    s_out: usize,
+    relu: bool,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
     let w = &qw.w;
     let uniform_shift = qw.shift.len() == 1;
     // Perf pass P1 (EXPERIMENTS.md §Perf): filter-contiguous accumulation.
     // The weight layout (k, c, f) is contiguous in f, so accumulating a
     // whole filter row per (tap, channel) turns the inner loop into a
     // vectorizable acc[f] += x * w[f] sweep instead of a stride-f gather.
-    //
-    // Perf pass P2: when the worst-case accumulator provably fits i32
-    // (int8 operands), accumulate in i32 lanes — twice the SIMD width of
-    // the generic i64 path. Semantically identical (no saturation can be
-    // hit before the epilogue).
-    if accum_fits_i32(qw, k * c, width) {
-        let mut acc = vec![0i32; f];
-        for o in 0..s_out {
-            let base = (o * stride) as isize - pad_lo as isize;
-            let k_lo = (-base).max(0) as usize;
-            let k_hi = ((s as isize - base).min(k as isize)).max(0) as usize;
-            for (a, &b) in acc.iter_mut().zip(&qw.b_acc) {
-                *a = b as i32;
-            }
-            for ki in k_lo..k_hi {
-                let xi = (base + ki as isize) as usize;
-                let xrow = &x[xi * c..(xi + 1) * c];
-                for (ci, &xv) in xrow.iter().enumerate() {
-                    if xv == 0 {
-                        continue; // ReLU sparsity: skip zero activations
-                    }
-                    let wrow = &w[(ki * c + ci) * f..(ki * c + ci + 1) * f];
-                    for (a, &wv) in acc.iter_mut().zip(wrow) {
-                        *a += xv * wv;
-                    }
+    let mut acc = vec![0i32; f];
+    for o in 0..s_out {
+        let base = (o * stride) as isize - pad_lo as isize;
+        let k_lo = (-base).max(0) as usize;
+        let k_hi = ((s as isize - base).min(k as isize)).max(0) as usize;
+        for (a, &b) in acc.iter_mut().zip(&qw.b_acc) {
+            *a = b as i32;
+        }
+        for ki in k_lo..k_hi {
+            let xi = (base + ki as isize) as usize;
+            let xrow = &x[xi * c..(xi + 1) * c];
+            for (ci, &xv) in xrow.iter().enumerate() {
+                if xv == 0 {
+                    continue; // ReLU sparsity: skip zero activations
                 }
-            }
-            for fi in 0..f {
-                let sh = if uniform_shift { qw.shift[0] } else { qw.shift[fi] };
-                let mut v = clamp_to(rescale(acc[fi] as i64, sh), width);
-                if relu && v < 0 {
-                    v = 0;
+                let wrow = &w[(ki * c + ci) * f..(ki * c + ci + 1) * f];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv;
                 }
-                out.push(v);
             }
         }
-        return s_out;
+        for fi in 0..f {
+            let sh = if uniform_shift { qw.shift[0] } else { qw.shift[fi] };
+            let mut v = clamp_to(rescale(acc[fi] as i64, sh), width);
+            if relu && v < 0 {
+                v = 0;
+            }
+            out.push(v);
+        }
     }
+}
+
+/// Generic path: i64 accumulator lanes, correct for every operand width.
+#[allow(clippy::too_many_arguments)]
+fn conv1d_q_i64(
+    x: &[i32],
+    s: usize,
+    c: usize,
+    qw: &QNodeWeights,
+    k: usize,
+    f: usize,
+    stride: usize,
+    pad_lo: usize,
+    s_out: usize,
+    relu: bool,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
+    let w = &qw.w;
+    let uniform_shift = qw.shift.len() == 1;
     let mut acc = vec![0i64; f];
     for o in 0..s_out {
         let base = (o * stride) as isize - pad_lo as isize;
@@ -105,7 +147,6 @@ pub fn conv1d_q(
             out.push(v);
         }
     }
-    s_out
 }
 
 /// P2 safety check: worst-case |accumulator| for `taps` MACCs of
@@ -462,6 +503,69 @@ mod tests {
         let mut out = Vec::new();
         maxpool_q(&x, &[2], 2, 2, false, &mut out);
         assert_eq!(out, vec![5, 7]);
+    }
+
+    #[test]
+    fn i32_fast_path_bit_identical_at_admission_boundary() {
+        use crate::util::check::property;
+        // Fuzz bias magnitude right around the accum_fits_i32 admission
+        // threshold (i32::MAX / 2 headroom guard) with full-scale int8
+        // operands, and pin the i32 lanes bit-identical to the i64 path
+        // whenever the node is admitted — plus that admission itself
+        // flips exactly at the boundary.
+        property(200, |g| {
+            let width = 8u32;
+            let k = g.usize_in(1, 5);
+            let c = g.usize_in(1, 4);
+            let f = g.usize_in(1, 4);
+            let s = g.usize_in(k, 8);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let taps = k * c;
+            let max_prod = (1i64 << (width - 1)) * (1i64 << (width - 1));
+            // Largest bias magnitude the guard still admits for this node.
+            let boundary = i32::MAX as i64 / 2 - taps as i64 * max_prod;
+
+            let w: Vec<i32> = (0..k * c * f).map(|_| g.i32_in(-128, 127)).collect();
+            let x: Vec<i32> = (0..s * c).map(|_| g.i32_in(-128, 127)).collect();
+            let shift = vec![g.i32_in(0, 20)];
+            let sign = if g.bool() { 1i64 } else { -1 };
+
+            // Just inside the boundary: must be admitted AND bit-exact.
+            let b_in: Vec<i64> = (0..f)
+                .map(|_| sign * (boundary - 1 - g.i32_in(0, 4096) as i64))
+                .collect();
+            let qw = QNodeWeights { w: w.clone(), w_n: vec![0], b_acc: b_in, shift: shift.clone() };
+            crate::prop_assert!(
+                super::accum_fits_i32(&qw, taps, width),
+                "bias just under the boundary must be admitted (taps={taps})"
+            );
+            let (pad_lo, s_out) = (0usize, (s - k) / stride + 1);
+            let mut fast = Vec::new();
+            let mut wide = Vec::new();
+            super::conv1d_q_i32(&x, s, c, &qw, k, f, stride, pad_lo, s_out, relu, width, &mut fast);
+            super::conv1d_q_i64(&x, s, c, &qw, k, f, stride, pad_lo, s_out, relu, width, &mut wide);
+            crate::prop_assert!(
+                fast == wide,
+                "i32/i64 divergence at taps={taps} f={f} shift={} fast={fast:?} wide={wide:?}",
+                shift[0]
+            );
+            // And through the public entry point (which routes to i32 here).
+            let mut routed = Vec::new();
+            conv1d_q(&x, s, c, &qw, k, f, stride, Padding::Valid, relu, width, &mut routed);
+            crate::prop_assert!(routed == wide, "public conv1d_q diverged from i64 reference");
+
+            // At/over the boundary: the guard must reject the fast path.
+            let b_out: Vec<i64> = (0..f)
+                .map(|_| sign * (boundary + g.i32_in(0, 4096) as i64))
+                .collect();
+            let qw_out = QNodeWeights { w, w_n: vec![0], b_acc: b_out, shift };
+            crate::prop_assert!(
+                !super::accum_fits_i32(&qw_out, taps, width),
+                "bias at the boundary must fall back to i64 (taps={taps})"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -458,6 +458,45 @@ impl Session {
         Prediction { class: argmax(logits), confidence: confidence(logits) }
     }
 
+    /// Classify a flattened batch (`inputs.len()` must be a multiple of
+    /// the input length); returns one [`Prediction`] per example.
+    pub fn classify_batch(&mut self, inputs: &[f32]) -> Vec<Prediction> {
+        let mut out = Vec::with_capacity(inputs.len() / self.plan.input_len.max(1));
+        self.classify_batch_into(inputs, &mut out);
+        out
+    }
+
+    /// Classify a flattened batch into a caller-owned buffer (appends).
+    /// The whole batch runs through this session's one preallocated
+    /// arena — no per-example clear/alloc — so a worker that reuses the
+    /// same `out` buffer across batches classifies allocation-free.
+    pub fn classify_batch_into(&mut self, inputs: &[f32], out: &mut Vec<Prediction>) {
+        let ilen = self.plan.input_len.max(1);
+        assert_eq!(inputs.len() % ilen, 0, "ragged batch");
+        out.reserve(inputs.len() / ilen);
+        self.classify_each_into(inputs.chunks_exact(ilen), out);
+    }
+
+    /// Classify each input slice in order (appends one [`Prediction`]
+    /// per example): the batch entry point for NON-contiguous inputs —
+    /// same one-arena, caller-owned-buffer contract as
+    /// [`Session::classify_batch_into`] without staging the examples into
+    /// a flat buffer first. Every slice must be exactly one input long;
+    /// a wrong-length example fails loudly instead of smearing payloads
+    /// across its neighbours.
+    pub fn classify_each_into<'a>(
+        &mut self,
+        inputs: impl IntoIterator<Item = &'a [f32]>,
+        out: &mut Vec<Prediction>,
+    ) {
+        for ex in inputs {
+            assert_eq!(ex.len(), self.plan.input_len, "example/input length mismatch");
+            self.runs += 1;
+            let logits = self.backend.run(&self.plan, &mut self.arena, ex);
+            out.push(Prediction { class: argmax(logits), confidence: confidence(logits) });
+        }
+    }
+
     /// Run a flattened batch; returns `n_examples * output_len` logits.
     pub fn run_batch(&mut self, inputs: &[f32]) -> Vec<f32> {
         let mut out = Vec::with_capacity(inputs.len() / self.plan.input_len.max(1)
@@ -639,6 +678,49 @@ mod tests {
         let batched = sess.run_batch(&flat);
         assert_eq!(singles, batched);
         assert_eq!(batched.len(), 3 * sess.output_len());
+    }
+
+    #[test]
+    fn classify_batch_equals_single_classifies() {
+        let g = randomized_graph(19);
+        let xs = inputs(5, 96, 20);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let mut sess = SessionBuilder::fixed_qmn(qg).build();
+        let singles: Vec<Prediction> = xs.iter().map(|x| sess.classify(x)).collect();
+        let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+        sess.run(&xs[0]); // settle the arena before capturing addresses
+        let ptrs = sess.arena().buffer_ptrs();
+        let batched = sess.classify_batch(&flat);
+        assert_eq!(batched.len(), singles.len());
+        for (a, b) in singles.iter().zip(&batched) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.confidence, b.confidence);
+        }
+        // The batch ran inside the same preallocated arena.
+        assert_eq!(ptrs, sess.arena().buffer_ptrs(), "classify_batch reallocated the arena");
+        // Non-contiguous batch entry point: same results, same arena.
+        let mut each = Vec::new();
+        sess.classify_each_into(xs.iter().map(|x| x.as_slice()), &mut each);
+        for (a, b) in singles.iter().zip(&each) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.confidence, b.confidence);
+        }
+        assert_eq!(ptrs, sess.arena().buffer_ptrs());
+        assert_eq!(sess.runs(), 5 + 1 + 5 + 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "example/input length mismatch")]
+    fn classify_each_rejects_wrong_length_examples() {
+        let g = randomized_graph(21);
+        let mut sess = SessionBuilder::float32(g).build();
+        let short = vec![0.0f32; 95]; // model input is 96
+        let mut out = Vec::new();
+        sess.classify_each_into([short.as_slice()], &mut out);
     }
 
     #[test]

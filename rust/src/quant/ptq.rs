@@ -21,7 +21,14 @@ pub struct QNodeWeights {
     /// Fractional bits of the weight format; len == 1 (per-layer/network)
     /// or == filters (per-filter).
     pub w_n: Vec<i32>,
-    /// Bias in the ACCUMULATOR scale: b_acc[f] = trunc(b * 2^(n_in + n_w[f])).
+    /// Bias in the ACCUMULATOR scale: b_acc[f] = round(b * 2^(n_in + n_w[f])),
+    /// round-to-nearest (ties away from zero). Unlike weight/activation
+    /// payloads, which keep the paper's Eq 3 truncation (pinned by the
+    /// Python quant-math contract), the bias is converted ONCE at deploy
+    /// time into the wide i64 accumulator — truncating here added a
+    /// systematic toward-zero offset to every accumulator with nothing to
+    /// cancel it. The generated model.c ships these exact integers
+    /// (`codegen::join_i64`), so Rust and C stay bit-exact either way.
     pub b_acc: Vec<i64>,
     /// Output rescale shift per filter: n_in + n_w[f] - n_out.
     pub shift: Vec<i32>,
@@ -64,10 +71,22 @@ impl QuantizedGraph {
         self.act_n[0]
     }
 
-    /// Bytes to store the weights at this width (ROM contribution).
+    /// Bytes to store the parameters at this width (ROM contribution):
+    /// weight payloads at the payload container width, biases at the
+    /// 8-byte accumulator scale — both the Rust engine (`b_acc: Vec<i64>`)
+    /// and the generated model.c (`long_number_t b_*[]`) store biases as
+    /// i64, so charging them at payload width undercounted ROM.
     pub fn weight_bytes(&self) -> usize {
-        let per = if self.width <= 8 { 1 } else if self.width <= 16 { 2 } else { 4 };
-        self.graph.param_count() * per
+        let per = self.payload_bytes();
+        self.weights
+            .values()
+            .map(|qw| qw.w.len() * per + qw.b_acc.len() * 8)
+            .sum()
+    }
+
+    /// Bytes per weight payload element (the C `number_t`).
+    pub fn payload_bytes(&self) -> usize {
+        if self.width <= 8 { 1 } else if self.width <= 16 { 2 } else { 4 }
     }
 }
 
@@ -155,7 +174,7 @@ pub fn quantize(graph: &Graph, stats: &ActStats, spec: QuantSpec) -> QuantizedGr
         let mut shift = Vec::with_capacity(w_n.len().max(1));
         for f in 0..filters {
             let n_w = if w_n.len() == 1 { w_n[0] } else { w_n[f] };
-            b_acc.push((b.data[f] as f64 * f64::powi(2.0, n_in + n_w)).trunc() as i64);
+            b_acc.push((b.data[f] as f64 * f64::powi(2.0, n_in + n_w)).round() as i64);
         }
         for &n_w in &w_n {
             shift.push(n_in + n_w - n_out);
@@ -298,11 +317,66 @@ mod tests {
     }
 
     #[test]
-    fn weight_bytes_scale_with_width() {
+    fn weight_bytes_scale_with_width_biases_fixed_at_i64() {
         let g = randomized(13);
         let stats = calibrated(&g, 14);
         let q8 = quantize(&g, &stats, QuantSpec::int8_per_layer());
         let q16 = quantize(&g, &stats, QuantSpec::int16_per_layer());
-        assert_eq!(q16.weight_bytes(), 2 * q8.weight_bytes());
+        // Weight payloads double with the width; bias storage is 8 bytes
+        // per filter at EVERY width (i64 accumulator scale, matching the
+        // engine's b_acc and the generated C long_number_t arrays).
+        let bias_bytes: usize = q8.weights.values().map(|qw| qw.b_acc.len() * 8).sum();
+        assert!(bias_bytes > 0);
+        assert_eq!(
+            q16.weight_bytes() - bias_bytes,
+            2 * (q8.weight_bytes() - bias_bytes)
+        );
+        // Pre-fix the estimate charged biases at payload width: the i64
+        // ROM estimate must exceed that undercount.
+        assert!(q8.weight_bytes() > q8.graph.param_count());
+        assert_eq!(
+            q8.weight_bytes(),
+            q8.weights.values().map(|qw| qw.w.len() + qw.b_acc.len() * 8).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn bias_conversion_rounds_to_nearest_at_both_widths() {
+        // Fixed network-wide formats pin n_in and n_w exactly, so the
+        // accumulator scale 2^(n_in + n_w) is known in closed form.
+        for (width, n, bias, expect) in [
+            // width 8, Q8.0: scale 2^0 = 1. round(0.7) = 1, round(-0.7) = -1
+            // (trunc gave 0 / 0 — the pre-fix toward-zero bias).
+            (8u32, 0i32, 0.7f32, 1i64),
+            (8, 0, -0.7, -1),
+            // ties away from zero, like C round():
+            (8, 0, 1.5, 2),
+            (8, 0, -1.5, -2),
+            // width 16, Q7.9: scale 2^(9+9) = 2^18. 2.6 payload units →
+            // round = 3 (trunc gave 2).
+            (16, 9, 2.6 * f32::powi(2.0, -18), 3),
+            (16, 9, -2.6 * f32::powi(2.0, -18), -3),
+        ] {
+            let mut g = randomized(15);
+            let conv = g
+                .nodes
+                .iter()
+                .position(|nd| matches!(nd.kind, LayerKind::Conv { .. }))
+                .unwrap();
+            if let LayerKind::Conv { b, .. } = &mut g.nodes[conv].kind {
+                b.data[0] = bias;
+            }
+            let spec = QuantSpec {
+                width,
+                granularity: Granularity::PerNetwork,
+                fixed_format: Some(QFormat::new(width, n)),
+            };
+            let stats = ActStats::new(g.nodes.len());
+            let qg = quantize(&g, &stats, spec);
+            assert_eq!(
+                qg.weights[&conv].b_acc[0], expect,
+                "width={width} n={n} bias={bias}"
+            );
+        }
     }
 }
