@@ -140,8 +140,11 @@ def _maxpool(x, dims: int, size: int = 2):
     else:
         window = (1, size, size, 1)
         strides = (1, size, size, 1)
+    # SAME: odd spatial dims keep a remainder window (padded with -inf, so
+    # the max ignores it) instead of silently dropping the tail samples —
+    # mirrored exactly by the Rust/C engines (Graph::pool_geometry).
     return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, window, strides, "VALID"
+        x, -jnp.inf, jax.lax.max, window, strides, "SAME"
     )
 
 

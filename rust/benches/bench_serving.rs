@@ -56,8 +56,18 @@ fn requests(n: usize, seed: u64) -> Vec<Request> {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke")
-        || std::env::var("MICROAI_BENCH_SMOKE").is_ok();
+    let mut smoke = std::env::var("MICROAI_BENCH_SMOKE").is_ok();
+    let mut out_path = String::from("BENCH_serving.json");
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            "--out" => out_path = argv.next().expect("--out needs a path"),
+            "--bench" => {} // appended by `cargo bench`
+            other => eprintln!("bench_serving: ignoring unknown arg {other}"),
+        }
+    }
+    let mut json_rows: Vec<microai::util::json::Json> = Vec::new();
     // --smoke: exactly one timed iteration per arm (CI exercises the
     // whole path without paying for statistics).
     let b = if smoke {
@@ -104,6 +114,15 @@ fn main() {
             "  -> sharded/single speedup at w={workers}: {:.2}x",
             r.median_ns / sharded_ns.max(1.0)
         );
+        json_rows.push(microai::util::json::Json::obj(vec![
+            ("workers", microai::util::json::Json::num(workers as f64)),
+            ("sharded_ns", microai::util::json::Json::num(sharded_ns)),
+            ("single_channel_ns", microai::util::json::Json::num(r.median_ns)),
+            (
+                "sharded_speedup",
+                microai::util::json::Json::num(r.median_ns / sharded_ns.max(1.0)),
+            ),
+        ]));
     }
 
     // Queueing-model flavor: one saturated run, reported not timed.
@@ -129,4 +148,27 @@ fn main() {
             .collect::<Vec<_>>()
             .join(" "),
     );
+
+    // Machine-readable trajectory (uploaded as a CI artifact).
+    use microai::util::json::Json;
+    let doc = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("bench", Json::str("serving")),
+        ("mode", Json::str(if smoke { "smoke" } else { "full" })),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("scheduler_race", Json::Arr(json_rows)),
+        (
+            "saturated",
+            Json::obj(vec![
+                ("total_p50_ms", Json::num(lat.p50)),
+                ("queue_p50_ms", Json::num(s.queue_latency.p50)),
+                ("device_p50_ms", Json::num(dev.p50)),
+                ("queue_depth_p99", Json::num(s.queue_depth.p99)),
+            ]),
+        ),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write(&out_path, text).expect("write bench json");
+    println!("wrote {out_path}");
 }

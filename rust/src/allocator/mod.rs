@@ -24,6 +24,13 @@ pub struct Allocation {
     pub pool_of: Vec<usize>,
     /// Element capacity of each pool.
     pub pool_elems: Vec<usize>,
+    /// HOST-side im2col/staging scratch (elements) for the GEMM kernel
+    /// lowering (`nn::gemm`): the lifetime analysis extension — a packing
+    /// panel is live only inside one node's execution, so a single buffer
+    /// sized to the worst-case node serves the whole graph. Preallocated
+    /// by the Session arena; NOT part of the device RAM model
+    /// ([`Allocation::ram_bytes`]), which prices the generated C.
+    pub gemm_scratch_elems: usize,
 }
 
 impl Allocation {
@@ -95,7 +102,8 @@ pub fn allocate(graph: &Graph) -> Allocation {
         occupant[p] = Some(node.id);
         pool_elems[p] = pool_elems[p].max(elems);
     }
-    Allocation { pool_of, pool_elems }
+    let gemm_scratch_elems = crate::nn::gemm::scratch_elems(graph);
+    Allocation { pool_of, pool_elems, gemm_scratch_elems }
 }
 
 /// Check the §5.7 invariant: at no point does writing a node's output
@@ -181,6 +189,17 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn gemm_scratch_recorded_but_not_charged_to_device_ram() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("r", 1, &[128, 9], 6, 16));
+        let a = allocate(&g);
+        assert_eq!(a.gemm_scratch_elems, crate::nn::gemm::scratch_elems(&g));
+        assert!(a.gemm_scratch_elems > 0);
+        // The device RAM model (§5.7 pools at device dtype) is untouched
+        // by the host-side packing scratch.
+        assert_eq!(a.ram_bytes(1), a.pool_elems.iter().sum::<usize>());
     }
 
     #[test]

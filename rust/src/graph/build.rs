@@ -193,9 +193,12 @@ mod tests {
     #[test]
     fn resnet_smnist_odd_sizes() {
         let g = resnet_v1_6_shapes("smnist", 1, &[39, 13], 10, 8);
-        // 39 -> pool 19 -> pool 9 -> stride2 SAME ceil(9/2)=5
+        // SAME-window pooling: 39 -> pool 20 -> pool 10 -> stride2 SAME 5
+        // (the remainder sample is kept, not dropped).
         let add2 = g.nodes.iter().find(|n| n.name == "add2").unwrap();
         assert_eq!(add2.out_shape, vec![5, 8]);
+        let p1 = g.nodes.iter().find(|n| n.name == "pool1").unwrap();
+        assert_eq!(p1.out_shape, vec![20, 8]);
     }
 
     #[test]

@@ -193,7 +193,10 @@ impl Graph {
                 let ish = in_shape(0);
                 let mut out = self.spatial(&ish);
                 for o in out.iter_mut() {
-                    *o /= size; // VALID, stride == size
+                    // SAME-style ceil: odd spatial dims keep a remainder
+                    // window instead of silently dropping the tail samples
+                    // (Graph::pool_geometry; kernels and codegen agree).
+                    *o = o.div_ceil(*size);
                 }
                 out.push(*ish.last().unwrap());
                 out
@@ -225,6 +228,26 @@ impl Graph {
         let out = in_size.div_ceil(stride);
         let total = ((out - 1) * stride + kernel).saturating_sub(in_size);
         (total / 2, total - total / 2)
+    }
+
+    /// Pooling geometry with the SAME-style remainder window: ceil(s/size)
+    /// windows, padding distributed exactly like XLA `reduce_window` with
+    /// "SAME" (lo = total/2 — 0 for the ubiquitous size-2 pools, which
+    /// places the odd remainder at the end). Returns (pad_lo, out_size);
+    /// window `o` covers `[o*size - pad_lo, o*size - pad_lo + size) ∩ [0, s)`.
+    pub fn pool_geometry(in_size: usize, size: usize) -> (usize, usize) {
+        (Self::same_padding(in_size, size, size).0, in_size.div_ceil(size))
+    }
+
+    /// Clamped in-range sample interval `[lo, hi)` of pooling window `o`
+    /// under [`Graph::pool_geometry`]. The single definition every Rust
+    /// pooling kernel uses, so the window rule cannot drift between
+    /// kernels (the C emitter's remainder loop mirrors it).
+    pub fn pool_window(o: usize, size: usize, pad_lo: usize, in_size: usize) -> (usize, usize) {
+        let base = (o * size) as isize - pad_lo as isize;
+        let lo = base.max(0) as usize;
+        let hi = (base + size as isize).min(in_size as isize) as usize;
+        (lo, hi)
     }
 
     /// Human-readable topology dump (debugging / docs).
@@ -288,10 +311,14 @@ mod tests {
     }
 
     #[test]
-    fn odd_pool_floors() {
+    fn odd_pool_keeps_remainder_window() {
+        // Pre-fix behaviour floored to 19, silently dropping sample 38.
         let mut g = Graph::new("t", 1, &[39, 13], 10);
         let p = g.add("p", LayerKind::MaxPool { size: 2 }, vec![0]);
-        assert_eq!(g.node(p).out_shape, vec![19, 13]);
+        assert_eq!(g.node(p).out_shape, vec![20, 13]);
+        assert_eq!(Graph::pool_geometry(39, 2), (0, 20));
+        assert_eq!(Graph::pool_geometry(40, 2), (0, 20));
+        assert_eq!(Graph::pool_geometry(10, 3), (1, 4)); // lo pad like XLA SAME
     }
 
     #[test]

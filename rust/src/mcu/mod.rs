@@ -10,5 +10,5 @@ pub mod paper_data;
 
 pub use board::{Board, BOARDS, NUCLEO_L452RE_P, SPARKFUN_EDGE};
 pub use cost::{energy_uwh, har_graph, LatencyModel, RomModel};
-pub use opcounts::{graph_ops, layer_count, node_ops, OpCounts};
+pub use opcounts::{graph_ops, layer_count, node_gemm_shape, node_ops, GemmShape, OpCounts};
 pub use paper_data::DType;

@@ -73,14 +73,20 @@ pub fn node_ops(graph: &Graph, id: usize) -> OpCounts {
             let relu_sat = if node.fused_relu { o } else { 0 };
             OpCounts { macc: i * o, add: 0, shift: 2 * o, sat: o + relu_sat, div: 0 }
         }
-        LayerKind::MaxPool { size } => {
-            let k = (*size as u64).pow(graph.dims as u32);
+        LayerKind::MaxPool { .. } => {
+            // stride == size ⇒ the SAME-style windows partition the input,
+            // so every input sample is compared exactly once — in_elems,
+            // which equals out_elems·size^dims on even dims and stays
+            // correct for the ceil remainder windows on odd dims.
+            let in_elems: u64 =
+                graph.nodes[node.inputs[0]].out_shape.iter().product::<usize>() as u64;
             let relu_sat = if node.fused_relu { out_elems } else { 0 };
-            OpCounts { macc: 0, add: 0, shift: 0, sat: out_elems * k + relu_sat, div: 0 }
+            OpCounts { macc: 0, add: 0, shift: 0, sat: in_elems + relu_sat, div: 0 }
         }
-        LayerKind::AvgPool { size } => {
-            let k = (*size as u64).pow(graph.dims as u32);
-            OpCounts { macc: 0, add: out_elems * k, shift: 0, sat: 0, div: out_elems }
+        LayerKind::AvgPool { .. } => {
+            let in_elems: u64 =
+                graph.nodes[node.inputs[0]].out_shape.iter().product::<usize>() as u64;
+            OpCounts { macc: 0, add: in_elems, shift: 0, sat: 0, div: out_elems }
         }
         LayerKind::GlobalAvgPool => {
             let in_elems: u64 =
@@ -106,6 +112,44 @@ pub fn node_ops(graph: &Graph, id: usize) -> OpCounts {
             sat: out_elems,
             ..Default::default()
         },
+    }
+}
+
+/// GEMM-lowering dims of a weighted node (HOST engine accounting, not the
+/// device cost model): the im2col + blocked-GEMM path computes
+/// C(m×n) = A(m×k)·B(k×n) with `pack_elems` panel copies per inference
+/// (`nn::gemm`). `m·n·k` equals the Table A6 MACC count, which
+/// `bench_hotpath` uses to normalize per-shape throughput.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Output positions (1 for dense).
+    pub m: u64,
+    /// Filters / output units.
+    pub n: u64,
+    /// Taps: k·C (1-D), kh·kw·C (2-D), input units (dense).
+    pub k: u64,
+    /// im2col elements packed per inference (0: dense needs no packing).
+    pub pack_elems: u64,
+}
+
+/// GEMM dims for node `id`; None for non-weighted layers.
+pub fn node_gemm_shape(graph: &Graph, id: usize) -> Option<GemmShape> {
+    let node = &graph.nodes[id];
+    match &node.kind {
+        LayerKind::Conv { w, .. } => {
+            let n = *w.shape.last().unwrap() as u64;
+            let k: u64 = w.shape[..w.shape.len() - 1].iter().product::<usize>() as u64;
+            let m: u64 =
+                node.out_shape[..node.out_shape.len() - 1].iter().product::<usize>() as u64;
+            Some(GemmShape { m, n, k, pack_elems: m * k })
+        }
+        LayerKind::Dense { w, .. } => Some(GemmShape {
+            m: 1,
+            n: w.shape[1] as u64,
+            k: w.shape[0] as u64,
+            pack_elems: 0,
+        }),
+        _ => None,
     }
 }
 
@@ -187,6 +231,29 @@ mod tests {
         // epilogue, so total sat count is unchanged, but layer count drops.
         assert!(layer_count(&fused) < layer_count(&g));
         assert_eq!(graph_ops(&fused).macc, graph_ops(&g).macc);
+    }
+
+    #[test]
+    fn gemm_shape_maccs_match_table_a6() {
+        // The GEMM lowering does exactly the Table A6 MACC work: m·n·k
+        // equals the formula count for every weighted node, 1-D and 2-D.
+        for g in [
+            deploy_pipeline(&resnet_v1_6_shapes("t", 1, &[128, 9], 6, 16)),
+            deploy_pipeline(&resnet_v1_6_shapes("g", 2, &[16, 16, 3], 5, 8)),
+        ] {
+            let mut weighted = 0;
+            for n in &g.nodes {
+                if let Some(gs) = node_gemm_shape(&g, n.id) {
+                    weighted += 1;
+                    assert_eq!(gs.m * gs.n * gs.k, node_ops(&g, n.id).macc, "{}", n.name);
+                    match &n.kind {
+                        LayerKind::Dense { .. } => assert_eq!(gs.pack_elems, 0),
+                        _ => assert_eq!(gs.pack_elems, gs.m * gs.k),
+                    }
+                }
+            }
+            assert_eq!(weighted, 7); // 6 convs + 1 dense in ResNetv1-6
+        }
     }
 
     #[test]

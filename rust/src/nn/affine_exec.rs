@@ -1,10 +1,17 @@
 //! TFLite-semantics affine int8 executor (Appendix B baseline + the
 //! Cube.AI engine model's numeric core): zero-point-corrected MACCs in
 //! int32, gemmlowp requantization per filter, asymmetric activations.
+//!
+//! The conv/dense kernels here are the NAIVE REFERENCE implementations
+//! (`*_ref`): the executor runs the im2col + blocked-GEMM lowerings in
+//! [`super::gemm`] (zero-point pre-subtracted at pack time), which are
+//! property-tested bit-exact against these.
 
 use crate::graph::ir::{LayerKind, Padding};
 use crate::graph::Graph;
-use crate::quant::affine::{requantize, AffineQuantizedGraph};
+use crate::quant::affine::{requantize, AffineNodeWeights, AffineQuantizedGraph};
+
+use super::gemm;
 
 /// Execute the affine-quantized graph on a float input; returns float
 /// logits (dequantized at the output tensor's affine params).
@@ -19,13 +26,15 @@ pub fn run(aq: &AffineQuantizedGraph, input: &[f32]) -> Vec<f32> {
     let node_elems = crate::nn::session::node_elems(graph);
     let mut pools: Vec<Vec<i32>> = vec![Vec::new(); alloc.n_pools()];
     let mut qinput = Vec::new();
+    let mut scratch = Vec::new();
     let mut output = Vec::new();
-    run_pooled(aq, input, &alloc, &node_elems, &mut qinput, &mut pools, &mut output);
+    run_pooled(aq, input, &alloc, &node_elems, &mut qinput, &mut pools, &mut scratch, &mut output);
     output
 }
 
 /// Pooled core shared by [`run`] and the affine [`crate::nn::session`]
 /// backend (see `int_exec::run_pooled` for the pool discipline).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pooled(
     aq: &AffineQuantizedGraph,
     input: &[f32],
@@ -33,6 +42,7 @@ pub(crate) fn run_pooled(
     node_elems: &[usize],
     qinput: &mut Vec<i32>,
     pools: &mut [Vec<i32>],
+    scratch: &mut Vec<i32>,
     output: &mut Vec<f32>,
 ) {
     let graph = &aq.graph;
@@ -58,15 +68,18 @@ pub(crate) fn run_pooled(
                 LayerKind::Conv { w, stride, padding, .. } => {
                     let src_id = node.inputs[0];
                     let ish = &graph.nodes[src_id].out_shape;
-                    conv_affine(
-                        aq, node.id, src_id, src(src_id), ish, w.shape.as_slice(),
-                        *stride, *padding, node.fused_relu, graph.dims, &mut out,
+                    gemm::conv_affine_gemm(
+                        src(src_id), ish, &w.shape, &aq.weights[&node.id],
+                        aq.act[src_id].zero_point, aq.act[node.id].zero_point,
+                        *stride, *padding, node.fused_relu, graph.dims, scratch, &mut out,
                     );
                 }
                 LayerKind::Dense { w, .. } => {
-                    dense_affine(
-                        aq, node.id, node.inputs[0], src(node.inputs[0]), w.shape[1],
-                        node.fused_relu, &mut out,
+                    let src_id = node.inputs[0];
+                    gemm::dense_affine_gemm(
+                        src(src_id), &aq.weights[&node.id],
+                        aq.act[src_id].zero_point, aq.act[node.id].zero_point,
+                        w.shape[1], node.fused_relu, scratch, &mut out,
                     );
                 }
                 LayerKind::MaxPool { size } => {
@@ -143,23 +156,22 @@ pub(crate) fn run_pooled(
     }
 }
 
+/// Naive reference affine conv (1-D or 2-D), kept for the GEMM property
+/// tests and the `bench_hotpath` kernel race.
 #[allow(clippy::too_many_arguments)]
-fn conv_affine(
-    aq: &AffineQuantizedGraph,
-    id: usize,
-    src_id: usize,
+pub fn conv_affine_ref(
     x: &[i32],
     ish: &[usize],
     wshape: &[usize],
+    qw: &AffineNodeWeights,
+    zp_in: i32,
+    zp_out: i32,
     stride: usize,
     padding: Padding,
     relu: bool,
     dims: usize,
     out: &mut Vec<i32>,
 ) {
-    let qw = &aq.weights[&id];
-    let zp_in = aq.act[src_id].zero_point;
-    let zp_out = aq.act[id].zero_point;
     out.clear();
     if dims == 1 {
         let (s, c) = (ish[0], ish[1]);
@@ -239,19 +251,16 @@ fn conv_affine(
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn dense_affine(
-    aq: &AffineQuantizedGraph,
-    id: usize,
-    src_id: usize,
+/// Naive reference affine dense.
+pub fn dense_affine_ref(
     x: &[i32],
+    qw: &AffineNodeWeights,
+    zp_in: i32,
+    zp_out: i32,
     o: usize,
     relu: bool,
     out: &mut Vec<i32>,
 ) {
-    let qw = &aq.weights[&id];
-    let zp_in = aq.act[src_id].zero_point;
-    let zp_out = aq.act[id].zero_point;
     let i = x.len();
     out.clear();
     out.reserve(o);

@@ -1,12 +1,17 @@
 //! Float32 layer implementations (channels-last), matching XLA semantics so
 //! Rust-side inference reproduces the HLO `fwd` artifacts bit-for-bit up to
 //! summation order.
+//!
+//! The conv/dense kernels here are the NAIVE REFERENCE implementations
+//! (`*_ref`): the executors run the im2col + blocked-GEMM lowerings in
+//! [`super::gemm`], which are property-tested ULP-close against these.
 
 use crate::graph::ir::Padding;
 use crate::graph::Graph;
 
-/// 1-D convolution: x (S, C), w (K, C, F), b (F) -> (S_out, F).
-pub fn conv1d(
+/// 1-D convolution, reference kernel: x (S, C), w (K, C, F), b (F) ->
+/// (S_out, F).
+pub fn conv1d_ref(
     x: &[f32],
     s: usize,
     c: usize,
@@ -46,9 +51,10 @@ pub fn conv1d(
     s_out
 }
 
-/// 2-D convolution: x (H, W, C), w (KH, KW, C, F), b (F) -> (H_out, W_out, F).
+/// 2-D convolution, reference kernel: x (H, W, C), w (KH, KW, C, F),
+/// b (F) -> (H_out, W_out, F).
 #[allow(clippy::too_many_arguments)]
-pub fn conv2d(
+pub fn conv2d_ref(
     x: &[f32],
     h: usize,
     wdt: usize,
@@ -103,8 +109,8 @@ pub fn conv2d(
     (h_out, w_out)
 }
 
-/// Dense: x (I,), w (I, O), b (O) -> (O,).
-pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, out: &mut Vec<f32>) {
+/// Dense, reference kernel: x (I,), w (I, O), b (O) -> (O,).
+pub fn dense_ref(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, out: &mut Vec<f32>) {
     let i = x.len();
     out.clear();
     out.reserve(o);
@@ -117,18 +123,21 @@ pub fn dense(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, out: &mut Ve
     }
 }
 
-/// Max pooling over `spatial` dims, VALID, stride == size, fused ReLU option.
+/// Max pooling over `spatial` dims, stride == size, fused ReLU option.
+/// SAME-style windows: odd dims keep a remainder window over the actual
+/// in-range samples (`Graph::pool_geometry`) instead of dropping them.
 pub fn maxpool(x: &[f32], spatial: &[usize], c: usize, size: usize, relu: bool, out: &mut Vec<f32>) {
     out.clear();
     match spatial.len() {
         1 => {
             let s = spatial[0];
-            let s_out = s / size;
+            let (lo, s_out) = Graph::pool_geometry(s, size);
             for o in 0..s_out {
+                let (x_lo, x_hi) = Graph::pool_window(o, size, lo, s);
                 for ci in 0..c {
                     let mut m = f32::NEG_INFINITY;
-                    for ki in 0..size {
-                        m = m.max(x[(o * size + ki) * c + ci]);
+                    for xi in x_lo..x_hi {
+                        m = m.max(x[xi * c + ci]);
                     }
                     out.push(if relu { m.max(0.0) } else { m });
                 }
@@ -136,14 +145,17 @@ pub fn maxpool(x: &[f32], spatial: &[usize], c: usize, size: usize, relu: bool, 
         }
         2 => {
             let (h, w) = (spatial[0], spatial[1]);
-            let (ho, wo) = (h / size, w / size);
+            let (hlo, ho) = Graph::pool_geometry(h, size);
+            let (wlo, wo) = Graph::pool_geometry(w, size);
             for oh in 0..ho {
+                let (h_lo, h_hi) = Graph::pool_window(oh, size, hlo, h);
                 for ow in 0..wo {
+                    let (w_lo, w_hi) = Graph::pool_window(ow, size, wlo, w);
                     for ci in 0..c {
                         let mut m = f32::NEG_INFINITY;
-                        for ki in 0..size {
-                            for kj in 0..size {
-                                m = m.max(x[((oh * size + ki) * w + ow * size + kj) * c + ci]);
+                        for hi in h_lo..h_hi {
+                            for wi in w_lo..w_hi {
+                                m = m.max(x[(hi * w + wi) * c + ci]);
                             }
                         }
                         out.push(if relu { m.max(0.0) } else { m });
@@ -155,33 +167,40 @@ pub fn maxpool(x: &[f32], spatial: &[usize], c: usize, size: usize, relu: bool, 
     }
 }
 
-/// Average pooling, VALID, stride == size.
+/// Average pooling, stride == size; SAME-style remainder windows average
+/// over the actual in-range sample count (padding excluded).
 pub fn avgpool(x: &[f32], spatial: &[usize], c: usize, size: usize, out: &mut Vec<f32>) {
     out.clear();
     match spatial.len() {
         1 => {
-            let s_out = spatial[0] / size;
+            let s = spatial[0];
+            let (lo, s_out) = Graph::pool_geometry(s, size);
             for o in 0..s_out {
+                let (x_lo, x_hi) = Graph::pool_window(o, size, lo, s);
+                let denom = (x_hi - x_lo) as f32;
                 for ci in 0..c {
                     let mut a = 0.0;
-                    for ki in 0..size {
-                        a += x[(o * size + ki) * c + ci];
+                    for xi in x_lo..x_hi {
+                        a += x[xi * c + ci];
                     }
-                    out.push(a / size as f32);
+                    out.push(a / denom);
                 }
             }
         }
         2 => {
             let (h, w) = (spatial[0], spatial[1]);
-            let (ho, wo) = (h / size, w / size);
-            let denom = (size * size) as f32;
+            let (hlo, ho) = Graph::pool_geometry(h, size);
+            let (wlo, wo) = Graph::pool_geometry(w, size);
             for oh in 0..ho {
+                let (h_lo, h_hi) = Graph::pool_window(oh, size, hlo, h);
                 for ow in 0..wo {
+                    let (w_lo, w_hi) = Graph::pool_window(ow, size, wlo, w);
+                    let denom = ((h_hi - h_lo) * (w_hi - w_lo)) as f32;
                     for ci in 0..c {
                         let mut a = 0.0;
-                        for ki in 0..size {
-                            for kj in 0..size {
-                                a += x[((oh * size + ki) * w + ow * size + kj) * c + ci];
+                        for hi in h_lo..h_hi {
+                            for wi in w_lo..w_hi {
+                                a += x[(hi * w + wi) * c + ci];
                             }
                         }
                         out.push(a / denom);
@@ -254,7 +273,7 @@ mod tests {
         let w = [1.0, 0.0, 0.0, 1.0]; // (1, 2, 2) identity
         let b = [0.0, 0.0];
         let mut out = Vec::new();
-        let s_out = conv1d(&x, 2, 2, &w, 1, 2, &b, 1, Padding::Same, false, &mut out);
+        let s_out = conv1d_ref(&x, 2, 2, &w, 1, 2, &b, 1, Padding::Same, false, &mut out);
         assert_eq!(s_out, 2);
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
     }
@@ -266,7 +285,7 @@ mod tests {
         let w = [1.0, 1.0, 1.0];
         let b = [0.0];
         let mut out = Vec::new();
-        conv1d(&x, 4, 1, &w, 3, 1, &b, 1, Padding::Same, false, &mut out);
+        conv1d_ref(&x, 4, 1, &w, 3, 1, &b, 1, Padding::Same, false, &mut out);
         assert_eq!(out, vec![3.0, 6.0, 9.0, 7.0]);
     }
 
@@ -276,7 +295,7 @@ mod tests {
         let w = [1.0, 1.0, 1.0];
         let b = [0.0];
         let mut out = Vec::new();
-        let s_out = conv1d(&x, 9, 1, &w, 3, 1, &b, 2, Padding::Same, false, &mut out);
+        let s_out = conv1d_ref(&x, 9, 1, &w, 3, 1, &b, 2, Padding::Same, false, &mut out);
         assert_eq!(s_out, 5); // ceil(9/2)
     }
 
@@ -286,7 +305,7 @@ mod tests {
         let w = [1.0];
         let b = [0.0];
         let mut out = Vec::new();
-        conv1d(&x, 2, 1, &w, 1, 1, &b, 1, Padding::Same, true, &mut out);
+        conv1d_ref(&x, 2, 1, &w, 1, 1, &b, 1, Padding::Same, true, &mut out);
         assert_eq!(out, vec![0.0, 0.0]);
     }
 
@@ -296,16 +315,18 @@ mod tests {
         let w = [1.0, 3.0, 2.0, 4.0]; // (2, 2): w[i][o]
         let b = [0.5, -0.5];
         let mut out = Vec::new();
-        dense(&x, &w, &b, 2, false, &mut out);
+        dense_ref(&x, &w, &b, 2, false, &mut out);
         assert_eq!(out, vec![1.0 + 4.0 + 0.5, 3.0 + 8.0 - 0.5]);
     }
 
     #[test]
-    fn maxpool_1d() {
+    fn maxpool_1d_keeps_remainder_window() {
         let x = [1.0, 5.0, 3.0, 2.0, 9.0, 0.0]; // (3, 2)
         let mut out = Vec::new();
         maxpool(&x, &[3], 2, 2, false, &mut out);
-        assert_eq!(out, vec![3.0, 5.0]); // floor(3/2)=1 window over first 2 rows
+        // Window [0,2) then the remainder window [2,3) — pre-fix the last
+        // row was silently dropped and the output was [3.0, 5.0].
+        assert_eq!(out, vec![3.0, 5.0, 9.0, 0.0]);
     }
 
     #[test]
@@ -318,6 +339,21 @@ mod tests {
         let mut out = Vec::new();
         maxpool(&x, &[2, 2], 1, 2, false, &mut out);
         assert_eq!(out, vec![4.0]);
+    }
+
+    #[test]
+    fn maxpool_2d_odd_keeps_remainder() {
+        #[rustfmt::skip]
+        let x = [
+            1.0, 2.0, 9.0,
+            3.0, 4.0, 0.0,
+            7.0, 1.0, 5.0,
+        ]; // (3, 3, 1)
+        let mut out = Vec::new();
+        maxpool(&x, &[3, 3], 1, 2, false, &mut out);
+        // Windows: [0..2)x[0..2) = 4, [0..2)x[2..3) = 9,
+        //          [2..3)x[0..2) = 7, [2..3)x[2..3) = 5.
+        assert_eq!(out, vec![4.0, 9.0, 7.0, 5.0]);
     }
 
     #[test]
@@ -352,6 +388,16 @@ mod tests {
         let mut out = Vec::new();
         avgpool(&x, &[4], 1, 2, &mut out);
         assert_eq!(out, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn avgpool_1d_odd_averages_actual_count() {
+        let x = [2.0, 4.0, 6.0, 8.0, 10.0]; // (5,1)
+        let mut out = Vec::new();
+        avgpool(&x, &[5], 1, 2, &mut out);
+        // Remainder window holds one sample; its average is that sample,
+        // not sample/size.
+        assert_eq!(out, vec![3.0, 7.0, 10.0]);
     }
 
     #[test]

@@ -1,0 +1,1389 @@
+//! im2col + blocked-GEMM kernel core shared by ALL conv/dense backends.
+//!
+//! The paper's MicroAI engine wins on kernel efficiency; this module is
+//! the Rust-side answer: every convolution is lowered to a matrix
+//! multiply over an im2col-packed activation panel, and every dense layer
+//! is the degenerate m = 1 case of the same multiply. One register-blocked
+//! microkernel family serves three numeric flavors:
+//!
+//! - [`gemm_f32`] — float32 (the calibration / reference engine),
+//! - [`gemm_i32`] — fixed-point Qm.n with i32 accumulator lanes (admitted
+//!   per node by [`int_ops::accum_fits_i32`], twice the SIMD width),
+//! - [`gemm_i64`] — fixed-point Qm.n wide accumulators and the affine
+//!   (TFLite-semantics) engine, whose zero-point-shifted operands ride the
+//!   same i64 kernel.
+//!
+//! Semantics contract (pinned by the property tests below): the integer
+//! lowerings are **bit-exact** against the naive `*_ref` kernels in
+//! [`super::int_ops`] / [`super::affine_exec`] — integer addition is
+//! associative, and the i32 admission guard proves no intermediate
+//! overflow for any summation order — while the f32 lowering is
+//! **ULP-bounded** (reordered summation) against [`super::float_ops`].
+//!
+//! Memory contract: packing panels are carved from the Session arena.
+//! [`scratch_elems`] is the lifetime fact the allocator records per graph
+//! (§5.7 spirit: a panel is live only inside one node's execution, so a
+//! single worst-case buffer serves every node); `Arena::preallocated`
+//! reserves it once, so steady-state requests never allocate.
+//!
+//! Layout: for a conv with weights (k, C, F) (or (kh, kw, C, F)), the
+//! packed panel row for output position `o` lists taps in (ki, ci) (or
+//! (ki, kj, ci)) order — exactly the row order of the weight matrix viewed
+//! as (K = k·C, N = F) row-major. The GEMM output C(m×n) is therefore the
+//! channels-last activation block with no epilogue transpose.
+
+use crate::fixedpoint::ops::{clamp_to, rescale};
+use crate::graph::ir::{Graph, LayerKind, Padding};
+use crate::quant::affine::{requantize, AffineNodeWeights};
+use crate::quant::ptq::QNodeWeights;
+
+use super::int_ops::{self, accum_fits_i32};
+
+/// Register tile height: output positions updated per microkernel step.
+pub const MR: usize = 4;
+/// Register tile width: filters updated per microkernel step.
+pub const NR: usize = 8;
+/// Target element count of one packed im2col panel (16 KiB of i32/f32
+/// lanes) — small enough to stay hot in L1/L2 across all filter tiles of
+/// the panel, the "cache tiling" half of the design.
+const PANEL_TARGET_ELEMS: usize = 4096;
+/// Below this many multiply-accumulates (m·n·k) the blocked path cannot
+/// amortize packing and tile bookkeeping, so the lowered entry points fall
+/// through to the naive reference kernels (bit-identical for the integer
+/// flavors, and the f32 fallback IS the reference). Keeps the CI ratio
+/// gate honest on tiny dense layers.
+pub const GEMM_MIN_MACCS: usize = 2048;
+
+/// Rows of one packed panel: as many output positions as keep the panel
+/// near [`PANEL_TARGET_ELEMS`], never below one register tile.
+pub fn panel_rows(taps: usize, positions: usize) -> usize {
+    let cache = (PANEL_TARGET_ELEMS / taps.max(1)).max(MR);
+    cache.min(positions.max(1))
+}
+
+/// Worst-case packing/staging scratch (elements) any node of `graph`
+/// needs. The lifetime analysis behind it: a panel is live only within
+/// one node's execution and nodes run sequentially, so one buffer sized
+/// to the max serves the whole graph. Recorded on the allocator's
+/// `Allocation` and preallocated by the Session arena.
+pub fn scratch_elems(graph: &Graph) -> usize {
+    let mut need = 0usize;
+    for node in &graph.nodes {
+        match &node.kind {
+            LayerKind::Conv { w, .. } => {
+                let taps: usize = w.shape[..w.shape.len() - 1].iter().product();
+                let positions: usize =
+                    node.out_shape[..node.out_shape.len() - 1].iter().product();
+                need = need.max(panel_rows(taps, positions) * taps);
+            }
+            // The affine backend stages the zero-point-shifted input
+            // before its dense GEMM.
+            LayerKind::Dense { w, .. } => need = need.max(w.shape[0]),
+            _ => {}
+        }
+    }
+    need
+}
+
+// ---------------------------------------------------------------------------
+// Microkernels
+// ---------------------------------------------------------------------------
+
+/// C(m×n) = A(m×k)·B(k×n), row-major, i32 accumulator lanes. ONLY valid
+/// when the caller proves no intermediate overflow — for the fixed-point
+/// path that proof is [`accum_fits_i32`], which bounds the worst-case
+/// |partial sum| + |bias| under i32::MAX/2 for every summation order.
+pub fn gemm_i32(
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    mut emit: impl FnMut(usize, usize, i32),
+) {
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(b.len() >= k * n, "B matrix too small");
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = 0usize;
+        while j < n {
+            let nr = NR.min(n - j);
+            let mut acc: [[i32; NR]; MR] = [[0; NR]; MR];
+            for p in 0..k {
+                let brow = &b[p * n + j..p * n + j + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    if av == 0 {
+                        // ReLU sparsity: exact skip for integers.
+                        continue;
+                    }
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    emit(i + mi, j + ni, accv);
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// C(m×n) = A(m×k)·B(k×n), row-major, i64 wide accumulators — correct
+/// for every operand width (the generated C `long_number_t`).
+pub fn gemm_i64(
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    mut emit: impl FnMut(usize, usize, i64),
+) {
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(b.len() >= k * n, "B matrix too small");
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = 0usize;
+        while j < n {
+            let nr = NR.min(n - j);
+            let mut acc: [[i64; NR]; MR] = [[0; NR]; MR];
+            for p in 0..k {
+                let brow = &b[p * n + j..p * n + j + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    if av == 0 {
+                        // ReLU sparsity: exact skip for integers.
+                        continue;
+                    }
+                    let av = av as i64;
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * (bv as i64);
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    emit(i + mi, j + ni, accv);
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// C(m×n) = A(m×k)·B(k×n) over f32 with the same MR×NR register tile.
+/// Accumulation order differs from the reference kernels (tile-local
+/// k-major instead of bias-first row sweeps), so results are ULP-close,
+/// not bit-equal — pinned by `f32_conv_gemm_is_ulp_close_to_ref`.
+pub fn gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    mut emit: impl FnMut(usize, usize, f32),
+) {
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(b.len() >= k * n, "B matrix too small");
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = 0usize;
+        while j < n {
+            let nr = NR.min(n - j);
+            let mut acc: [[f32; NR]; MR] = [[0.0; NR]; MR];
+            for p in 0..k {
+                let brow = &b[p * n + j..p * n + j + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    emit(i + mi, j + ni, accv);
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// im2col packing
+// ---------------------------------------------------------------------------
+
+/// Pack `rows` im2col rows (output positions `row0..row0+rows`) of a 1-D
+/// conv into `panel` (row-major rows × k·c, tap order (ki, ci) — the row
+/// order of the (k, C, F) weight matrix). Out-of-range taps pack the
+/// padding payload 0; `offset` is subtracted from every in-range element
+/// (affine zero-point pre-subtraction; 0 for the fixed-point path, where
+/// padding contributing payload 0 matches the reference tap skip).
+#[allow(clippy::too_many_arguments)]
+fn pack_1d_i32(
+    x: &[i32],
+    s: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad_lo: usize,
+    row0: usize,
+    rows: usize,
+    offset: i32,
+    panel: &mut [i32],
+) {
+    let taps = k * c;
+    for r in 0..rows {
+        let base = ((row0 + r) * stride) as isize - pad_lo as isize;
+        let row = &mut panel[r * taps..(r + 1) * taps];
+        for ki in 0..k {
+            let xi = base + ki as isize;
+            let dst = &mut row[ki * c..(ki + 1) * c];
+            if xi < 0 || xi >= s as isize {
+                dst.fill(0);
+            } else {
+                let off = (xi as usize) * c;
+                let src = &x[off..off + c];
+                if offset == 0 {
+                    dst.copy_from_slice(src);
+                } else {
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d = v - offset;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// f32 twin of [`pack_1d_i32`] (no offset: float padding packs 0.0, which
+/// is exact — weights are finite, so 0·w contributes nothing).
+#[allow(clippy::too_many_arguments)]
+fn pack_1d_f32(
+    x: &[f32],
+    s: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad_lo: usize,
+    row0: usize,
+    rows: usize,
+    panel: &mut [f32],
+) {
+    let taps = k * c;
+    for r in 0..rows {
+        let base = ((row0 + r) * stride) as isize - pad_lo as isize;
+        let row = &mut panel[r * taps..(r + 1) * taps];
+        for ki in 0..k {
+            let xi = base + ki as isize;
+            let dst = &mut row[ki * c..(ki + 1) * c];
+            if xi < 0 || xi >= s as isize {
+                dst.fill(0.0);
+            } else {
+                let off = (xi as usize) * c;
+                dst.copy_from_slice(&x[off..off + c]);
+            }
+        }
+    }
+}
+
+/// 2-D im2col: output position `p` is (oh, ow) = (p / w_out, p % w_out);
+/// tap order (ki, kj, ci) matches the (kh, kw, C, F) weight row order.
+#[allow(clippy::too_many_arguments)]
+fn pack_2d_i32(
+    x: &[i32],
+    h: usize,
+    wdt: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+    w_out: usize,
+    row0: usize,
+    rows: usize,
+    offset: i32,
+    panel: &mut [i32],
+) {
+    let taps = kh * kw * c;
+    for r in 0..rows {
+        let pos = row0 + r;
+        let (oh, ow) = (pos / w_out, pos % w_out);
+        let hbase = (oh * stride) as isize - ph as isize;
+        let wbase = (ow * stride) as isize - pw as isize;
+        let row = &mut panel[r * taps..(r + 1) * taps];
+        for ki in 0..kh {
+            let hi = hbase + ki as isize;
+            for kj in 0..kw {
+                let wi = wbase + kj as isize;
+                let dst = &mut row[(ki * kw + kj) * c..(ki * kw + kj + 1) * c];
+                if hi < 0 || hi >= h as isize || wi < 0 || wi >= wdt as isize {
+                    dst.fill(0);
+                } else {
+                    let off = ((hi as usize) * wdt + wi as usize) * c;
+                    let src = &x[off..off + c];
+                    if offset == 0 {
+                        dst.copy_from_slice(src);
+                    } else {
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d = v - offset;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// f32 twin of [`pack_2d_i32`].
+#[allow(clippy::too_many_arguments)]
+fn pack_2d_f32(
+    x: &[f32],
+    h: usize,
+    wdt: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+    w_out: usize,
+    row0: usize,
+    rows: usize,
+    panel: &mut [f32],
+) {
+    let taps = kh * kw * c;
+    for r in 0..rows {
+        let pos = row0 + r;
+        let (oh, ow) = (pos / w_out, pos % w_out);
+        let hbase = (oh * stride) as isize - ph as isize;
+        let wbase = (ow * stride) as isize - pw as isize;
+        let row = &mut panel[r * taps..(r + 1) * taps];
+        for ki in 0..kh {
+            let hi = hbase + ki as isize;
+            for kj in 0..kw {
+                let wi = wbase + kj as isize;
+                let dst = &mut row[(ki * kw + kj) * c..(ki * kw + kj + 1) * c];
+                if hi < 0 || hi >= h as isize || wi < 0 || wi >= wdt as isize {
+                    dst.fill(0.0);
+                } else {
+                    let off = ((hi as usize) * wdt + wi as usize) * c;
+                    dst.copy_from_slice(&x[off..off + c]);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared geometry
+// ---------------------------------------------------------------------------
+
+fn conv1d_geometry(s: usize, k: usize, stride: usize, padding: Padding) -> (usize, usize) {
+    match padding {
+        Padding::Same => (Graph::same_padding(s, k, stride).0, s.div_ceil(stride)),
+        Padding::Valid => (0, (s - k) / stride + 1),
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn conv2d_geometry(
+    h: usize,
+    wdt: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+) -> ((usize, usize), (usize, usize)) {
+    let (ph, h_out) = match padding {
+        Padding::Same => (Graph::same_padding(h, kh, stride).0, h.div_ceil(stride)),
+        Padding::Valid => (0, (h - kh) / stride + 1),
+    };
+    let (pw, w_out) = match padding {
+        Padding::Same => (Graph::same_padding(wdt, kw, stride).0, wdt.div_ceil(stride)),
+        Padding::Valid => (0, (wdt - kw) / stride + 1),
+    };
+    ((ph, pw), (h_out, w_out))
+}
+
+// ---------------------------------------------------------------------------
+// Float32 lowering
+// ---------------------------------------------------------------------------
+
+/// GEMM-lowered float conv1d. Falls back to the naive reference below
+/// [`GEMM_MIN_MACCS`] (where packing cannot be amortized).
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_gemm(
+    x: &[f32],
+    s: usize,
+    c: usize,
+    w: &[f32],
+    k: usize,
+    f: usize,
+    b: &[f32],
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    scratch: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> usize {
+    let (_, s_out) = conv1d_geometry(s, k, stride, padding);
+    if s_out * f * k * c < GEMM_MIN_MACCS {
+        return super::float_ops::conv1d_ref(x, s, c, w, k, f, b, stride, padding, relu, out);
+    }
+    conv1d_gemm_impl(x, s, c, w, k, f, b, stride, padding, relu, scratch, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv1d_gemm_impl(
+    x: &[f32],
+    s: usize,
+    c: usize,
+    w: &[f32],
+    k: usize,
+    f: usize,
+    b: &[f32],
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    scratch: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> usize {
+    let (pad_lo, s_out) = conv1d_geometry(s, k, stride, padding);
+    let taps = k * c;
+    out.clear();
+    out.resize(s_out * f, 0.0);
+    let rows_max = panel_rows(taps, s_out);
+    scratch.clear();
+    scratch.resize(rows_max * taps, 0.0);
+    let mut row0 = 0usize;
+    while row0 < s_out {
+        let rows = rows_max.min(s_out - row0);
+        pack_1d_f32(x, s, c, k, stride, pad_lo, row0, rows, &mut scratch[..rows * taps]);
+        let panel = &scratch[..rows * taps];
+        gemm_f32(panel, w, rows, f, taps, |r, fi, acc| {
+            let v = acc + b[fi];
+            out[(row0 + r) * f + fi] = if relu { v.max(0.0) } else { v };
+        });
+        row0 += rows;
+    }
+    s_out
+}
+
+/// GEMM-lowered float conv2d.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gemm(
+    x: &[f32],
+    h: usize,
+    wdt: usize,
+    c: usize,
+    w: &[f32],
+    kh: usize,
+    kw: usize,
+    f: usize,
+    b: &[f32],
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    scratch: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    let (_, (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
+    if h_out * w_out * f * kh * kw * c < GEMM_MIN_MACCS {
+        return super::float_ops::conv2d_ref(
+            x, h, wdt, c, w, kh, kw, f, b, stride, padding, relu, out,
+        );
+    }
+    conv2d_gemm_impl(x, h, wdt, c, w, kh, kw, f, b, stride, padding, relu, scratch, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_gemm_impl(
+    x: &[f32],
+    h: usize,
+    wdt: usize,
+    c: usize,
+    w: &[f32],
+    kh: usize,
+    kw: usize,
+    f: usize,
+    b: &[f32],
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    scratch: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    let ((ph, pw), (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
+    let positions = h_out * w_out;
+    let taps = kh * kw * c;
+    out.clear();
+    out.resize(positions * f, 0.0);
+    let rows_max = panel_rows(taps, positions);
+    scratch.clear();
+    scratch.resize(rows_max * taps, 0.0);
+    let mut row0 = 0usize;
+    while row0 < positions {
+        let rows = rows_max.min(positions - row0);
+        pack_2d_f32(
+            x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows,
+            &mut scratch[..rows * taps],
+        );
+        let panel = &scratch[..rows * taps];
+        gemm_f32(panel, w, rows, f, taps, |r, fi, acc| {
+            let v = acc + b[fi];
+            out[(row0 + r) * f + fi] = if relu { v.max(0.0) } else { v };
+        });
+        row0 += rows;
+    }
+    (h_out, w_out)
+}
+
+/// GEMM-lowered float dense (m = 1 GEMM; no packing).
+pub fn dense_gemm(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, out: &mut Vec<f32>) {
+    let i = x.len();
+    if i * o < GEMM_MIN_MACCS {
+        super::float_ops::dense_ref(x, w, b, o, relu, out);
+        return;
+    }
+    out.clear();
+    out.resize(o, 0.0);
+    gemm_f32(x, w, 1, o, i, |_r, oi, acc| {
+        let v = acc + b[oi];
+        out[oi] = if relu { v.max(0.0) } else { v };
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-point Qm.n lowering
+// ---------------------------------------------------------------------------
+
+/// GEMM-lowered fixed-point conv1d: bit-exact with
+/// [`int_ops::conv1d_q_ref`], including the i32-lane admission decision.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_q_gemm(
+    x: &[i32],
+    s: usize,
+    c: usize,
+    qw: &QNodeWeights,
+    k: usize,
+    f: usize,
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    width: u32,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+) -> usize {
+    let (_, s_out) = conv1d_geometry(s, k, stride, padding);
+    if s_out * f * k * c < GEMM_MIN_MACCS {
+        return int_ops::conv1d_q_ref(x, s, c, qw, k, f, stride, padding, relu, width, out);
+    }
+    conv1d_q_gemm_impl(x, s, c, qw, k, f, stride, padding, relu, width, scratch, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv1d_q_gemm_impl(
+    x: &[i32],
+    s: usize,
+    c: usize,
+    qw: &QNodeWeights,
+    k: usize,
+    f: usize,
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    width: u32,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+) -> usize {
+    let (pad_lo, s_out) = conv1d_geometry(s, k, stride, padding);
+    let taps = k * c;
+    out.clear();
+    out.resize(s_out * f, 0);
+    let rows_max = panel_rows(taps, s_out);
+    scratch.clear();
+    scratch.resize(rows_max * taps, 0);
+    let fits = accum_fits_i32(qw, taps, width);
+    let uniform = qw.shift.len() == 1;
+    let mut row0 = 0usize;
+    while row0 < s_out {
+        let rows = rows_max.min(s_out - row0);
+        pack_1d_i32(x, s, c, k, stride, pad_lo, row0, rows, 0, &mut scratch[..rows * taps]);
+        let panel = &scratch[..rows * taps];
+        if fits {
+            gemm_i32(panel, &qw.w, rows, f, taps, |r, fi, acc| {
+                let total = acc + qw.b_acc[fi] as i32;
+                let sh = if uniform { qw.shift[0] } else { qw.shift[fi] };
+                let mut v = clamp_to(rescale(i64::from(total), sh), width);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out[(row0 + r) * f + fi] = v;
+            });
+        } else {
+            gemm_i64(panel, &qw.w, rows, f, taps, |r, fi, acc| {
+                let total = acc + qw.b_acc[fi];
+                let sh = if uniform { qw.shift[0] } else { qw.shift[fi] };
+                let mut v = clamp_to(rescale(total, sh), width);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out[(row0 + r) * f + fi] = v;
+            });
+        }
+        row0 += rows;
+    }
+    s_out
+}
+
+/// GEMM-lowered fixed-point conv2d (bit-exact with
+/// [`int_ops::conv2d_q_ref`]).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_q_gemm(
+    x: &[i32],
+    h: usize,
+    wdt: usize,
+    c: usize,
+    qw: &QNodeWeights,
+    kh: usize,
+    kw: usize,
+    f: usize,
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    width: u32,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+) -> (usize, usize) {
+    let (_, (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
+    if h_out * w_out * f * kh * kw * c < GEMM_MIN_MACCS {
+        return int_ops::conv2d_q_ref(
+            x, h, wdt, c, qw, kh, kw, f, stride, padding, relu, width, out,
+        );
+    }
+    conv2d_q_gemm_impl(x, h, wdt, c, qw, kh, kw, f, stride, padding, relu, width, scratch, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_q_gemm_impl(
+    x: &[i32],
+    h: usize,
+    wdt: usize,
+    c: usize,
+    qw: &QNodeWeights,
+    kh: usize,
+    kw: usize,
+    f: usize,
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    width: u32,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+) -> (usize, usize) {
+    let ((ph, pw), (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
+    let positions = h_out * w_out;
+    let taps = kh * kw * c;
+    out.clear();
+    out.resize(positions * f, 0);
+    let rows_max = panel_rows(taps, positions);
+    scratch.clear();
+    scratch.resize(rows_max * taps, 0);
+    let fits = accum_fits_i32(qw, taps, width);
+    let uniform = qw.shift.len() == 1;
+    let mut row0 = 0usize;
+    while row0 < positions {
+        let rows = rows_max.min(positions - row0);
+        pack_2d_i32(
+            x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, 0,
+            &mut scratch[..rows * taps],
+        );
+        let panel = &scratch[..rows * taps];
+        if fits {
+            gemm_i32(panel, &qw.w, rows, f, taps, |r, fi, acc| {
+                let total = acc + qw.b_acc[fi] as i32;
+                let sh = if uniform { qw.shift[0] } else { qw.shift[fi] };
+                let mut v = clamp_to(rescale(i64::from(total), sh), width);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out[(row0 + r) * f + fi] = v;
+            });
+        } else {
+            gemm_i64(panel, &qw.w, rows, f, taps, |r, fi, acc| {
+                let total = acc + qw.b_acc[fi];
+                let sh = if uniform { qw.shift[0] } else { qw.shift[fi] };
+                let mut v = clamp_to(rescale(total, sh), width);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out[(row0 + r) * f + fi] = v;
+            });
+        }
+        row0 += rows;
+    }
+    (h_out, w_out)
+}
+
+/// GEMM-lowered fixed-point dense (bit-exact with
+/// [`int_ops::dense_q_ref`]; picks i32 lanes under the same admission
+/// guard, which is semantics-neutral for exact integer sums).
+pub fn dense_q_gemm(
+    x: &[i32],
+    qw: &QNodeWeights,
+    o: usize,
+    relu: bool,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
+    let i = x.len();
+    if i * o < GEMM_MIN_MACCS {
+        int_ops::dense_q_ref(x, qw, o, relu, width, out);
+        return;
+    }
+    dense_q_gemm_impl(x, qw, o, relu, width, out);
+}
+
+fn dense_q_gemm_impl(
+    x: &[i32],
+    qw: &QNodeWeights,
+    o: usize,
+    relu: bool,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
+    let i = x.len();
+    out.clear();
+    out.resize(o, 0);
+    let fits = accum_fits_i32(qw, i, width);
+    let uniform = qw.shift.len() == 1;
+    if fits {
+        gemm_i32(x, &qw.w, 1, o, i, |_r, oi, acc| {
+            let total = acc + qw.b_acc[oi] as i32;
+            let sh = if uniform { qw.shift[0] } else { qw.shift[oi] };
+            let mut v = clamp_to(rescale(i64::from(total), sh), width);
+            if relu && v < 0 {
+                v = 0;
+            }
+            out[oi] = v;
+        });
+    } else {
+        gemm_i64(x, &qw.w, 1, o, i, |_r, oi, acc| {
+            let total = acc + qw.b_acc[oi];
+            let sh = if uniform { qw.shift[0] } else { qw.shift[oi] };
+            let mut v = clamp_to(rescale(total, sh), width);
+            if relu && v < 0 {
+                v = 0;
+            }
+            out[oi] = v;
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Affine (TFLite-semantics) lowering
+// ---------------------------------------------------------------------------
+
+/// GEMM-lowered affine conv (1-D or 2-D): the zero-point-shifted operands
+/// ride [`gemm_i64`]; bit-exact with `affine_exec::conv_affine_ref`
+/// (exact i64 sums, identical epilogue cast into gemmlowp requantize).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_affine_gemm(
+    x: &[i32],
+    ish: &[usize],
+    wshape: &[usize],
+    qw: &AffineNodeWeights,
+    zp_in: i32,
+    zp_out: i32,
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    dims: usize,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+) {
+    let taps: usize = wshape[..wshape.len() - 1].iter().product();
+    let f = *wshape.last().unwrap();
+    let positions = if dims == 1 {
+        conv1d_geometry(ish[0], wshape[0], stride, padding).1
+    } else {
+        let (_, (h_out, w_out)) = conv2d_geometry(ish[0], ish[1], wshape[0], wshape[1], stride, padding);
+        h_out * w_out
+    };
+    if positions * f * taps < GEMM_MIN_MACCS {
+        super::affine_exec::conv_affine_ref(
+            x, ish, wshape, qw, zp_in, zp_out, stride, padding, relu, dims, out,
+        );
+        return;
+    }
+    conv_affine_gemm_impl(
+        x, ish, wshape, qw, zp_in, zp_out, stride, padding, relu, dims, scratch, out,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv_affine_gemm_impl(
+    x: &[i32],
+    ish: &[usize],
+    wshape: &[usize],
+    qw: &AffineNodeWeights,
+    zp_in: i32,
+    zp_out: i32,
+    stride: usize,
+    padding: Padding,
+    relu: bool,
+    dims: usize,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+) {
+    if dims == 1 {
+        let (s, c) = (ish[0], ish[1]);
+        let (k, f) = (wshape[0], wshape[2]);
+        let (pad_lo, s_out) = conv1d_geometry(s, k, stride, padding);
+        let taps = k * c;
+        out.clear();
+        out.resize(s_out * f, 0);
+        let rows_max = panel_rows(taps, s_out);
+        scratch.clear();
+        scratch.resize(rows_max * taps, 0);
+        let mut row0 = 0usize;
+        while row0 < s_out {
+            let rows = rows_max.min(s_out - row0);
+            pack_1d_i32(
+                x, s, c, k, stride, pad_lo, row0, rows, zp_in,
+                &mut scratch[..rows * taps],
+            );
+            let panel = &scratch[..rows * taps];
+            gemm_i64(panel, &qw.w, rows, f, taps, |r, fi, acc| {
+                let total = qw.b[fi] + acc;
+                let mut v = requantize(total as i32, qw.mult[fi], qw.shift[fi], zp_out);
+                if relu {
+                    v = v.max(zp_out);
+                }
+                out[(row0 + r) * f + fi] = v;
+            });
+            row0 += rows;
+        }
+    } else {
+        let (h, wdt, c) = (ish[0], ish[1], ish[2]);
+        let (kh, kw, f) = (wshape[0], wshape[1], wshape[3]);
+        let ((ph, pw), (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
+        let positions = h_out * w_out;
+        let taps = kh * kw * c;
+        out.clear();
+        out.resize(positions * f, 0);
+        let rows_max = panel_rows(taps, positions);
+        scratch.clear();
+        scratch.resize(rows_max * taps, 0);
+        let mut row0 = 0usize;
+        while row0 < positions {
+            let rows = rows_max.min(positions - row0);
+            pack_2d_i32(
+                x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, zp_in,
+                &mut scratch[..rows * taps],
+            );
+            let panel = &scratch[..rows * taps];
+            gemm_i64(panel, &qw.w, rows, f, taps, |r, fi, acc| {
+                let total = qw.b[fi] + acc;
+                let mut v = requantize(total as i32, qw.mult[fi], qw.shift[fi], zp_out);
+                if relu {
+                    v = v.max(zp_out);
+                }
+                out[(row0 + r) * f + fi] = v;
+            });
+            row0 += rows;
+        }
+    }
+}
+
+/// GEMM-lowered affine dense: stages the zero-point-shifted input in the
+/// arena scratch, then runs the m = 1 i64 GEMM. Bit-exact with
+/// `affine_exec::dense_affine_ref`.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_affine_gemm(
+    x: &[i32],
+    qw: &AffineNodeWeights,
+    zp_in: i32,
+    zp_out: i32,
+    o: usize,
+    relu: bool,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+) {
+    let i = x.len();
+    if i * o < GEMM_MIN_MACCS {
+        super::affine_exec::dense_affine_ref(x, qw, zp_in, zp_out, o, relu, out);
+        return;
+    }
+    dense_affine_gemm_impl(x, qw, zp_in, zp_out, o, relu, scratch, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dense_affine_gemm_impl(
+    x: &[i32],
+    qw: &AffineNodeWeights,
+    zp_in: i32,
+    zp_out: i32,
+    o: usize,
+    relu: bool,
+    scratch: &mut Vec<i32>,
+    out: &mut Vec<i32>,
+) {
+    let i = x.len();
+    scratch.clear();
+    scratch.resize(i, 0);
+    for (d, &v) in scratch.iter_mut().zip(x) {
+        *d = v - zp_in;
+    }
+    out.clear();
+    out.resize(o, 0);
+    let shifted: &[i32] = scratch;
+    gemm_i64(shifted, &qw.w, 1, o, i, |_r, oi, acc| {
+        let total = qw.b[oi] + acc;
+        let mut v = requantize(total as i32, qw.mult[oi], qw.shift[oi], zp_out);
+        if relu {
+            v = v.max(zp_out);
+        }
+        out[oi] = v;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{affine_exec, float_ops};
+    use crate::prop_assert;
+    use crate::quant::affine::quantize_multiplier;
+    use crate::util::check::{property, Gen};
+
+    // --- microkernels vs naive triple loop ---
+
+    fn naive_i64(a: &[i32], b: &[i32], m: usize, n: usize, k: usize) -> Vec<i64> {
+        let mut c = vec![0i64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p] as i64;
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j] as i64;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn int_microkernels_match_naive_matmul() {
+        property(60, |g| {
+            let m = g.usize_in(1, 13);
+            let n = g.usize_in(1, 19);
+            let k = g.usize_in(1, 17);
+            let a: Vec<i32> = (0..m * k).map(|_| g.i32_in(-128, 127)).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| g.i32_in(-128, 127)).collect();
+            let want = naive_i64(&a, &b, m, n, k);
+            let mut got64 = vec![0i64; m * n];
+            gemm_i64(&a, &b, m, n, k, |i, j, acc| got64[i * n + j] = acc);
+            prop_assert!(got64 == want, "i64 kernel diverged at m={m} n={n} k={k}");
+            // i32 lanes: same values (operands small enough not to overflow).
+            let mut got32 = vec![0i64; m * n];
+            gemm_i32(&a, &b, m, n, k, |i, j, acc| got32[i * n + j] = i64::from(acc));
+            prop_assert!(got32 == want, "i32 kernel diverged at m={m} n={n} k={k}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f32_microkernel_close_to_f64_oracle() {
+        property(40, |g| {
+            let m = g.usize_in(1, 9);
+            let n = g.usize_in(1, 17);
+            let k = g.usize_in(1, 33);
+            let a: Vec<f32> = g.vec_normal(m * k, 1.0);
+            let b: Vec<f32> = g.vec_normal(k * n, 1.0);
+            let mut got = vec![0.0f32; m * n];
+            gemm_f32(&a, &b, m, n, k, |i, j, acc| got[i * n + j] = acc);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut exact = 0.0f64;
+                    let mut abs = 0.0f64;
+                    for p in 0..k {
+                        let t = a[i * k + p] as f64 * b[p * n + j] as f64;
+                        exact += t;
+                        abs += t.abs();
+                    }
+                    let tol = (k as f64 + 2.0) * f32::EPSILON as f64 * abs.max(1e-6);
+                    prop_assert!(
+                        (got[i * n + j] as f64 - exact).abs() <= tol,
+                        "f32 kernel off at ({i},{j}): got {} exact {exact} tol {tol}",
+                        got[i * n + j]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // --- packing ---
+
+    #[test]
+    fn pack_1d_zero_pads_and_orders_taps() {
+        // x = (3, 2) rows [1,2],[3,4],[5,6]; k=3 SAME stride 1 pad_lo=1.
+        let x = [1, 2, 3, 4, 5, 6];
+        let mut panel = vec![99; 3 * 6];
+        pack_1d_i32(&x, 3, 2, 3, 1, 1, 0, 3, 0, &mut panel);
+        // row for o=0: taps x[-1] (pad), x[0], x[1]
+        assert_eq!(&panel[0..6], &[0, 0, 1, 2, 3, 4]);
+        // row for o=1: x[0], x[1], x[2]
+        assert_eq!(&panel[6..12], &[1, 2, 3, 4, 5, 6]);
+        // row for o=2: x[1], x[2], pad
+        assert_eq!(&panel[12..18], &[3, 4, 5, 6, 0, 0]);
+    }
+
+    #[test]
+    fn pack_1d_offset_subtracts_zero_point_only_in_range() {
+        let x = [10, 20, 30];
+        let mut panel = vec![0; 3];
+        // k=3 pad_lo=1, c=1, one row at o=0: [pad, x0-5, x1-5]
+        pack_1d_i32(&x, 3, 1, 3, 1, 1, 0, 1, 5, &mut panel);
+        assert_eq!(panel, vec![0, 5, 15]);
+    }
+
+    // --- fixed-point conv/dense: bit-exact vs reference ---
+
+    fn random_qw(g: &mut Gen, taps: usize, f: usize, width: u32, straddle: bool) -> QNodeWeights {
+        let lim = (1i32 << (width - 1)) - 1;
+        let w: Vec<i32> = (0..taps * f).map(|_| g.i32_in(-lim - 1, lim)).collect();
+        let per_filter = g.bool();
+        let shift: Vec<i32> = if per_filter {
+            (0..f).map(|_| g.i32_in(0, 14)).collect()
+        } else {
+            vec![g.i32_in(0, 14)]
+        };
+        let max_prod = (1i64 << (width - 1)) * (1i64 << (width - 1));
+        let boundary = i32::MAX as i64 / 2 - taps as i64 * max_prod;
+        let b_acc: Vec<i64> = (0..f)
+            .map(|_| {
+                let sign = if g.bool() { 1i64 } else { -1 };
+                if straddle && g.bool() {
+                    // Right at (or just past) the i32-lane admission
+                    // boundary: the GEMM dispatch must flip exactly with
+                    // the reference kernel's.
+                    let delta = g.i32_in(-1024, 1024) as i64;
+                    sign * (boundary + delta).max(0)
+                } else {
+                    sign * g.i32_in(0, 1 << 20) as i64
+                }
+            })
+            .collect();
+        QNodeWeights { w, w_n: vec![0], b_acc, shift }
+    }
+
+    #[test]
+    fn conv1d_q_gemm_bit_exact_vs_ref_across_admission_boundary() {
+        property(120, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let k = g.usize_in(1, 5);
+            let c = g.usize_in(1, 6);
+            let f = g.usize_in(1, 12);
+            let s = g.usize_in(k, 48);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let qw = random_qw(g, k * c, f, width, width == 8);
+            let x: Vec<i32> = {
+                let lim = (1i32 << (width - 1)) - 1;
+                (0..s * c).map(|_| g.i32_in(-lim - 1, lim)).collect()
+            };
+            let mut want = Vec::new();
+            let so_ref =
+                int_ops::conv1d_q_ref(&x, s, c, &qw, k, f, stride, padding, relu, width, &mut want);
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            let so_gemm = conv1d_q_gemm_impl(
+                &x, s, c, &qw, k, f, stride, padding, relu, width, &mut scratch, &mut got,
+            );
+            prop_assert!(
+                so_ref == so_gemm && want == got,
+                "conv1d_q gemm diverged: width={width} k={k} c={c} f={f} s={s} stride={stride} \
+                 relu={relu} want={want:?} got={got:?}"
+            );
+            // The public hybrid entry must agree too (either branch).
+            let mut hybrid = Vec::new();
+            conv1d_q_gemm(
+                &x, s, c, &qw, k, f, stride, padding, relu, width, &mut scratch, &mut hybrid,
+            );
+            prop_assert!(hybrid == want, "hybrid conv1d_q_gemm diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conv2d_q_gemm_bit_exact_vs_ref() {
+        property(60, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let kh = g.usize_in(1, 3);
+            let kw = g.usize_in(1, 3);
+            let c = g.usize_in(1, 4);
+            let f = g.usize_in(1, 9);
+            let h = g.usize_in(kh, 12);
+            let wdt = g.usize_in(kw, 12);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let qw = random_qw(g, kh * kw * c, f, width, width == 8);
+            let x: Vec<i32> = {
+                let lim = (1i32 << (width - 1)) - 1;
+                (0..h * wdt * c).map(|_| g.i32_in(-lim - 1, lim)).collect()
+            };
+            let mut want = Vec::new();
+            let sh_ref = int_ops::conv2d_q_ref(
+                &x, h, wdt, c, &qw, kh, kw, f, stride, padding, relu, width, &mut want,
+            );
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            let sh_gemm = conv2d_q_gemm_impl(
+                &x, h, wdt, c, &qw, kh, kw, f, stride, padding, relu, width, &mut scratch,
+                &mut got,
+            );
+            prop_assert!(
+                sh_ref == sh_gemm && want == got,
+                "conv2d_q gemm diverged: width={width} kh={kh} kw={kw} c={c} f={f} h={h} w={wdt}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_q_gemm_bit_exact_vs_ref() {
+        property(100, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let i = g.usize_in(1, 96);
+            let o = g.usize_in(1, 24);
+            let qw = random_qw(g, i, o, width, width == 8);
+            let lim = (1i32 << (width - 1)) - 1;
+            let x: Vec<i32> = (0..i).map(|_| g.i32_in(-lim - 1, lim)).collect();
+            let mut want = Vec::new();
+            int_ops::dense_q_ref(&x, &qw, o, false, width, &mut want);
+            let mut got = Vec::new();
+            dense_q_gemm_impl(&x, &qw, o, false, width, &mut got);
+            prop_assert!(want == got, "dense_q gemm diverged at i={i} o={o} width={width}");
+            Ok(())
+        });
+    }
+
+    // --- f32 conv: ULP-bounded vs reference ---
+
+    #[test]
+    fn f32_conv_gemm_is_ulp_close_to_ref() {
+        property(40, |g| {
+            let k = g.usize_in(1, 5);
+            let c = g.usize_in(1, 6);
+            let f = g.usize_in(1, 10);
+            let s = g.usize_in(k, 40);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let w: Vec<f32> = g.vec_normal(k * c * f, 0.5);
+            let b: Vec<f32> = g.vec_normal(f, 0.1);
+            let x: Vec<f32> = g.vec_normal(s * c, 1.0);
+            let mut want = Vec::new();
+            let so =
+                float_ops::conv1d_ref(&x, s, c, &w, k, f, &b, stride, padding, relu, &mut want);
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            let so2 = conv1d_gemm_impl(
+                &x, s, c, &w, k, f, &b, stride, padding, relu, &mut scratch, &mut got,
+            );
+            prop_assert!(so == so2, "s_out mismatch");
+            let taps = k * c;
+            let (pad_lo, _) = conv1d_geometry(s, k, stride, padding);
+            for (o, chunk) in got.chunks(f).enumerate() {
+                let base = (o * stride) as isize - pad_lo as isize;
+                for (fi, (&gv, &rv)) in chunk.iter().zip(&want[o * f..(o + 1) * f]).enumerate() {
+                    // Magnitude of the summands bounds the reordering error.
+                    let mut abs = b[fi].abs() as f64;
+                    for ki in 0..k {
+                        let xi = base + ki as isize;
+                        if xi < 0 || xi >= s as isize {
+                            continue;
+                        }
+                        for ci in 0..c {
+                            abs += (x[(xi as usize) * c + ci] * w[(ki * c + ci) * f + fi]).abs()
+                                as f64;
+                        }
+                    }
+                    let tol = 4.0 * (taps as f64 + 2.0) * f32::EPSILON as f64 * abs.max(1e-6);
+                    prop_assert!(
+                        (gv as f64 - rv as f64).abs() <= tol,
+                        "f32 conv gemm off at (o={o}, f={fi}): gemm {gv} ref {rv} tol {tol}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f32_conv2d_gemm_close_to_ref() {
+        property(30, |g| {
+            let kh = g.usize_in(1, 3);
+            let kw = g.usize_in(1, 3);
+            let c = g.usize_in(1, 4);
+            let f = g.usize_in(1, 8);
+            let h = g.usize_in(kh, 10);
+            let wdt = g.usize_in(kw, 10);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let w: Vec<f32> = g.vec_normal(kh * kw * c * f, 0.5);
+            let b: Vec<f32> = g.vec_normal(f, 0.1);
+            let x: Vec<f32> = g.vec_normal(h * wdt * c, 1.0);
+            let mut want = Vec::new();
+            let dims_ref = float_ops::conv2d_ref(
+                &x, h, wdt, c, &w, kh, kw, f, &b, stride, padding, relu, &mut want,
+            );
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            let dims_gemm = conv2d_gemm_impl(
+                &x, h, wdt, c, &w, kh, kw, f, &b, stride, padding, relu, &mut scratch, &mut got,
+            );
+            prop_assert!(dims_ref == dims_gemm, "out dims mismatch");
+            let taps = (kh * kw * c) as f64;
+            for (i, (&gv, &rv)) in got.iter().zip(&want).enumerate() {
+                // Coarse reorder bound: inputs/weights are O(1) normals.
+                let tol = 8.0 * (taps + 2.0) * f32::EPSILON as f64 * (taps + 1.0);
+                prop_assert!(
+                    (gv as f64 - rv as f64).abs() <= tol,
+                    "f32 conv2d gemm off at {i}: gemm {gv} ref {rv} tol {tol}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    // --- affine: bit-exact vs reference ---
+
+    fn random_affine_weights(g: &mut Gen, taps: usize, f: usize) -> AffineNodeWeights {
+        let w: Vec<i32> = (0..taps * f).map(|_| g.i32_in(-127, 127)).collect();
+        let mut mult = Vec::with_capacity(f);
+        let mut shift = Vec::with_capacity(f);
+        let mut b = Vec::with_capacity(f);
+        let mut w_scale = Vec::with_capacity(f);
+        for _ in 0..f {
+            let m = g.f32_in(1e-4, 0.9) as f64;
+            let (m0, sh) = quantize_multiplier(m);
+            mult.push(m0);
+            shift.push(sh);
+            b.push(g.i32_in(-(1 << 16), 1 << 16) as i64);
+            w_scale.push(1.0);
+        }
+        AffineNodeWeights { w, w_scale, b, mult, shift }
+    }
+
+    #[test]
+    fn affine_conv_gemm_bit_exact_vs_ref() {
+        property(60, |g| {
+            let dims = g.usize_in(1, 2);
+            let relu = g.bool();
+            let stride = g.usize_in(1, 2);
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let zp_in = g.i32_in(-128, 127);
+            let zp_out = g.i32_in(-128, 127);
+            let (ish, wshape): (Vec<usize>, Vec<usize>) = if dims == 1 {
+                let (k, c, f) = (g.usize_in(1, 5), g.usize_in(1, 4), g.usize_in(1, 8));
+                let s = g.usize_in(k, 24);
+                (vec![s, c], vec![k, c, f])
+            } else {
+                let (kh, kw, c, f) =
+                    (g.usize_in(1, 3), g.usize_in(1, 3), g.usize_in(1, 3), g.usize_in(1, 6));
+                let h = g.usize_in(kh, 10);
+                let wd = g.usize_in(kw, 10);
+                (vec![h, wd, c], vec![kh, kw, c, f])
+            };
+            let taps: usize = wshape[..wshape.len() - 1].iter().product();
+            let f = *wshape.last().unwrap();
+            let qw = random_affine_weights(g, taps, f);
+            let n_in: usize = ish.iter().product();
+            let x: Vec<i32> = (0..n_in).map(|_| g.i32_in(-128, 127)).collect();
+            let mut want = Vec::new();
+            affine_exec::conv_affine_ref(
+                &x, &ish, &wshape, &qw, zp_in, zp_out, stride, padding, relu, dims, &mut want,
+            );
+            // The _impl call forces the blocked path even for shapes the
+            // hybrid entry would route to the reference.
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            conv_affine_gemm_impl(
+                &x, &ish, &wshape, &qw, zp_in, zp_out, stride, padding, relu, dims,
+                &mut scratch, &mut got,
+            );
+            prop_assert!(want == got, "affine conv gemm diverged (dims={dims})");
+            // And the public hybrid entry agrees on either branch.
+            let mut hybrid = Vec::new();
+            conv_affine_gemm(
+                &x, &ish, &wshape, &qw, zp_in, zp_out, stride, padding, relu, dims,
+                &mut scratch, &mut hybrid,
+            );
+            prop_assert!(want == hybrid, "affine conv hybrid diverged (dims={dims})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn affine_dense_gemm_bit_exact_vs_ref() {
+        property(80, |g| {
+            let i = g.usize_in(1, 160);
+            let o = g.usize_in(1, 24);
+            let zp_in = g.i32_in(-128, 127);
+            let zp_out = g.i32_in(-128, 127);
+            let relu = g.bool();
+            let qw = random_affine_weights(g, i, o);
+            let x: Vec<i32> = (0..i).map(|_| g.i32_in(-128, 127)).collect();
+            let mut want = Vec::new();
+            affine_exec::dense_affine_ref(&x, &qw, zp_in, zp_out, o, relu, &mut want);
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            dense_affine_gemm_impl(&x, &qw, zp_in, zp_out, o, relu, &mut scratch, &mut got);
+            prop_assert!(want == got, "affine dense gemm diverged at i={i} o={o}");
+            Ok(())
+        });
+    }
+
+    // --- sizing ---
+
+    #[test]
+    fn panel_rows_bounds() {
+        assert_eq!(panel_rows(27, 128), 128); // whole map fits the target
+        assert_eq!(panel_rows(2048, 64), MR); // huge taps: one register tile
+        assert_eq!(panel_rows(16, 100_000), PANEL_TARGET_ELEMS / 16);
+        assert_eq!(panel_rows(3, 1), 1);
+    }
+
+    #[test]
+    fn scratch_elems_covers_every_conv_panel() {
+        use crate::graph::build::resnet_v1_6_shapes;
+        use crate::graph::deploy_pipeline;
+        let g = deploy_pipeline(&resnet_v1_6_shapes("t", 1, &[128, 9], 6, 16));
+        let need = scratch_elems(&g);
+        assert!(need > 0);
+        for node in &g.nodes {
+            if let LayerKind::Conv { w, .. } = &node.kind {
+                let taps: usize = w.shape[..w.shape.len() - 1].iter().product();
+                let positions: usize =
+                    node.out_shape[..node.out_shape.len() - 1].iter().product();
+                assert!(panel_rows(taps, positions) * taps <= need);
+            }
+        }
+    }
+}

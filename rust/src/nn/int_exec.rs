@@ -6,6 +6,7 @@ use crate::fixedpoint::QFormat;
 use crate::graph::ir::LayerKind;
 use crate::quant::ptq::QuantizedGraph;
 
+use super::gemm;
 use super::int_ops as ops;
 
 /// Execute the quantized graph on a float input; returns float logits
@@ -21,8 +22,9 @@ pub fn run(qg: &QuantizedGraph, input: &[f32]) -> Vec<f32> {
     let node_elems = super::session::node_elems(graph);
     let mut pools: Vec<Vec<i32>> = vec![Vec::new(); alloc.n_pools()];
     let mut qinput = Vec::new();
+    let mut scratch = Vec::new();
     let mut output = Vec::new();
-    run_pooled(qg, input, &alloc, &node_elems, &mut qinput, &mut pools, &mut output);
+    run_pooled(qg, input, &alloc, &node_elems, &mut qinput, &mut pools, &mut scratch, &mut output);
     output
 }
 
@@ -30,6 +32,7 @@ pub fn run(qg: &QuantizedGraph, input: &[f32]) -> Vec<f32> {
 /// backend: integer payloads live in the allocator's §5.7 pools, the
 /// quantized input in `qinput`, the dequantized logits in `output`. With
 /// a preallocated arena no per-request heap allocation occurs.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pooled(
     qg: &QuantizedGraph,
     input: &[f32],
@@ -37,6 +40,7 @@ pub(crate) fn run_pooled(
     node_elems: &[usize],
     qinput: &mut Vec<i32>,
     pools: &mut [Vec<i32>],
+    scratch: &mut Vec<i32>,
     output: &mut Vec<f32>,
 ) {
     let graph = &qg.graph;
@@ -60,25 +64,27 @@ pub(crate) fn run_pooled(
             match &node.kind {
                 LayerKind::Input => unreachable!(),
                 LayerKind::Conv { w, stride, padding, .. } => {
+                    // im2col + blocked GEMM (nn::gemm), bit-exact with the
+                    // naive int_ops::conv*_q_ref kernels (property-pinned).
                     let x = src(node.inputs[0]);
                     let ish = &graph.nodes[node.inputs[0]].out_shape;
                     let qw = &qg.weights[&node.id];
                     if graph.dims == 1 {
-                        ops::conv1d_q(
+                        gemm::conv1d_q_gemm(
                             x, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
-                            *padding, node.fused_relu, width, &mut out,
+                            *padding, node.fused_relu, width, scratch, &mut out,
                         );
                     } else {
-                        ops::conv2d_q(
+                        gemm::conv2d_q_gemm(
                             x, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
                             w.shape[3], *stride, *padding, node.fused_relu, width,
-                            &mut out,
+                            scratch, &mut out,
                         );
                     }
                 }
                 LayerKind::Dense { w, .. } => {
                     let qw = &qg.weights[&node.id];
-                    ops::dense_q(
+                    gemm::dense_q_gemm(
                         src(node.inputs[0]), qw, w.shape[1], node.fused_relu, width, &mut out,
                     );
                 }

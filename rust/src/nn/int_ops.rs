@@ -1,17 +1,22 @@
 //! Fixed-point integer layer kernels — the Rust twin of the generated C
 //! inner loops (§5.8, Table A6): widen → MACC → arithmetic-shift-right →
-//! saturate, with optional fused ReLU. This is the HOT PATH of the whole
-//! reproduction (see EXPERIMENTS.md §Perf).
+//! saturate, with optional fused ReLU.
+//!
+//! The conv/dense kernels here are the NAIVE REFERENCE implementations
+//! (`*_ref`): the executors run the im2col + blocked-GEMM lowerings in
+//! [`super::gemm`], property-tested BIT-EXACT against these (integer sums
+//! are order-independent; the i32-lane admission guard rules out
+//! intermediate overflow for any summation order).
 
 use crate::fixedpoint::ops::{clamp_to, rescale};
 use crate::graph::ir::Padding;
 use crate::graph::Graph;
 use crate::quant::ptq::QNodeWeights;
 
-/// 1-D fixed-point convolution on integer payloads.
+/// 1-D fixed-point convolution on integer payloads, reference kernel.
 /// x: (S, C) payloads at n_in; w/b/shift per `qw`; out at n_out.
 #[allow(clippy::too_many_arguments)]
-pub fn conv1d_q(
+pub fn conv1d_q_ref(
     x: &[i32],
     s: usize,
     c: usize,
@@ -150,9 +155,10 @@ fn conv1d_q_i64(
 }
 
 /// P2 safety check: worst-case |accumulator| for `taps` MACCs of
-/// `width`-bit operands plus the bias magnitude must fit in i32.
+/// `width`-bit operands plus the bias magnitude must fit in i32. Shared
+/// with the GEMM lowering so both paths make the identical decision.
 #[inline]
-fn accum_fits_i32(qw: &QNodeWeights, taps: usize, width: u32) -> bool {
+pub(crate) fn accum_fits_i32(qw: &QNodeWeights, taps: usize, width: u32) -> bool {
     if width > 8 {
         return false;
     }
@@ -161,9 +167,9 @@ fn accum_fits_i32(qw: &QNodeWeights, taps: usize, width: u32) -> bool {
     (taps as i64) * max_prod + max_bias < i32::MAX as i64 / 2
 }
 
-/// 2-D fixed-point convolution.
+/// 2-D fixed-point convolution, reference kernel.
 #[allow(clippy::too_many_arguments)]
-pub fn conv2d_q(
+pub fn conv2d_q_ref(
     x: &[i32],
     h: usize,
     wdt: usize,
@@ -191,7 +197,7 @@ pub fn conv2d_q(
     let w = &qw.w;
     let uniform_shift = qw.shift.len() == 1;
     // Perf passes P1 (filter-contiguous accumulation) + P3 (i32 lanes for
-    // provably-safe int8 accumulators) — see conv1d_q.
+    // provably-safe int8 accumulators) — see conv1d_q_ref.
     let fits_i32 = accum_fits_i32(qw, kh * kw * c, width);
     let mut acc64 = vec![0i64; f];
     let mut acc32 = vec![0i32; f];
@@ -251,8 +257,8 @@ pub fn conv2d_q(
     (h_out, w_out)
 }
 
-/// Fixed-point dense layer.
-pub fn dense_q(
+/// Fixed-point dense layer, reference kernel.
+pub fn dense_q_ref(
     x: &[i32],
     qw: &QNodeWeights,
     o: usize,
@@ -286,17 +292,21 @@ pub fn dense_q(
     }
 }
 
-/// Max pooling on payloads (no requantization, §4.3).
+/// Max pooling on payloads (no requantization, §4.3). SAME-style windows:
+/// odd spatial dims keep a remainder window over the in-range samples
+/// (`Graph::pool_geometry`) — pre-fix they were silently truncated.
 pub fn maxpool_q(x: &[i32], spatial: &[usize], c: usize, size: usize, relu: bool, out: &mut Vec<i32>) {
     out.clear();
     match spatial.len() {
         1 => {
-            let s_out = spatial[0] / size;
+            let s = spatial[0];
+            let (lo, s_out) = Graph::pool_geometry(s, size);
             for o in 0..s_out {
+                let (x_lo, x_hi) = Graph::pool_window(o, size, lo, s);
                 for ci in 0..c {
                     let mut m = i32::MIN;
-                    for ki in 0..size {
-                        m = m.max(x[(o * size + ki) * c + ci]);
+                    for xi in x_lo..x_hi {
+                        m = m.max(x[xi * c + ci]);
                     }
                     out.push(if relu { m.max(0) } else { m });
                 }
@@ -304,13 +314,17 @@ pub fn maxpool_q(x: &[i32], spatial: &[usize], c: usize, size: usize, relu: bool
         }
         2 => {
             let (h, w) = (spatial[0], spatial[1]);
-            for oh in 0..h / size {
-                for ow in 0..w / size {
+            let (hlo, ho) = Graph::pool_geometry(h, size);
+            let (wlo, wo) = Graph::pool_geometry(w, size);
+            for oh in 0..ho {
+                let (h_lo, h_hi) = Graph::pool_window(oh, size, hlo, h);
+                for ow in 0..wo {
+                    let (w_lo, w_hi) = Graph::pool_window(ow, size, wlo, w);
                     for ci in 0..c {
                         let mut m = i32::MIN;
-                        for ki in 0..size {
-                            for kj in 0..size {
-                                m = m.max(x[((oh * size + ki) * w + ow * size + kj) * c + ci]);
+                        for hi in h_lo..h_hi {
+                            for wi in w_lo..w_hi {
+                                m = m.max(x[(hi * w + wi) * c + ci]);
                             }
                         }
                         out.push(if relu { m.max(0) } else { m });
@@ -323,31 +337,40 @@ pub fn maxpool_q(x: &[i32], spatial: &[usize], c: usize, size: usize, relu: bool
 }
 
 /// Average pooling: i64 sum, integer division (truncation, like C `/`).
+/// SAME-style remainder windows divide by the actual in-range sample
+/// count — matching the generated C remainder loops bit-for-bit.
 pub fn avgpool_q(x: &[i32], spatial: &[usize], c: usize, size: usize, out: &mut Vec<i32>) {
     out.clear();
     match spatial.len() {
         1 => {
-            let s_out = spatial[0] / size;
+            let s = spatial[0];
+            let (lo, s_out) = Graph::pool_geometry(s, size);
             for o in 0..s_out {
+                let (x_lo, x_hi) = Graph::pool_window(o, size, lo, s);
+                let denom = (x_hi - x_lo) as i64;
                 for ci in 0..c {
                     let mut a: i64 = 0;
-                    for ki in 0..size {
-                        a += x[(o * size + ki) * c + ci] as i64;
+                    for xi in x_lo..x_hi {
+                        a += x[xi * c + ci] as i64;
                     }
-                    out.push((a / size as i64) as i32);
+                    out.push((a / denom) as i32);
                 }
             }
         }
         2 => {
             let (h, w) = (spatial[0], spatial[1]);
-            let denom = (size * size) as i64;
-            for oh in 0..h / size {
-                for ow in 0..w / size {
+            let (hlo, ho) = Graph::pool_geometry(h, size);
+            let (wlo, wo) = Graph::pool_geometry(w, size);
+            for oh in 0..ho {
+                let (h_lo, h_hi) = Graph::pool_window(oh, size, hlo, h);
+                for ow in 0..wo {
+                    let (w_lo, w_hi) = Graph::pool_window(ow, size, wlo, w);
+                    let denom = ((h_hi - h_lo) * (w_hi - w_lo)) as i64;
                     for ci in 0..c {
                         let mut a: i64 = 0;
-                        for ki in 0..size {
-                            for kj in 0..size {
-                                a += x[((oh * size + ki) * w + ow * size + kj) * c + ci] as i64;
+                        for hi in h_lo..h_hi {
+                            for wi in w_lo..w_hi {
+                                a += x[(hi * w + wi) * c + ci] as i64;
                             }
                         }
                         out.push((a / denom) as i32);
@@ -422,7 +445,7 @@ mod tests {
         let x = [10, -20, 30];
         let q = qw(vec![1], vec![0], 0);
         let mut out = Vec::new();
-        let s = conv1d_q(&x, 3, 1, &q, 1, 1, 1, Padding::Same, false, 8, &mut out);
+        let s = conv1d_q_ref(&x, 3, 1, &q, 1, 1, 1, Padding::Same, false, 8, &mut out);
         assert_eq!(s, 3);
         assert_eq!(out, vec![10, -20, 30]);
     }
@@ -432,7 +455,7 @@ mod tests {
         let x = [100, 100];
         let q = qw(vec![100], vec![0], 1); // acc = 10000, >>1 = 5000 -> sat 127
         let mut out = Vec::new();
-        conv1d_q(&x, 2, 1, &q, 1, 1, 1, Padding::Same, false, 8, &mut out);
+        conv1d_q_ref(&x, 2, 1, &q, 1, 1, 1, Padding::Same, false, 8, &mut out);
         assert_eq!(out, vec![127, 127]);
     }
 
@@ -441,7 +464,7 @@ mod tests {
         let x = [-50];
         let q = qw(vec![1], vec![0], 0);
         let mut out = Vec::new();
-        conv1d_q(&x, 1, 1, &q, 1, 1, 1, Padding::Same, true, 8, &mut out);
+        conv1d_q_ref(&x, 1, 1, &q, 1, 1, 1, Padding::Same, true, 8, &mut out);
         assert_eq!(out, vec![0]);
     }
 
@@ -451,7 +474,7 @@ mod tests {
         let x = [1, 2, 3];
         let q = qw(vec![1, 1, 1], vec![0], 0);
         let mut out = Vec::new();
-        conv1d_q(&x, 3, 1, &q, 3, 1, 1, Padding::Same, false, 16, &mut out);
+        conv1d_q_ref(&x, 3, 1, &q, 3, 1, 1, Padding::Same, false, 16, &mut out);
         assert_eq!(out, vec![3, 6, 5]);
     }
 
@@ -465,7 +488,7 @@ mod tests {
             shift: vec![1],
         };
         let mut out = Vec::new();
-        dense_q(&x, &q, 2, false, 16, &mut out);
+        dense_q_ref(&x, &q, 2, false, 16, &mut out);
         // o0: 2*1+3*2+4 = 12 >>1 = 6 ; o1: 2*10+3*20-4 = 76 >>1 = 38
         assert_eq!(out, vec![6, 38]);
     }
@@ -503,6 +526,26 @@ mod tests {
         let mut out = Vec::new();
         maxpool_q(&x, &[2], 2, 2, false, &mut out);
         assert_eq!(out, vec![5, 7]);
+    }
+
+    #[test]
+    fn maxpool_q_odd_keeps_remainder_window() {
+        // Regression for the silent-truncation bug: an odd-length window
+        // (3 samples, pool size 2) must emit the remainder window instead
+        // of dropping the last sample.
+        let x = [5, -1, 3, 7, 9, 2]; // (3, 2)
+        let mut out = Vec::new();
+        maxpool_q(&x, &[3], 2, 2, false, &mut out);
+        assert_eq!(out, vec![5, 7, 9, 2]);
+    }
+
+    #[test]
+    fn avgpool_q_odd_divides_by_actual_count() {
+        let x = [1, 2, 7]; // (3, 1)
+        let mut out = Vec::new();
+        avgpool_q(&x, &[3], 1, 2, &mut out);
+        // [1,2] -> 3/2 = 1 (trunc); remainder [7] -> 7/1 = 7.
+        assert_eq!(out, vec![1, 7]);
     }
 
     #[test]
@@ -552,8 +595,8 @@ mod tests {
             );
             // And through the public entry point (which routes to i32 here).
             let mut routed = Vec::new();
-            conv1d_q(&x, s, c, &qw, k, f, stride, Padding::Valid, relu, width, &mut routed);
-            crate::prop_assert!(routed == wide, "public conv1d_q diverged from i64 reference");
+            conv1d_q_ref(&x, s, c, &qw, k, f, stride, Padding::Valid, relu, width, &mut routed);
+            crate::prop_assert!(routed == wide, "public conv1d_q_ref diverged from i64 reference");
 
             // At/over the boundary: the guard must reject the fast path.
             let b_out: Vec<i64> = (0..f)
@@ -578,7 +621,7 @@ mod tests {
             shift: vec![0, 3],
         };
         let mut out = Vec::new();
-        conv1d_q(&x, 1, 1, &q, 1, 2, 1, Padding::Same, false, 8, &mut out);
+        conv1d_q_ref(&x, 1, 1, &q, 1, 2, 1, Padding::Same, false, 8, &mut out);
         assert_eq!(out, vec![8, 1]);
     }
 }

@@ -5,6 +5,7 @@
 pub mod affine_exec;
 pub mod float_exec;
 pub mod float_ops;
+pub mod gemm;
 pub mod int_exec;
 pub mod int_ops;
 pub mod session;

@@ -100,6 +100,13 @@ pub struct Arena {
     pub(crate) i32_pools: Vec<Vec<i32>>,
     /// Quantized input payloads (integer backends only).
     pub(crate) qinput: Vec<i32>,
+    /// im2col packing panel for the GEMM lowering (float backend). Sized
+    /// by the allocator's scratch lifetime analysis
+    /// (`Allocation::gemm_scratch_elems`), so packing never allocates
+    /// per request.
+    pub(crate) scratch_f32: Vec<f32>,
+    /// im2col / zero-point staging panel (integer backends).
+    pub(crate) scratch_i32: Vec<i32>,
     /// Dequantized output logits of the latest run.
     pub(crate) output: Vec<f32>,
 }
@@ -107,16 +114,32 @@ pub struct Arena {
 impl Arena {
     fn preallocated(plan: &Plan, float: bool) -> Arena {
         let pools = &plan.alloc.pool_elems;
-        let (f32_pools, i32_pools, qinput) = if float {
-            (pools.iter().map(|&n| Vec::with_capacity(n)).collect(), Vec::new(), Vec::new())
+        let scratch = plan.alloc.gemm_scratch_elems;
+        let (f32_pools, i32_pools, qinput, scratch_f32, scratch_i32) = if float {
+            (
+                pools.iter().map(|&n| Vec::with_capacity(n)).collect(),
+                Vec::new(),
+                Vec::new(),
+                Vec::with_capacity(scratch),
+                Vec::new(),
+            )
         } else {
             (
                 Vec::new(),
                 pools.iter().map(|&n| Vec::with_capacity(n)).collect(),
                 Vec::with_capacity(plan.input_len),
+                Vec::new(),
+                Vec::with_capacity(scratch),
             )
         };
-        Arena { f32_pools, i32_pools, qinput, output: Vec::with_capacity(plan.output_len) }
+        Arena {
+            f32_pools,
+            i32_pools,
+            qinput,
+            scratch_f32,
+            scratch_i32,
+            output: Vec::with_capacity(plan.output_len),
+        }
     }
 
     /// Host bytes this arena holds (capacity, not current lengths).
@@ -124,17 +147,23 @@ impl Arena {
         self.f32_pools.iter().map(|p| p.capacity() * 4).sum::<usize>()
             + self.i32_pools.iter().map(|p| p.capacity() * 4).sum::<usize>()
             + self.qinput.capacity() * 4
+            + self.scratch_f32.capacity() * 4
+            + self.scratch_i32.capacity() * 4
             + self.output.capacity() * 4
     }
 
     /// Buffer base addresses — stable across `run` calls iff the arena is
     /// truly reused without reallocation (asserted by the session tests).
+    /// Includes the GEMM packing scratch: an undersized scratch estimate
+    /// would show up here as a reallocation.
     pub fn buffer_ptrs(&self) -> Vec<usize> {
         self.f32_pools
             .iter()
             .map(|p| p.as_ptr() as usize)
             .chain(self.i32_pools.iter().map(|p| p.as_ptr() as usize))
             .chain(std::iter::once(self.qinput.as_ptr() as usize))
+            .chain(std::iter::once(self.scratch_f32.as_ptr() as usize))
+            .chain(std::iter::once(self.scratch_i32.as_ptr() as usize))
             .chain(std::iter::once(self.output.as_ptr() as usize))
             .collect()
     }
@@ -225,7 +254,7 @@ impl InferenceBackend for Float32Backend {
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         float_exec::run_pooled(
             &self.graph, input, &plan.alloc, &plan.node_elems,
-            &mut arena.f32_pools, None, &mut arena.output,
+            &mut arena.f32_pools, &mut arena.scratch_f32, None, &mut arena.output,
         );
         &arena.output
     }
@@ -239,7 +268,7 @@ impl InferenceBackend for Float32Backend {
     ) -> bool {
         float_exec::run_pooled(
             &self.graph, input, &plan.alloc, &plan.node_elems,
-            &mut arena.f32_pools, Some(stats), &mut arena.output,
+            &mut arena.f32_pools, &mut arena.scratch_f32, Some(stats), &mut arena.output,
         );
         true
     }
@@ -279,7 +308,8 @@ impl InferenceBackend for FixedQmnBackend {
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         int_exec::run_pooled(
             &self.qg, input, &plan.alloc, &plan.node_elems,
-            &mut arena.qinput, &mut arena.i32_pools, &mut arena.output,
+            &mut arena.qinput, &mut arena.i32_pools, &mut arena.scratch_i32,
+            &mut arena.output,
         );
         &arena.output
     }
@@ -320,7 +350,8 @@ impl InferenceBackend for AffineI8Backend {
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         affine_exec::run_pooled(
             &self.aq, input, &plan.alloc, &plan.node_elems,
-            &mut arena.qinput, &mut arena.i32_pools, &mut arena.output,
+            &mut arena.qinput, &mut arena.i32_pools, &mut arena.scratch_i32,
+            &mut arena.output,
         );
         &arena.output
     }

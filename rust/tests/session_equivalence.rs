@@ -90,6 +90,77 @@ fn cross_backend_agreement_2d_topology() {
 }
 
 #[test]
+fn cross_backend_agreement_gtsrb_conv2d_topology() {
+    // GTSRB-shaped (32x32x3, 43 classes) conv2d-heavy graph end to end:
+    // all four backends through the Session API, the conv2d GEMM path vs
+    // the legacy free functions bit-for-bit, and the arena (incl. the new
+    // im2col scratch) staying put across requests.
+    let g = fixture_graph(2, &[32, 32, 3], 43, 8, 31);
+    let inputs = fixture_inputs(6, 32 * 32 * 3, 33);
+    let stats = calibrate(&g, &inputs);
+    let q16 = Arc::new(quantize(&g, &stats, QuantSpec::int16_per_layer()));
+    let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+    let aq = Arc::new(quantize_affine(&g, &stats));
+
+    let mut s_float = SessionBuilder::float32(g.clone()).build();
+    let mut s_16 = SessionBuilder::fixed_qmn(q16.clone()).build();
+    let mut s_8 = SessionBuilder::fixed_qmn(q8.clone()).build();
+    let mut s_aff = SessionBuilder::affine_i8(aq.clone()).build();
+
+    // The conv2d layers are big enough to engage the blocked GEMM path;
+    // its scratch must come from the preallocated arena.
+    s_16.run(&inputs[0]);
+    let ptrs = s_16.arena().buffer_ptrs();
+
+    let (mut agree16, mut agree8, mut agree_aff) = (0usize, 0usize, 0usize);
+    for x in &inputs {
+        let reference = argmax(&s_float.run(x).to_vec());
+        agree16 += (argmax(s_16.run(x)) == reference) as usize;
+        agree8 += (argmax(s_8.run(x)) == reference) as usize;
+        agree_aff += (argmax(s_aff.run(x)) == reference) as usize;
+
+        // Sessions and legacy free functions share the same GEMM kernels:
+        // bit-for-bit, 2-D included.
+        assert_eq!(microai::nn::int_exec::run(&q16, x), s_16.run(x).to_vec());
+        assert_eq!(microai::nn::affine_exec::run(&aq, x), s_aff.run(x).to_vec());
+        assert_eq!(microai::nn::float_exec::run(&g, x, None), s_float.run(x).to_vec());
+    }
+    // 43 random-weight classes sit near argmax ties, so the statistical
+    // thresholds are deliberately loose — the bit-exactness asserts above
+    // are the real regression catchers.
+    assert!(agree16 + 1 >= inputs.len(), "int16 argmax agreement {agree16}/{}", inputs.len());
+    assert!(agree8 * 3 >= inputs.len(), "int8 agreement {agree8}/{}", inputs.len());
+    assert!(agree_aff * 3 >= inputs.len(), "affine agreement {agree_aff}/{}", inputs.len());
+    assert_eq!(ptrs, s_16.arena().buffer_ptrs(), "conv2d GEMM scratch reallocated");
+}
+
+#[test]
+fn odd_length_har_window_keeps_remainder() {
+    // Regression for the silent pooling truncation: a 129-sample UCI-HAR
+    // style window used to lose its last sample at every pool (floor);
+    // SAME-style windows keep it, and every backend agrees on the shapes
+    // and the legacy/Session bit-exactness.
+    let g = fixture_graph(1, &[129, 9], 6, 8, 77);
+    let pool = g
+        .nodes
+        .iter()
+        .find(|n| matches!(n.kind, LayerKind::MaxPool { .. }))
+        .expect("resnet has a pool");
+    assert_eq!(pool.out_shape[0], 65, "ceil(129/2) remainder window missing");
+
+    let inputs = fixture_inputs(6, 129 * 9, 78);
+    let stats = calibrate(&g, &inputs);
+    let q16 = Arc::new(quantize(&g, &stats, QuantSpec::int16_per_layer()));
+    let mut s_float = SessionBuilder::float32(g.clone()).build();
+    let mut s_16 = SessionBuilder::fixed_qmn(q16.clone()).build();
+    for x in &inputs {
+        let a = argmax(&s_float.run(x).to_vec());
+        assert_eq!(a, argmax(s_16.run(x)));
+        assert_eq!(microai::nn::int_exec::run(&q16, x), s_16.run(x).to_vec());
+    }
+}
+
+#[test]
 fn sessions_match_legacy_free_functions_bit_for_bit() {
     let g = fixture_graph(1, &[32, 3], 4, 8, 5);
     let inputs = fixture_inputs(6, 96, 6);
