@@ -24,12 +24,16 @@ pub struct Allocation {
     pub pool_of: Vec<usize>,
     /// Element capacity of each pool.
     pub pool_elems: Vec<usize>,
-    /// HOST-side im2col/staging scratch (elements) for the GEMM kernel
-    /// lowering (`nn::gemm`): the lifetime analysis extension — a packing
-    /// panel is live only inside one node's execution, so a single buffer
-    /// sized to the worst-case node serves the whole graph. Preallocated
-    /// by the Session arena; NOT part of the device RAM model
-    /// ([`Allocation::ram_bytes`]), which prices the generated C.
+    /// HOST-side im2col/staging scratch (elements, PER intra-op thread)
+    /// for the GEMM kernel lowering (`nn::gemm`): the lifetime analysis
+    /// extension — a packing panel is live only inside one node's
+    /// execution, so one buffer of this size per worker thread serves the
+    /// whole graph (each worker packs the panels of its own output-
+    /// position chunk). The Session arena preallocates `threads` slabs of
+    /// this size and `Arena::buffer_ptrs` exposes every slab, so the
+    /// arena-reuse tests catch undersizing on any worker. NOT part of the
+    /// device RAM model ([`Allocation::ram_bytes`]), which prices the
+    /// generated C.
     pub gemm_scratch_elems: usize,
 }
 

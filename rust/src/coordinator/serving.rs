@@ -18,7 +18,12 @@
 //!   arenas preallocated per worker) and run the little model over the
 //!   whole batch through one arena ([`Session::classify_each_into`]),
 //!   then escalate the low-confidence subset to the big model as a second
-//!   batch.
+//!   batch;
+//! - each worker session may additionally run its GEMM kernels across an
+//!   intra-op thread pool ([`CascadeConfig::intra_op_threads`], bit-exact
+//!   vs serial); the scheduler caps `workers × intra_op_threads` at the
+//!   host's available parallelism ([`effective_intra_op_threads`]) so the
+//!   two layers of parallelism never oversubscribe the cores.
 //!
 //! # Simulated time: `queue_ms` vs `device_ms`
 //!
@@ -119,6 +124,13 @@ pub struct CascadeConfig {
     pub arrival_rate_hz: f64,
     /// Seed for the arrival clock's exponential inter-arrival draws.
     pub seed: u64,
+    /// Requested intra-op GEMM threads per worker session (host-side
+    /// kernel parallelism; 1 = serial). The scheduler caps the actual
+    /// budget so `workers × intra_op_threads` never exceeds the host's
+    /// available parallelism ([`effective_intra_op_threads`]) —
+    /// oversubscribing cores would add context-switch latency to every
+    /// request instead of throughput.
+    pub intra_op_threads: usize,
 }
 
 impl Default for CascadeConfig {
@@ -131,8 +143,19 @@ impl Default for CascadeConfig {
             queue_cap: 4,
             arrival_rate_hz: 0.0,
             seed: 0x5EED,
+            intra_op_threads: 1,
         }
     }
+}
+
+/// Intra-op thread budget each worker session actually gets: the
+/// requested budget, capped so the whole pool (`workers` worker threads,
+/// each owning a GEMM pool of this size) fits in `available` hardware
+/// threads. Never below 1 — a single worker on a single-core host still
+/// serves, just serially.
+pub fn effective_intra_op_threads(workers: usize, requested: usize, available: usize) -> usize {
+    let per_worker_budget = available.max(1) / workers.max(1);
+    requested.max(1).min(per_worker_budget.max(1))
 }
 
 /// Aggregate serving statistics.
@@ -202,7 +225,12 @@ struct CascadeWorker {
 }
 
 impl CascadeWorker {
-    fn new(little: &Session, big: &Session, threshold: f32) -> CascadeWorker {
+    fn new(
+        little: &Session,
+        big: &Session,
+        threshold: f32,
+        intra_op_threads: usize,
+    ) -> CascadeWorker {
         let (lm, bm) = (little.meta(), big.meta());
         // A board-attached session whose engine failed to price it is a
         // configuration bug (cost model not covering the board/dtype) —
@@ -227,8 +255,8 @@ impl CascadeWorker {
             _ => None,
         };
         CascadeWorker {
-            little: little.fork(),
-            big: big.fork(),
+            little: little.fork_with_threads(intra_op_threads),
+            big: big.fork_with_threads(intra_op_threads),
             threshold,
             prices,
             clock_ms: 0.0,
@@ -333,6 +361,10 @@ pub fn run_cascade_sessions(
     let workers = cfg.workers.max(1);
     let max_batch = cfg.max_batch.max(1);
     let queue_cap = cfg.queue_cap.max(1);
+    // Cap intra-op parallelism against what the host actually has, so
+    // worker × GEMM threads never oversubscribe the cores.
+    let available = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let intra = effective_intra_op_threads(workers, cfg.intra_op_threads, available);
     let t0 = Instant::now();
 
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
@@ -345,7 +377,7 @@ pub fn run_cascade_sessions(
         let depth = Arc::new(AtomicUsize::new(0));
         pending.push(depth.clone());
         let resp = resp_tx.clone();
-        let mut worker = CascadeWorker::new(little, big, cfg.threshold);
+        let mut worker = CascadeWorker::new(little, big, cfg.threshold, intra);
         handles.push(thread::spawn(move || {
             let mut out = Vec::new();
             while let Ok(batch) = rx.recv() {
@@ -480,7 +512,7 @@ pub fn run_cascade_single_channel(
     for _ in 0..workers.max(1) {
         let rx = work_rx.clone();
         let tx = resp_tx.clone();
-        let mut worker = CascadeWorker::new(little, big, threshold);
+        let mut worker = CascadeWorker::new(little, big, threshold, 1);
         handles.push(thread::spawn(move || {
             let mut out = Vec::new();
             loop {
@@ -764,6 +796,40 @@ mod tests {
         assert!(
             bs.meta().device_energy_uwh.unwrap() > ls.meta().device_energy_uwh.unwrap()
         );
+    }
+
+    #[test]
+    fn intra_op_cap_prevents_oversubscription() {
+        // Pure budget arithmetic, independent of this machine's cores.
+        assert_eq!(effective_intra_op_threads(4, 1024, 8), 2);
+        assert_eq!(effective_intra_op_threads(4, 1, 8), 1);
+        assert_eq!(effective_intra_op_threads(1, 4, 8), 4);
+        assert_eq!(effective_intra_op_threads(8, 4, 8), 1);
+        assert_eq!(effective_intra_op_threads(2, 3, 64), 3);
+        // Degenerate hosts/configs never drop below one serial thread.
+        assert_eq!(effective_intra_op_threads(0, 0, 0), 1);
+        assert_eq!(effective_intra_op_threads(16, 16, 1), 1);
+    }
+
+    #[test]
+    fn intra_op_threads_do_not_change_predictions() {
+        // The cascade with intra-op GEMM parallelism must serve the exact
+        // same predictions/escalations as the serial cascade (the kernel
+        // core is bit-exact across thread counts).
+        let little = tiny_qgraph(4, 40);
+        let big = tiny_qgraph(8, 41);
+        let reqs = requests(48, 42);
+        let serial = run_cascade(little.clone(), big.clone(), &cfg(0.8, 2), reqs.clone(), None);
+        let c = CascadeConfig { intra_op_threads: 2, ..cfg(0.8, 2) };
+        let par = run_cascade(little, big, &c, reqs, None);
+        assert_eq!(serial.responses.len(), par.responses.len());
+        for (a, b) in serial.responses.iter().zip(&par.responses) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prediction, b.prediction);
+            assert_eq!(a.confidence, b.confidence);
+            assert_eq!(a.escalated, b.escalated);
+            assert_eq!(a.device_ms, b.device_ms);
+        }
     }
 
     #[test]

@@ -26,14 +26,19 @@ pub fn run(aq: &AffineQuantizedGraph, input: &[f32]) -> Vec<f32> {
     let node_elems = crate::nn::session::node_elems(graph);
     let mut pools: Vec<Vec<i32>> = vec![Vec::new(); alloc.n_pools()];
     let mut qinput = Vec::new();
-    let mut scratch = Vec::new();
+    let pool = crate::nn::parallel::IntraOpPool::serial();
+    let mut scratch = vec![Vec::new()];
     let mut output = Vec::new();
-    run_pooled(aq, input, &alloc, &node_elems, &mut qinput, &mut pools, &mut scratch, &mut output);
+    run_pooled(
+        aq, input, &alloc, &node_elems, &mut qinput, &mut pools, &pool, &mut scratch,
+        &mut output,
+    );
     output
 }
 
 /// Pooled core shared by [`run`] and the affine [`crate::nn::session`]
-/// backend (see `int_exec::run_pooled` for the pool discipline).
+/// backend (see `int_exec::run_pooled` for the pool discipline; `scratch`
+/// carries one packing slab per intra-op thread of `pool`).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pooled(
     aq: &AffineQuantizedGraph,
@@ -42,7 +47,8 @@ pub(crate) fn run_pooled(
     node_elems: &[usize],
     qinput: &mut Vec<i32>,
     pools: &mut [Vec<i32>],
-    scratch: &mut Vec<i32>,
+    pool: &crate::nn::parallel::IntraOpPool,
+    scratch: &mut [Vec<i32>],
     output: &mut Vec<f32>,
 ) {
     let graph = &aq.graph;
@@ -71,7 +77,8 @@ pub(crate) fn run_pooled(
                     gemm::conv_affine_gemm(
                         src(src_id), ish, &w.shape, &aq.weights[&node.id],
                         aq.act[src_id].zero_point, aq.act[node.id].zero_point,
-                        *stride, *padding, node.fused_relu, graph.dims, scratch, &mut out,
+                        *stride, *padding, node.fused_relu, graph.dims, pool, scratch,
+                        &mut out,
                     );
                 }
                 LayerKind::Dense { w, .. } => {
@@ -79,7 +86,7 @@ pub(crate) fn run_pooled(
                     gemm::dense_affine_gemm(
                         src(src_id), &aq.weights[&node.id],
                         aq.act[src_id].zero_point, aq.act[node.id].zero_point,
-                        w.shape[1], node.fused_relu, scratch, &mut out,
+                        w.shape[1], node.fused_relu, pool, scratch, &mut out,
                     );
                 }
                 LayerKind::MaxPool { size } => {

@@ -68,16 +68,20 @@ pub fn run(graph: &Graph, input: &[f32], stats: Option<&mut ActStats>) -> Vec<f3
     let alloc = crate::allocator::allocate(graph);
     let node_elems = super::session::node_elems(graph);
     let mut pools: Vec<Vec<f32>> = vec![Vec::new(); alloc.n_pools()];
-    let mut scratch = Vec::new();
+    let pool = super::parallel::IntraOpPool::serial();
+    let mut scratch = vec![Vec::new()];
     let mut output = Vec::new();
-    run_pooled(graph, input, &alloc, &node_elems, &mut pools, &mut scratch, stats, &mut output);
+    run_pooled(
+        graph, input, &alloc, &node_elems, &mut pools, &pool, &mut scratch, stats, &mut output,
+    );
     output
 }
 
 /// Pooled core shared by [`run`] and the float [`crate::nn::session`]
 /// backend: node outputs live in the allocator's §5.7 pools (`pools[p]`
 /// holds the output of the pool's current occupant), so a reused arena
-/// performs zero per-request heap allocation.
+/// performs zero per-request heap allocation. `scratch` carries one
+/// im2col slab per intra-op thread of `pool`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pooled(
     graph: &Graph,
@@ -85,7 +89,8 @@ pub(crate) fn run_pooled(
     alloc: &crate::allocator::Allocation,
     node_elems: &[usize],
     pools: &mut [Vec<f32>],
-    scratch: &mut Vec<f32>,
+    pool: &super::parallel::IntraOpPool,
+    scratch: &mut [Vec<f32>],
     mut stats: Option<&mut ActStats>,
     output: &mut Vec<f32>,
 ) {
@@ -114,20 +119,20 @@ pub(crate) fn run_pooled(
                     if graph.dims == 1 {
                         gemm::conv1d_gemm(
                             x, ish[0], ish[1], &w.data, w.shape[0], w.shape[2], &b.data,
-                            *stride, *padding, node.fused_relu, scratch, &mut out,
+                            *stride, *padding, node.fused_relu, pool, scratch, &mut out,
                         );
                     } else {
                         gemm::conv2d_gemm(
                             x, ish[0], ish[1], ish[2], &w.data, w.shape[0], w.shape[1],
                             w.shape[3], &b.data, *stride, *padding, node.fused_relu,
-                            scratch, &mut out,
+                            pool, scratch, &mut out,
                         );
                     }
                 }
                 LayerKind::Dense { w, b } => {
                     gemm::dense_gemm(
                         src(node.inputs[0]), &w.data, &b.data, w.shape[1],
-                        node.fused_relu, &mut out,
+                        node.fused_relu, pool, &mut out,
                     );
                 }
                 LayerKind::MaxPool { size } => {

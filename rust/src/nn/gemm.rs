@@ -23,8 +23,24 @@
 //! Memory contract: packing panels are carved from the Session arena.
 //! [`scratch_elems`] is the lifetime fact the allocator records per graph
 //! (§5.7 spirit: a panel is live only inside one node's execution, so a
-//! single worst-case buffer serves every node); `Arena::preallocated`
-//! reserves it once, so steady-state requests never allocate.
+//! worst-case buffer **per intra-op thread** serves every node);
+//! `Arena::preallocated` reserves one slab per thread once. At the
+//! default serial budget (threads = 1) steady-state requests never
+//! allocate — the PR-1 contract, preserved by a dispatch-free fast path.
+//! At threads > 1 each parallel node pays a few small bookkeeping
+//! allocations (the slab-view list and the pool's per-call completion
+//! channel) in exchange for multi-core execution; the arena buffers
+//! themselves still never reallocate.
+//!
+//! Intra-op threading (see [`super::parallel`]): every lowered entry
+//! point takes an [`IntraOpPool`]. Convolutions split the output-position
+//! dimension (the N dimension of the `C = W·X` view) into column panels
+//! dispatched across workers — each worker packs its panels into its own
+//! scratch slab and writes a disjoint output-row range. Dense layers
+//! split the filter dimension in NR-aligned column tiles. In both cases
+//! the per-element accumulation order (k-major) is identical to the
+//! single-thread schedule, so the integer flavors stay bit-exact across
+//! thread counts and f32 stays ULP-equivalent (property-pinned below).
 //!
 //! Layout: for a conv with weights (k, C, F) (or (kh, kw, C, F)), the
 //! packed panel row for output position `o` lists taps in (ki, ci) (or
@@ -38,6 +54,7 @@ use crate::quant::affine::{requantize, AffineNodeWeights};
 use crate::quant::ptq::QNodeWeights;
 
 use super::int_ops::{self, accum_fits_i32};
+use super::parallel::{IntraOpPool, SharedOut};
 
 /// Register tile height: output positions updated per microkernel step.
 pub const MR: usize = 4;
@@ -99,16 +116,35 @@ pub fn gemm_i32(
     m: usize,
     n: usize,
     k: usize,
+    emit: impl FnMut(usize, usize, i32),
+) {
+    gemm_i32_cols(a, b, m, n, k, 0, n, emit);
+}
+
+/// Column-range variant of [`gemm_i32`]: computes only output columns
+/// `j0..j1` (the intra-op pool hands disjoint column ranges to workers).
+/// Per-element accumulation order is k-major and independent of `j0`, so
+/// any column partition yields the same bits as the full-width call.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i32_cols(
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
     mut emit: impl FnMut(usize, usize, i32),
 ) {
     debug_assert!(a.len() >= m * k, "A panel too small");
     debug_assert!(b.len() >= k * n, "B matrix too small");
+    debug_assert!(j0 <= j1 && j1 <= n, "bad column range");
     let mut i = 0usize;
     while i < m {
         let mr = MR.min(m - i);
-        let mut j = 0usize;
-        while j < n {
-            let nr = NR.min(n - j);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
             let mut acc: [[i32; NR]; MR] = [[0; NR]; MR];
             for p in 0..k {
                 let brow = &b[p * n + j..p * n + j + nr];
@@ -142,16 +178,32 @@ pub fn gemm_i64(
     m: usize,
     n: usize,
     k: usize,
+    emit: impl FnMut(usize, usize, i64),
+) {
+    gemm_i64_cols(a, b, m, n, k, 0, n, emit);
+}
+
+/// Column-range variant of [`gemm_i64`] (see [`gemm_i32_cols`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i64_cols(
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
     mut emit: impl FnMut(usize, usize, i64),
 ) {
     debug_assert!(a.len() >= m * k, "A panel too small");
     debug_assert!(b.len() >= k * n, "B matrix too small");
+    debug_assert!(j0 <= j1 && j1 <= n, "bad column range");
     let mut i = 0usize;
     while i < m {
         let mr = MR.min(m - i);
-        let mut j = 0usize;
-        while j < n {
-            let nr = NR.min(n - j);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
             let mut acc: [[i64; NR]; MR] = [[0; NR]; MR];
             for p in 0..k {
                 let brow = &b[p * n + j..p * n + j + nr];
@@ -188,16 +240,34 @@ pub fn gemm_f32(
     m: usize,
     n: usize,
     k: usize,
+    emit: impl FnMut(usize, usize, f32),
+) {
+    gemm_f32_cols(a, b, m, n, k, 0, n, emit);
+}
+
+/// Column-range variant of [`gemm_f32`]. Per-element accumulation stays
+/// k-major regardless of the tile origin, so a column partition does not
+/// change the f32 rounding relative to the full-width call.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_cols(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
     mut emit: impl FnMut(usize, usize, f32),
 ) {
     debug_assert!(a.len() >= m * k, "A panel too small");
     debug_assert!(b.len() >= k * n, "B matrix too small");
+    debug_assert!(j0 <= j1 && j1 <= n, "bad column range");
     let mut i = 0usize;
     while i < m {
         let mr = MR.min(m - i);
-        let mut j = 0usize;
-        while j < n {
-            let nr = NR.min(n - j);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
             let mut acc: [[f32; NR]; MR] = [[0.0; NR]; MR];
             for p in 0..k {
                 let brow = &b[p * n + j..p * n + j + nr];
@@ -418,6 +488,81 @@ fn conv2d_geometry(
 }
 
 // ---------------------------------------------------------------------------
+// Parallel dispatch
+// ---------------------------------------------------------------------------
+
+/// Split a conv's output positions into per-thread column panels: chunk
+/// `t` of the pool's static partition packs its row panels into scratch
+/// slab `t` (each resized to `panel_elems`) and calls
+/// `body(panel, row0, rows)` once per panel. `body` must write only the
+/// output rows `row0..row0 + rows` — chunks own disjoint position
+/// ranges, so the writes never alias. Panel grouping does not affect
+/// per-element results (packing a row is independent of its neighbours
+/// and the kernels accumulate k-major per element), so every thread
+/// count produces the single-thread bits.
+fn split_positions<T: Copy + Default + Send>(
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<T>],
+    panel_elems: usize,
+    rows_cache: usize,
+    positions: usize,
+    body: &(dyn Fn(&mut [T], usize, usize) + Sync),
+) {
+    let t = pool.chunks_for(positions);
+    assert!(
+        scratch.len() >= t,
+        "need one GEMM scratch slab per intra-op thread ({} < {t})",
+        scratch.len()
+    );
+    // Grow-only slab sizing: the pack_* functions fully overwrite the
+    // panel prefix they use (padding taps included), so stale contents
+    // are never read and re-zeroing every call would just burn serial
+    // time on the hot path. Capacity is preallocated by the arena, so
+    // growth never reallocates in steady state.
+    for s in scratch[..t].iter_mut() {
+        if s.len() < panel_elems {
+            s.resize(panel_elems, T::default());
+        }
+    }
+    if t == 1 {
+        // Serial fast path: no views, no dispatch — steady-state requests
+        // stay completely allocation-free (the PR-1 contract the arena
+        // tests pin).
+        let panel = &mut scratch[0][..panel_elems];
+        let mut row0 = 0usize;
+        while row0 < positions {
+            let rows = rows_cache.min(positions - row0);
+            body(&mut panel[..], row0, rows);
+            row0 += rows;
+        }
+        return;
+    }
+    let views: Vec<SharedOut<T>> =
+        scratch[..t].iter_mut().map(|s| SharedOut::new(&mut s[..])).collect();
+    pool.run_partitioned(positions, &|tid, s0, s1| {
+        // SAFETY: slab `tid` belongs to exactly this chunk.
+        let panel: &mut [T] = unsafe { views[tid].slice_mut(0, panel_elems) };
+        let mut row0 = s0;
+        while row0 < s1 {
+            let rows = rows_cache.min(s1 - row0);
+            body(&mut panel[..], row0, rows);
+            row0 += rows;
+        }
+    });
+}
+
+/// Split a dense layer's output units across the pool in NR-aligned
+/// column tiles (`body(j0, j1)` computes columns `j0..j1`), so the
+/// parallel tiling is the serial tiling and each tile is written by
+/// exactly one worker.
+fn split_col_tiles(pool: &IntraOpPool, n: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+    let tiles = n.div_ceil(NR);
+    pool.run_partitioned(tiles, &|_tid, t0, t1| {
+        body(t0 * NR, (t1 * NR).min(n));
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Float32 lowering
 // ---------------------------------------------------------------------------
 
@@ -435,14 +580,15 @@ pub fn conv1d_gemm(
     stride: usize,
     padding: Padding,
     relu: bool,
-    scratch: &mut Vec<f32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<f32>],
     out: &mut Vec<f32>,
 ) -> usize {
     let (_, s_out) = conv1d_geometry(s, k, stride, padding);
     if s_out * f * k * c < GEMM_MIN_MACCS {
         return super::float_ops::conv1d_ref(x, s, c, w, k, f, b, stride, padding, relu, out);
     }
-    conv1d_gemm_impl(x, s, c, w, k, f, b, stride, padding, relu, scratch, out)
+    conv1d_gemm_impl(x, s, c, w, k, f, b, stride, padding, relu, pool, scratch, out)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -457,27 +603,25 @@ fn conv1d_gemm_impl(
     stride: usize,
     padding: Padding,
     relu: bool,
-    scratch: &mut Vec<f32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<f32>],
     out: &mut Vec<f32>,
 ) -> usize {
     let (pad_lo, s_out) = conv1d_geometry(s, k, stride, padding);
     let taps = k * c;
     out.clear();
     out.resize(s_out * f, 0.0);
-    let rows_max = panel_rows(taps, s_out);
-    scratch.clear();
-    scratch.resize(rows_max * taps, 0.0);
-    let mut row0 = 0usize;
-    while row0 < s_out {
-        let rows = rows_max.min(s_out - row0);
-        pack_1d_f32(x, s, c, k, stride, pad_lo, row0, rows, &mut scratch[..rows * taps]);
-        let panel = &scratch[..rows * taps];
-        gemm_f32(panel, w, rows, f, taps, |r, fi, acc| {
+    let rows_cache = panel_rows(taps, s_out);
+    let out_view = SharedOut::new(&mut out[..]);
+    let body = |panel: &mut [f32], row0: usize, rows: usize| {
+        pack_1d_f32(x, s, c, k, stride, pad_lo, row0, rows, &mut panel[..rows * taps]);
+        gemm_f32(&panel[..rows * taps], w, rows, f, taps, |r, fi, acc| {
             let v = acc + b[fi];
-            out[(row0 + r) * f + fi] = if relu { v.max(0.0) } else { v };
+            // SAFETY: this chunk owns output rows row0..row0+rows.
+            unsafe { out_view.write((row0 + r) * f + fi, if relu { v.max(0.0) } else { v }) };
         });
-        row0 += rows;
-    }
+    };
+    split_positions(pool, scratch, rows_cache * taps, rows_cache, s_out, &body);
     s_out
 }
 
@@ -496,7 +640,8 @@ pub fn conv2d_gemm(
     stride: usize,
     padding: Padding,
     relu: bool,
-    scratch: &mut Vec<f32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<f32>],
     out: &mut Vec<f32>,
 ) -> (usize, usize) {
     let (_, (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
@@ -505,7 +650,7 @@ pub fn conv2d_gemm(
             x, h, wdt, c, w, kh, kw, f, b, stride, padding, relu, out,
         );
     }
-    conv2d_gemm_impl(x, h, wdt, c, w, kh, kw, f, b, stride, padding, relu, scratch, out)
+    conv2d_gemm_impl(x, h, wdt, c, w, kh, kw, f, b, stride, padding, relu, pool, scratch, out)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -522,7 +667,8 @@ fn conv2d_gemm_impl(
     stride: usize,
     padding: Padding,
     relu: bool,
-    scratch: &mut Vec<f32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<f32>],
     out: &mut Vec<f32>,
 ) -> (usize, usize) {
     let ((ph, pw), (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
@@ -530,28 +676,34 @@ fn conv2d_gemm_impl(
     let taps = kh * kw * c;
     out.clear();
     out.resize(positions * f, 0.0);
-    let rows_max = panel_rows(taps, positions);
-    scratch.clear();
-    scratch.resize(rows_max * taps, 0.0);
-    let mut row0 = 0usize;
-    while row0 < positions {
-        let rows = rows_max.min(positions - row0);
+    let rows_cache = panel_rows(taps, positions);
+    let out_view = SharedOut::new(&mut out[..]);
+    let body = |panel: &mut [f32], row0: usize, rows: usize| {
         pack_2d_f32(
             x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows,
-            &mut scratch[..rows * taps],
+            &mut panel[..rows * taps],
         );
-        let panel = &scratch[..rows * taps];
-        gemm_f32(panel, w, rows, f, taps, |r, fi, acc| {
+        gemm_f32(&panel[..rows * taps], w, rows, f, taps, |r, fi, acc| {
             let v = acc + b[fi];
-            out[(row0 + r) * f + fi] = if relu { v.max(0.0) } else { v };
+            // SAFETY: this chunk owns output rows row0..row0+rows.
+            unsafe { out_view.write((row0 + r) * f + fi, if relu { v.max(0.0) } else { v }) };
         });
-        row0 += rows;
-    }
+    };
+    split_positions(pool, scratch, rows_cache * taps, rows_cache, positions, &body);
     (h_out, w_out)
 }
 
-/// GEMM-lowered float dense (m = 1 GEMM; no packing).
-pub fn dense_gemm(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, out: &mut Vec<f32>) {
+/// GEMM-lowered float dense (m = 1 GEMM; no packing). The filter
+/// dimension is split across the pool in NR-aligned column tiles.
+pub fn dense_gemm(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    o: usize,
+    relu: bool,
+    pool: &IntraOpPool,
+    out: &mut Vec<f32>,
+) {
     let i = x.len();
     if i * o < GEMM_MIN_MACCS {
         super::float_ops::dense_ref(x, w, b, o, relu, out);
@@ -559,9 +711,13 @@ pub fn dense_gemm(x: &[f32], w: &[f32], b: &[f32], o: usize, relu: bool, out: &m
     }
     out.clear();
     out.resize(o, 0.0);
-    gemm_f32(x, w, 1, o, i, |_r, oi, acc| {
-        let v = acc + b[oi];
-        out[oi] = if relu { v.max(0.0) } else { v };
+    let out_view = SharedOut::new(&mut out[..]);
+    split_col_tiles(pool, o, &|j0, j1| {
+        gemm_f32_cols(x, w, 1, o, i, j0, j1, |_r, oi, acc| {
+            let v = acc + b[oi];
+            // SAFETY: this chunk owns output columns j0..j1.
+            unsafe { out_view.write(oi, if relu { v.max(0.0) } else { v }) };
+        });
     });
 }
 
@@ -583,14 +739,15 @@ pub fn conv1d_q_gemm(
     padding: Padding,
     relu: bool,
     width: u32,
-    scratch: &mut Vec<i32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
     out: &mut Vec<i32>,
 ) -> usize {
     let (_, s_out) = conv1d_geometry(s, k, stride, padding);
     if s_out * f * k * c < GEMM_MIN_MACCS {
         return int_ops::conv1d_q_ref(x, s, c, qw, k, f, stride, padding, relu, width, out);
     }
-    conv1d_q_gemm_impl(x, s, c, qw, k, f, stride, padding, relu, width, scratch, out)
+    conv1d_q_gemm_impl(x, s, c, qw, k, f, stride, padding, relu, width, pool, scratch, out)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -605,23 +762,21 @@ fn conv1d_q_gemm_impl(
     padding: Padding,
     relu: bool,
     width: u32,
-    scratch: &mut Vec<i32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
     out: &mut Vec<i32>,
 ) -> usize {
     let (pad_lo, s_out) = conv1d_geometry(s, k, stride, padding);
     let taps = k * c;
     out.clear();
     out.resize(s_out * f, 0);
-    let rows_max = panel_rows(taps, s_out);
-    scratch.clear();
-    scratch.resize(rows_max * taps, 0);
+    let rows_cache = panel_rows(taps, s_out);
     let fits = accum_fits_i32(qw, taps, width);
     let uniform = qw.shift.len() == 1;
-    let mut row0 = 0usize;
-    while row0 < s_out {
-        let rows = rows_max.min(s_out - row0);
-        pack_1d_i32(x, s, c, k, stride, pad_lo, row0, rows, 0, &mut scratch[..rows * taps]);
-        let panel = &scratch[..rows * taps];
+    let out_view = SharedOut::new(&mut out[..]);
+    let body = |panel: &mut [i32], row0: usize, rows: usize| {
+        pack_1d_i32(x, s, c, k, stride, pad_lo, row0, rows, 0, &mut panel[..rows * taps]);
+        let panel = &panel[..rows * taps];
         if fits {
             gemm_i32(panel, &qw.w, rows, f, taps, |r, fi, acc| {
                 let total = acc + qw.b_acc[fi] as i32;
@@ -630,7 +785,8 @@ fn conv1d_q_gemm_impl(
                 if relu && v < 0 {
                     v = 0;
                 }
-                out[(row0 + r) * f + fi] = v;
+                // SAFETY: this chunk owns output rows row0..row0+rows.
+                unsafe { out_view.write((row0 + r) * f + fi, v) };
             });
         } else {
             gemm_i64(panel, &qw.w, rows, f, taps, |r, fi, acc| {
@@ -640,11 +796,12 @@ fn conv1d_q_gemm_impl(
                 if relu && v < 0 {
                     v = 0;
                 }
-                out[(row0 + r) * f + fi] = v;
+                // SAFETY: as above.
+                unsafe { out_view.write((row0 + r) * f + fi, v) };
             });
         }
-        row0 += rows;
-    }
+    };
+    split_positions(pool, scratch, rows_cache * taps, rows_cache, s_out, &body);
     s_out
 }
 
@@ -664,7 +821,8 @@ pub fn conv2d_q_gemm(
     padding: Padding,
     relu: bool,
     width: u32,
-    scratch: &mut Vec<i32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
     out: &mut Vec<i32>,
 ) -> (usize, usize) {
     let (_, (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
@@ -673,7 +831,9 @@ pub fn conv2d_q_gemm(
             x, h, wdt, c, qw, kh, kw, f, stride, padding, relu, width, out,
         );
     }
-    conv2d_q_gemm_impl(x, h, wdt, c, qw, kh, kw, f, stride, padding, relu, width, scratch, out)
+    conv2d_q_gemm_impl(
+        x, h, wdt, c, qw, kh, kw, f, stride, padding, relu, width, pool, scratch, out,
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -690,7 +850,8 @@ fn conv2d_q_gemm_impl(
     padding: Padding,
     relu: bool,
     width: u32,
-    scratch: &mut Vec<i32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
     out: &mut Vec<i32>,
 ) -> (usize, usize) {
     let ((ph, pw), (h_out, w_out)) = conv2d_geometry(h, wdt, kh, kw, stride, padding);
@@ -698,19 +859,16 @@ fn conv2d_q_gemm_impl(
     let taps = kh * kw * c;
     out.clear();
     out.resize(positions * f, 0);
-    let rows_max = panel_rows(taps, positions);
-    scratch.clear();
-    scratch.resize(rows_max * taps, 0);
+    let rows_cache = panel_rows(taps, positions);
     let fits = accum_fits_i32(qw, taps, width);
     let uniform = qw.shift.len() == 1;
-    let mut row0 = 0usize;
-    while row0 < positions {
-        let rows = rows_max.min(positions - row0);
+    let out_view = SharedOut::new(&mut out[..]);
+    let body = |panel: &mut [i32], row0: usize, rows: usize| {
         pack_2d_i32(
             x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, 0,
-            &mut scratch[..rows * taps],
+            &mut panel[..rows * taps],
         );
-        let panel = &scratch[..rows * taps];
+        let panel = &panel[..rows * taps];
         if fits {
             gemm_i32(panel, &qw.w, rows, f, taps, |r, fi, acc| {
                 let total = acc + qw.b_acc[fi] as i32;
@@ -719,7 +877,8 @@ fn conv2d_q_gemm_impl(
                 if relu && v < 0 {
                     v = 0;
                 }
-                out[(row0 + r) * f + fi] = v;
+                // SAFETY: this chunk owns output rows row0..row0+rows.
+                unsafe { out_view.write((row0 + r) * f + fi, v) };
             });
         } else {
             gemm_i64(panel, &qw.w, rows, f, taps, |r, fi, acc| {
@@ -729,23 +888,26 @@ fn conv2d_q_gemm_impl(
                 if relu && v < 0 {
                     v = 0;
                 }
-                out[(row0 + r) * f + fi] = v;
+                // SAFETY: as above.
+                unsafe { out_view.write((row0 + r) * f + fi, v) };
             });
         }
-        row0 += rows;
-    }
+    };
+    split_positions(pool, scratch, rows_cache * taps, rows_cache, positions, &body);
     (h_out, w_out)
 }
 
 /// GEMM-lowered fixed-point dense (bit-exact with
 /// [`int_ops::dense_q_ref`]; picks i32 lanes under the same admission
-/// guard, which is semantics-neutral for exact integer sums).
+/// guard, which is semantics-neutral for exact integer sums). The filter
+/// dimension is split across the pool in NR-aligned column tiles.
 pub fn dense_q_gemm(
     x: &[i32],
     qw: &QNodeWeights,
     o: usize,
     relu: bool,
     width: u32,
+    pool: &IntraOpPool,
     out: &mut Vec<i32>,
 ) {
     let i = x.len();
@@ -753,7 +915,7 @@ pub fn dense_q_gemm(
         int_ops::dense_q_ref(x, qw, o, relu, width, out);
         return;
     }
-    dense_q_gemm_impl(x, qw, o, relu, width, out);
+    dense_q_gemm_impl(x, qw, o, relu, width, pool, out);
 }
 
 fn dense_q_gemm_impl(
@@ -762,6 +924,7 @@ fn dense_q_gemm_impl(
     o: usize,
     relu: bool,
     width: u32,
+    pool: &IntraOpPool,
     out: &mut Vec<i32>,
 ) {
     let i = x.len();
@@ -769,27 +932,32 @@ fn dense_q_gemm_impl(
     out.resize(o, 0);
     let fits = accum_fits_i32(qw, i, width);
     let uniform = qw.shift.len() == 1;
-    if fits {
-        gemm_i32(x, &qw.w, 1, o, i, |_r, oi, acc| {
-            let total = acc + qw.b_acc[oi] as i32;
-            let sh = if uniform { qw.shift[0] } else { qw.shift[oi] };
-            let mut v = clamp_to(rescale(i64::from(total), sh), width);
-            if relu && v < 0 {
-                v = 0;
-            }
-            out[oi] = v;
-        });
-    } else {
-        gemm_i64(x, &qw.w, 1, o, i, |_r, oi, acc| {
-            let total = acc + qw.b_acc[oi];
-            let sh = if uniform { qw.shift[0] } else { qw.shift[oi] };
-            let mut v = clamp_to(rescale(total, sh), width);
-            if relu && v < 0 {
-                v = 0;
-            }
-            out[oi] = v;
-        });
-    }
+    let out_view = SharedOut::new(&mut out[..]);
+    split_col_tiles(pool, o, &|j0, j1| {
+        if fits {
+            gemm_i32_cols(x, &qw.w, 1, o, i, j0, j1, |_r, oi, acc| {
+                let total = acc + qw.b_acc[oi] as i32;
+                let sh = if uniform { qw.shift[0] } else { qw.shift[oi] };
+                let mut v = clamp_to(rescale(i64::from(total), sh), width);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                // SAFETY: this chunk owns output columns j0..j1.
+                unsafe { out_view.write(oi, v) };
+            });
+        } else {
+            gemm_i64_cols(x, &qw.w, 1, o, i, j0, j1, |_r, oi, acc| {
+                let total = acc + qw.b_acc[oi];
+                let sh = if uniform { qw.shift[0] } else { qw.shift[oi] };
+                let mut v = clamp_to(rescale(total, sh), width);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                // SAFETY: as above.
+                unsafe { out_view.write(oi, v) };
+            });
+        }
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -811,7 +979,8 @@ pub fn conv_affine_gemm(
     padding: Padding,
     relu: bool,
     dims: usize,
-    scratch: &mut Vec<i32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
     out: &mut Vec<i32>,
 ) {
     let taps: usize = wshape[..wshape.len() - 1].iter().product();
@@ -819,7 +988,8 @@ pub fn conv_affine_gemm(
     let positions = if dims == 1 {
         conv1d_geometry(ish[0], wshape[0], stride, padding).1
     } else {
-        let (_, (h_out, w_out)) = conv2d_geometry(ish[0], ish[1], wshape[0], wshape[1], stride, padding);
+        let (_, (h_out, w_out)) =
+            conv2d_geometry(ish[0], ish[1], wshape[0], wshape[1], stride, padding);
         h_out * w_out
     };
     if positions * f * taps < GEMM_MIN_MACCS {
@@ -829,7 +999,7 @@ pub fn conv_affine_gemm(
         return;
     }
     conv_affine_gemm_impl(
-        x, ish, wshape, qw, zp_in, zp_out, stride, padding, relu, dims, scratch, out,
+        x, ish, wshape, qw, zp_in, zp_out, stride, padding, relu, dims, pool, scratch, out,
     );
 }
 
@@ -845,7 +1015,8 @@ fn conv_affine_gemm_impl(
     padding: Padding,
     relu: bool,
     dims: usize,
-    scratch: &mut Vec<i32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
     out: &mut Vec<i32>,
 ) {
     if dims == 1 {
@@ -855,27 +1026,22 @@ fn conv_affine_gemm_impl(
         let taps = k * c;
         out.clear();
         out.resize(s_out * f, 0);
-        let rows_max = panel_rows(taps, s_out);
-        scratch.clear();
-        scratch.resize(rows_max * taps, 0);
-        let mut row0 = 0usize;
-        while row0 < s_out {
-            let rows = rows_max.min(s_out - row0);
-            pack_1d_i32(
-                x, s, c, k, stride, pad_lo, row0, rows, zp_in,
-                &mut scratch[..rows * taps],
-            );
-            let panel = &scratch[..rows * taps];
-            gemm_i64(panel, &qw.w, rows, f, taps, |r, fi, acc| {
+        let rows_cache = panel_rows(taps, s_out);
+        let out_view = SharedOut::new(&mut out[..]);
+        let body = |panel: &mut [i32], row0: usize, rows: usize| {
+            // Zero-point pre-subtracted panel, packed by the owning worker.
+            pack_1d_i32(x, s, c, k, stride, pad_lo, row0, rows, zp_in, &mut panel[..rows * taps]);
+            gemm_i64(&panel[..rows * taps], &qw.w, rows, f, taps, |r, fi, acc| {
                 let total = qw.b[fi] + acc;
                 let mut v = requantize(total as i32, qw.mult[fi], qw.shift[fi], zp_out);
                 if relu {
                     v = v.max(zp_out);
                 }
-                out[(row0 + r) * f + fi] = v;
+                // SAFETY: this chunk owns output rows row0..row0+rows.
+                unsafe { out_view.write((row0 + r) * f + fi, v) };
             });
-            row0 += rows;
-        }
+        };
+        split_positions(pool, scratch, rows_cache * taps, rows_cache, s_out, &body);
     } else {
         let (h, wdt, c) = (ish[0], ish[1], ish[2]);
         let (kh, kw, f) = (wshape[0], wshape[1], wshape[3]);
@@ -884,33 +1050,31 @@ fn conv_affine_gemm_impl(
         let taps = kh * kw * c;
         out.clear();
         out.resize(positions * f, 0);
-        let rows_max = panel_rows(taps, positions);
-        scratch.clear();
-        scratch.resize(rows_max * taps, 0);
-        let mut row0 = 0usize;
-        while row0 < positions {
-            let rows = rows_max.min(positions - row0);
+        let rows_cache = panel_rows(taps, positions);
+        let out_view = SharedOut::new(&mut out[..]);
+        let body = |panel: &mut [i32], row0: usize, rows: usize| {
             pack_2d_i32(
                 x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, zp_in,
-                &mut scratch[..rows * taps],
+                &mut panel[..rows * taps],
             );
-            let panel = &scratch[..rows * taps];
-            gemm_i64(panel, &qw.w, rows, f, taps, |r, fi, acc| {
+            gemm_i64(&panel[..rows * taps], &qw.w, rows, f, taps, |r, fi, acc| {
                 let total = qw.b[fi] + acc;
                 let mut v = requantize(total as i32, qw.mult[fi], qw.shift[fi], zp_out);
                 if relu {
                     v = v.max(zp_out);
                 }
-                out[(row0 + r) * f + fi] = v;
+                // SAFETY: this chunk owns output rows row0..row0+rows.
+                unsafe { out_view.write((row0 + r) * f + fi, v) };
             });
-            row0 += rows;
-        }
+        };
+        split_positions(pool, scratch, rows_cache * taps, rows_cache, positions, &body);
     }
 }
 
-/// GEMM-lowered affine dense: stages the zero-point-shifted input in the
-/// arena scratch, then runs the m = 1 i64 GEMM. Bit-exact with
-/// `affine_exec::dense_affine_ref`.
+/// GEMM-lowered affine dense: stages the zero-point-shifted input in
+/// scratch slab 0 (read-shared by every worker), then runs the m = 1
+/// i64 GEMM with the filter dimension split across the pool. Bit-exact
+/// with `affine_exec::dense_affine_ref`.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_affine_gemm(
     x: &[i32],
@@ -919,7 +1083,8 @@ pub fn dense_affine_gemm(
     zp_out: i32,
     o: usize,
     relu: bool,
-    scratch: &mut Vec<i32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
     out: &mut Vec<i32>,
 ) {
     let i = x.len();
@@ -927,7 +1092,7 @@ pub fn dense_affine_gemm(
         super::affine_exec::dense_affine_ref(x, qw, zp_in, zp_out, o, relu, out);
         return;
     }
-    dense_affine_gemm_impl(x, qw, zp_in, zp_out, o, relu, scratch, out);
+    dense_affine_gemm_impl(x, qw, zp_in, zp_out, o, relu, pool, scratch, out);
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -938,25 +1103,31 @@ fn dense_affine_gemm_impl(
     zp_out: i32,
     o: usize,
     relu: bool,
-    scratch: &mut Vec<i32>,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
     out: &mut Vec<i32>,
 ) {
     let i = x.len();
-    scratch.clear();
-    scratch.resize(i, 0);
-    for (d, &v) in scratch.iter_mut().zip(x) {
+    let slab = scratch.first_mut().expect("need at least one GEMM scratch slab");
+    slab.clear();
+    slab.resize(i, 0);
+    for (d, &v) in slab.iter_mut().zip(x) {
         *d = v - zp_in;
     }
     out.clear();
     out.resize(o, 0);
-    let shifted: &[i32] = scratch;
-    gemm_i64(shifted, &qw.w, 1, o, i, |_r, oi, acc| {
-        let total = qw.b[oi] + acc;
-        let mut v = requantize(total as i32, qw.mult[oi], qw.shift[oi], zp_out);
-        if relu {
-            v = v.max(zp_out);
-        }
-        out[oi] = v;
+    let shifted: &[i32] = slab;
+    let out_view = SharedOut::new(&mut out[..]);
+    split_col_tiles(pool, o, &|j0, j1| {
+        gemm_i64_cols(shifted, &qw.w, 1, o, i, j0, j1, |_r, oi, acc| {
+            let total = qw.b[oi] + acc;
+            let mut v = requantize(total as i32, qw.mult[oi], qw.shift[oi], zp_out);
+            if relu {
+                v = v.max(zp_out);
+            }
+            // SAFETY: this chunk owns output columns j0..j1.
+            unsafe { out_view.write(oi, v) };
+        });
     });
 }
 
@@ -1109,9 +1280,10 @@ mod tests {
             let so_ref =
                 int_ops::conv1d_q_ref(&x, s, c, &qw, k, f, stride, padding, relu, width, &mut want);
             let mut got = Vec::new();
-            let mut scratch = Vec::new();
+            let pool = IntraOpPool::serial();
+            let mut scratch = vec![Vec::new()];
             let so_gemm = conv1d_q_gemm_impl(
-                &x, s, c, &qw, k, f, stride, padding, relu, width, &mut scratch, &mut got,
+                &x, s, c, &qw, k, f, stride, padding, relu, width, &pool, &mut scratch, &mut got,
             );
             prop_assert!(
                 so_ref == so_gemm && want == got,
@@ -1121,7 +1293,8 @@ mod tests {
             // The public hybrid entry must agree too (either branch).
             let mut hybrid = Vec::new();
             conv1d_q_gemm(
-                &x, s, c, &qw, k, f, stride, padding, relu, width, &mut scratch, &mut hybrid,
+                &x, s, c, &qw, k, f, stride, padding, relu, width, &pool, &mut scratch,
+                &mut hybrid,
             );
             prop_assert!(hybrid == want, "hybrid conv1d_q_gemm diverged");
             Ok(())
@@ -1151,10 +1324,11 @@ mod tests {
                 &x, h, wdt, c, &qw, kh, kw, f, stride, padding, relu, width, &mut want,
             );
             let mut got = Vec::new();
-            let mut scratch = Vec::new();
+            let pool = IntraOpPool::serial();
+            let mut scratch = vec![Vec::new()];
             let sh_gemm = conv2d_q_gemm_impl(
-                &x, h, wdt, c, &qw, kh, kw, f, stride, padding, relu, width, &mut scratch,
-                &mut got,
+                &x, h, wdt, c, &qw, kh, kw, f, stride, padding, relu, width, &pool,
+                &mut scratch, &mut got,
             );
             prop_assert!(
                 sh_ref == sh_gemm && want == got,
@@ -1176,7 +1350,8 @@ mod tests {
             let mut want = Vec::new();
             int_ops::dense_q_ref(&x, &qw, o, false, width, &mut want);
             let mut got = Vec::new();
-            dense_q_gemm_impl(&x, &qw, o, false, width, &mut got);
+            let pool = IntraOpPool::serial();
+            dense_q_gemm_impl(&x, &qw, o, false, width, &pool, &mut got);
             prop_assert!(want == got, "dense_q gemm diverged at i={i} o={o} width={width}");
             Ok(())
         });
@@ -1201,9 +1376,10 @@ mod tests {
             let so =
                 float_ops::conv1d_ref(&x, s, c, &w, k, f, &b, stride, padding, relu, &mut want);
             let mut got = Vec::new();
-            let mut scratch = Vec::new();
+            let pool = IntraOpPool::serial();
+            let mut scratch = vec![Vec::new()];
             let so2 = conv1d_gemm_impl(
-                &x, s, c, &w, k, f, &b, stride, padding, relu, &mut scratch, &mut got,
+                &x, s, c, &w, k, f, &b, stride, padding, relu, &pool, &mut scratch, &mut got,
             );
             prop_assert!(so == so2, "s_out mismatch");
             let taps = k * c;
@@ -1254,9 +1430,11 @@ mod tests {
                 &x, h, wdt, c, &w, kh, kw, f, &b, stride, padding, relu, &mut want,
             );
             let mut got = Vec::new();
-            let mut scratch = Vec::new();
+            let pool = IntraOpPool::serial();
+            let mut scratch = vec![Vec::new()];
             let dims_gemm = conv2d_gemm_impl(
-                &x, h, wdt, c, &w, kh, kw, f, &b, stride, padding, relu, &mut scratch, &mut got,
+                &x, h, wdt, c, &w, kh, kw, f, &b, stride, padding, relu, &pool, &mut scratch,
+                &mut got,
             );
             prop_assert!(dims_ref == dims_gemm, "out dims mismatch");
             let taps = (kh * kw * c) as f64;
@@ -1323,16 +1501,17 @@ mod tests {
             // The _impl call forces the blocked path even for shapes the
             // hybrid entry would route to the reference.
             let mut got = Vec::new();
-            let mut scratch = Vec::new();
+            let pool = IntraOpPool::serial();
+            let mut scratch = vec![Vec::new()];
             conv_affine_gemm_impl(
-                &x, &ish, &wshape, &qw, zp_in, zp_out, stride, padding, relu, dims,
+                &x, &ish, &wshape, &qw, zp_in, zp_out, stride, padding, relu, dims, &pool,
                 &mut scratch, &mut got,
             );
             prop_assert!(want == got, "affine conv gemm diverged (dims={dims})");
             // And the public hybrid entry agrees on either branch.
             let mut hybrid = Vec::new();
             conv_affine_gemm(
-                &x, &ish, &wshape, &qw, zp_in, zp_out, stride, padding, relu, dims,
+                &x, &ish, &wshape, &qw, zp_in, zp_out, stride, padding, relu, dims, &pool,
                 &mut scratch, &mut hybrid,
             );
             prop_assert!(want == hybrid, "affine conv hybrid diverged (dims={dims})");
@@ -1353,9 +1532,206 @@ mod tests {
             let mut want = Vec::new();
             affine_exec::dense_affine_ref(&x, &qw, zp_in, zp_out, o, relu, &mut want);
             let mut got = Vec::new();
-            let mut scratch = Vec::new();
-            dense_affine_gemm_impl(&x, &qw, zp_in, zp_out, o, relu, &mut scratch, &mut got);
+            let pool = IntraOpPool::serial();
+            let mut scratch = vec![Vec::new()];
+            dense_affine_gemm_impl(&x, &qw, zp_in, zp_out, o, relu, &pool, &mut scratch, &mut got);
             prop_assert!(want == got, "affine dense gemm diverged at i={i} o={o}");
+            Ok(())
+        });
+    }
+
+    // --- intra-op parallelism: bit-exact vs single thread ---
+
+    fn slabs(n: usize) -> Vec<Vec<i32>> {
+        vec![Vec::new(); n]
+    }
+
+    #[test]
+    fn parallel_conv_q_gemm_bit_identical_across_thread_counts() {
+        // i32-lane and i64-wide flavors, with biases straddling the
+        // accum_fits_i32 admission boundary, at threads ∈ {2, 4}: the
+        // N-dimension panel split must reproduce the single-thread bits.
+        let pools = [IntraOpPool::new(2), IntraOpPool::new(4)];
+        property(60, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let k = g.usize_in(1, 5);
+            let c = g.usize_in(1, 6);
+            let f = g.usize_in(1, 12);
+            let s = g.usize_in(k, 64);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let qw = random_qw(g, k * c, f, width, width == 8);
+            let x: Vec<i32> = {
+                let lim = (1i32 << (width - 1)) - 1;
+                (0..s * c).map(|_| g.i32_in(-lim - 1, lim)).collect()
+            };
+            let serial = IntraOpPool::serial();
+            let mut scratch1 = slabs(1);
+            let mut want = Vec::new();
+            conv1d_q_gemm_impl(
+                &x, s, c, &qw, k, f, stride, padding, relu, width, &serial, &mut scratch1,
+                &mut want,
+            );
+            for pool in &pools {
+                let mut scratch = slabs(pool.threads());
+                let mut got = Vec::new();
+                conv1d_q_gemm_impl(
+                    &x, s, c, &qw, k, f, stride, padding, relu, width, pool, &mut scratch,
+                    &mut got,
+                );
+                prop_assert!(
+                    want == got,
+                    "conv1d_q diverged at threads={}: width={width} k={k} c={c} f={f} s={s}",
+                    pool.threads()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_conv2d_q_gemm_bit_identical_across_thread_counts() {
+        let pools = [IntraOpPool::new(2), IntraOpPool::new(4)];
+        property(40, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let kh = g.usize_in(1, 3);
+            let kw = g.usize_in(1, 3);
+            let c = g.usize_in(1, 4);
+            let f = g.usize_in(1, 9);
+            let h = g.usize_in(kh, 14);
+            let wdt = g.usize_in(kw, 14);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let qw = random_qw(g, kh * kw * c, f, width, width == 8);
+            let x: Vec<i32> = {
+                let lim = (1i32 << (width - 1)) - 1;
+                (0..h * wdt * c).map(|_| g.i32_in(-lim - 1, lim)).collect()
+            };
+            let serial = IntraOpPool::serial();
+            let mut scratch1 = slabs(1);
+            let mut want = Vec::new();
+            conv2d_q_gemm_impl(
+                &x, h, wdt, c, &qw, kh, kw, f, stride, padding, relu, width, &serial,
+                &mut scratch1, &mut want,
+            );
+            for pool in &pools {
+                let mut scratch = slabs(pool.threads());
+                let mut got = Vec::new();
+                conv2d_q_gemm_impl(
+                    &x, h, wdt, c, &qw, kh, kw, f, stride, padding, relu, width, pool,
+                    &mut scratch, &mut got,
+                );
+                prop_assert!(
+                    want == got,
+                    "conv2d_q diverged at threads={}: width={width} kh={kh} kw={kw} c={c} f={f}",
+                    pool.threads()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_dense_and_affine_bit_identical_across_thread_counts() {
+        let pools = [IntraOpPool::new(2), IntraOpPool::new(4)];
+        property(40, |g| {
+            // Fixed-point dense (both accumulator flavors via straddle).
+            let width = *g.pick(&[8u32, 16]);
+            let i = g.usize_in(1, 96);
+            let o = g.usize_in(1, 40);
+            let qw = random_qw(g, i, o, width, width == 8);
+            let lim = (1i32 << (width - 1)) - 1;
+            let x: Vec<i32> = (0..i).map(|_| g.i32_in(-lim - 1, lim)).collect();
+            let serial = IntraOpPool::serial();
+            let mut want = Vec::new();
+            dense_q_gemm_impl(&x, &qw, o, false, width, &serial, &mut want);
+            for pool in &pools {
+                let mut got = Vec::new();
+                dense_q_gemm_impl(&x, &qw, o, false, width, pool, &mut got);
+                prop_assert!(want == got, "dense_q diverged at threads={}", pool.threads());
+            }
+
+            // Affine conv (zero-point pre-subtracted panels) + dense.
+            let zp_in = g.i32_in(-128, 127);
+            let zp_out = g.i32_in(-128, 127);
+            let relu = g.bool();
+            let (k, c, f) = (g.usize_in(1, 5), g.usize_in(1, 4), g.usize_in(1, 8));
+            let s = g.usize_in(k, 32);
+            let (ish, wshape) = (vec![s, c], vec![k, c, f]);
+            let aqw = random_affine_weights(g, k * c, f);
+            let ax: Vec<i32> = (0..s * c).map(|_| g.i32_in(-128, 127)).collect();
+            let mut scratch1 = slabs(1);
+            let mut awant = Vec::new();
+            conv_affine_gemm_impl(
+                &ax, &ish, &wshape, &aqw, zp_in, zp_out, 1, Padding::Same, relu, 1, &serial,
+                &mut scratch1, &mut awant,
+            );
+            let dqw = random_affine_weights(g, i, o);
+            let mut dwant = Vec::new();
+            dense_affine_gemm_impl(
+                &x, &dqw, zp_in, zp_out, o, relu, &serial, &mut scratch1, &mut dwant,
+            );
+            for pool in &pools {
+                let mut scratch = slabs(pool.threads());
+                let mut agot = Vec::new();
+                conv_affine_gemm_impl(
+                    &ax, &ish, &wshape, &aqw, zp_in, zp_out, 1, Padding::Same, relu, 1, pool,
+                    &mut scratch, &mut agot,
+                );
+                prop_assert!(awant == agot, "affine conv diverged at threads={}", pool.threads());
+                let mut dgot = Vec::new();
+                dense_affine_gemm_impl(
+                    &x, &dqw, zp_in, zp_out, o, relu, pool, &mut scratch, &mut dgot,
+                );
+                prop_assert!(dwant == dgot, "affine dense diverged at threads={}", pool.threads());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_f32_conv_ulp_bounded_vs_single_thread() {
+        // Contract: ULP-bounded. (The current schedule is in fact
+        // order-identical — thread assignment never changes per-element
+        // accumulation order — so the observed error is 0, well inside
+        // the bound this test pins.)
+        let pools = [IntraOpPool::new(2), IntraOpPool::new(4)];
+        property(30, |g| {
+            let k = g.usize_in(1, 5);
+            let c = g.usize_in(1, 6);
+            let f = g.usize_in(1, 10);
+            let s = g.usize_in(k, 48);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let w: Vec<f32> = g.vec_normal(k * c * f, 0.5);
+            let b: Vec<f32> = g.vec_normal(f, 0.1);
+            let x: Vec<f32> = g.vec_normal(s * c, 1.0);
+            let serial = IntraOpPool::serial();
+            let mut scratch1 = vec![Vec::new()];
+            let mut want = Vec::new();
+            conv1d_gemm_impl(
+                &x, s, c, &w, k, f, &b, stride, padding, relu, &serial, &mut scratch1, &mut want,
+            );
+            for pool in &pools {
+                let mut scratch = vec![Vec::new(); pool.threads()];
+                let mut got = Vec::new();
+                conv1d_gemm_impl(
+                    &x, s, c, &w, k, f, &b, stride, padding, relu, pool, &mut scratch, &mut got,
+                );
+                prop_assert!(want.len() == got.len(), "length mismatch");
+                for (idx, (&a, &bv)) in want.iter().zip(&got).enumerate() {
+                    // 4-ULP bound around the single-thread value.
+                    let tol = 4.0 * f32::EPSILON * a.abs().max(1e-6);
+                    prop_assert!(
+                        (a - bv).abs() <= tol,
+                        "f32 conv diverged at {idx}, threads={}: {a} vs {bv}",
+                        pool.threads()
+                    );
+                }
+            }
             Ok(())
         });
     }

@@ -22,15 +22,20 @@ pub fn run(qg: &QuantizedGraph, input: &[f32]) -> Vec<f32> {
     let node_elems = super::session::node_elems(graph);
     let mut pools: Vec<Vec<i32>> = vec![Vec::new(); alloc.n_pools()];
     let mut qinput = Vec::new();
-    let mut scratch = Vec::new();
+    let pool = super::parallel::IntraOpPool::serial();
+    let mut scratch = vec![Vec::new()];
     let mut output = Vec::new();
-    run_pooled(qg, input, &alloc, &node_elems, &mut qinput, &mut pools, &mut scratch, &mut output);
+    run_pooled(
+        qg, input, &alloc, &node_elems, &mut qinput, &mut pools, &pool, &mut scratch,
+        &mut output,
+    );
     output
 }
 
 /// Pooled core shared by [`run`] and the Qm.n [`crate::nn::session`]
 /// backend: integer payloads live in the allocator's §5.7 pools, the
-/// quantized input in `qinput`, the dequantized logits in `output`. With
+/// quantized input in `qinput`, the dequantized logits in `output`.
+/// `scratch` carries one im2col slab per intra-op thread of `pool`. With
 /// a preallocated arena no per-request heap allocation occurs.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pooled(
@@ -40,7 +45,8 @@ pub(crate) fn run_pooled(
     node_elems: &[usize],
     qinput: &mut Vec<i32>,
     pools: &mut [Vec<i32>],
-    scratch: &mut Vec<i32>,
+    pool: &super::parallel::IntraOpPool,
+    scratch: &mut [Vec<i32>],
     output: &mut Vec<f32>,
 ) {
     let graph = &qg.graph;
@@ -72,20 +78,21 @@ pub(crate) fn run_pooled(
                     if graph.dims == 1 {
                         gemm::conv1d_q_gemm(
                             x, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
-                            *padding, node.fused_relu, width, scratch, &mut out,
+                            *padding, node.fused_relu, width, pool, scratch, &mut out,
                         );
                     } else {
                         gemm::conv2d_q_gemm(
                             x, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
                             w.shape[3], *stride, *padding, node.fused_relu, width,
-                            scratch, &mut out,
+                            pool, scratch, &mut out,
                         );
                     }
                 }
                 LayerKind::Dense { w, .. } => {
                     let qw = &qg.weights[&node.id];
                     gemm::dense_q_gemm(
-                        src(node.inputs[0]), qw, w.shape[1], node.fused_relu, width, &mut out,
+                        src(node.inputs[0]), qw, w.shape[1], node.fused_relu, width, pool,
+                        &mut out,
                     );
                 }
                 LayerKind::MaxPool { size } => {

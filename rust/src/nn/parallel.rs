@@ -1,0 +1,320 @@
+//! Deterministic intra-op worker pool for the GEMM kernel core.
+//!
+//! The serving scheduler (PR 2) parallelizes *across* requests; this
+//! module parallelizes *within* one conv/dense node, so a single large
+//! inference (the GTSRB conv2d shapes) can use more than one host core.
+//! rayon is unavailable offline, so the pool is std-only: N−1 persistent
+//! worker threads plus the calling thread, fed over per-worker channels.
+//!
+//! # Determinism contract
+//!
+//! [`IntraOpPool::run_partitioned`] splits `0..n` into one contiguous,
+//! **statically sized** chunk per thread (chunk `i` gets
+//! `n/t + (i < n%t)` items — no work stealing, no timing dependence) and
+//! blocks until every chunk has run. The GEMM lowerings in
+//! [`super::gemm`] arrange that
+//!
+//! 1. each output element is written by exactly one chunk (chunks own
+//!    disjoint output ranges), and
+//! 2. the per-element accumulation order (k-major, `0..k`) is identical
+//!    to the single-thread schedule — thread assignment only decides
+//!    *who* computes an element, never *how*.
+//!
+//! Integer results are therefore bit-identical across thread counts, and
+//! f32 results are ULP-equivalent (property-pinned in `nn::gemm`).
+//!
+//! # Memory
+//!
+//! Workers borrow the caller's data for the duration of one
+//! `run_partitioned` call. The pool erases the closure lifetime behind a
+//! raw pointer, which is sound because the call joins (drains one
+//! completion token per dispatched chunk) before returning. Disjoint
+//! output writes go through [`SharedOut`], the unsafe-but-audited window
+//! type whose callers must guarantee range disjointness.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// Work body: `(thread_index, start, end)` — run items `start..end`.
+/// `thread_index` is stable per chunk (chunk `i` runs as thread `i`), so
+/// it can index per-thread scratch slabs without aliasing.
+pub type ParallelBody<'a> = &'a (dyn Fn(usize, usize, usize) + Sync);
+
+/// One dispatched chunk. The raw body pointer is only dereferenced while
+/// `run_partitioned` is blocked on the matching `done` token, so the
+/// borrow it erases is always live.
+struct Job {
+    body: *const (dyn Fn(usize, usize, usize) + Sync),
+    thread: usize,
+    start: usize,
+    end: usize,
+    done: Sender<bool>,
+}
+
+// SAFETY: the pointee is `Sync` (shared by every worker for one call) and
+// outlives the job by the join-before-return protocol above.
+unsafe impl Send for Job {}
+
+fn worker_loop(rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: see `Job` — the caller is blocked until `done`.
+            let body = unsafe { &*job.body };
+            body(job.thread, job.start, job.end);
+        }))
+        .is_ok();
+        let _ = job.done.send(ok);
+    }
+}
+
+/// Persistent intra-op worker pool: `threads − 1` OS threads plus the
+/// caller. `threads <= 1` spawns nothing and runs everything inline, so a
+/// serial pool is free.
+pub struct IntraOpPool {
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl IntraOpPool {
+    /// Pool with a total budget of `threads` (including the caller).
+    pub fn new(threads: usize) -> IntraOpPool {
+        let threads = threads.max(1);
+        let mut txs = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 1..threads {
+            let (tx, rx) = channel::<Job>();
+            txs.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("microai-intra-op-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn intra-op worker"),
+            );
+        }
+        IntraOpPool { txs, handles, threads }
+    }
+
+    /// The no-thread pool every legacy single-threaded entry point uses.
+    pub fn serial() -> IntraOpPool {
+        IntraOpPool::new(1)
+    }
+
+    /// Total thread budget (including the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of chunks `run_partitioned(n, ..)` will create — callers
+    /// size per-thread scratch with this.
+    pub fn chunks_for(&self, n: usize) -> usize {
+        self.threads.min(n).max(1)
+    }
+
+    /// Split `0..n` into [`Self::chunks_for`]`(n)` contiguous chunks and
+    /// run `body(thread, start, end)` for each, chunk 0 on the calling
+    /// thread, the rest on the workers. Blocks until every chunk is done;
+    /// propagates worker panics as a panic on the caller.
+    pub fn run_partitioned(&self, n: usize, body: ParallelBody) {
+        if n == 0 {
+            return;
+        }
+        let t = self.chunks_for(n);
+        if t == 1 {
+            body(0, 0, n);
+            return;
+        }
+        // Deterministic balanced partition: chunk i = [bounds(i), bounds(i+1)),
+        // |chunk i| = n/t + (i < n%t).
+        let (base, extra) = (n / t, n % t);
+        let bounds = |i: usize| i * base + i.min(extra);
+        let (done_tx, done_rx) = channel::<bool>();
+        for w in 1..t {
+            let job = Job {
+                body: body as *const _,
+                thread: w,
+                start: bounds(w),
+                end: bounds(w + 1),
+                done: done_tx.clone(),
+            };
+            self.txs[w - 1].send(job).expect("intra-op worker exited");
+        }
+        drop(done_tx);
+        // Run chunk 0 here, but join the workers BEFORE any unwind can
+        // leave this frame — they hold a raw pointer into live borrows.
+        let own = catch_unwind(AssertUnwindSafe(|| body(0, 0, bounds(1))));
+        let mut ok = true;
+        for _ in 1..t {
+            match done_rx.recv() {
+                Ok(o) => ok &= o,
+                Err(_) => ok = false,
+            }
+        }
+        if let Err(payload) = own {
+            std::panic::resume_unwind(payload);
+        }
+        assert!(ok, "intra-op worker panicked");
+    }
+}
+
+impl Drop for IntraOpPool {
+    fn drop(&mut self) {
+        // Closing the senders ends each worker loop; join for a clean exit.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A shared window over a caller-owned `&mut [T]` for disjoint-range
+/// parallel writes (the column-panel outputs of the GEMM lowerings).
+///
+/// Safety protocol: every concurrent user must touch a range no other
+/// user touches during the same `run_partitioned` call — the lowerings
+/// guarantee this structurally (each chunk owns a disjoint output-row or
+/// output-column range). The window never outlives the borrow it was
+/// created from (it is only passed by reference into `run_partitioned`,
+/// which joins before returning).
+pub struct SharedOut<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: dereferencing is gated behind `unsafe` methods whose contract
+// is range disjointness; the raw pointer itself is freely sendable.
+unsafe impl<T: Send> Send for SharedOut<T> {}
+unsafe impl<T: Send> Sync for SharedOut<T> {}
+
+impl<T> SharedOut<T> {
+    pub fn new(slice: &mut [T]) -> SharedOut<T> {
+        SharedOut { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// `i` must be in bounds and not concurrently written by any other
+    /// user of this window.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len, "SharedOut write {i} out of {}", self.len);
+        unsafe { *self.ptr.add(i) = v }
+    }
+
+    /// Exclusive subslice `start..start + len`.
+    ///
+    /// # Safety
+    /// The range must be in bounds and disjoint from every range any
+    /// other user of this window reads or writes concurrently.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(
+            start + len <= self.len,
+            "SharedOut slice {start}+{len} out of {}",
+            self.len
+        );
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_inline_without_threads() {
+        let pool = IntraOpPool::serial();
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.chunks_for(100), 1);
+        let mut hits = 0usize;
+        // A serial pool runs the body inline, so &mut captures stay legal
+        // through the Fn interface via a Cell-free local — use an atomic
+        // to keep one code path for both tests.
+        let counter = AtomicUsize::new(0);
+        pool.run_partitioned(17, &|tid, s, e| {
+            assert_eq!((tid, s, e), (0, 0, 17));
+            counter.fetch_add(e - s, Ordering::Relaxed);
+        });
+        hits += counter.load(Ordering::Relaxed);
+        assert_eq!(hits, 17);
+    }
+
+    #[test]
+    fn partition_covers_every_index_exactly_once() {
+        let pool = IntraOpPool::new(4);
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 64, 1000, 1001, 1003] {
+            let marks: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_partitioned(n, &|_tid, s, e| {
+                for m in &marks[s..e] {
+                    m.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                marks.iter().all(|m| m.load(Ordering::Relaxed) == 1),
+                "n={n}: some index not covered exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_are_deterministic_and_balanced() {
+        // 10 items over 4 threads: 3,3,2,2 — the static split the
+        // determinism argument relies on.
+        let pool = IntraOpPool::new(4);
+        let sizes: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_partitioned(10, &|tid, s, e| {
+            sizes[tid].store(e - s, Ordering::Relaxed);
+        });
+        let got: Vec<usize> = sizes.iter().map(|s| s.load(Ordering::Relaxed)).collect();
+        assert_eq!(got, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn fewer_items_than_threads_shrinks_chunk_count() {
+        let pool = IntraOpPool::new(8);
+        assert_eq!(pool.chunks_for(3), 3);
+        let max_tid = AtomicUsize::new(0);
+        pool.run_partitioned(3, &|tid, s, e| {
+            assert_eq!(e - s, 1);
+            max_tid.fetch_max(tid, Ordering::Relaxed);
+        });
+        assert_eq!(max_tid.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = IntraOpPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_partitioned(2, &|tid, _s, _e| {
+                if tid == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must surface on the caller");
+        // The worker thread caught the unwind and keeps serving.
+        let counter = AtomicUsize::new(0);
+        pool.run_partitioned(2, &|_tid, s, e| {
+            counter.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn shared_out_disjoint_writes_land() {
+        let pool = IntraOpPool::new(3);
+        let mut out = vec![0usize; 100];
+        let view = SharedOut::new(&mut out);
+        pool.run_partitioned(100, &|_tid, s, e| {
+            for i in s..e {
+                // SAFETY: chunks own disjoint index ranges.
+                unsafe { view.write(i, i * 2) };
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * 2));
+    }
+}

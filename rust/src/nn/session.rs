@@ -35,6 +35,7 @@ use crate::quant::affine::AffineQuantizedGraph;
 use crate::quant::ptq::QuantizedGraph;
 
 use super::float_exec::{self, ActStats};
+use super::parallel::IntraOpPool;
 use super::{affine_exec, argmax, int_exec};
 
 /// Per-node output element counts (pool slice lengths).
@@ -100,19 +101,30 @@ pub struct Arena {
     pub(crate) i32_pools: Vec<Vec<i32>>,
     /// Quantized input payloads (integer backends only).
     pub(crate) qinput: Vec<i32>,
-    /// im2col packing panel for the GEMM lowering (float backend). Sized
-    /// by the allocator's scratch lifetime analysis
-    /// (`Allocation::gemm_scratch_elems`), so packing never allocates
-    /// per request.
-    pub(crate) scratch_f32: Vec<f32>,
-    /// im2col / zero-point staging panel (integer backends).
-    pub(crate) scratch_i32: Vec<i32>,
+    /// im2col packing slabs for the GEMM lowering (float backend): ONE
+    /// slab per intra-op thread, each sized by the allocator's scratch
+    /// lifetime analysis (`Allocation::gemm_scratch_elems`), so packing
+    /// never allocates per request at any thread count.
+    pub(crate) scratch_f32: Vec<Vec<f32>>,
+    /// im2col / zero-point staging slabs (integer backends), one per
+    /// intra-op thread.
+    pub(crate) scratch_i32: Vec<Vec<i32>>,
     /// Dequantized output logits of the latest run.
     pub(crate) output: Vec<f32>,
+    /// Persistent intra-op worker pool (thread budget from
+    /// [`SessionBuilder::threads`]; 1 = serial, no OS threads).
+    pub(crate) pool: IntraOpPool,
 }
 
 impl Arena {
-    fn preallocated(plan: &Plan, float: bool) -> Arena {
+    /// One GEMM packing slab per intra-op thread, each at the worst-case
+    /// per-thread capacity from the allocator's lifetime analysis.
+    fn slabs<T>(threads: usize, elems: usize) -> Vec<Vec<T>> {
+        (0..threads).map(|_| Vec::with_capacity(elems)).collect()
+    }
+
+    fn preallocated(plan: &Plan, float: bool, threads: usize) -> Arena {
+        let threads = threads.max(1);
         let pools = &plan.alloc.pool_elems;
         let scratch = plan.alloc.gemm_scratch_elems;
         let (f32_pools, i32_pools, qinput, scratch_f32, scratch_i32) = if float {
@@ -120,7 +132,7 @@ impl Arena {
                 pools.iter().map(|&n| Vec::with_capacity(n)).collect(),
                 Vec::new(),
                 Vec::new(),
-                Vec::with_capacity(scratch),
+                Arena::slabs(threads, scratch),
                 Vec::new(),
             )
         } else {
@@ -129,7 +141,7 @@ impl Arena {
                 pools.iter().map(|&n| Vec::with_capacity(n)).collect(),
                 Vec::with_capacity(plan.input_len),
                 Vec::new(),
-                Vec::with_capacity(scratch),
+                Arena::slabs(threads, scratch),
             )
         };
         Arena {
@@ -139,6 +151,7 @@ impl Arena {
             scratch_f32,
             scratch_i32,
             output: Vec::with_capacity(plan.output_len),
+            pool: IntraOpPool::new(threads),
         }
     }
 
@@ -147,23 +160,28 @@ impl Arena {
         self.f32_pools.iter().map(|p| p.capacity() * 4).sum::<usize>()
             + self.i32_pools.iter().map(|p| p.capacity() * 4).sum::<usize>()
             + self.qinput.capacity() * 4
-            + self.scratch_f32.capacity() * 4
-            + self.scratch_i32.capacity() * 4
+            + self.scratch_f32.iter().map(|s| s.capacity() * 4).sum::<usize>()
+            + self.scratch_i32.iter().map(|s| s.capacity() * 4).sum::<usize>()
             + self.output.capacity() * 4
+    }
+
+    /// Intra-op thread budget this arena executes with.
+    pub fn intra_op_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Buffer base addresses — stable across `run` calls iff the arena is
     /// truly reused without reallocation (asserted by the session tests).
-    /// Includes the GEMM packing scratch: an undersized scratch estimate
-    /// would show up here as a reallocation.
+    /// Includes EVERY per-thread GEMM packing slab: an undersized scratch
+    /// estimate on any worker would show up here as a reallocation.
     pub fn buffer_ptrs(&self) -> Vec<usize> {
         self.f32_pools
             .iter()
             .map(|p| p.as_ptr() as usize)
             .chain(self.i32_pools.iter().map(|p| p.as_ptr() as usize))
             .chain(std::iter::once(self.qinput.as_ptr() as usize))
-            .chain(std::iter::once(self.scratch_f32.as_ptr() as usize))
-            .chain(std::iter::once(self.scratch_i32.as_ptr() as usize))
+            .chain(self.scratch_f32.iter().map(|s| s.as_ptr() as usize))
+            .chain(self.scratch_i32.iter().map(|s| s.as_ptr() as usize))
             .chain(std::iter::once(self.output.as_ptr() as usize))
             .collect()
     }
@@ -196,8 +214,10 @@ pub trait InferenceBackend: Send + Sync {
         Plan::for_graph(self.graph(), self.dtype().bytes())
     }
 
-    /// Preallocate an activation arena for `plan`.
-    fn new_arena(&self, plan: &Plan) -> Arena;
+    /// Preallocate an activation arena for `plan`, with one GEMM scratch
+    /// slab per intra-op thread and a worker pool of `threads` total
+    /// threads (1 = serial).
+    fn new_arena(&self, plan: &Plan, threads: usize) -> Arena;
 
     /// Run one example; logits land in (and are returned from) the arena.
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32];
@@ -247,14 +267,15 @@ impl InferenceBackend for Float32Backend {
         self.graph.param_count() * 4
     }
 
-    fn new_arena(&self, plan: &Plan) -> Arena {
-        Arena::preallocated(plan, true)
+    fn new_arena(&self, plan: &Plan, threads: usize) -> Arena {
+        Arena::preallocated(plan, true, threads)
     }
 
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         float_exec::run_pooled(
             &self.graph, input, &plan.alloc, &plan.node_elems,
-            &mut arena.f32_pools, &mut arena.scratch_f32, None, &mut arena.output,
+            &mut arena.f32_pools, &arena.pool, &mut arena.scratch_f32, None,
+            &mut arena.output,
         );
         &arena.output
     }
@@ -268,7 +289,8 @@ impl InferenceBackend for Float32Backend {
     ) -> bool {
         float_exec::run_pooled(
             &self.graph, input, &plan.alloc, &plan.node_elems,
-            &mut arena.f32_pools, &mut arena.scratch_f32, Some(stats), &mut arena.output,
+            &mut arena.f32_pools, &arena.pool, &mut arena.scratch_f32, Some(stats),
+            &mut arena.output,
         );
         true
     }
@@ -301,15 +323,15 @@ impl InferenceBackend for FixedQmnBackend {
         self.qg.weight_bytes()
     }
 
-    fn new_arena(&self, plan: &Plan) -> Arena {
-        Arena::preallocated(plan, false)
+    fn new_arena(&self, plan: &Plan, threads: usize) -> Arena {
+        Arena::preallocated(plan, false, threads)
     }
 
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         int_exec::run_pooled(
             &self.qg, input, &plan.alloc, &plan.node_elems,
-            &mut arena.qinput, &mut arena.i32_pools, &mut arena.scratch_i32,
-            &mut arena.output,
+            &mut arena.qinput, &mut arena.i32_pools, &arena.pool,
+            &mut arena.scratch_i32, &mut arena.output,
         );
         &arena.output
     }
@@ -343,15 +365,15 @@ impl InferenceBackend for AffineI8Backend {
         self.aq.graph.param_count()
     }
 
-    fn new_arena(&self, plan: &Plan) -> Arena {
-        Arena::preallocated(plan, false)
+    fn new_arena(&self, plan: &Plan, threads: usize) -> Arena {
+        Arena::preallocated(plan, false, threads)
     }
 
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         affine_exec::run_pooled(
             &self.aq, input, &plan.alloc, &plan.node_elems,
-            &mut arena.qinput, &mut arena.i32_pools, &mut arena.scratch_i32,
-            &mut arena.output,
+            &mut arena.qinput, &mut arena.i32_pools, &arena.pool,
+            &mut arena.scratch_i32, &mut arena.output,
         );
         &arena.output
     }
@@ -377,12 +399,17 @@ pub struct SessionMeta {
     pub n_pools: usize,
     /// Host bytes preallocated in this session's arena.
     pub arena_bytes: usize,
+    /// Intra-op thread budget (host-side GEMM parallelism; 1 = serial).
+    /// Forked sessions inherit it unless re-threaded via
+    /// [`Session::fork_with_threads`].
+    pub intra_op_threads: usize,
 }
 
 /// Builder: pick a backend, optionally attach a deployment board, build.
 pub struct SessionBuilder {
     backend: Arc<dyn InferenceBackend>,
     board: Option<&'static Board>,
+    threads: usize,
 }
 
 impl SessionBuilder {
@@ -404,7 +431,7 @@ impl SessionBuilder {
 
     /// Any custom [`InferenceBackend`] implementation.
     pub fn from_backend(backend: Arc<dyn InferenceBackend>) -> SessionBuilder {
-        SessionBuilder { backend, board: None }
+        SessionBuilder { backend, board: None, threads: 1 }
     }
 
     /// Attach a deployment board: the session metadata then carries
@@ -414,9 +441,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Intra-op thread budget for the GEMM kernel core (default 1 =
+    /// serial). The arena preallocates one packing slab per thread and a
+    /// persistent worker pool; results are bit-identical across budgets
+    /// for the integer backends and ULP-equivalent for float32 (see
+    /// `nn::parallel` for the determinism argument). Host-side only —
+    /// the device cost model is untouched.
+    pub fn threads(mut self, n: usize) -> SessionBuilder {
+        self.threads = n.max(1);
+        self
+    }
+
     pub fn build(self) -> Session {
         let plan = self.backend.prepare();
-        let arena = self.backend.new_arena(&plan);
+        let arena = self.backend.new_arena(&plan, self.threads);
         let dtype = self.backend.dtype();
         let (device_latency_ms, device_energy_uwh) = match self.board {
             None => (None, None),
@@ -445,6 +483,7 @@ impl SessionBuilder {
             device_ram_bytes: plan.device_ram_bytes(),
             n_pools: plan.alloc.n_pools(),
             arena_bytes: arena.host_bytes(),
+            intra_op_threads: self.threads,
         };
         Session { backend: self.backend, plan, arena, meta, runs: 0 }
     }
@@ -554,17 +593,26 @@ impl Session {
 
     /// A new session sharing this one's backend (and therefore weights)
     /// and plan, with a freshly preallocated arena — one per worker
-    /// thread. The §5.7 lifetime analysis is not recomputed.
+    /// thread. The §5.7 lifetime analysis is not recomputed. The intra-op
+    /// thread budget is inherited (each fork gets its OWN worker pool —
+    /// pools are never shared across sessions).
     pub fn fork(&self) -> Session {
+        self.fork_with_threads(self.meta.intra_op_threads)
+    }
+
+    /// [`Session::fork`] with a different intra-op thread budget — the
+    /// serving coordinator uses this to cap `workers × intra_op_threads`
+    /// at the host's available parallelism.
+    pub fn fork_with_threads(&self, threads: usize) -> Session {
+        let threads = threads.max(1);
         let plan = self.plan.clone();
-        let arena = self.backend.new_arena(&plan);
-        Session {
-            backend: self.backend.clone(),
-            plan,
-            arena,
-            meta: self.meta.clone(),
-            runs: 0,
-        }
+        let arena = self.backend.new_arena(&plan, threads);
+        let meta = SessionMeta {
+            intra_op_threads: threads,
+            arena_bytes: arena.host_bytes(),
+            ..self.meta.clone()
+        };
+        Session { backend: self.backend.clone(), plan, arena, meta, runs: 0 }
     }
 
     pub fn meta(&self) -> &SessionMeta {
@@ -797,6 +845,44 @@ mod tests {
         let g2 = randomized_graph(15);
         let s2 = SessionBuilder::float32(g2).build();
         assert!(s2.meta().device_latency_ms.is_none());
+    }
+
+    #[test]
+    fn threaded_session_bit_identical_to_serial() {
+        let g = randomized_graph(23);
+        let xs = inputs(4, 96, 24);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+        let aq = Arc::new(quantize_affine(&g, &stats));
+        let mut serial_q = SessionBuilder::fixed_qmn(qg.clone()).build();
+        let mut serial_a = SessionBuilder::affine_i8(aq.clone()).build();
+        for threads in [2usize, 4] {
+            let mut par_q = SessionBuilder::fixed_qmn(qg.clone()).threads(threads).build();
+            let mut par_a = SessionBuilder::affine_i8(aq.clone()).threads(threads).build();
+            assert_eq!(par_q.meta().intra_op_threads, threads);
+            assert_eq!(par_q.arena().intra_op_threads(), threads);
+            for x in &xs {
+                assert_eq!(serial_q.run(x).to_vec(), par_q.run(x).to_vec());
+                assert_eq!(serial_a.run(x).to_vec(), par_a.run(x).to_vec());
+            }
+        }
+    }
+
+    #[test]
+    fn fork_with_threads_rethreads_the_arena() {
+        let g = randomized_graph(25);
+        let template = SessionBuilder::float32(g).threads(4).build();
+        let fork = template.fork();
+        assert_eq!(fork.meta().intra_op_threads, 4);
+        assert_eq!(fork.arena().intra_op_threads(), 4);
+        let capped = template.fork_with_threads(2);
+        assert_eq!(capped.meta().intra_op_threads, 2);
+        assert_eq!(capped.arena().intra_op_threads(), 2);
+        // One scratch slab per thread shows up in the arena accounting.
+        assert!(fork.meta().arena_bytes > capped.meta().arena_bytes);
     }
 
     #[test]

@@ -1,8 +1,17 @@
 //! Small statistics helpers shared by the bench harness, the evaluator and
 //! the serving simulator: mean/median/percentiles/MAD over f64 samples.
+//!
+//! NaN policy: order statistics ([`median`], [`mad`], [`summarize`])
+//! silently DROP NaN samples instead of panicking — a single poisoned
+//! sample (e.g. a 0/0 ratio from a zero-duration timer tick) must not
+//! abort an entire bench or serving run. [`Summary::nan_dropped`] reports
+//! how many samples were discarded so the caller can surface it.
+//! (Pre-fix, these sorted with `partial_cmp(..).unwrap()` and panicked on
+//! the first NaN.)
 
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Number of FINITE-ordered (non-NaN) samples summarized.
     pub n: usize,
     pub mean: f64,
     pub std: f64,
@@ -11,6 +20,16 @@ pub struct Summary {
     pub p90: f64,
     pub p99: f64,
     pub max: f64,
+    /// NaN samples dropped before summarizing (0 on clean data).
+    pub nan_dropped: usize,
+}
+
+/// Sorted non-NaN samples plus the dropped-NaN count.
+fn sorted_finite(xs: &[f64]) -> (Vec<f64>, usize) {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    let dropped = xs.len() - s.len();
+    s.sort_by(f64::total_cmp);
+    (s, dropped)
 }
 
 pub fn mean(xs: &[f64]) -> f64 {
@@ -44,25 +63,25 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Median over the non-NaN samples (0.0 when none survive).
 pub fn median(xs: &[f64]) -> f64 {
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (s, _) = sorted_finite(xs);
     percentile(&s, 0.5)
 }
 
-/// Median absolute deviation (robust spread, used for bench noise checks).
+/// Median absolute deviation (robust spread, used for bench noise
+/// checks), over the non-NaN samples.
 pub fn mad(xs: &[f64]) -> f64 {
     let m = median(xs);
-    let dev: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    let dev: Vec<f64> = xs.iter().filter(|x| !x.is_nan()).map(|x| (x - m).abs()).collect();
     median(&dev)
 }
 
 pub fn summarize(xs: &[f64]) -> Summary {
-    if xs.is_empty() {
-        return Summary::default();
+    let (s, nan_dropped) = sorted_finite(xs);
+    if s.is_empty() {
+        return Summary { nan_dropped, ..Summary::default() };
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     Summary {
         n: s.len(),
         mean: mean(&s),
@@ -72,6 +91,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         p90: percentile(&s, 0.9),
         p99: percentile(&s, 0.99),
         max: s[s.len() - 1],
+        nan_dropped,
     }
 }
 
@@ -109,6 +129,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.p50, 2.0);
+        assert_eq!(s.nan_dropped, 0);
     }
 
     #[test]
@@ -116,5 +137,53 @@ mod tests {
         let s = summarize(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(mean(&[]), 0.0);
+    }
+
+    // Regression: before the NaN fix, every one of these calls panicked
+    // inside `sort_by(|a, b| a.partial_cmp(b).unwrap())`, taking the
+    // whole bench/serving run down with it.
+    #[test]
+    fn median_ignores_nan_samples() {
+        assert_eq!(median(&[1.0, f64::NAN, 3.0]), 2.0);
+        assert_eq!(median(&[f64::NAN, 5.0]), 5.0);
+    }
+
+    #[test]
+    fn mad_ignores_nan_samples() {
+        let clean = mad(&[1.0, 1.1, 0.9, 1.0]);
+        let dirty = mad(&[1.0, f64::NAN, 1.1, 0.9, 1.0]);
+        assert_eq!(clean, dirty);
+    }
+
+    #[test]
+    fn summarize_reports_dropped_nan_count() {
+        let s = summarize(&[f64::NAN, 2.0, f64::NAN, 4.0]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.nan_dropped, 2);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 4.0);
+        assert!(s.mean.is_finite() && s.std.is_finite());
+    }
+
+    #[test]
+    fn all_nan_degrades_to_empty_summary() {
+        let s = summarize(&[f64::NAN, f64::NAN]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.nan_dropped, 2);
+        assert_eq!(s.p50, 0.0);
+        assert_eq!(mad(&[f64::NAN]), 0.0);
+        assert_eq!(median(&[f64::NAN]), 0.0);
+    }
+
+    #[test]
+    fn infinities_are_ordered_not_dropped() {
+        // total_cmp orders ±inf correctly; only NaN is dropped.
+        let s = summarize(&[f64::INFINITY, 1.0, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.nan_dropped, 0);
+        assert_eq!(s.min, f64::NEG_INFINITY);
+        assert_eq!(s.max, f64::INFINITY);
+        assert_eq!(s.p50, 1.0);
     }
 }

@@ -135,6 +135,56 @@ fn cross_backend_agreement_gtsrb_conv2d_topology() {
 }
 
 #[test]
+fn threaded_sessions_bit_exact_with_stable_per_thread_scratch() {
+    // ISSUE 4: the intra-op GEMM pool must (a) reproduce the serial bits
+    // on every backend at threads ∈ {2, 4} over a conv2d-heavy GTSRB
+    // fixture, and (b) keep ALL per-thread scratch slab pointers stable
+    // across requests at threads = 4 — an undersized slab on any worker
+    // would reallocate and show up in `Arena::buffer_ptrs`.
+    let g = fixture_graph(2, &[32, 32, 3], 43, 8, 51);
+    let inputs = fixture_inputs(5, 32 * 32 * 3, 52);
+    let stats = calibrate(&g, &inputs);
+    let q16 = Arc::new(quantize(&g, &stats, QuantSpec::int16_per_layer()));
+    let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+    let aq = Arc::new(quantize_affine(&g, &stats));
+
+    let mut serial_f = SessionBuilder::float32(g.clone()).build();
+    let mut serial_16 = SessionBuilder::fixed_qmn(q16.clone()).build();
+    let mut serial_8 = SessionBuilder::fixed_qmn(q8.clone()).build();
+    let mut serial_aff = SessionBuilder::affine_i8(aq.clone()).build();
+
+    for threads in [2usize, 4] {
+        let mut t_f = SessionBuilder::float32(g.clone()).threads(threads).build();
+        let mut t_16 = SessionBuilder::fixed_qmn(q16.clone()).threads(threads).build();
+        let mut t_8 = SessionBuilder::fixed_qmn(q8.clone()).threads(threads).build();
+        let mut t_aff = SessionBuilder::affine_i8(aq.clone()).threads(threads).build();
+        for x in &inputs {
+            // Integer backends: bit-identical. Float: the schedule is
+            // order-identical, so exact equality holds here too.
+            assert_eq!(serial_16.run(x).to_vec(), t_16.run(x).to_vec(), "int16 t={threads}");
+            assert_eq!(serial_8.run(x).to_vec(), t_8.run(x).to_vec(), "int8 t={threads}");
+            assert_eq!(serial_aff.run(x).to_vec(), t_aff.run(x).to_vec(), "affine t={threads}");
+            assert_eq!(serial_f.run(x).to_vec(), t_f.run(x).to_vec(), "float t={threads}");
+        }
+    }
+
+    // Scratch-pointer stability at threads = 4: one slab per thread, all
+    // exposed by buffer_ptrs, none reallocated across repeated runs.
+    let mut s4 = SessionBuilder::fixed_qmn(q16).threads(4).build();
+    assert_eq!(s4.arena().intra_op_threads(), 4);
+    s4.run(&inputs[0]);
+    let ptrs = s4.arena().buffer_ptrs();
+    // 4 i32 slabs beyond the serial arena's single slab.
+    assert_eq!(ptrs.len(), serial_16.arena().buffer_ptrs().len() + 3);
+    for x in &inputs {
+        for _ in 0..2 {
+            s4.run(x);
+        }
+    }
+    assert_eq!(ptrs, s4.arena().buffer_ptrs(), "per-thread GEMM scratch reallocated");
+}
+
+#[test]
 fn odd_length_har_window_keeps_remainder() {
     // Regression for the silent pooling truncation: a 129-sample UCI-HAR
     // style window used to lose its last sample at every pool (floor);
