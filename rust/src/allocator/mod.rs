@@ -35,6 +35,13 @@ pub struct Allocation {
     /// device RAM model ([`Allocation::ram_bytes`]), which prices the
     /// generated C.
     pub gemm_scratch_elems: usize,
+    /// HOST-side prepacked weight-panel elements (`nn::packed`): total
+    /// NR-tiled B-panel slots across every conv/dense node, built ONCE at
+    /// session-build time and shared read-only by forks. Like
+    /// `gemm_scratch_elems`, a host-only accounting fact — the device
+    /// RAM/ROM models are untouched (the device executes the generated C
+    /// straight from its row-major weight arrays).
+    pub packed_b_elems: usize,
 }
 
 impl Allocation {
@@ -107,7 +114,8 @@ pub fn allocate(graph: &Graph) -> Allocation {
         pool_elems[p] = pool_elems[p].max(elems);
     }
     let gemm_scratch_elems = crate::nn::gemm::scratch_elems(graph);
-    Allocation { pool_of, pool_elems, gemm_scratch_elems }
+    let packed_b_elems = crate::nn::packed::packed_b_elems(graph);
+    Allocation { pool_of, pool_elems, gemm_scratch_elems, packed_b_elems }
 }
 
 /// Check the §5.7 invariant: at no point does writing a node's output
@@ -203,6 +211,16 @@ mod tests {
         assert!(a.gemm_scratch_elems > 0);
         // The device RAM model (§5.7 pools at device dtype) is untouched
         // by the host-side packing scratch.
+        assert_eq!(a.ram_bytes(1), a.pool_elems.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn packed_b_elems_recorded_but_not_charged_to_device_ram() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("r", 1, &[128, 9], 6, 16));
+        let a = allocate(&g);
+        assert_eq!(a.packed_b_elems, crate::nn::packed::packed_b_elems(&g));
+        assert!(a.packed_b_elems > 0);
+        // Host-only, like the GEMM scratch: device RAM prices pools only.
         assert_eq!(a.ram_bytes(1), a.pool_elems.iter().sum::<usize>());
     }
 

@@ -6,4 +6,4 @@ pub mod passes;
 
 pub use build::{cnn, mlp, resnet_v1_6, resnet_v1_6_shapes, RESNET_PARAM_NAMES};
 pub use ir::{Graph, LayerKind, Node, Padding};
-pub use passes::deploy_pipeline;
+pub use passes::{annotate_epilogues, deploy_pipeline, EpilogueKind};

@@ -204,6 +204,38 @@ pub fn fold_batchnorm(g: &Graph) -> Graph {
     rebuild(g, &replace, &edits)
 }
 
+/// Kernel-tail epilogue a weighted (Conv / Dense) node's GEMM applies in
+/// its register tile: the bias add always runs there; `Relu` additionally
+/// clamps before the store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EpilogueKind {
+    /// Bias only (plus the backend's rescale/requantize stage).
+    Linear,
+    /// Bias + fused ReLU (folded from a standalone ReLU by [`fuse_relu`]).
+    Relu,
+}
+
+/// Pass 5 (annotation): classify every weighted node's fused epilogue so
+/// the kernel lowering consumes activation fusion decided here — a ReLU
+/// folded by [`fuse_relu`] executes inside the GEMM register-tile tail
+/// (`nn::packed`), never as a separate activation sweep. Returns one
+/// entry per node id: `None` for non-weighted layers, otherwise the
+/// epilogue the build-time weight packer bakes into the node's
+/// [`crate::nn::packed::Epilogue`].
+pub fn annotate_epilogues(g: &Graph) -> Vec<Option<EpilogueKind>> {
+    g.nodes
+        .iter()
+        .map(|n| match n.kind {
+            LayerKind::Conv { .. } | LayerKind::Dense { .. } => Some(if n.fused_relu {
+                EpilogueKind::Relu
+            } else {
+                EpilogueKind::Linear
+            }),
+            _ => None,
+        })
+        .collect()
+}
+
 /// Compute the affine (w, b) of a BatchNorm per Eqs 5–7 (exposed for the C
 /// emitter, which keeps unfolded BatchNorms as multiply-add layers).
 pub fn batchnorm_affine(
@@ -332,6 +364,25 @@ mod tests {
         let _s = g.add("sm", LK::Softmax, vec![d]);
         let out = remove_softmax(&g);
         assert!(matches!(out.nodes[out.output_id()].kind, LK::Dense { .. }));
+    }
+
+    #[test]
+    fn annotate_epilogues_tracks_fused_relu() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("har", 1, &[128, 9], 6, 8));
+        let epi = annotate_epilogues(&g);
+        assert_eq!(epi.len(), g.nodes.len());
+        for n in &g.nodes {
+            match &n.kind {
+                LayerKind::Conv { .. } | LayerKind::Dense { .. } => {
+                    let want = if n.fused_relu { EpilogueKind::Relu } else { EpilogueKind::Linear };
+                    assert_eq!(epi[n.id], Some(want), "node {}", n.name);
+                }
+                _ => assert_eq!(epi[n.id], None, "node {}", n.name),
+            }
+        }
+        // The pipeline fuses conv1's ReLU, so at least one Relu epilogue
+        // reaches the kernel tail.
+        assert!(epi.iter().flatten().any(|e| *e == EpilogueKind::Relu));
     }
 
     #[test]

@@ -29,8 +29,11 @@ pub fn run(aq: &AffineQuantizedGraph, input: &[f32]) -> Vec<f32> {
     let pool = crate::nn::parallel::IntraOpPool::serial();
     let mut scratch = vec![Vec::new()];
     let mut output = Vec::new();
+    // Legacy per-call semantics: zero-point subtraction at pack/stage
+    // time (bit-identical to the prepacked fold either way).
+    let packed = crate::nn::packed::PackedWeights::empty(graph.nodes.len());
     run_pooled(
-        aq, input, &alloc, &node_elems, &mut qinput, &mut pools, &pool, &mut scratch,
+        aq, input, &alloc, &node_elems, &mut qinput, &mut pools, &pool, &mut scratch, &packed,
         &mut output,
     );
     output
@@ -38,7 +41,11 @@ pub fn run(aq: &AffineQuantizedGraph, input: &[f32]) -> Vec<f32> {
 
 /// Pooled core shared by [`run`] and the affine [`crate::nn::session`]
 /// backend (see `int_exec::run_pooled` for the pool discipline; `scratch`
-/// carries one packing slab per intra-op thread of `pool`).
+/// carries one packing slab per intra-op thread of `pool`). Conv/dense
+/// nodes present in `packed` run the prepacked kernels with the zero
+/// point folded into the packed bias at build time — no per-call
+/// `x − zp` packing or staging, and `aq.weights` is never read; absent
+/// nodes keep the per-call zero-point-shifted GEMM lowering.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pooled(
     aq: &AffineQuantizedGraph,
@@ -49,6 +56,7 @@ pub(crate) fn run_pooled(
     pools: &mut [Vec<i32>],
     pool: &crate::nn::parallel::IntraOpPool,
     scratch: &mut [Vec<i32>],
+    packed: &crate::nn::packed::PackedWeights,
     output: &mut Vec<f32>,
 ) {
     let graph = &aq.graph;
@@ -74,20 +82,38 @@ pub(crate) fn run_pooled(
                 LayerKind::Conv { w, stride, padding, .. } => {
                     let src_id = node.inputs[0];
                     let ish = &graph.nodes[src_id].out_shape;
-                    gemm::conv_affine_gemm(
-                        src(src_id), ish, &w.shape, &aq.weights[&node.id],
-                        aq.act[src_id].zero_point, aq.act[node.id].zero_point,
-                        *stride, *padding, node.fused_relu, graph.dims, pool, scratch,
-                        &mut out,
-                    );
+                    if let Some(pn) = packed.get(node.id) {
+                        if graph.dims == 1 {
+                            crate::nn::packed::conv1d_int_packed(
+                                src(src_id), ish[0], pn, *stride, *padding, pool, scratch,
+                                &mut out,
+                            );
+                        } else {
+                            crate::nn::packed::conv2d_int_packed(
+                                src(src_id), ish[0], ish[1], pn, *stride, *padding, pool,
+                                scratch, &mut out,
+                            );
+                        }
+                    } else {
+                        gemm::conv_affine_gemm(
+                            src(src_id), ish, &w.shape, &aq.weights[&node.id],
+                            aq.act[src_id].zero_point, aq.act[node.id].zero_point,
+                            *stride, *padding, node.fused_relu, graph.dims, pool, scratch,
+                            &mut out,
+                        );
+                    }
                 }
                 LayerKind::Dense { w, .. } => {
                     let src_id = node.inputs[0];
-                    gemm::dense_affine_gemm(
-                        src(src_id), &aq.weights[&node.id],
-                        aq.act[src_id].zero_point, aq.act[node.id].zero_point,
-                        w.shape[1], node.fused_relu, pool, scratch, &mut out,
-                    );
+                    if let Some(pn) = packed.get(node.id) {
+                        crate::nn::packed::dense_int_packed(src(src_id), pn, pool, &mut out);
+                    } else {
+                        gemm::dense_affine_gemm(
+                            src(src_id), &aq.weights[&node.id],
+                            aq.act[src_id].zero_point, aq.act[node.id].zero_point,
+                            w.shape[1], node.fused_relu, pool, scratch, &mut out,
+                        );
+                    }
                 }
                 LayerKind::MaxPool { size } => {
                     let ish = &graph.nodes[node.inputs[0]].out_shape;

@@ -71,8 +71,12 @@ pub fn run(graph: &Graph, input: &[f32], stats: Option<&mut ActStats>) -> Vec<f3
     let pool = super::parallel::IntraOpPool::serial();
     let mut scratch = vec![Vec::new()];
     let mut output = Vec::new();
+    // Legacy per-call semantics: no prepacked weights, so the GEMM
+    // lowering streams B from graph storage (the PR-3/4 path).
+    let packed = super::packed::PackedWeights::empty(graph.nodes.len());
     run_pooled(
-        graph, input, &alloc, &node_elems, &mut pools, &pool, &mut scratch, stats, &mut output,
+        graph, input, &alloc, &node_elems, &mut pools, &pool, &mut scratch, &packed, stats,
+        &mut output,
     );
     output
 }
@@ -81,7 +85,11 @@ pub fn run(graph: &Graph, input: &[f32], stats: Option<&mut ActStats>) -> Vec<f3
 /// backend: node outputs live in the allocator's §5.7 pools (`pools[p]`
 /// holds the output of the pool's current occupant), so a reused arena
 /// performs zero per-request heap allocation. `scratch` carries one
-/// im2col slab per intra-op thread of `pool`.
+/// im2col slab per intra-op thread of `pool`. Conv/dense nodes present
+/// in `packed` run the prepacked fused-epilogue kernels (`nn::packed`)
+/// and never touch graph weight storage; absent nodes (legacy per-call
+/// wrappers, custom backends without a packer) keep the per-call GEMM
+/// lowering.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pooled(
     graph: &Graph,
@@ -91,6 +99,7 @@ pub(crate) fn run_pooled(
     pools: &mut [Vec<f32>],
     pool: &super::parallel::IntraOpPool,
     scratch: &mut [Vec<f32>],
+    packed: &super::packed::PackedWeights,
     mut stats: Option<&mut ActStats>,
     output: &mut Vec<f32>,
 ) {
@@ -112,11 +121,24 @@ pub(crate) fn run_pooled(
             match &node.kind {
                 LayerKind::Input => unreachable!(),
                 LayerKind::Conv { w, b, stride, padding } => {
-                    // im2col + blocked GEMM (nn::gemm); the naive loops
-                    // survive as float_ops::conv*_ref.
+                    // Prepacked fused path when the plan carries packed
+                    // weights; per-call im2col + blocked GEMM (nn::gemm)
+                    // otherwise. The naive loops survive as
+                    // float_ops::conv*_ref.
                     let x = src(node.inputs[0]);
                     let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    if graph.dims == 1 {
+                    if let Some(pn) = packed.get(node.id) {
+                        if graph.dims == 1 {
+                            super::packed::conv1d_f32_packed(
+                                x, ish[0], pn, *stride, *padding, pool, scratch, &mut out,
+                            );
+                        } else {
+                            super::packed::conv2d_f32_packed(
+                                x, ish[0], ish[1], pn, *stride, *padding, pool, scratch,
+                                &mut out,
+                            );
+                        }
+                    } else if graph.dims == 1 {
                         gemm::conv1d_gemm(
                             x, ish[0], ish[1], &w.data, w.shape[0], w.shape[2], &b.data,
                             *stride, *padding, node.fused_relu, pool, scratch, &mut out,
@@ -130,10 +152,14 @@ pub(crate) fn run_pooled(
                     }
                 }
                 LayerKind::Dense { w, b } => {
-                    gemm::dense_gemm(
-                        src(node.inputs[0]), &w.data, &b.data, w.shape[1],
-                        node.fused_relu, pool, &mut out,
-                    );
+                    if let Some(pn) = packed.get(node.id) {
+                        super::packed::dense_f32_packed(src(node.inputs[0]), pn, pool, &mut out);
+                    } else {
+                        gemm::dense_gemm(
+                            src(node.inputs[0]), &w.data, &b.data, w.shape[1],
+                            node.fused_relu, pool, &mut out,
+                        );
+                    }
                 }
                 LayerKind::MaxPool { size } => {
                     let ish = &graph.nodes[node.inputs[0]].out_shape;

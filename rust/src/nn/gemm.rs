@@ -296,11 +296,15 @@ pub fn gemm_f32_cols(
 /// Pack `rows` im2col rows (output positions `row0..row0+rows`) of a 1-D
 /// conv into `panel` (row-major rows × k·c, tap order (ki, ci) — the row
 /// order of the (k, C, F) weight matrix). Out-of-range taps pack the
-/// padding payload 0; `offset` is subtracted from every in-range element
-/// (affine zero-point pre-subtraction; 0 for the fixed-point path, where
-/// padding contributing payload 0 matches the reference tap skip).
+/// padding payload `pad`; `offset` is subtracted from every in-range
+/// element. The per-call affine path packs (offset = zp_in, pad = 0):
+/// zero-point pre-subtracted operands, where padding is `zp − zp = 0`.
+/// The prepacked path (`nn::packed`) folds the zero point into the bias
+/// at build time and packs RAW payloads (offset = 0, pad = zp_in), so
+/// padded taps contribute `zp·w`, cancelled exactly by the folded bias.
+/// The fixed-point and float paths use offset = 0, pad = 0 everywhere.
 #[allow(clippy::too_many_arguments)]
-fn pack_1d_i32(
+pub(crate) fn pack_1d_i32(
     x: &[i32],
     s: usize,
     c: usize,
@@ -310,6 +314,7 @@ fn pack_1d_i32(
     row0: usize,
     rows: usize,
     offset: i32,
+    pad: i32,
     panel: &mut [i32],
 ) {
     let taps = k * c;
@@ -320,7 +325,7 @@ fn pack_1d_i32(
             let xi = base + ki as isize;
             let dst = &mut row[ki * c..(ki + 1) * c];
             if xi < 0 || xi >= s as isize {
-                dst.fill(0);
+                dst.fill(pad);
             } else {
                 let off = (xi as usize) * c;
                 let src = &x[off..off + c];
@@ -339,7 +344,7 @@ fn pack_1d_i32(
 /// f32 twin of [`pack_1d_i32`] (no offset: float padding packs 0.0, which
 /// is exact — weights are finite, so 0·w contributes nothing).
 #[allow(clippy::too_many_arguments)]
-fn pack_1d_f32(
+pub(crate) fn pack_1d_f32(
     x: &[f32],
     s: usize,
     c: usize,
@@ -369,8 +374,9 @@ fn pack_1d_f32(
 
 /// 2-D im2col: output position `p` is (oh, ow) = (p / w_out, p % w_out);
 /// tap order (ki, kj, ci) matches the (kh, kw, C, F) weight row order.
+/// `offset`/`pad` semantics as in [`pack_1d_i32`].
 #[allow(clippy::too_many_arguments)]
-fn pack_2d_i32(
+pub(crate) fn pack_2d_i32(
     x: &[i32],
     h: usize,
     wdt: usize,
@@ -384,6 +390,7 @@ fn pack_2d_i32(
     row0: usize,
     rows: usize,
     offset: i32,
+    pad: i32,
     panel: &mut [i32],
 ) {
     let taps = kh * kw * c;
@@ -399,7 +406,7 @@ fn pack_2d_i32(
                 let wi = wbase + kj as isize;
                 let dst = &mut row[(ki * kw + kj) * c..(ki * kw + kj + 1) * c];
                 if hi < 0 || hi >= h as isize || wi < 0 || wi >= wdt as isize {
-                    dst.fill(0);
+                    dst.fill(pad);
                 } else {
                     let off = ((hi as usize) * wdt + wi as usize) * c;
                     let src = &x[off..off + c];
@@ -418,7 +425,7 @@ fn pack_2d_i32(
 
 /// f32 twin of [`pack_2d_i32`].
 #[allow(clippy::too_many_arguments)]
-fn pack_2d_f32(
+pub(crate) fn pack_2d_f32(
     x: &[f32],
     h: usize,
     wdt: usize,
@@ -460,7 +467,12 @@ fn pack_2d_f32(
 // Shared geometry
 // ---------------------------------------------------------------------------
 
-fn conv1d_geometry(s: usize, k: usize, stride: usize, padding: Padding) -> (usize, usize) {
+pub(crate) fn conv1d_geometry(
+    s: usize,
+    k: usize,
+    stride: usize,
+    padding: Padding,
+) -> (usize, usize) {
     match padding {
         Padding::Same => (Graph::same_padding(s, k, stride).0, s.div_ceil(stride)),
         Padding::Valid => (0, (s - k) / stride + 1),
@@ -468,7 +480,7 @@ fn conv1d_geometry(s: usize, k: usize, stride: usize, padding: Padding) -> (usiz
 }
 
 #[allow(clippy::type_complexity)]
-fn conv2d_geometry(
+pub(crate) fn conv2d_geometry(
     h: usize,
     wdt: usize,
     kh: usize,
@@ -500,7 +512,7 @@ fn conv2d_geometry(
 /// per-element results (packing a row is independent of its neighbours
 /// and the kernels accumulate k-major per element), so every thread
 /// count produces the single-thread bits.
-fn split_positions<T: Copy + Default + Send>(
+pub(crate) fn split_positions<T: Copy + Default + Send>(
     pool: &IntraOpPool,
     scratch: &mut [Vec<T>],
     panel_elems: usize,
@@ -555,7 +567,7 @@ fn split_positions<T: Copy + Default + Send>(
 /// column tiles (`body(j0, j1)` computes columns `j0..j1`), so the
 /// parallel tiling is the serial tiling and each tile is written by
 /// exactly one worker.
-fn split_col_tiles(pool: &IntraOpPool, n: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+pub(crate) fn split_col_tiles(pool: &IntraOpPool, n: usize, body: &(dyn Fn(usize, usize) + Sync)) {
     let tiles = n.div_ceil(NR);
     pool.run_partitioned(tiles, &|_tid, t0, t1| {
         body(t0 * NR, (t1 * NR).min(n));
@@ -775,7 +787,7 @@ fn conv1d_q_gemm_impl(
     let uniform = qw.shift.len() == 1;
     let out_view = SharedOut::new(&mut out[..]);
     let body = |panel: &mut [i32], row0: usize, rows: usize| {
-        pack_1d_i32(x, s, c, k, stride, pad_lo, row0, rows, 0, &mut panel[..rows * taps]);
+        pack_1d_i32(x, s, c, k, stride, pad_lo, row0, rows, 0, 0, &mut panel[..rows * taps]);
         let panel = &panel[..rows * taps];
         if fits {
             gemm_i32(panel, &qw.w, rows, f, taps, |r, fi, acc| {
@@ -865,7 +877,7 @@ fn conv2d_q_gemm_impl(
     let out_view = SharedOut::new(&mut out[..]);
     let body = |panel: &mut [i32], row0: usize, rows: usize| {
         pack_2d_i32(
-            x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, 0,
+            x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, 0, 0,
             &mut panel[..rows * taps],
         );
         let panel = &panel[..rows * taps];
@@ -1030,7 +1042,9 @@ fn conv_affine_gemm_impl(
         let out_view = SharedOut::new(&mut out[..]);
         let body = |panel: &mut [i32], row0: usize, rows: usize| {
             // Zero-point pre-subtracted panel, packed by the owning worker.
-            pack_1d_i32(x, s, c, k, stride, pad_lo, row0, rows, zp_in, &mut panel[..rows * taps]);
+            pack_1d_i32(
+                x, s, c, k, stride, pad_lo, row0, rows, zp_in, 0, &mut panel[..rows * taps],
+            );
             gemm_i64(&panel[..rows * taps], &qw.w, rows, f, taps, |r, fi, acc| {
                 let total = qw.b[fi] + acc;
                 let mut v = requantize(total as i32, qw.mult[fi], qw.shift[fi], zp_out);
@@ -1054,7 +1068,7 @@ fn conv_affine_gemm_impl(
         let out_view = SharedOut::new(&mut out[..]);
         let body = |panel: &mut [i32], row0: usize, rows: usize| {
             pack_2d_i32(
-                x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, zp_in,
+                x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, zp_in, 0,
                 &mut panel[..rows * taps],
             );
             gemm_i64(&panel[..rows * taps], &qw.w, rows, f, taps, |r, fi, acc| {
@@ -1131,13 +1145,76 @@ fn dense_affine_gemm_impl(
     });
 }
 
+/// Shared random-weight generators for the GEMM/packed bit-exactness
+/// property tests — ONE copy of the `accum_fits_i32` admission-boundary
+/// straddle logic, so the boundary the tests pin cannot silently diverge
+/// between the per-call and prepacked suites.
+#[cfg(test)]
+pub(crate) mod testgen {
+    use crate::quant::affine::{quantize_multiplier, AffineNodeWeights};
+    use crate::quant::ptq::QNodeWeights;
+    use crate::util::check::Gen;
+
+    /// Random fixed-point node weights; with `straddle`, biases land
+    /// right at (or just past) the i32-lane admission boundary so the
+    /// lane dispatch must flip exactly with the reference kernel's.
+    pub(crate) fn random_qw(
+        g: &mut Gen,
+        taps: usize,
+        f: usize,
+        width: u32,
+        straddle: bool,
+    ) -> QNodeWeights {
+        let lim = (1i32 << (width - 1)) - 1;
+        let w: Vec<i32> = (0..taps * f).map(|_| g.i32_in(-lim - 1, lim)).collect();
+        let per_filter = g.bool();
+        let shift: Vec<i32> = if per_filter {
+            (0..f).map(|_| g.i32_in(0, 14)).collect()
+        } else {
+            vec![g.i32_in(0, 14)]
+        };
+        let max_prod = (1i64 << (width - 1)) * (1i64 << (width - 1));
+        let boundary = i32::MAX as i64 / 2 - taps as i64 * max_prod;
+        let b_acc: Vec<i64> = (0..f)
+            .map(|_| {
+                let sign = if g.bool() { 1i64 } else { -1 };
+                if straddle && g.bool() {
+                    let delta = g.i32_in(-1024, 1024) as i64;
+                    sign * (boundary + delta).max(0)
+                } else {
+                    sign * g.i32_in(0, 1 << 20) as i64
+                }
+            })
+            .collect();
+        QNodeWeights { w, w_n: vec![0], b_acc, shift }
+    }
+
+    /// Random affine node weights with realistic requantization params.
+    pub(crate) fn random_affine_weights(g: &mut Gen, taps: usize, f: usize) -> AffineNodeWeights {
+        let w: Vec<i32> = (0..taps * f).map(|_| g.i32_in(-127, 127)).collect();
+        let mut mult = Vec::with_capacity(f);
+        let mut shift = Vec::with_capacity(f);
+        let mut b = Vec::with_capacity(f);
+        let mut w_scale = Vec::with_capacity(f);
+        for _ in 0..f {
+            let m = g.f32_in(1e-4, 0.9) as f64;
+            let (m0, sh) = quantize_multiplier(m);
+            mult.push(m0);
+            shift.push(sh);
+            b.push(g.i32_in(-(1 << 16), 1 << 16) as i64);
+            w_scale.push(1.0);
+        }
+        AffineNodeWeights { w, w_scale, b, mult, shift }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::testgen::{random_affine_weights, random_qw};
     use super::*;
     use crate::nn::{affine_exec, float_ops};
     use crate::prop_assert;
-    use crate::quant::affine::quantize_multiplier;
-    use crate::util::check::{property, Gen};
+    use crate::util::check::property;
 
     // --- microkernels vs naive triple loop ---
 
@@ -1212,7 +1289,7 @@ mod tests {
         // x = (3, 2) rows [1,2],[3,4],[5,6]; k=3 SAME stride 1 pad_lo=1.
         let x = [1, 2, 3, 4, 5, 6];
         let mut panel = vec![99; 3 * 6];
-        pack_1d_i32(&x, 3, 2, 3, 1, 1, 0, 3, 0, &mut panel);
+        pack_1d_i32(&x, 3, 2, 3, 1, 1, 0, 3, 0, 0, &mut panel);
         // row for o=0: taps x[-1] (pad), x[0], x[1]
         assert_eq!(&panel[0..6], &[0, 0, 1, 2, 3, 4]);
         // row for o=1: x[0], x[1], x[2]
@@ -1226,39 +1303,23 @@ mod tests {
         let x = [10, 20, 30];
         let mut panel = vec![0; 3];
         // k=3 pad_lo=1, c=1, one row at o=0: [pad, x0-5, x1-5]
-        pack_1d_i32(&x, 3, 1, 3, 1, 1, 0, 1, 5, &mut panel);
+        pack_1d_i32(&x, 3, 1, 3, 1, 1, 0, 1, 5, 0, &mut panel);
         assert_eq!(panel, vec![0, 5, 15]);
     }
 
-    // --- fixed-point conv/dense: bit-exact vs reference ---
-
-    fn random_qw(g: &mut Gen, taps: usize, f: usize, width: u32, straddle: bool) -> QNodeWeights {
-        let lim = (1i32 << (width - 1)) - 1;
-        let w: Vec<i32> = (0..taps * f).map(|_| g.i32_in(-lim - 1, lim)).collect();
-        let per_filter = g.bool();
-        let shift: Vec<i32> = if per_filter {
-            (0..f).map(|_| g.i32_in(0, 14)).collect()
-        } else {
-            vec![g.i32_in(0, 14)]
-        };
-        let max_prod = (1i64 << (width - 1)) * (1i64 << (width - 1));
-        let boundary = i32::MAX as i64 / 2 - taps as i64 * max_prod;
-        let b_acc: Vec<i64> = (0..f)
-            .map(|_| {
-                let sign = if g.bool() { 1i64 } else { -1 };
-                if straddle && g.bool() {
-                    // Right at (or just past) the i32-lane admission
-                    // boundary: the GEMM dispatch must flip exactly with
-                    // the reference kernel's.
-                    let delta = g.i32_in(-1024, 1024) as i64;
-                    sign * (boundary + delta).max(0)
-                } else {
-                    sign * g.i32_in(0, 1 << 20) as i64
-                }
-            })
-            .collect();
-        QNodeWeights { w, w_n: vec![0], b_acc, shift }
+    #[test]
+    fn pack_1d_pad_payload_fills_out_of_range_taps() {
+        // The prepacked affine path packs raw payloads with pad = zp_in
+        // (the folded bias cancels the zp·w contribution of padded taps).
+        let x = [10, 20, 30];
+        let mut panel = vec![0; 3];
+        pack_1d_i32(&x, 3, 1, 3, 1, 1, 0, 1, 0, 7, &mut panel);
+        assert_eq!(panel, vec![7, 10, 20]);
     }
+
+    // --- fixed-point conv/dense: bit-exact vs reference ---
+    // (random_qw / random_affine_weights live in super::testgen, shared
+    // with the prepacked suite in nn::packed.)
 
     #[test]
     fn conv1d_q_gemm_bit_exact_vs_ref_across_admission_boundary() {
@@ -1451,23 +1512,6 @@ mod tests {
     }
 
     // --- affine: bit-exact vs reference ---
-
-    fn random_affine_weights(g: &mut Gen, taps: usize, f: usize) -> AffineNodeWeights {
-        let w: Vec<i32> = (0..taps * f).map(|_| g.i32_in(-127, 127)).collect();
-        let mut mult = Vec::with_capacity(f);
-        let mut shift = Vec::with_capacity(f);
-        let mut b = Vec::with_capacity(f);
-        let mut w_scale = Vec::with_capacity(f);
-        for _ in 0..f {
-            let m = g.f32_in(1e-4, 0.9) as f64;
-            let (m0, sh) = quantize_multiplier(m);
-            mult.push(m0);
-            shift.push(sh);
-            b.push(g.i32_in(-(1 << 16), 1 << 16) as i64);
-            w_scale.push(1.0);
-        }
-        AffineNodeWeights { w, w_scale, b, mult, shift }
-    }
 
     #[test]
     fn affine_conv_gemm_bit_exact_vs_ref() {

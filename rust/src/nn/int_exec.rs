@@ -25,8 +25,11 @@ pub fn run(qg: &QuantizedGraph, input: &[f32]) -> Vec<f32> {
     let pool = super::parallel::IntraOpPool::serial();
     let mut scratch = vec![Vec::new()];
     let mut output = Vec::new();
+    // Legacy per-call semantics: no prepacked weights (bit-identical to
+    // the prepacked path for the integer engines either way).
+    let packed = super::packed::PackedWeights::empty(graph.nodes.len());
     run_pooled(
-        qg, input, &alloc, &node_elems, &mut qinput, &mut pools, &pool, &mut scratch,
+        qg, input, &alloc, &node_elems, &mut qinput, &mut pools, &pool, &mut scratch, &packed,
         &mut output,
     );
     output
@@ -36,7 +39,10 @@ pub fn run(qg: &QuantizedGraph, input: &[f32]) -> Vec<f32> {
 /// backend: integer payloads live in the allocator's §5.7 pools, the
 /// quantized input in `qinput`, the dequantized logits in `output`.
 /// `scratch` carries one im2col slab per intra-op thread of `pool`. With
-/// a preallocated arena no per-request heap allocation occurs.
+/// a preallocated arena no per-request heap allocation occurs. Conv and
+/// dense nodes present in `packed` run the prepacked fused-epilogue
+/// kernels (bit-exact with the per-call path) and never read
+/// `qg.weights`; absent nodes keep the per-call GEMM lowering.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pooled(
     qg: &QuantizedGraph,
@@ -47,6 +53,7 @@ pub(crate) fn run_pooled(
     pools: &mut [Vec<i32>],
     pool: &super::parallel::IntraOpPool,
     scratch: &mut [Vec<i32>],
+    packed: &super::packed::PackedWeights,
     output: &mut Vec<f32>,
 ) {
     let graph = &qg.graph;
@@ -70,30 +77,49 @@ pub(crate) fn run_pooled(
             match &node.kind {
                 LayerKind::Input => unreachable!(),
                 LayerKind::Conv { w, stride, padding, .. } => {
-                    // im2col + blocked GEMM (nn::gemm), bit-exact with the
-                    // naive int_ops::conv*_q_ref kernels (property-pinned).
+                    // Prepacked fused path (never touches qg.weights) or
+                    // per-call im2col + blocked GEMM — both bit-exact
+                    // with the naive int_ops::conv*_q_ref kernels
+                    // (property-pinned).
                     let x = src(node.inputs[0]);
                     let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let qw = &qg.weights[&node.id];
-                    if graph.dims == 1 {
-                        gemm::conv1d_q_gemm(
-                            x, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
-                            *padding, node.fused_relu, width, pool, scratch, &mut out,
-                        );
+                    if let Some(pn) = packed.get(node.id) {
+                        if graph.dims == 1 {
+                            super::packed::conv1d_int_packed(
+                                x, ish[0], pn, *stride, *padding, pool, scratch, &mut out,
+                            );
+                        } else {
+                            super::packed::conv2d_int_packed(
+                                x, ish[0], ish[1], pn, *stride, *padding, pool, scratch,
+                                &mut out,
+                            );
+                        }
                     } else {
-                        gemm::conv2d_q_gemm(
-                            x, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
-                            w.shape[3], *stride, *padding, node.fused_relu, width,
-                            pool, scratch, &mut out,
-                        );
+                        let qw = &qg.weights[&node.id];
+                        if graph.dims == 1 {
+                            gemm::conv1d_q_gemm(
+                                x, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
+                                *padding, node.fused_relu, width, pool, scratch, &mut out,
+                            );
+                        } else {
+                            gemm::conv2d_q_gemm(
+                                x, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
+                                w.shape[3], *stride, *padding, node.fused_relu, width,
+                                pool, scratch, &mut out,
+                            );
+                        }
                     }
                 }
                 LayerKind::Dense { w, .. } => {
-                    let qw = &qg.weights[&node.id];
-                    gemm::dense_q_gemm(
-                        src(node.inputs[0]), qw, w.shape[1], node.fused_relu, width, pool,
-                        &mut out,
-                    );
+                    if let Some(pn) = packed.get(node.id) {
+                        super::packed::dense_int_packed(src(node.inputs[0]), pn, pool, &mut out);
+                    } else {
+                        let qw = &qg.weights[&node.id];
+                        gemm::dense_q_gemm(
+                            src(node.inputs[0]), qw, w.shape[1], node.fused_relu, width, pool,
+                            &mut out,
+                        );
+                    }
                 }
                 LayerKind::MaxPool { size } => {
                     let ish = &graph.nodes[node.inputs[0]].out_shape;

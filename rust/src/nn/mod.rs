@@ -8,10 +8,12 @@ pub mod float_ops;
 pub mod gemm;
 pub mod int_exec;
 pub mod int_ops;
+pub mod packed;
 pub mod parallel;
 pub mod session;
 
 pub use float_exec::{argmax, ActStats};
+pub use packed::{Epilogue, PackedNode, PackedWeights};
 pub use parallel::IntraOpPool;
 pub use session::{
     AffineI8Backend, Arena, FixedQmnBackend, Float32Backend, InferenceBackend, Plan,

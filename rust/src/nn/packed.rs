@@ -1,0 +1,1237 @@
+//! Build-time weight pre-packing + fused GEMM epilogues (the PR-5
+//! tentpole; DESIGN.md §8).
+//!
+//! The per-call GEMM lowering in [`super::gemm`] streams the weight
+//! operand B straight out of graph storage in (K = taps) × (N = filters)
+//! row-major order: every microkernel step gathers an NR-wide row slice
+//! at stride N, and the affine engine additionally subtracts the input
+//! zero point while packing its activation panels on every request.
+//! Weights are constant, so all of that belongs at session-build time:
+//!
+//! - **NR-tiled B panels** ([`PackedNode`], one layout per accumulator
+//!   lane: f32 / i32 / i64 — the i64 lane stores pre-widened weights so
+//!   the kernel never casts). Tile `t` holds columns `t·NR..(t+1)·NR` of
+//!   B as a contiguous K×NR block (tail columns zero-filled), so the
+//!   inner k-loop streams B sequentially instead of striding by N.
+//! - **Fused epilogues** ([`Epilogue`]): bias + activation +
+//!   rescale/requantize run in the register-tile tail and write straight
+//!   into the output slice — no `emit` closure, no second pass. Three
+//!   variants matching the three engines: `BiasRelu` (float),
+//!   `BiasShiftClamp` (fixed-point Qm.n), `BiasRequant` (affine). Which
+//!   activation a node fuses is decided by the graph pass
+//!   [`annotate_epilogues`].
+//! - **Affine zero-point fold**: instead of subtracting `zp_in` from
+//!   every packed activation element per call, the build step folds it
+//!   into the packed bias — `b_eff[f] = b[f] − zp_in · Σ_p w[p][f]` —
+//!   and activation panels pack RAW payloads with padding payload
+//!   `zp_in`. Bit-identical: the reference computes
+//!   `b + Σ_in-range (x − zp)·w`; the folded form computes
+//!   `b − zp·Σ_all w + Σ_all x_t·w` with `x_t = zp` on padded taps, and
+//!   the two integer sums are equal term-for-term (exact i64 arithmetic,
+//!   no overflow at int8 magnitudes), so the final accumulator — and
+//!   therefore the `as i32` cast into gemmlowp requantization — is the
+//!   same integer. Bonus: the affine dense no longer stages `x − zp` in
+//!   scratch at all, and 1×1 convs can use the raw input as the A panel.
+//! - **Identity A-panel fast path**: dense layers and 1×1 stride-1 convs
+//!   skip im2col entirely — the im2col row for output position `o` would
+//!   be exactly `x[o·C..(o+1)·C]`, so the input tensor IS the A matrix.
+//!
+//! Semantics contract (property-pinned below): integer results are
+//! **bit-exact** against the naive `*_ref` kernels across the
+//! `accum_fits_i32` admission boundary and across thread counts (the
+//! per-element accumulation order is k-major and thread-invariant,
+//! exactly as in `super::gemm`); f32 results are **bit-identical to the
+//! per-call GEMM lowering** (same per-element operation sequence — only
+//! the B storage layout changed) and therefore ULP-bounded vs the
+//! reference.
+//!
+//! Ownership: a [`PackedWeights`] arena is built once per session plan
+//! ([`crate::nn::session::InferenceBackend::pack_weights`]) and shared
+//! read-only behind an `Arc` — `Session::fork` aliases it instead of
+//! copying. Host-only, like the GEMM packing scratch: the device RAM/ROM
+//! models are untouched (`Allocation::packed_b_elems` records the
+//! element count as a lifetime fact, never charges it to device RAM).
+
+use crate::fixedpoint::ops::{clamp_to, rescale};
+use crate::graph::ir::{Graph, LayerKind, Padding};
+use crate::graph::{annotate_epilogues, EpilogueKind};
+use crate::quant::affine::{requantize, AffineNodeWeights, AffineQuantizedGraph};
+use crate::quant::ptq::{QNodeWeights, QuantizedGraph};
+
+use super::gemm::{self, MR, NR};
+use super::int_ops::accum_fits_i32;
+use super::parallel::{IntraOpPool, SharedOut};
+
+/// Columns of the packed B layout: N rounded up to a whole NR tile (tail
+/// columns zero-filled, never emitted).
+pub fn packed_cols(n: usize) -> usize {
+    n.div_ceil(NR) * NR
+}
+
+/// Total packed-B elements the graph's conv/dense nodes need — the
+/// allocator's host-only accounting fact (`Allocation::packed_b_elems`),
+/// matched by `PackedWeights::panel_elems` for every backend builder.
+pub fn packed_b_elems(graph: &Graph) -> usize {
+    graph
+        .nodes
+        .iter()
+        .filter_map(|n| node_dims(&n.kind).map(|(_, taps, f)| packed_cols(f) * taps))
+        .sum()
+}
+
+/// (spatial kernel dims, taps = K, filters = N) of a weighted node.
+fn node_dims(kind: &LayerKind) -> Option<(Vec<usize>, usize, usize)> {
+    match kind {
+        LayerKind::Conv { w, .. } => {
+            let n = *w.shape.last().unwrap();
+            let taps = w.shape[..w.shape.len() - 1].iter().product();
+            Some((w.shape[..w.shape.len() - 2].to_vec(), taps, n))
+        }
+        LayerKind::Dense { w, .. } => Some((Vec::new(), w.shape[0], w.shape[1])),
+        _ => None,
+    }
+}
+
+/// Pre-packed weight operand, one variant per accumulator lane width.
+#[derive(Clone, Debug)]
+pub enum PackedB {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    /// Pre-widened to i64 at build time (fixed-point wide lane + affine).
+    I64(Vec<i64>),
+}
+
+impl PackedB {
+    fn elems(&self) -> usize {
+        match self {
+            PackedB::F32(v) => v.len(),
+            PackedB::I32(v) => v.len(),
+            PackedB::I64(v) => v.len(),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            PackedB::F32(v) => v.len() * 4,
+            PackedB::I32(v) => v.len() * 4,
+            PackedB::I64(v) => v.len() * 8,
+        }
+    }
+}
+
+/// The fused kernel tail, applied per output element inside the register
+/// tile before the store — the typed replacement for the per-element
+/// `emit` closures and second-pass bias/activation sweeps.
+#[derive(Clone, Debug)]
+pub enum Epilogue {
+    /// Float engine: `v = acc + bias[f]`, then ReLU.
+    BiasRelu { bias: Vec<f32>, relu: bool },
+    /// Fixed-point Qm.n: `clamp(rescale(acc + bias[f], shift), width)`,
+    /// then ReLU at 0. `shift.len() == 1` means a uniform per-layer
+    /// shift.
+    BiasShiftClamp { bias: Vec<i64>, shift: Vec<i32>, width: u32, relu: bool },
+    /// Affine (TFLite semantics): gemmlowp requantization of
+    /// `acc + bias[f]` (bias carries the build-time zero-point fold),
+    /// then ReLU at `zp_out`.
+    BiasRequant { bias: Vec<i64>, mult: Vec<i32>, shift: Vec<i32>, zp_out: i32, relu: bool },
+}
+
+impl Epilogue {
+    fn bytes(&self) -> usize {
+        match self {
+            Epilogue::BiasRelu { bias, .. } => bias.len() * 4,
+            Epilogue::BiasShiftClamp { bias, shift, .. } => bias.len() * 8 + shift.len() * 4,
+            Epilogue::BiasRequant { bias, mult, shift, .. } => {
+                bias.len() * 8 + (mult.len() + shift.len()) * 4
+            }
+        }
+    }
+}
+
+/// One conv/dense node's build-time transformed weights: NR-tiled B
+/// panels plus the epilogue parameters its kernel tail applies. Holds
+/// copies of everything the hot path reads — after a session is built,
+/// no per-inference code path touches graph weight storage again.
+#[derive(Clone, Debug)]
+pub struct PackedNode {
+    /// Spatial kernel dims: `[k]` (1-D conv), `[kh, kw]` (2-D conv),
+    /// `[]` (dense).
+    pub ks: Vec<usize>,
+    /// K: taps per output position (k·C, kh·kw·C, or dense inputs).
+    pub taps: usize,
+    /// N: filters / output units.
+    pub n: usize,
+    /// Padding payload for out-of-range im2col taps (`zp_in` on the
+    /// affine path — cancelled by the bias fold — 0 elsewhere).
+    pub pad: i32,
+    pub b: PackedB,
+    pub epi: Epilogue,
+}
+
+/// NR-tile B: for each column tile, K contiguous NR-wide rows.
+fn pack_panels<S: Copy, T: Copy + Default>(
+    w: &[S],
+    k: usize,
+    n: usize,
+    cast: impl Fn(S) -> T,
+) -> Vec<T> {
+    debug_assert!(w.len() >= k * n, "weight matrix too small");
+    let mut out = Vec::with_capacity(packed_cols(n) * k);
+    for t in 0..n.div_ceil(NR) {
+        for p in 0..k {
+            for jj in 0..NR {
+                let col = t * NR + jj;
+                out.push(if col < n { cast(w[p * n + col]) } else { T::default() });
+            }
+        }
+    }
+    out
+}
+
+impl PackedNode {
+    /// Float node: f32 panels + `BiasRelu`.
+    pub fn f32_node(
+        w: &[f32],
+        b: &[f32],
+        ks: &[usize],
+        taps: usize,
+        n: usize,
+        relu: bool,
+    ) -> PackedNode {
+        PackedNode {
+            ks: ks.to_vec(),
+            taps,
+            n,
+            pad: 0,
+            b: PackedB::F32(pack_panels(w, taps, n, |v| v)),
+            epi: Epilogue::BiasRelu { bias: b.to_vec(), relu },
+        }
+    }
+
+    /// Fixed-point Qm.n node: the lane is decided HERE, once, by the same
+    /// `accum_fits_i32` guard the reference kernels use — i32 panels when
+    /// the worst-case accumulator provably fits, i64 (pre-widened) else.
+    pub fn fixed_node(
+        qw: &QNodeWeights,
+        ks: &[usize],
+        taps: usize,
+        n: usize,
+        width: u32,
+        relu: bool,
+    ) -> PackedNode {
+        let b = if accum_fits_i32(qw, taps, width) {
+            PackedB::I32(pack_panels(&qw.w, taps, n, |v| v))
+        } else {
+            PackedB::I64(pack_panels(&qw.w, taps, n, i64::from))
+        };
+        PackedNode {
+            ks: ks.to_vec(),
+            taps,
+            n,
+            pad: 0,
+            b,
+            epi: Epilogue::BiasShiftClamp {
+                bias: qw.b_acc.clone(),
+                shift: qw.shift.clone(),
+                width,
+                relu,
+            },
+        }
+    }
+
+    /// Affine node: i64 panels + `BiasRequant`, with the input zero point
+    /// folded into the bias at build time (see the module docs for the
+    /// bit-exactness argument) so activation panels pack raw payloads
+    /// with padding payload `zp_in`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn affine_node(
+        qw: &AffineNodeWeights,
+        ks: &[usize],
+        taps: usize,
+        n: usize,
+        zp_in: i32,
+        zp_out: i32,
+        relu: bool,
+    ) -> PackedNode {
+        let mut bias = qw.b.clone();
+        for (fi, be) in bias.iter_mut().enumerate() {
+            let mut col_sum = 0i64;
+            for p in 0..taps {
+                col_sum += qw.w[p * n + fi] as i64;
+            }
+            *be -= zp_in as i64 * col_sum;
+        }
+        PackedNode {
+            ks: ks.to_vec(),
+            taps,
+            n,
+            pad: zp_in,
+            b: PackedB::I64(pack_panels(&qw.w, taps, n, i64::from)),
+            epi: Epilogue::BiasRequant {
+                bias,
+                mult: qw.mult.clone(),
+                shift: qw.shift.clone(),
+                zp_out,
+                relu,
+            },
+        }
+    }
+
+    /// Host bytes this node's packed panels + epilogue copies occupy.
+    pub fn host_bytes(&self) -> usize {
+        self.b.bytes() + self.epi.bytes()
+    }
+}
+
+/// The per-plan prepacked-weight arena: one optional [`PackedNode`] per
+/// graph node, built once at session-build time and shared read-only
+/// (behind an `Arc` on the plan) by every fork.
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    nodes: Vec<Option<PackedNode>>,
+}
+
+impl PackedWeights {
+    /// No packing (custom backends without a packer; legacy per-call
+    /// entry points). Executors fall back to the per-call GEMM path.
+    pub fn empty(n_nodes: usize) -> PackedWeights {
+        PackedWeights { nodes: (0..n_nodes).map(|_| None).collect() }
+    }
+
+    pub fn get(&self, id: usize) -> Option<&PackedNode> {
+        self.nodes.get(id).and_then(|n| n.as_ref())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.iter().all(|n| n.is_none())
+    }
+
+    /// Total packed-B elements — equals `packed_b_elems(graph)` (and the
+    /// allocator's `Allocation::packed_b_elems`) for every builder.
+    pub fn panel_elems(&self) -> usize {
+        self.nodes.iter().flatten().map(|pn| pn.b.elems()).sum()
+    }
+
+    /// Host bytes of the whole arena (panels + epilogue copies).
+    pub fn host_bytes(&self) -> usize {
+        self.nodes.iter().flatten().map(PackedNode::host_bytes).sum()
+    }
+
+    /// Pack a float graph's conv/dense weights.
+    pub fn for_float(graph: &Graph) -> PackedWeights {
+        let epi = annotate_epilogues(graph);
+        let nodes = graph
+            .nodes
+            .iter()
+            .map(|node| {
+                let relu = matches!(epi[node.id], Some(EpilogueKind::Relu));
+                match &node.kind {
+                    LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => {
+                        let (ks, taps, n) = node_dims(&node.kind).unwrap();
+                        Some(PackedNode::f32_node(&w.data, &b.data, &ks, taps, n, relu))
+                    }
+                    _ => None,
+                }
+            })
+            .collect();
+        PackedWeights { nodes }
+    }
+
+    /// Pack a fixed-point Qm.n graph's conv/dense weights.
+    pub fn for_fixed(qg: &QuantizedGraph) -> PackedWeights {
+        let epi = annotate_epilogues(&qg.graph);
+        let nodes = qg
+            .graph
+            .nodes
+            .iter()
+            .map(|node| {
+                let (ks, taps, n) = node_dims(&node.kind)?;
+                let relu = matches!(epi[node.id], Some(EpilogueKind::Relu));
+                Some(PackedNode::fixed_node(&qg.weights[&node.id], &ks, taps, n, qg.width, relu))
+            })
+            .collect();
+        PackedWeights { nodes }
+    }
+
+    /// Pack an affine graph's conv/dense weights (zero-point folded).
+    pub fn for_affine(aq: &AffineQuantizedGraph) -> PackedWeights {
+        let epi = annotate_epilogues(&aq.graph);
+        let nodes = aq
+            .graph
+            .nodes
+            .iter()
+            .map(|node| {
+                let (ks, taps, n) = node_dims(&node.kind)?;
+                let relu = matches!(epi[node.id], Some(EpilogueKind::Relu));
+                let zp_in = aq.act[node.inputs[0]].zero_point;
+                let zp_out = aq.act[node.id].zero_point;
+                Some(PackedNode::affine_node(
+                    &aq.weights[&node.id], &ks, taps, n, zp_in, zp_out, relu,
+                ))
+            })
+            .collect();
+        PackedWeights { nodes }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused microkernels (packed B, epilogue in the register-tile tail)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn shift_at(shift: &[i32], fi: usize) -> i32 {
+    if shift.len() == 1 {
+        shift[0]
+    } else {
+        shift[fi]
+    }
+}
+
+/// f32 fused kernel: identical per-element operation sequence to the
+/// per-call `gemm_f32_cols` + bias/ReLU emit (k-major accumulate, then
+/// `acc + bias`, then ReLU), so results are BIT-identical to the PR-3/4
+/// path — only the B storage layout changed.
+#[allow(clippy::too_many_arguments)]
+fn kernel_f32(
+    a: &[f32],
+    bp: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[f32],
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<f32>,
+) {
+    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            let mut acc: [[f32; NR]; MR] = [[0.0; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[tb + p * NR..tb + p * NR + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                let base = (row0 + i + mi) * n;
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    let fi = j + ni;
+                    let v = accv + bias[fi];
+                    // SAFETY: the dispatch owns rows row0..row0+m and
+                    // columns j0..j1 of the output exclusively.
+                    unsafe { out.write(base + fi, if relu { v.max(0.0) } else { v }) };
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// i32-lane fused kernel (fixed-point, `accum_fits_i32`-admitted nodes):
+/// bit-exact with the reference epilogue (`acc + b as i32`, widen,
+/// rescale, clamp, ReLU).
+#[allow(clippy::too_many_arguments)]
+fn kernel_i32(
+    a: &[i32],
+    bp: &[i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    shift: &[i32],
+    width: u32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            let mut acc: [[i32; NR]; MR] = [[0; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[tb + p * NR..tb + p * NR + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    if av == 0 {
+                        // ReLU sparsity: exact skip for integers.
+                        continue;
+                    }
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                let base = (row0 + i + mi) * n;
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    let fi = j + ni;
+                    let total = accv + bias[fi] as i32;
+                    let mut v = clamp_to(rescale(i64::from(total), shift_at(shift, fi)), width);
+                    if relu && v < 0 {
+                        v = 0;
+                    }
+                    // SAFETY: as in `kernel_f32`.
+                    unsafe { out.write(base + fi, v) };
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// i64 wide fused kernel, fixed-point epilogue.
+#[allow(clippy::too_many_arguments)]
+fn kernel_i64_fixed(
+    a: &[i32],
+    bp: &[i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    shift: &[i32],
+    width: u32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            let mut acc: [[i64; NR]; MR] = [[0; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[tb + p * NR..tb + p * NR + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    if av == 0 {
+                        // ReLU sparsity: exact skip for integers.
+                        continue;
+                    }
+                    let av = av as i64;
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                let base = (row0 + i + mi) * n;
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    let fi = j + ni;
+                    let mut v = clamp_to(rescale(accv + bias[fi], shift_at(shift, fi)), width);
+                    if relu && v < 0 {
+                        v = 0;
+                    }
+                    // SAFETY: as in `kernel_f32`.
+                    unsafe { out.write(base + fi, v) };
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// i64 wide fused kernel, affine (gemmlowp requantize) epilogue. The
+/// bias carries the build-time zero-point fold; the final accumulator is
+/// the same integer the reference reaches, so the `as i32` cast into
+/// `requantize` is bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn kernel_i64_affine(
+    a: &[i32],
+    bp: &[i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    mult: &[i32],
+    shift: &[i32],
+    zp_out: i32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            let mut acc: [[i64; NR]; MR] = [[0; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[tb + p * NR..tb + p * NR + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    if av == 0 {
+                        // Raw-payload zero: contributes 0 to Σ x·w.
+                        continue;
+                    }
+                    let av = av as i64;
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                let base = (row0 + i + mi) * n;
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    let fi = j + ni;
+                    let total = bias[fi] + accv;
+                    let mut v = requantize(total as i32, mult[fi], shift[fi], zp_out);
+                    if relu {
+                        v = v.max(zp_out);
+                    }
+                    // SAFETY: as in `kernel_f32`.
+                    unsafe { out.write(base + fi, v) };
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// Dispatch one integer A panel through the node's (lane, epilogue)
+/// combination.
+fn run_int_kernel(
+    a: &[i32],
+    pn: &PackedNode,
+    m: usize,
+    j0: usize,
+    j1: usize,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    let (n, k) = (pn.n, pn.taps);
+    match (&pn.b, &pn.epi) {
+        (PackedB::I32(bp), Epilogue::BiasShiftClamp { bias, shift, width, relu }) => {
+            kernel_i32(a, bp, m, n, k, j0, j1, bias, shift, *width, *relu, row0, out)
+        }
+        (PackedB::I64(bp), Epilogue::BiasShiftClamp { bias, shift, width, relu }) => {
+            kernel_i64_fixed(a, bp, m, n, k, j0, j1, bias, shift, *width, *relu, row0, out)
+        }
+        (PackedB::I64(bp), Epilogue::BiasRequant { bias, mult, shift, zp_out, relu }) => {
+            kernel_i64_affine(
+                a, bp, m, n, k, j0, j1, bias, mult, shift, *zp_out, *relu, row0, out,
+            )
+        }
+        _ => panic!("mismatched packed lane / epilogue on an integer node"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prepacked conv/dense entry points
+// ---------------------------------------------------------------------------
+
+/// Prepacked float conv1d. 1×1 stride-1 convs use the input tensor as
+/// the A matrix directly (identity im2col), everything else packs per-
+/// worker panels exactly as the per-call path does.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_f32_packed(
+    x: &[f32],
+    s: usize,
+    pn: &PackedNode,
+    stride: usize,
+    padding: Padding,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<f32>],
+    out: &mut Vec<f32>,
+) -> usize {
+    let (PackedB::F32(bp), Epilogue::BiasRelu { bias, relu }) = (&pn.b, &pn.epi) else {
+        panic!("float conv on a non-float packed node");
+    };
+    let k = pn.ks[0];
+    let c = pn.taps / k;
+    let (pad_lo, s_out) = gemm::conv1d_geometry(s, k, stride, padding);
+    let (taps, f) = (pn.taps, pn.n);
+    out.clear();
+    out.resize(s_out * f, 0.0);
+    let out_view = SharedOut::new(&mut out[..]);
+    if k == 1 && stride == 1 {
+        pool.run_partitioned(s_out, &|_tid, s0, s1| {
+            kernel_f32(&x[s0 * taps..s1 * taps], bp, s1 - s0, f, taps, 0, f, bias, *relu, s0,
+                &out_view);
+        });
+        return s_out;
+    }
+    let rows_cache = gemm::panel_rows(taps, s_out);
+    let body = |panel: &mut [f32], row0: usize, rows: usize| {
+        gemm::pack_1d_f32(x, s, c, k, stride, pad_lo, row0, rows, &mut panel[..rows * taps]);
+        kernel_f32(&panel[..rows * taps], bp, rows, f, taps, 0, f, bias, *relu, row0, &out_view);
+    };
+    gemm::split_positions(pool, scratch, rows_cache * taps, rows_cache, s_out, &body);
+    s_out
+}
+
+/// Prepacked float conv2d (1×1 stride-1 fast path included).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32_packed(
+    x: &[f32],
+    h: usize,
+    wdt: usize,
+    pn: &PackedNode,
+    stride: usize,
+    padding: Padding,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<f32>],
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    let (PackedB::F32(bp), Epilogue::BiasRelu { bias, relu }) = (&pn.b, &pn.epi) else {
+        panic!("float conv on a non-float packed node");
+    };
+    let (kh, kw) = (pn.ks[0], pn.ks[1]);
+    let c = pn.taps / (kh * kw);
+    let ((ph, pw), (h_out, w_out)) = gemm::conv2d_geometry(h, wdt, kh, kw, stride, padding);
+    let positions = h_out * w_out;
+    let (taps, f) = (pn.taps, pn.n);
+    out.clear();
+    out.resize(positions * f, 0.0);
+    let out_view = SharedOut::new(&mut out[..]);
+    if kh == 1 && kw == 1 && stride == 1 {
+        pool.run_partitioned(positions, &|_tid, s0, s1| {
+            kernel_f32(&x[s0 * taps..s1 * taps], bp, s1 - s0, f, taps, 0, f, bias, *relu, s0,
+                &out_view);
+        });
+        return (h_out, w_out);
+    }
+    let rows_cache = gemm::panel_rows(taps, positions);
+    let body = |panel: &mut [f32], row0: usize, rows: usize| {
+        gemm::pack_2d_f32(
+            x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, &mut panel[..rows * taps],
+        );
+        kernel_f32(&panel[..rows * taps], bp, rows, f, taps, 0, f, bias, *relu, row0, &out_view);
+    };
+    gemm::split_positions(pool, scratch, rows_cache * taps, rows_cache, positions, &body);
+    (h_out, w_out)
+}
+
+/// Prepacked float dense: the input vector IS the m = 1 A panel; the
+/// filter dimension splits across the pool in NR-aligned column tiles
+/// (tile-aligned by construction, matching the packed-B layout).
+pub fn dense_f32_packed(x: &[f32], pn: &PackedNode, pool: &IntraOpPool, out: &mut Vec<f32>) {
+    let (PackedB::F32(bp), Epilogue::BiasRelu { bias, relu }) = (&pn.b, &pn.epi) else {
+        panic!("float dense on a non-float packed node");
+    };
+    debug_assert_eq!(x.len(), pn.taps, "dense input length");
+    let (taps, n) = (pn.taps, pn.n);
+    out.clear();
+    out.resize(n, 0.0);
+    let out_view = SharedOut::new(&mut out[..]);
+    gemm::split_col_tiles(pool, n, &|j0, j1| {
+        kernel_f32(x, bp, 1, n, taps, j0, j1, bias, *relu, 0, &out_view);
+    });
+}
+
+/// Prepacked integer conv1d (fixed-point or affine — the node's packed
+/// lane + epilogue decide). Activation panels pack RAW payloads with
+/// padding payload `pn.pad`; no per-call zero-point work.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_int_packed(
+    x: &[i32],
+    s: usize,
+    pn: &PackedNode,
+    stride: usize,
+    padding: Padding,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
+    out: &mut Vec<i32>,
+) -> usize {
+    let k = pn.ks[0];
+    let c = pn.taps / k;
+    let (pad_lo, s_out) = gemm::conv1d_geometry(s, k, stride, padding);
+    let (taps, f) = (pn.taps, pn.n);
+    out.clear();
+    out.resize(s_out * f, 0);
+    let out_view = SharedOut::new(&mut out[..]);
+    if k == 1 && stride == 1 {
+        pool.run_partitioned(s_out, &|_tid, s0, s1| {
+            run_int_kernel(&x[s0 * taps..s1 * taps], pn, s1 - s0, 0, f, s0, &out_view);
+        });
+        return s_out;
+    }
+    let rows_cache = gemm::panel_rows(taps, s_out);
+    let body = |panel: &mut [i32], row0: usize, rows: usize| {
+        gemm::pack_1d_i32(
+            x, s, c, k, stride, pad_lo, row0, rows, 0, pn.pad, &mut panel[..rows * taps],
+        );
+        run_int_kernel(&panel[..rows * taps], pn, rows, 0, f, row0, &out_view);
+    };
+    gemm::split_positions(pool, scratch, rows_cache * taps, rows_cache, s_out, &body);
+    s_out
+}
+
+/// Prepacked integer conv2d (fixed-point or affine).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_int_packed(
+    x: &[i32],
+    h: usize,
+    wdt: usize,
+    pn: &PackedNode,
+    stride: usize,
+    padding: Padding,
+    pool: &IntraOpPool,
+    scratch: &mut [Vec<i32>],
+    out: &mut Vec<i32>,
+) -> (usize, usize) {
+    let (kh, kw) = (pn.ks[0], pn.ks[1]);
+    let c = pn.taps / (kh * kw);
+    let ((ph, pw), (h_out, w_out)) = gemm::conv2d_geometry(h, wdt, kh, kw, stride, padding);
+    let positions = h_out * w_out;
+    let (taps, f) = (pn.taps, pn.n);
+    out.clear();
+    out.resize(positions * f, 0);
+    let out_view = SharedOut::new(&mut out[..]);
+    if kh == 1 && kw == 1 && stride == 1 {
+        pool.run_partitioned(positions, &|_tid, s0, s1| {
+            run_int_kernel(&x[s0 * taps..s1 * taps], pn, s1 - s0, 0, f, s0, &out_view);
+        });
+        return (h_out, w_out);
+    }
+    let rows_cache = gemm::panel_rows(taps, positions);
+    let body = |panel: &mut [i32], row0: usize, rows: usize| {
+        gemm::pack_2d_i32(
+            x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, 0, pn.pad,
+            &mut panel[..rows * taps],
+        );
+        run_int_kernel(&panel[..rows * taps], pn, rows, 0, f, row0, &out_view);
+    };
+    gemm::split_positions(pool, scratch, rows_cache * taps, rows_cache, positions, &body);
+    (h_out, w_out)
+}
+
+/// Prepacked integer dense (fixed-point or affine). The affine flavor
+/// consumes the RAW input directly — the per-call `x − zp` staging pass
+/// is gone, folded into the packed bias at build time.
+pub fn dense_int_packed(x: &[i32], pn: &PackedNode, pool: &IntraOpPool, out: &mut Vec<i32>) {
+    debug_assert_eq!(x.len(), pn.taps, "dense input length");
+    let n = pn.n;
+    out.clear();
+    out.resize(n, 0);
+    let out_view = SharedOut::new(&mut out[..]);
+    gemm::split_col_tiles(pool, n, &|j0, j1| {
+        run_int_kernel(x, pn, 1, j0, j1, 0, &out_view);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    // One shared copy of the admission-boundary straddle generators —
+    // the per-call (nn::gemm) and prepacked suites must pin the SAME
+    // boundary, so the generator lives in gemm::testgen.
+    use crate::nn::gemm::testgen::{random_affine_weights, random_qw};
+    use crate::nn::{affine_exec, int_ops};
+    use crate::prop_assert;
+    use crate::util::check::property;
+
+    fn slabs(n: usize) -> Vec<Vec<i32>> {
+        vec![Vec::new(); n]
+    }
+
+    #[test]
+    fn pack_panels_tiles_and_zero_fills_tail() {
+        // B = 2×10 row-major; NR = 8 → two tiles of 2×8 each.
+        let b: Vec<i32> = (0..20).collect();
+        let packed = pack_panels(&b, 2, 10, |v| v);
+        assert_eq!(packed.len(), packed_cols(10) * 2);
+        // Tile 0: rows [0..8] and [10..18].
+        assert_eq!(&packed[0..8], &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(&packed[8..16], &[10, 11, 12, 13, 14, 15, 16, 17]);
+        // Tile 1: columns 8..10 then zero fill.
+        assert_eq!(&packed[16..24], &[8, 9, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(&packed[24..32], &[18, 19, 0, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn fixed_conv1d_packed_bit_exact_vs_ref_across_admission_and_threads() {
+        let pools = [IntraOpPool::serial(), IntraOpPool::new(2), IntraOpPool::new(4)];
+        property(80, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let k = g.usize_in(1, 5);
+            let c = g.usize_in(1, 6);
+            let f = g.usize_in(1, 12);
+            let s = g.usize_in(k, 48);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let qw = random_qw(g, k * c, f, width, width == 8);
+            let x: Vec<i32> = {
+                let lim = (1i32 << (width - 1)) - 1;
+                (0..s * c).map(|_| g.i32_in(-lim - 1, lim)).collect()
+            };
+            let mut want = Vec::new();
+            int_ops::conv1d_q_ref(&x, s, c, &qw, k, f, stride, padding, relu, width, &mut want);
+            let pn = PackedNode::fixed_node(&qw, &[k], k * c, f, width, relu);
+            for pool in &pools {
+                let mut scratch = slabs(pool.threads());
+                let mut got = Vec::new();
+                conv1d_int_packed(&x, s, &pn, stride, padding, pool, &mut scratch, &mut got);
+                prop_assert!(
+                    want == got,
+                    "fixed conv1d packed diverged at t={}: width={width} k={k} c={c} f={f} s={s}",
+                    pool.threads()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fixed_conv2d_packed_bit_exact_vs_ref() {
+        let pools = [IntraOpPool::serial(), IntraOpPool::new(4)];
+        property(50, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let kh = g.usize_in(1, 3);
+            let kw = g.usize_in(1, 3);
+            let c = g.usize_in(1, 4);
+            let f = g.usize_in(1, 9);
+            let h = g.usize_in(kh, 12);
+            let wdt = g.usize_in(kw, 12);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let qw = random_qw(g, kh * kw * c, f, width, width == 8);
+            let x: Vec<i32> = {
+                let lim = (1i32 << (width - 1)) - 1;
+                (0..h * wdt * c).map(|_| g.i32_in(-lim - 1, lim)).collect()
+            };
+            let mut want = Vec::new();
+            int_ops::conv2d_q_ref(
+                &x, h, wdt, c, &qw, kh, kw, f, stride, padding, relu, width, &mut want,
+            );
+            let pn = PackedNode::fixed_node(&qw, &[kh, kw], kh * kw * c, f, width, relu);
+            for pool in &pools {
+                let mut scratch = slabs(pool.threads());
+                let mut got = Vec::new();
+                conv2d_int_packed(&x, h, wdt, &pn, stride, padding, pool, &mut scratch, &mut got);
+                prop_assert!(
+                    want == got,
+                    "fixed conv2d packed diverged at t={}: kh={kh} kw={kw} c={c} f={f}",
+                    pool.threads()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fixed_dense_packed_bit_exact_vs_ref() {
+        let pools = [IntraOpPool::serial(), IntraOpPool::new(4)];
+        property(80, |g| {
+            let width = *g.pick(&[8u32, 16]);
+            let i = g.usize_in(1, 96);
+            let o = g.usize_in(1, 40);
+            let relu = g.bool();
+            let qw = random_qw(g, i, o, width, width == 8);
+            let lim = (1i32 << (width - 1)) - 1;
+            let x: Vec<i32> = (0..i).map(|_| g.i32_in(-lim - 1, lim)).collect();
+            let mut want = Vec::new();
+            int_ops::dense_q_ref(&x, &qw, o, relu, width, &mut want);
+            let pn = PackedNode::fixed_node(&qw, &[], i, o, width, relu);
+            for pool in &pools {
+                let mut got = Vec::new();
+                dense_int_packed(&x, &pn, pool, &mut got);
+                prop_assert!(
+                    want == got,
+                    "fixed dense packed diverged at i={i} o={o} t={}",
+                    pool.threads()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn affine_conv_packed_bit_exact_vs_ref_zero_point_fold() {
+        // The critical property of the build-time fold: raw-payload
+        // panels with padding payload zp_in, plus b − zp·Σw, must
+        // reproduce the reference's (x − zp)·w sums exactly — SAME and
+        // VALID, 1-D and 2-D, with and without fused ReLU.
+        let pools = [IntraOpPool::serial(), IntraOpPool::new(2), IntraOpPool::new(4)];
+        property(60, |g| {
+            let dims = g.usize_in(1, 2);
+            let relu = g.bool();
+            let stride = g.usize_in(1, 2);
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let zp_in = g.i32_in(-128, 127);
+            let zp_out = g.i32_in(-128, 127);
+            let (ish, wshape): (Vec<usize>, Vec<usize>) = if dims == 1 {
+                let (k, c, f) = (g.usize_in(1, 5), g.usize_in(1, 4), g.usize_in(1, 8));
+                let s = g.usize_in(k, 24);
+                (vec![s, c], vec![k, c, f])
+            } else {
+                let (kh, kw, c, f) =
+                    (g.usize_in(1, 3), g.usize_in(1, 3), g.usize_in(1, 3), g.usize_in(1, 6));
+                let h = g.usize_in(kh, 10);
+                let wd = g.usize_in(kw, 10);
+                (vec![h, wd, c], vec![kh, kw, c, f])
+            };
+            let taps: usize = wshape[..wshape.len() - 1].iter().product();
+            let f = *wshape.last().unwrap();
+            let qw = random_affine_weights(g, taps, f);
+            let n_in: usize = ish.iter().product();
+            let x: Vec<i32> = (0..n_in).map(|_| g.i32_in(-128, 127)).collect();
+            let mut want = Vec::new();
+            affine_exec::conv_affine_ref(
+                &x, &ish, &wshape, &qw, zp_in, zp_out, stride, padding, relu, dims, &mut want,
+            );
+            let ks = &wshape[..wshape.len() - 2];
+            let pn = PackedNode::affine_node(&qw, ks, taps, f, zp_in, zp_out, relu);
+            for pool in &pools {
+                let mut scratch = slabs(pool.threads());
+                let mut got = Vec::new();
+                if dims == 1 {
+                    conv1d_int_packed(
+                        &x, ish[0], &pn, stride, padding, pool, &mut scratch, &mut got,
+                    );
+                } else {
+                    conv2d_int_packed(
+                        &x, ish[0], ish[1], &pn, stride, padding, pool, &mut scratch, &mut got,
+                    );
+                }
+                prop_assert!(
+                    want == got,
+                    "affine conv packed diverged (dims={dims}, t={}, zp_in={zp_in})",
+                    pool.threads()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn affine_dense_packed_bit_exact_without_staging() {
+        let pools = [IntraOpPool::serial(), IntraOpPool::new(4)];
+        property(60, |g| {
+            let i = g.usize_in(1, 160);
+            let o = g.usize_in(1, 24);
+            let zp_in = g.i32_in(-128, 127);
+            let zp_out = g.i32_in(-128, 127);
+            let relu = g.bool();
+            let qw = random_affine_weights(g, i, o);
+            let x: Vec<i32> = (0..i).map(|_| g.i32_in(-128, 127)).collect();
+            let mut want = Vec::new();
+            affine_exec::dense_affine_ref(&x, &qw, zp_in, zp_out, o, relu, &mut want);
+            let pn = PackedNode::affine_node(&qw, &[], i, o, zp_in, zp_out, relu);
+            for pool in &pools {
+                let mut got = Vec::new();
+                dense_int_packed(&x, &pn, pool, &mut got);
+                prop_assert!(want == got, "affine dense packed diverged at i={i} o={o}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn one_by_one_conv_identity_fast_path_bit_exact() {
+        // k = 1, stride = 1: the A matrix is the input tensor itself.
+        // Fixed and affine flavors must match the refs bit-for-bit; the
+        // 2-D shape exercises the (kh, kw) = (1, 1) route.
+        let pools = [IntraOpPool::serial(), IntraOpPool::new(3)];
+        property(40, |g| {
+            let c = g.usize_in(1, 8);
+            let f = g.usize_in(1, 12);
+            let s = g.usize_in(1, 40);
+            let relu = g.bool();
+            let width = *g.pick(&[8u32, 16]);
+            let qw = random_qw(g, c, f, width, width == 8);
+            let lim = (1i32 << (width - 1)) - 1;
+            let x: Vec<i32> = (0..s * c).map(|_| g.i32_in(-lim - 1, lim)).collect();
+            let mut want = Vec::new();
+            int_ops::conv1d_q_ref(&x, s, c, &qw, 1, f, 1, Padding::Same, relu, width, &mut want);
+            let pn = PackedNode::fixed_node(&qw, &[1], c, f, width, relu);
+            for pool in &pools {
+                let mut scratch = slabs(pool.threads());
+                let mut got = Vec::new();
+                conv1d_int_packed(&x, s, &pn, 1, Padding::Same, pool, &mut scratch, &mut got);
+                prop_assert!(want == got, "1x1 fixed fast path diverged (t={})", pool.threads());
+                // Scratch must be untouched: no im2col on the fast path.
+                prop_assert!(scratch.iter().all(Vec::is_empty), "1x1 fast path used scratch");
+            }
+
+            // Affine 2-D 1×1 over an (h, w, c) map.
+            let (h, wd) = (g.usize_in(1, 8), g.usize_in(1, 8));
+            let aqw = random_affine_weights(g, c, f);
+            let (zp_in, zp_out) = (g.i32_in(-128, 127), g.i32_in(-128, 127));
+            let ax: Vec<i32> = (0..h * wd * c).map(|_| g.i32_in(-128, 127)).collect();
+            let mut awant = Vec::new();
+            affine_exec::conv_affine_ref(
+                &ax, &[h, wd, c], &[1, 1, c, f], &aqw, zp_in, zp_out, 1, Padding::Valid, relu, 2,
+                &mut awant,
+            );
+            let apn = PackedNode::affine_node(&aqw, &[1, 1], c, f, zp_in, zp_out, relu);
+            for pool in &pools {
+                let mut scratch = slabs(pool.threads());
+                let mut agot = Vec::new();
+                conv2d_int_packed(&ax, h, wd, &apn, 1, Padding::Valid, pool, &mut scratch,
+                    &mut agot);
+                prop_assert!(awant == agot, "1x1 affine fast path diverged");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f32_packed_bit_identical_to_per_call_gemm_lowering() {
+        // The f32 fused kernel preserves the per-call path's per-element
+        // operation sequence exactly (only B's storage layout changed),
+        // so packed results equal the PR-3/4 lowering BIT-FOR-BIT — which
+        // keeps float sessions inside the existing 1e-4 fused-reorder
+        // budget vs the naive reference by transitivity.
+        let pools = [IntraOpPool::serial(), IntraOpPool::new(4)];
+        property(40, |g| {
+            let k = g.usize_in(1, 5);
+            let c = g.usize_in(1, 6);
+            let f = g.usize_in(1, 10);
+            let s = g.usize_in(k, 40);
+            let stride = g.usize_in(1, 2);
+            let relu = g.bool();
+            let padding = *g.pick(&[Padding::Same, Padding::Valid]);
+            let w: Vec<f32> = g.vec_normal(k * c * f, 0.5);
+            let b: Vec<f32> = g.vec_normal(f, 0.1);
+            let x: Vec<f32> = g.vec_normal(s * c, 1.0);
+            let serial = IntraOpPool::serial();
+            let mut scratch1 = vec![Vec::new()];
+            let mut want = Vec::new();
+            gemm::conv1d_gemm(
+                &x, s, c, &w, k, f, &b, stride, padding, relu, &serial, &mut scratch1, &mut want,
+            );
+            // Tiny shapes route the per-call entry to the reference
+            // kernel, so bit-equality is asserted only when the per-call
+            // entry took the blocked path; otherwise ULP-bounded.
+            let pn = PackedNode::f32_node(&w, &b, &[k], k * c, f, relu);
+            for pool in &pools {
+                let mut scratch = vec![Vec::new(); pool.threads()];
+                let mut got = Vec::new();
+                conv1d_f32_packed(&x, s, &pn, stride, padding, pool, &mut scratch, &mut got);
+                let m: usize = got.len() / f;
+                if m * f * k * c >= gemm::GEMM_MIN_MACCS {
+                    prop_assert!(
+                        want == got,
+                        "f32 packed != per-call gemm bits (t={})",
+                        pool.threads()
+                    );
+                } else {
+                    // Reference fallback on the per-call side: ULP check.
+                    for (idx, (&a, &bv)) in want.iter().zip(&got).enumerate() {
+                        let tol = 1e-4f32.max(a.abs() * 1e-4);
+                        prop_assert!((a - bv).abs() <= tol, "f32 packed off at {idx}: {a} vs {bv}");
+                    }
+                }
+            }
+
+            // Dense: same contract.
+            let i = g.usize_in(1, 64);
+            let o = g.usize_in(1, 24);
+            let dw: Vec<f32> = g.vec_normal(i * o, 0.5);
+            let db: Vec<f32> = g.vec_normal(o, 0.1);
+            let dx: Vec<f32> = g.vec_normal(i, 1.0);
+            let mut dwant = Vec::new();
+            gemm::dense_gemm(&dx, &dw, &db, o, relu, &serial, &mut dwant);
+            let dpn = PackedNode::f32_node(&dw, &db, &[], i, o, relu);
+            let mut dgot = Vec::new();
+            dense_f32_packed(&dx, &dpn, &serial, &mut dgot);
+            if i * o >= gemm::GEMM_MIN_MACCS {
+                prop_assert!(dwant == dgot, "f32 dense packed != per-call gemm bits");
+            } else {
+                for (idx, (&a, &bv)) in dwant.iter().zip(&dgot).enumerate() {
+                    let tol = 1e-4f32.max(a.abs() * 1e-4);
+                    prop_assert!((a - bv).abs() <= tol, "f32 dense off at {idx}: {a} vs {bv}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn builders_cover_every_weighted_node_and_match_allocator_accounting() {
+        use crate::graph::build::resnet_v1_6_shapes;
+        use crate::graph::deploy_pipeline;
+        use crate::nn::float_exec::ActStats;
+        use crate::quant::{quantize, quantize_affine, QuantSpec};
+        use crate::util::prng::Pcg32;
+
+        let mut g = resnet_v1_6_shapes("p", 1, &[64, 6], 5, 8);
+        let mut rng = Pcg32::seeded(7);
+        for n in g.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+        }
+        let g = deploy_pipeline(&g);
+        let mut stats = ActStats::new(g.nodes.len());
+        for _ in 0..3 {
+            let x: Vec<f32> = (0..64 * 6).map(|_| rng.normal()).collect();
+            crate::nn::float_exec::run(&g, &x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let aq = quantize_affine(&g, &stats);
+
+        let want_elems = packed_b_elems(&g);
+        for pw in [
+            PackedWeights::for_float(&g),
+            PackedWeights::for_fixed(&qg),
+            PackedWeights::for_affine(&aq),
+        ] {
+            assert!(!pw.is_empty());
+            assert_eq!(pw.panel_elems(), want_elems, "builder/allocator accounting mismatch");
+            assert!(pw.host_bytes() > 0);
+            for n in &g.nodes {
+                let weighted =
+                    matches!(n.kind, LayerKind::Conv { .. } | LayerKind::Dense { .. });
+                assert_eq!(pw.get(n.id).is_some(), weighted, "node {}", n.name);
+            }
+        }
+        // Empty arena: no nodes, no bytes.
+        let empty = PackedWeights::empty(g.nodes.len());
+        assert!(empty.is_empty());
+        assert_eq!(empty.panel_elems(), 0);
+        assert_eq!(empty.host_bytes(), 0);
+    }
+}

@@ -35,6 +35,7 @@ use crate::quant::affine::AffineQuantizedGraph;
 use crate::quant::ptq::QuantizedGraph;
 
 use super::float_exec::{self, ActStats};
+use super::packed::PackedWeights;
 use super::parallel::IntraOpPool;
 use super::{affine_exec, argmax, int_exec};
 
@@ -64,7 +65,10 @@ pub(crate) fn pool_src<'a, T>(
 }
 
 /// Compile-once execution plan: the §5.7 buffer assignment plus the shape
-/// facts the pooled executors need per run.
+/// facts the pooled executors need per run, plus the build-time prepacked
+/// weight arena (`nn::packed`) — NR-tiled B panels + fused-epilogue
+/// parameters, shared READ-ONLY behind an `Arc` so [`Session::fork`]
+/// aliases one allocation instead of re-packing or copying.
 #[derive(Clone, Debug)]
 pub struct Plan {
     pub alloc: Allocation,
@@ -74,6 +78,10 @@ pub struct Plan {
     /// Bytes per activation element at the DEVICE dtype (1/2/4); the host
     /// arena always stores i32/f32 lanes.
     pub device_bytes_per_elem: usize,
+    /// Prepacked conv/dense weights, built once by
+    /// [`InferenceBackend::pack_weights`]. Empty (per-call fallback) for
+    /// backends without a packer.
+    pub packed: Arc<PackedWeights>,
 }
 
 impl Plan {
@@ -82,7 +90,14 @@ impl Plan {
         let node_elems = node_elems(graph);
         let input_len = graph.input_shape.iter().product();
         let output_len = node_elems[graph.output_id()];
-        Plan { alloc, node_elems, input_len, output_len, device_bytes_per_elem }
+        Plan {
+            alloc,
+            node_elems,
+            input_len,
+            output_len,
+            device_bytes_per_elem,
+            packed: Arc::new(PackedWeights::empty(graph.nodes.len())),
+        }
     }
 
     /// Predicted device activation RAM: allocator pools + the input
@@ -209,9 +224,21 @@ pub trait InferenceBackend: Send + Sync {
     /// ROM weight bytes at the deployment dtype.
     fn weight_bytes(&self) -> usize;
 
-    /// Compile-once step: §5.7 lifetime analysis → buffer plan.
+    /// Build-time weight pre-packing: transform every conv/dense node's
+    /// weights into NR-tiled B panels with fused-epilogue parameters
+    /// (`nn::packed`), paid once per plan instead of per call. The
+    /// default (no packing) keeps the per-call GEMM lowering — custom
+    /// backends opt in by overriding.
+    fn pack_weights(&self) -> PackedWeights {
+        PackedWeights::empty(self.graph().nodes.len())
+    }
+
+    /// Compile-once step: §5.7 lifetime analysis → buffer plan, plus the
+    /// one-time weight packing.
     fn prepare(&self) -> Plan {
-        Plan::for_graph(self.graph(), self.dtype().bytes())
+        let mut plan = Plan::for_graph(self.graph(), self.dtype().bytes());
+        plan.packed = Arc::new(self.pack_weights());
+        plan
     }
 
     /// Preallocate an activation arena for `plan`, with one GEMM scratch
@@ -271,10 +298,14 @@ impl InferenceBackend for Float32Backend {
         Arena::preallocated(plan, true, threads)
     }
 
+    fn pack_weights(&self) -> PackedWeights {
+        PackedWeights::for_float(&self.graph)
+    }
+
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         float_exec::run_pooled(
             &self.graph, input, &plan.alloc, &plan.node_elems,
-            &mut arena.f32_pools, &arena.pool, &mut arena.scratch_f32, None,
+            &mut arena.f32_pools, &arena.pool, &mut arena.scratch_f32, &plan.packed, None,
             &mut arena.output,
         );
         &arena.output
@@ -289,8 +320,8 @@ impl InferenceBackend for Float32Backend {
     ) -> bool {
         float_exec::run_pooled(
             &self.graph, input, &plan.alloc, &plan.node_elems,
-            &mut arena.f32_pools, &arena.pool, &mut arena.scratch_f32, Some(stats),
-            &mut arena.output,
+            &mut arena.f32_pools, &arena.pool, &mut arena.scratch_f32, &plan.packed,
+            Some(stats), &mut arena.output,
         );
         true
     }
@@ -327,11 +358,15 @@ impl InferenceBackend for FixedQmnBackend {
         Arena::preallocated(plan, false, threads)
     }
 
+    fn pack_weights(&self) -> PackedWeights {
+        PackedWeights::for_fixed(&self.qg)
+    }
+
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         int_exec::run_pooled(
             &self.qg, input, &plan.alloc, &plan.node_elems,
             &mut arena.qinput, &mut arena.i32_pools, &arena.pool,
-            &mut arena.scratch_i32, &mut arena.output,
+            &mut arena.scratch_i32, &plan.packed, &mut arena.output,
         );
         &arena.output
     }
@@ -369,11 +404,15 @@ impl InferenceBackend for AffineI8Backend {
         Arena::preallocated(plan, false, threads)
     }
 
+    fn pack_weights(&self) -> PackedWeights {
+        PackedWeights::for_affine(&self.aq)
+    }
+
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         affine_exec::run_pooled(
             &self.aq, input, &plan.alloc, &plan.node_elems,
             &mut arena.qinput, &mut arena.i32_pools, &arena.pool,
-            &mut arena.scratch_i32, &mut arena.output,
+            &mut arena.scratch_i32, &plan.packed, &mut arena.output,
         );
         &arena.output
     }
@@ -399,6 +438,11 @@ pub struct SessionMeta {
     pub n_pools: usize,
     /// Host bytes preallocated in this session's arena.
     pub arena_bytes: usize,
+    /// Host bytes of the plan's prepacked weight arena (`nn::packed`):
+    /// NR-tiled B panels + epilogue copies, built once and ALIASED by
+    /// every fork (not per-session memory). Host-only — device RAM/ROM
+    /// pricing is untouched.
+    pub packed_weight_bytes: usize,
     /// Intra-op thread budget (host-side GEMM parallelism; 1 = serial).
     /// Forked sessions inherit it unless re-threaded via
     /// [`Session::fork_with_threads`].
@@ -483,6 +527,7 @@ impl SessionBuilder {
             device_ram_bytes: plan.device_ram_bytes(),
             n_pools: plan.alloc.n_pools(),
             arena_bytes: arena.host_bytes(),
+            packed_weight_bytes: plan.packed.host_bytes(),
             intra_op_threads: self.threads,
         };
         Session { backend: self.backend, plan, arena, meta, runs: 0 }
@@ -593,9 +638,12 @@ impl Session {
 
     /// A new session sharing this one's backend (and therefore weights)
     /// and plan, with a freshly preallocated arena — one per worker
-    /// thread. The §5.7 lifetime analysis is not recomputed. The intra-op
-    /// thread budget is inherited (each fork gets its OWN worker pool —
-    /// pools are never shared across sessions).
+    /// thread. The §5.7 lifetime analysis is not recomputed and the
+    /// prepacked weight arena is ALIASED (`Arc` clone, read-only), never
+    /// re-packed or copied — N serving workers share one `PackedWeights`
+    /// allocation. The intra-op thread budget is inherited (each fork
+    /// gets its OWN worker pool — pools are never shared across
+    /// sessions).
     pub fn fork(&self) -> Session {
         self.fork_with_threads(self.meta.intra_op_threads)
     }
@@ -677,12 +725,21 @@ mod tests {
 
     #[test]
     fn float_session_matches_legacy_run() {
+        // Sessions run the prepacked fused path on EVERY conv/dense
+        // (including shapes the per-call lowering routes to the naive
+        // reference), so float logits agree with the legacy free
+        // function within the established 1e-4 fused-reorder budget, not
+        // bit-for-bit. Integer sessions stay bit-exact — see
+        // `qmn_session_matches_legacy_run` below.
         let g = randomized_graph(1);
         let mut sess = SessionBuilder::float32(g.clone()).build();
         for x in inputs(5, 96, 2) {
             let legacy = float_exec::run(&g, &x, None);
             let s = sess.run(&x).to_vec();
-            assert_eq!(legacy, s);
+            assert_eq!(legacy.len(), s.len());
+            for (a, b) in legacy.iter().zip(&s) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
         }
         assert_eq!(sess.runs(), 5);
     }
@@ -815,9 +872,15 @@ mod tests {
         for x in &xs {
             assert!(sess.calibrate(x, &mut via_sess));
         }
-        assert_eq!(legacy.max_abs, via_sess.max_abs);
-        assert_eq!(legacy.min, via_sess.min);
-        assert_eq!(legacy.max, via_sess.max);
+        // Prepacked sessions run the blocked kernel on every shape while
+        // the legacy path falls back to the reference on tiny layers, so
+        // recorded ranges agree within the f32 fused-reorder budget.
+        let close = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-4)
+        };
+        assert!(close(&legacy.max_abs, &via_sess.max_abs));
+        assert!(close(&legacy.min, &via_sess.min));
+        assert!(close(&legacy.max, &via_sess.max));
     }
 
     #[test]
@@ -895,5 +958,143 @@ mod tests {
         let rb = b.run(&xs[0]).to_vec();
         assert_eq!(ra, rb);
         assert_ne!(a.arena().buffer_ptrs(), b.arena().buffer_ptrs());
+    }
+
+    #[test]
+    fn fork_aliases_one_packed_weights_arena() {
+        // The prepacked weight arena is read-only plan state: every fork
+        // must point at the SAME allocation (Arc alias), never re-pack.
+        let g = randomized_graph(27);
+        let xs = inputs(4, 96, 28);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let root = SessionBuilder::fixed_qmn(qg).threads(2).build();
+        assert!(root.meta().packed_weight_bytes > 0);
+        assert!(!root.plan().packed.is_empty());
+        let forks = [root.fork(), root.fork_with_threads(4)];
+        for f in &forks {
+            assert!(
+                Arc::ptr_eq(&root.plan().packed, &f.plan().packed),
+                "fork re-packed or copied the weight arena"
+            );
+            assert_eq!(f.meta().packed_weight_bytes, root.meta().packed_weight_bytes);
+        }
+        // Affine and float plans carry packed weights too.
+        let aq = quantize_affine(&g, &stats);
+        let sa = SessionBuilder::affine_i8(aq).build();
+        assert!(sa.meta().packed_weight_bytes > 0);
+        let sf = SessionBuilder::float32(g.clone()).build();
+        assert!(sf.meta().packed_weight_bytes > 0);
+    }
+
+    #[test]
+    fn outputs_independent_of_graph_weight_storage_after_packing() {
+        // The acceptance property of the prepacked pipeline: once the
+        // packed arena is built, NO per-inference code path reads (or
+        // zero-point-adjusts) graph weight storage. Mutating every
+        // weight payload, bias, shift and requant parameter after the
+        // pack must leave outputs bit-identical.
+        let g = randomized_graph(29);
+        let xs = inputs(3, 96, 30);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+
+        // Fixed-point executor.
+        let mut qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let alloc = crate::allocator::allocate(&qg.graph);
+        let ne = node_elems(&qg.graph);
+        let pool = IntraOpPool::serial();
+        let packed = PackedWeights::for_fixed(&qg);
+        let run_fixed = |qg: &QuantizedGraph, x: &[f32]| {
+            let mut pools: Vec<Vec<i32>> = vec![Vec::new(); alloc.n_pools()];
+            let (mut qin, mut scratch, mut out) = (Vec::new(), vec![Vec::new()], Vec::new());
+            int_exec::run_pooled(
+                qg, x, &alloc, &ne, &mut qin, &mut pools, &pool, &mut scratch, &packed,
+                &mut out,
+            );
+            out
+        };
+        let before: Vec<Vec<f32>> = xs.iter().map(|x| run_fixed(&qg, x)).collect();
+        for qw in qg.weights.values_mut() {
+            for v in qw.w.iter_mut() {
+                *v = v.wrapping_mul(3).wrapping_add(11);
+            }
+            for b in qw.b_acc.iter_mut() {
+                *b = b.wrapping_add(987_654);
+            }
+            for s in qw.shift.iter_mut() {
+                *s = (*s + 3) % 15;
+            }
+        }
+        for (x, want) in xs.iter().zip(&before) {
+            assert_eq!(&run_fixed(&qg, x), want, "fixed executor read mutated weight storage");
+        }
+
+        // Affine executor (incl. the build-time zero-point fold).
+        let mut aq = quantize_affine(&g, &stats);
+        let a_alloc = crate::allocator::allocate(&aq.graph);
+        let a_ne = node_elems(&aq.graph);
+        let a_packed = PackedWeights::for_affine(&aq);
+        let run_affine = |aq: &crate::quant::affine::AffineQuantizedGraph, x: &[f32]| {
+            let mut pools: Vec<Vec<i32>> = vec![Vec::new(); a_alloc.n_pools()];
+            let (mut qin, mut scratch, mut out) = (Vec::new(), vec![Vec::new()], Vec::new());
+            affine_exec::run_pooled(
+                aq, x, &a_alloc, &a_ne, &mut qin, &mut pools, &pool, &mut scratch, &a_packed,
+                &mut out,
+            );
+            out
+        };
+        let a_before: Vec<Vec<f32>> = xs.iter().map(|x| run_affine(&aq, x)).collect();
+        for qw in aq.weights.values_mut() {
+            for v in qw.w.iter_mut() {
+                *v = v.wrapping_mul(5).wrapping_sub(7);
+            }
+            for b in qw.b.iter_mut() {
+                *b = b.wrapping_add(13_579);
+            }
+            for m in qw.mult.iter_mut() {
+                *m = m.wrapping_add(101);
+            }
+            for s in qw.shift.iter_mut() {
+                *s += 1;
+            }
+        }
+        for (x, want) in xs.iter().zip(&a_before) {
+            assert_eq!(&run_affine(&aq, x), want, "affine executor read mutated weight storage");
+        }
+
+        // Float executor.
+        let mut gf = g.clone();
+        let f_alloc = crate::allocator::allocate(&gf);
+        let f_ne = node_elems(&gf);
+        let f_packed = PackedWeights::for_float(&gf);
+        let run_float = |gf: &Graph, x: &[f32]| {
+            let mut pools: Vec<Vec<f32>> = vec![Vec::new(); f_alloc.n_pools()];
+            let (mut scratch, mut out) = (vec![Vec::new()], Vec::new());
+            float_exec::run_pooled(
+                gf, x, &f_alloc, &f_ne, &mut pools, &pool, &mut scratch, &f_packed, None,
+                &mut out,
+            );
+            out
+        };
+        let f_before: Vec<Vec<f32>> = xs.iter().map(|x| run_float(&gf, x)).collect();
+        for n in gf.nodes.iter_mut() {
+            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+                for v in w.data.iter_mut() {
+                    *v = *v * -2.0 + 1.0;
+                }
+                for v in b.data.iter_mut() {
+                    *v += 42.0;
+                }
+            }
+        }
+        for (x, want) in xs.iter().zip(&f_before) {
+            assert_eq!(&run_float(&gf, x), want, "float executor read mutated weight storage");
+        }
     }
 }

@@ -119,11 +119,18 @@ fn cross_backend_agreement_gtsrb_conv2d_topology() {
         agree8 += (argmax(s_8.run(x)) == reference) as usize;
         agree_aff += (argmax(s_aff.run(x)) == reference) as usize;
 
-        // Sessions and legacy free functions share the same GEMM kernels:
-        // bit-for-bit, 2-D included.
+        // Sessions and legacy free functions agree: bit-for-bit for the
+        // integer engines (the prepacked and per-call paths are both
+        // pinned bit-exact vs the refs), 2-D included; float within the
+        // 1e-4 fused-reorder budget (sessions run the prepacked blocked
+        // kernel on every shape, the legacy path falls back to the
+        // reference on tiny layers).
         assert_eq!(microai::nn::int_exec::run(&q16, x), s_16.run(x).to_vec());
         assert_eq!(microai::nn::affine_exec::run(&aq, x), s_aff.run(x).to_vec());
-        assert_eq!(microai::nn::float_exec::run(&g, x, None), s_float.run(x).to_vec());
+        let legacy_f = microai::nn::float_exec::run(&g, x, None);
+        for (a, b) in legacy_f.iter().zip(s_float.run(x)) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
     // 43 random-weight classes sit near argmax ties, so the statistical
     // thresholds are deliberately loose — the bit-exactness asserts above
@@ -211,7 +218,12 @@ fn odd_length_har_window_keeps_remainder() {
 }
 
 #[test]
-fn sessions_match_legacy_free_functions_bit_for_bit() {
+fn sessions_match_legacy_free_functions() {
+    // Integer engines: bit-for-bit (prepacked and per-call paths are
+    // both property-pinned bit-exact against the reference kernels).
+    // Float: within the 1e-4 fused-reorder budget — the prepacked
+    // session runs the blocked kernel on every shape while the legacy
+    // per-call path falls back to the naive reference on tiny layers.
     let g = fixture_graph(1, &[32, 3], 4, 8, 5);
     let inputs = fixture_inputs(6, 96, 6);
     let stats = calibrate(&g, &inputs);
@@ -222,10 +234,50 @@ fn sessions_match_legacy_free_functions_bit_for_bit() {
     let mut s_8 = SessionBuilder::fixed_qmn(q8.clone()).build();
     let mut s_aff = SessionBuilder::affine_i8(aq.clone()).build();
     for x in &inputs {
-        assert_eq!(microai::nn::float_exec::run(&g, x, None), s_float.run(x).to_vec());
+        let legacy_f = microai::nn::float_exec::run(&g, x, None);
+        for (a, b) in legacy_f.iter().zip(s_float.run(x)) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
         assert_eq!(microai::nn::int_exec::run(&q8, x), s_8.run(x).to_vec());
         assert_eq!(microai::nn::affine_exec::run(&aq, x), s_aff.run(x).to_vec());
     }
+}
+
+#[test]
+fn forked_sessions_alias_one_packed_weights_arena_with_stable_buffers() {
+    // ISSUE 5 satellite: (a) every fork shares ONE prepacked weight
+    // allocation (Arc pointer equality — weights are packed once at
+    // build, never per fork, never per request), and (b) a forked
+    // threads=4 session's arena buffers (incl. every per-thread scratch
+    // slab) stay put across repeated runs.
+    let g = fixture_graph(2, &[32, 32, 3], 43, 8, 61);
+    let inputs = fixture_inputs(4, 32 * 32 * 3, 62);
+    let stats = calibrate(&g, &inputs);
+    let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+
+    let root = SessionBuilder::fixed_qmn(q8).build();
+    assert!(root.meta().packed_weight_bytes > 0, "fixed backend must prepack");
+    let mut w1 = root.fork_with_threads(4);
+    let mut w2 = root.fork_with_threads(4);
+    assert!(
+        Arc::ptr_eq(&root.plan().packed, &w1.plan().packed)
+            && Arc::ptr_eq(&root.plan().packed, &w2.plan().packed),
+        "forks must alias the template's PackedWeights allocation"
+    );
+
+    // Forked workers produce identical bits (shared packed weights) from
+    // distinct arenas whose buffers never move across requests.
+    w1.run(&inputs[0]);
+    w2.run(&inputs[0]);
+    let (p1, p2) = (w1.arena().buffer_ptrs(), w2.arena().buffer_ptrs());
+    assert_ne!(p1, p2, "forks must not share activation arenas");
+    for x in &inputs {
+        for _ in 0..2 {
+            assert_eq!(w1.run(x).to_vec(), w2.run(x).to_vec());
+        }
+    }
+    assert_eq!(p1, w1.arena().buffer_ptrs(), "fork 1 arena reallocated");
+    assert_eq!(p2, w2.arena().buffer_ptrs(), "fork 2 arena reallocated");
 }
 
 #[test]
