@@ -531,6 +531,80 @@ fn race_affine(
     });
 }
 
+/// Race the fused packed attention (two batched GEMMs + LUT softmax,
+/// ISSUE 6) against the naive integer reference on the transformer GEMM
+/// shapes. The packed path IS the prepacked arm here — there is no
+/// per-call-packing middle path for attention — so `gemm_ns` and
+/// `prepack_ns` both record it and the row rides the same
+/// `speedup >= 1.0 - tolerance` gate as the conv/dense races.
+fn race_attention(ctx: &RaceCtx, rows: &mut Vec<RaceRow>, rng: &mut Pcg32) {
+    use microai::quant::ptq::{QNodeWeights, QTxWeights};
+    // (seq, heads, head_dim) — square d_model projection GEMMs (m=seq,
+    // n=k=d_model) plus the per-head seq×seq score GEMMs behind them.
+    let shapes = [(64usize, 8usize, 8usize), (32, 4, 16), (48, 6, 8)];
+    for &(seq, heads, hd) in &shapes {
+        let dm = heads * hd;
+        for width in [8u32, 16] {
+            let backend: &'static str = if width == 8 { "int8" } else { "int16" };
+            let proj = |rng: &mut Pcg32| QNodeWeights {
+                w: rand_payloads(rng, dm * dm, width),
+                w_n: vec![width as i32 - 1],
+                b_acc: (0..dm).map(|_| rng.below(1 << 12) as i64 - (1 << 11)).collect(),
+                shift: vec![width as i32 - 1],
+            };
+            let tx = QTxWeights::Attn {
+                wq: proj(rng),
+                wk: proj(rng),
+                wv: proj(rng),
+                wo: proj(rng),
+                n_q: 6,
+                n_k: 6,
+                n_v: 6,
+                n_s: 6,
+                n_p: width as i32 - 1,
+                n_ctx: 6,
+                inv_sqrt_hd_q15: ((1 << 15) as f64 / (hd as f64).sqrt()).round() as i32,
+            };
+            let x = rand_payloads(rng, seq * dm, width);
+            let mut out = Vec::new();
+            let name = format!("attn_s{seq}h{heads}d{hd}");
+            let r_ref = ctx.b.run(&format!("{backend:<5} ref  transformer/{name}"), || {
+                black_box(int_ops::attention_q_ref(
+                    &x, seq, dm, heads, hd, &tx, width, &mut out,
+                ));
+            });
+            let pa = packed::PackedAttention::fixed(&tx, heads, hd, width);
+            let mut scratch: Vec<Vec<i32>> = vec![Vec::new(); ctx.threads.max(1)];
+            let mut arm = |pool: &IntraOpPool, label: String| {
+                ctx.b
+                    .run(&label, || {
+                        black_box(packed::attention_int_packed(
+                            &x, seq, dm, heads, hd, &pa, pool, &mut scratch, &mut out,
+                        ));
+                    })
+                    .median_ns
+            };
+            let par = arm(ctx.pool, format!("{backend:<5} pack transformer/{name}"));
+            let one = (ctx.threads > 1)
+                .then(|| arm(ctx.serial, format!("{backend:<5} p@1t transformer/{name}")));
+            rows.push(RaceRow {
+                model: "transformer".to_string(),
+                layer: name,
+                kind: "attention",
+                backend,
+                threads: ctx.threads,
+                m: seq as u64,
+                n: dm as u64,
+                k: dm as u64,
+                ref_ns: r_ref.median_ns,
+                gemm_ns: par,
+                prepack_ns: par,
+                gemm_1t_ns: one,
+            });
+        }
+    }
+}
+
 /// Distinct-shape weighted nodes of a deployed graph (duplicate residual
 /// block convs share one race).
 fn distinct_weighted_nodes(g: &Graph) -> Vec<usize> {
@@ -792,6 +866,22 @@ fn main() {
             black_box(sa.run(&x));
         });
         record("affine-int8", r);
+    }
+
+    // ISSUE 6: transformer attention shapes under the same speedup gate.
+    print_header(&format!("kernel race attention packed vs *_ref (threads={threads})"));
+    race_attention(&ctx, &mut race_rows, &mut rng);
+    for row in race_rows.iter().filter(|r| r.kind == "attention") {
+        let par = row
+            .parallel_speedup()
+            .map(|p| format!("  par {p:>4.2}x"))
+            .unwrap_or_default();
+        println!(
+            "{:<28} {:<6} {:<7} seq={:<4} dm={:<4} ref {:>10.0} ns  packed {:>10.0} ns  \
+             {:>5.2}x{par}",
+            row.layer, row.kind, row.backend, row.m, row.n, row.ref_ns, row.gemm_ns,
+            row.speedup()
+        );
     }
 
     if !smoke {

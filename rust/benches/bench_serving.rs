@@ -55,6 +55,71 @@ fn requests(n: usize, seed: u64) -> Vec<Request> {
         .collect()
 }
 
+/// Quantized transformer for the second-model-family cascade (ISSUE 6):
+/// same seq/vocab for both tiers so a little 1-block model can escalate
+/// to a big 2-block one.
+fn tiny_tx_qgraph(blocks: usize, seed: u64) -> Arc<QuantizedGraph> {
+    const VOCAB: u32 = 16;
+    let mut g = microai::graph::build::transformer("tx", 12, VOCAB as usize, 16, 2, blocks, 2, 4);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        match &mut n.kind {
+            LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+            LayerKind::Embedding { w } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.5;
+                }
+            }
+            LayerKind::LayerNorm { gamma, beta, .. } => {
+                for v in gamma.iter_mut() {
+                    *v = 1.0 + rng.normal() * 0.2;
+                }
+                for v in beta.iter_mut() {
+                    *v = rng.normal() * 0.1;
+                }
+            }
+            LayerKind::SelfAttention { w, .. } => {
+                for t in [&mut w.wq, &mut w.wk, &mut w.wv, &mut w.wo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.3;
+                    }
+                }
+                for t in [&mut w.bq, &mut w.bk, &mut w.bv, &mut w.bo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.05;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let g = deploy_pipeline(&g);
+    let mut stats = ActStats::new(g.nodes.len());
+    let mut rng = Pcg32::seeded(seed + 9);
+    for _ in 0..6 {
+        let x: Vec<f32> = (0..12).map(|_| rng.below(VOCAB) as f32).collect();
+        float_exec::run(&g, &x, Some(&mut stats));
+    }
+    Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()))
+}
+
+fn token_requests(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|id| Request {
+            id: id as u64,
+            input: (0..12).map(|_| rng.below(16) as f32).collect(),
+        })
+        .collect()
+}
+
 fn main() {
     let mut smoke = std::env::var("MICROAI_BENCH_SMOKE").is_ok();
     let mut out_path = String::from("BENCH_serving.json");
@@ -135,6 +200,38 @@ fn main() {
         ]));
     }
 
+    // ISSUE 6: the transformer family through the same cascade — a
+    // 1-block little model escalating to a 2-block big one on token-id
+    // requests. Runs in --smoke so CI exercises the fused attention /
+    // layernorm / softmax session path end to end.
+    print_header(&format!("transformer cascade ({n_requests} token requests, threshold 0.8)"));
+    let tx_little = SessionBuilder::fixed_qmn(tiny_tx_qgraph(1, 21)).board(&SPARKFUN_EDGE).build();
+    let tx_big = SessionBuilder::fixed_qmn(tiny_tx_qgraph(2, 22)).board(&SPARKFUN_EDGE).build();
+    let tx_reqs = token_requests(n_requests, 23);
+    let mut tx_rows: Vec<microai::util::json::Json> = Vec::new();
+    for workers in [1usize, 4] {
+        let cfg = CascadeConfig {
+            threshold: 0.8,
+            workers,
+            seed: BENCH_SEED,
+            ..CascadeConfig::default()
+        };
+        let r = b.run_throughput(
+            &format!("transformer cascade w={workers}"),
+            n_requests as f64,
+            "req/s",
+            || {
+                let s = run_cascade_sessions(&tx_little, &tx_big, &cfg, tx_reqs.clone(), None);
+                black_box(s.responses.len());
+            },
+        );
+        println!("{}", r.report());
+        tx_rows.push(microai::util::json::Json::obj(vec![
+            ("workers", microai::util::json::Json::num(workers as f64)),
+            ("sharded_ns", microai::util::json::Json::num(r.median_ns)),
+        ]));
+    }
+
     // Queueing-model flavor: one saturated run, reported not timed. In
     // smoke mode it runs on ONE worker: with a single worker the
     // host-time request→worker assignment is trivial, so the pinned
@@ -174,6 +271,7 @@ fn main() {
         ("mode", Json::str(if smoke { "smoke" } else { "full" })),
         ("n_requests", Json::num(n_requests as f64)),
         ("scheduler_race", Json::Arr(json_rows)),
+        ("transformer_cascade", Json::Arr(tx_rows)),
         (
             "saturated",
             Json::obj(vec![

@@ -1,0 +1,166 @@
+//! Shared integer LUTs for the transformer ops: exp (softmax) and rsqrt
+//! (layernorm).
+//!
+//! Both tables are the single source of truth for every consumer — the
+//! Rust integer kernels (`nn::int_ops`, `nn::affine_exec`), their naive
+//! references, and the C emitter (which bakes the same values into
+//! `model.c` as static arrays) — so the lowering cannot drift from the
+//! reference semantics.
+//!
+//! Error bounds (documented in DESIGN.md §9):
+//! - `EXP_LUT` buckets [0, 8) into 256 cells of width 1/32 and stores the
+//!   midpoint exp(−u) in Q0.15; the worst-case relative error of one
+//!   lookup is ≤ 1/64 (half a bucket times |d exp(−u)/du| / exp(−u) = 1)
+//!   plus Q0.15 rounding. Distances ≥ 8 underflow to 0 (exp(−8) < 2^−11).
+//! - `RSQRT_LUT` buckets the normalized mantissa m ∈ [1, 2) into 64 cells
+//!   and stores the midpoint 1/sqrt(m) in Q2.30; worst-case relative
+//!   error ≤ 1/256 (half a bucket times 1/2, the rsqrt log-derivative).
+
+use std::sync::OnceLock;
+
+use super::ops::rescale;
+
+/// Entries of the exp table (bucket count over the [0, 8) distance range).
+pub const EXP_LUT_SIZE: usize = 256;
+/// Buckets per unit distance: 256 / 8 = 32 = 2^5.
+pub const EXP_IDX_SHIFT: i32 = 5;
+/// exp outputs are Q0.15 (so a full softmax row sums ≲ seq · 2^15 in i64).
+pub const EXP_FRAC_BITS: i32 = 15;
+
+/// Entries of the rsqrt mantissa table (m ∈ [1, 2) in 64 buckets).
+pub const RSQRT_LUT_SIZE: usize = 64;
+/// rsqrt outputs are Q2.30.
+pub const RSQRT_FRAC_BITS: i32 = 30;
+/// round(2^30 / sqrt(2)) — folds the odd-exponent half-shift.
+pub const INV_SQRT2_Q30: i64 = 759_250_125;
+
+/// exp(−(j + 0.5) / 32) in Q0.15 for bucket j.
+pub fn exp_lut() -> &'static [i32; EXP_LUT_SIZE] {
+    static LUT: OnceLock<[i32; EXP_LUT_SIZE]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0i32; EXP_LUT_SIZE];
+        for (j, e) in t.iter_mut().enumerate() {
+            let u = (j as f64 + 0.5) / 32.0;
+            *e = ((-u).exp() * f64::from(1 << EXP_FRAC_BITS)).round() as i32;
+        }
+        t
+    })
+}
+
+/// 1/sqrt((64 + idx + 0.5) / 64) in Q2.30 for mantissa bucket idx.
+pub fn rsqrt_lut() -> &'static [i32; RSQRT_LUT_SIZE] {
+    static LUT: OnceLock<[i32; RSQRT_LUT_SIZE]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0i32; RSQRT_LUT_SIZE];
+        for (idx, r) in t.iter_mut().enumerate() {
+            let m = (64.0 + idx as f64 + 0.5) / 64.0;
+            *r = (f64::from(1u32 << RSQRT_FRAC_BITS as u32) / m.sqrt()).round() as i32;
+        }
+        t
+    })
+}
+
+/// exp(−d · 2^−n) in Q0.15 for a non-negative payload distance `d` at
+/// fixed-point format n (the softmax inner lookup). Distances past the
+/// table range return 0 — the softmax max-subtraction guarantees d ≥ 0.
+#[inline]
+pub fn exp_q(d: i64, n: i32) -> i32 {
+    debug_assert!(d >= 0, "exp_q wants a max-subtracted distance");
+    let j = rescale(d << EXP_IDX_SHIFT, n);
+    if j >= EXP_LUT_SIZE as i64 {
+        0
+    } else {
+        exp_lut()[j as usize]
+    }
+}
+
+/// Normalized reciprocal square root of an integer v ≥ 1: returns
+/// (r, h) with 1/sqrt(v) ≈ r · 2^(−30 − h), r in Q2.30. The layernorm
+/// kernels call this on (var_payload + 1), so v ≥ 1 always holds.
+#[inline]
+pub fn rsqrt_norm(v: i64) -> (i64, i32) {
+    debug_assert!(v >= 1, "rsqrt_norm domain is v >= 1");
+    let e = 63 - v.leading_zeros() as i32; // floor(log2 v)
+    let idx = if e >= 6 {
+        ((v >> (e - 6)) & 63) as usize
+    } else {
+        ((v << (6 - e)) & 63) as usize
+    };
+    let r = rsqrt_lut()[idx] as i64;
+    if e & 1 == 1 {
+        ((r * INV_SQRT2_Q30) >> 30, (e - 1) / 2)
+    } else {
+        (r, e / 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::check::property;
+
+    #[test]
+    fn exp_lut_endpoints_and_monotone() {
+        let lut = exp_lut();
+        // First bucket midpoint: exp(-1/64) ≈ 0.9845 → ~32261 in Q0.15.
+        assert!((lut[0] - 32261).abs() <= 1);
+        // Strictly decreasing, positive throughout the table.
+        for j in 1..EXP_LUT_SIZE {
+            assert!(lut[j] < lut[j - 1], "exp LUT not decreasing at {j}");
+        }
+        assert!(lut[EXP_LUT_SIZE - 1] > 0);
+    }
+
+    #[test]
+    fn exp_q_tracks_float_exp_within_bucket_error() {
+        property(500, |g| {
+            let n = g.i32_in(0, 15);
+            let d = g.i32_in(0, (8i64 << n).min(1 << 24) as i32 - 1) as i64;
+            let got = exp_q(d, n) as f64 / f64::from(1 << EXP_FRAC_BITS);
+            let want = (-(d as f64) / f64::powi(2.0, n)).exp();
+            // Half-bucket + quantization slack: 1/64 relative on the value
+            // scale, floored by one Q0.15 ulp.
+            prop_assert!(
+                (got - want).abs() <= want / 32.0 + 2.0 / 32768.0,
+                "exp_q off at d={d} n={n}: got {got} want {want}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exp_q_underflows_to_zero_past_range() {
+        assert_eq!(exp_q(8 << 10, 10), 0);
+        assert_eq!(exp_q(1 << 30, 5), 0);
+    }
+
+    #[test]
+    fn rsqrt_norm_tracks_float_rsqrt() {
+        property(500, |g| {
+            let v = g.i32_in(1, i32::MAX) as i64 * (1 + g.i32_in(0, 1 << 20) as i64);
+            let (r, h) = rsqrt_norm(v);
+            let got = r as f64 * f64::powi(2.0, -30 - h);
+            let want = 1.0 / (v as f64).sqrt();
+            prop_assert!(
+                (got - want).abs() <= want / 128.0,
+                "rsqrt_norm off at v={v}: got {got} want {want}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rsqrt_norm_powers_of_two_are_near_exact() {
+        for k in 0..30 {
+            let (r, h) = rsqrt_norm(1i64 << (2 * k));
+            let got = r as f64 * f64::powi(2.0, -30 - h);
+            let want = f64::powi(2.0, -(k as i32));
+            assert!(
+                (got - want).abs() <= want / 128.0,
+                "v=2^{}: got {got} want {want}",
+                2 * k
+            );
+        }
+    }
+}

@@ -14,6 +14,7 @@
 //! The scale-factor rule (Eqs 1–4) lives in [`QFormat`]; it is pinned to the
 //! same vectors as `python/compile/kernels/quant_math.py`.
 
+pub mod lut;
 pub mod ops;
 pub mod qformat;
 

@@ -139,6 +139,82 @@ pub fn cnn(
     g
 }
 
+/// Tiny encoder-style transformer classifier — the second model family
+/// (ISSUE 6): token ids (seq, 1) → Embedding → `blocks` × [pre-LN
+/// self-attention + residual, pre-LN 1×1-conv FFN + residual] →
+/// GlobalAvgPool → Dense → Softmax. The softmax head is an inference-time
+/// op here (probability output), so the graph opts out of
+/// RemoveKerasSoftmax. Weights are zero; randomize for tests as usual.
+///
+/// Sized for MCU deployment: keep `d_model` ≤ 64 and `seq` ≤ 64.
+pub fn transformer(
+    name: &str,
+    seq: usize,
+    vocab: usize,
+    d_model: usize,
+    heads: usize,
+    blocks: usize,
+    ffn_mult: usize,
+    classes: usize,
+) -> Graph {
+    assert!(d_model % heads == 0, "heads must divide d_model");
+    assert!(d_model <= 64 && seq <= 64, "MCU envelope: d_model/seq <= 64");
+    let head_dim = d_model / heads;
+    let ffn = d_model * ffn_mult;
+    let attn_w = || {
+        Box::new(super::ir::AttnWeights {
+            wq: Tensor::zeros(&[d_model, d_model]),
+            bq: Tensor::zeros(&[d_model]),
+            wk: Tensor::zeros(&[d_model, d_model]),
+            bk: Tensor::zeros(&[d_model]),
+            wv: Tensor::zeros(&[d_model, d_model]),
+            bv: Tensor::zeros(&[d_model]),
+            wo: Tensor::zeros(&[d_model, d_model]),
+            bo: Tensor::zeros(&[d_model]),
+        })
+    };
+    let ln = |c: usize| LayerKind::LayerNorm {
+        gamma: vec![1.0; c],
+        beta: vec![0.0; c],
+        eps: 1e-5,
+    };
+
+    let mut g = Graph::new(name, 1, &[seq, 1], classes);
+    g.strip_softmax = false;
+    let mut prev = g.add("embed", LayerKind::Embedding { w: Tensor::zeros(&[vocab, d_model]) }, vec![0]);
+    for bi in 0..blocks {
+        let n1 = g.add(&format!("b{bi}ln1"), ln(d_model), vec![prev]);
+        let at = g.add(
+            &format!("b{bi}attn"),
+            LayerKind::SelfAttention { heads, head_dim, w: attn_w() },
+            vec![n1],
+        );
+        let a1 = g.add(&format!("b{bi}add1"), LayerKind::Add, vec![prev, at]);
+        let n2 = g.add(&format!("b{bi}ln2"), ln(d_model), vec![a1]);
+        // Position-wise FFN as two 1x1 convs (the GEMM core's native form).
+        let up = g.add(
+            &format!("b{bi}ffn1"),
+            conv(Tensor::zeros(&[1, d_model, ffn]), Tensor::zeros(&[ffn]), 1),
+            vec![n2],
+        );
+        let ur = g.add(&format!("b{bi}ffnrelu"), LayerKind::ReLU, vec![up]);
+        let dn = g.add(
+            &format!("b{bi}ffn2"),
+            conv(Tensor::zeros(&[1, ffn, d_model]), Tensor::zeros(&[d_model]), 1),
+            vec![ur],
+        );
+        prev = g.add(&format!("b{bi}add2"), LayerKind::Add, vec![a1, dn]);
+    }
+    let gap = g.add("gap", LayerKind::GlobalAvgPool, vec![prev]);
+    let fc = g.add(
+        "fc",
+        LayerKind::Dense { w: Tensor::zeros(&[d_model, classes]), b: Tensor::zeros(&[classes]) },
+        vec![gap],
+    );
+    g.add("probs", LayerKind::Softmax, vec![fc]);
+    g
+}
+
 /// Multi-layer perceptron template (§5.4).
 pub fn mlp(name: &str, input_units: usize, hidden: &[usize], classes: usize) -> Graph {
     let mut g = Graph::new(name, 1, &[input_units, 1], classes);
@@ -208,6 +284,24 @@ mod tests {
         let m = mlp("m", 100, &[32, 16], 4);
         assert_eq!(m.nodes[m.output_id()].out_shape, vec![4]);
         assert_eq!(m.param_count(), 100 * 32 + 32 + 32 * 16 + 16 + 16 * 4 + 4);
+    }
+
+    #[test]
+    fn transformer_shapes_and_params() {
+        let g = transformer("tx", 16, 32, 24, 3, 2, 2, 5);
+        // Output is the kept softmax head over the classes.
+        let out = &g.nodes[g.output_id()];
+        assert!(matches!(out.kind, LayerKind::Softmax));
+        assert_eq!(out.out_shape, vec![5]);
+        assert!(!g.strip_softmax);
+        // Embedding output and every block output carry (seq, d_model).
+        let emb = g.nodes.iter().find(|n| n.name == "embed").unwrap();
+        assert_eq!(emb.out_shape, vec![16, 24]);
+        let a2 = g.nodes.iter().find(|n| n.name == "b1add2").unwrap();
+        assert_eq!(a2.out_shape, vec![16, 24]);
+        // Params: table + per block (2 LN + 4 attn proj + FFN pair) + head.
+        let block = 2 * 2 * 24 + 4 * (24 * 24 + 24) + (24 * 48 + 48) + (48 * 24 + 24);
+        assert_eq!(g.param_count(), 32 * 24 + 2 * block + 24 * 5 + 5);
     }
 
     #[test]

@@ -46,6 +46,34 @@ pub enum LayerKind {
     BatchNorm { mean: Vec<f32>, var: Vec<f32>, gamma: Vec<f32>, beta: Vec<f32>, eps: f32 },
     /// Flatten spatial dims (before Dense in the CNN template).
     Flatten,
+    /// Token embedding lookup: w is (vocab, d_model); the input carries
+    /// integer token ids in a (seq, 1) tensor. Lowered as a packed-row
+    /// gather — no arithmetic, so payloads quantize once at build time.
+    Embedding { w: TensorF },
+    /// Layer normalization over the channel (last) dim per position:
+    /// y = (x − mean) / sqrt(var + eps) · gamma + beta. Integer backends
+    /// lower the rsqrt through the shared Q30 LUT (`fixedpoint::lut`).
+    LayerNorm { gamma: Vec<f32>, beta: Vec<f32>, eps: f32 },
+    /// Multi-head self-attention over a (seq, d_model) input with
+    /// d_model = heads · head_dim. Lowered as two batched GEMMs per head
+    /// (Q·Kᵀ and P·V) around a numerically-stable softmax, with the four
+    /// projection weight matrices as build-time packed B panels.
+    SelfAttention { heads: usize, head_dim: usize, w: Box<AttnWeights> },
+}
+
+/// The four projection weight sets of a [`LayerKind::SelfAttention`] node.
+/// Each w is (d_model, d_model) row-major (input-major, like Dense), each
+/// b is (d_model,).
+#[derive(Clone, Debug)]
+pub struct AttnWeights {
+    pub wq: TensorF,
+    pub bq: TensorF,
+    pub wk: TensorF,
+    pub bk: TensorF,
+    pub wv: TensorF,
+    pub bv: TensorF,
+    pub wo: TensorF,
+    pub bo: TensorF,
 }
 
 impl LayerKind {
@@ -63,11 +91,21 @@ impl LayerKind {
             LayerKind::ZeroPad { .. } => "ZeroPad",
             LayerKind::BatchNorm { .. } => "BatchNorm",
             LayerKind::Flatten => "Flatten",
+            LayerKind::Embedding { .. } => "Embedding",
+            LayerKind::LayerNorm { .. } => "LayerNorm",
+            LayerKind::SelfAttention { .. } => "SelfAttention",
         }
     }
 
     pub fn has_weights(&self) -> bool {
-        matches!(self, LayerKind::Conv { .. } | LayerKind::Dense { .. })
+        matches!(
+            self,
+            LayerKind::Conv { .. }
+                | LayerKind::Dense { .. }
+                | LayerKind::Embedding { .. }
+                | LayerKind::LayerNorm { .. }
+                | LayerKind::SelfAttention { .. }
+        )
     }
 
     /// Bytes of parameters at `bytes_per_weight` (ROM model input).
@@ -75,7 +113,12 @@ impl LayerKind {
         match self {
             LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => w.len() + b.len(),
             LayerKind::BatchNorm { mean, .. } => 2 * mean.len(),
-            _ => 0,
+            LayerKind::Embedding { w } => w.len(),
+            LayerKind::LayerNorm { gamma, .. } => 2 * gamma.len(),
+            LayerKind::SelfAttention { w, .. } => {
+                w.wq.len() + w.bq.len() + w.wk.len() + w.bk.len() + w.wv.len() + w.bv.len()
+                    + w.wo.len() + w.bo.len()
+            }
         }
     }
 }
@@ -101,6 +144,11 @@ pub struct Graph {
     pub classes: usize,
     pub nodes: Vec<Node>,
     pub name: String,
+    /// Whether `deploy_pipeline` may strip a trailing Softmax (§5.4
+    /// RemoveKerasSoftmax). Default on — the CNN classifiers only use
+    /// softmax as a training-time head. Transformer graphs opt out so an
+    /// inference-time softmax survives deployment.
+    pub strip_softmax: bool,
 }
 
 impl Graph {
@@ -111,6 +159,7 @@ impl Graph {
             classes,
             nodes: Vec::new(),
             name: name.to_string(),
+            strip_softmax: true,
         };
         g.nodes.push(Node {
             id: 0,
@@ -220,6 +269,29 @@ impl Graph {
                 out
             }
             LayerKind::Flatten => vec![in_shape(0).iter().product()],
+            LayerKind::Embedding { w } => {
+                let ish = in_shape(0);
+                assert_eq!(ish.len(), 2, "Embedding expects a (seq, 1) id tensor");
+                assert_eq!(ish[1], 1, "Embedding input must carry one id per position");
+                vec![ish[0], w.shape[1]]
+            }
+            LayerKind::LayerNorm { gamma, .. } => {
+                let ish = in_shape(0);
+                assert_eq!(
+                    gamma.len(),
+                    *ish.last().unwrap(),
+                    "LayerNorm gamma/beta length must match the channel dim"
+                );
+                ish
+            }
+            LayerKind::SelfAttention { heads, head_dim, w } => {
+                let ish = in_shape(0);
+                assert_eq!(ish.len(), 2, "SelfAttention expects a (seq, d_model) input");
+                let d_model = ish[1];
+                assert_eq!(heads * head_dim, d_model, "heads · head_dim must equal d_model");
+                assert_eq!(w.wq.shape, vec![d_model, d_model], "Wq must be (d_model, d_model)");
+                ish
+            }
         }
     }
 

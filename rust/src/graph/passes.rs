@@ -26,6 +26,7 @@ pub fn deploy_pipeline(g: &Graph) -> Graph {
 /// source id (consumers are rewired to the replacement).
 fn rebuild(g: &Graph, replace: &[Option<usize>], edits: &[Option<LayerKind>]) -> Graph {
     let mut out = Graph::new(&g.name, g.dims, &g.input_shape, g.classes);
+    out.strip_softmax = g.strip_softmax;
     out.nodes.clear();
     // old id -> new id (following replacement chains first).
     let mut newid: Vec<usize> = vec![usize::MAX; g.nodes.len()];
@@ -70,13 +71,17 @@ fn infer_with(g: &Graph, kind: &LayerKind, inputs: &[usize]) -> Vec<usize> {
     tmp.nodes[id].out_shape.clone()
 }
 
-/// Pass 4: drop a trailing SoftMax node.
+/// Pass 4: drop a trailing SoftMax node. Opt-in per graph: a graph with
+/// `strip_softmax == false` (the transformer family, whose softmax is an
+/// inference-time op) passes through untouched.
 pub fn remove_softmax(g: &Graph) -> Graph {
     let mut replace: Vec<Option<usize>> = vec![None; g.nodes.len()];
     let edits: Vec<Option<LayerKind>> = vec![None; g.nodes.len()];
     let out_id = g.output_id();
-    if let LayerKind::Softmax = g.nodes[out_id].kind {
-        replace[out_id] = Some(g.nodes[out_id].inputs[0]);
+    if g.strip_softmax {
+        if let LayerKind::Softmax = g.nodes[out_id].kind {
+            replace[out_id] = Some(g.nodes[out_id].inputs[0]);
+        }
     }
     rebuild(g, &replace, &edits)
 }
@@ -364,6 +369,27 @@ mod tests {
         let _s = g.add("sm", LK::Softmax, vec![d]);
         let out = remove_softmax(&g);
         assert!(matches!(out.nodes[out.output_id()].kind, LK::Dense { .. }));
+    }
+
+    #[test]
+    fn transformer_softmax_survives_pipeline() {
+        // Regression for the strip_softmax opt-out: the transformer's
+        // inference-time softmax head must ride through the whole
+        // deployment pipeline, while its FFN ReLUs still fuse.
+        let g = crate::graph::build::transformer("tx", 8, 16, 8, 2, 2, 2, 4);
+        let d = deploy_pipeline(&g);
+        assert!(matches!(d.nodes[d.output_id()].kind, LayerKind::Softmax));
+        assert!(!d.nodes.iter().any(|n| matches!(n.kind, LayerKind::ReLU)));
+        assert!(d.nodes.iter().any(|n| n.fused_relu));
+        assert_eq!(d.param_count(), g.param_count());
+        // Attention / LayerNorm / Embedding nodes pass through untouched.
+        for kind in ["SelfAttention", "LayerNorm", "Embedding"] {
+            assert_eq!(
+                d.nodes.iter().filter(|n| n.kind.type_name() == kind).count(),
+                g.nodes.iter().filter(|n| n.kind.type_name() == kind).count(),
+                "{kind} count changed across the pipeline"
+            );
+        }
     }
 
     #[test]

@@ -54,7 +54,48 @@ pub fn node_ops(graph: &Graph, id: usize) -> OpCounts {
     let node = &graph.nodes[id];
     let out_elems: u64 = node.out_shape.iter().product::<usize>() as u64;
     match &node.kind {
-        LayerKind::Input | LayerKind::Flatten | LayerKind::Softmax => OpCounts::default(),
+        LayerKind::Input | LayerKind::Flatten => OpCounts::default(),
+        // Kept-at-inference softmax (transformer head): per element one
+        // max-compare, one LUT subtract+shift, one sum add, one divide.
+        LayerKind::Softmax => OpCounts {
+            macc: 0,
+            add: 2 * out_elems,
+            shift: out_elems,
+            sat: 2 * out_elems,
+            div: out_elems,
+        },
+        // Row gather from the embedding table: pure copies, like Flatten.
+        LayerKind::Embedding { .. } => OpCounts::default(),
+        // Two-pass mean/var (adds + one div each per row), rsqrt LUT shift,
+        // then per element d·r·γ (2 multiplies) + β add + saturate.
+        LayerKind::LayerNorm { .. } => {
+            let c = *node.out_shape.last().unwrap() as u64;
+            let rows = out_elems / c.max(1);
+            OpCounts {
+                macc: 2 * out_elems,
+                add: 2 * out_elems,
+                shift: 2 * out_elems,
+                sat: out_elems,
+                div: 2 * rows,
+            }
+        }
+        // Four d_model×d_model projections + per-head Q·Kᵀ and P·V GEMMs,
+        // requantize (2 shifts + sat) on every projection/score/context
+        // output, and the per-row integer softmax over the score matrix.
+        LayerKind::SelfAttention { heads, head_dim } => {
+            let seq = node.out_shape[0] as u64;
+            let dm = (*heads * *head_dim) as u64;
+            let h = *heads as u64;
+            let scores = h * seq * seq;
+            let outs = 4 * seq * dm + scores + seq * dm;
+            OpCounts {
+                macc: 4 * seq * dm * dm + 2 * seq * seq * dm,
+                add: 2 * scores,
+                shift: 2 * outs + scores,
+                sat: outs + 2 * scores,
+                div: scores,
+            }
+        }
         LayerKind::Conv { w, .. } => {
             let f = *w.shape.last().unwrap() as u64;
             let taps: u64 = w.shape[..w.shape.len() - 1].iter().product::<usize>() as u64; // k*c

@@ -7,9 +7,13 @@
 //! [`super::gemm`] (zero-point pre-subtracted at pack time), which are
 //! property-tested bit-exact against these.
 
+use crate::fixedpoint::lut::{exp_q, rsqrt_norm};
+use crate::fixedpoint::ops::rescale;
 use crate::graph::ir::{LayerKind, Padding};
 use crate::graph::Graph;
-use crate::quant::affine::{requantize, AffineNodeWeights, AffineQuantizedGraph};
+use crate::quant::affine::{
+    decompose, requantize, AffineNodeWeights, AffineQuantizedGraph, AffineTxWeights,
+};
 
 use super::gemm;
 
@@ -168,9 +172,53 @@ pub(crate) fn run_pooled(
                     out.clear();
                     out.extend(src(node.inputs[0]).iter().map(|&v| v.max(zp)));
                 }
-                LayerKind::Flatten | LayerKind::Softmax => {
+                LayerKind::Flatten => {
                     out.clear();
                     out.extend_from_slice(src(node.inputs[0]));
+                }
+                LayerKind::Softmax => {
+                    // Node-level softmax: decompose the input scale at
+                    // dispatch time (tiny final node; the attention-
+                    // internal softmaxes carry theirs in the Attn params).
+                    let (m, sh) = decompose(aq.act[node.inputs[0]].scale as f64);
+                    softmax_affine_ref(src(node.inputs[0]), m, sh, &mut out);
+                }
+                LayerKind::Embedding { w } => {
+                    let AffineTxWeights::Embed { table } = &aq.tx[&node.id] else {
+                        panic!("embedding node without Embed params");
+                    };
+                    // Ids quantize as identity (scale 1, zp 0), so the
+                    // payload gather is the fixed-point one.
+                    crate::nn::int_ops::embedding_q(
+                        src(node.inputs[0]), table, w.shape[1], &mut out,
+                    );
+                }
+                LayerKind::LayerNorm { .. } => {
+                    let AffineTxWeights::Norm { gamma, g_n, beta } = &aq.tx[&node.id] else {
+                        panic!("layernorm node without Norm params");
+                    };
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    layernorm_affine_ref(
+                        src(node.inputs[0]), c, gamma, *g_n, beta,
+                        aq.act[node.id].zero_point, &mut out,
+                    );
+                }
+                LayerKind::SelfAttention { heads, head_dim, .. } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let (seq, dm) = (ish[0], ish[1]);
+                    if let Some(pa) = packed.attn(node.id) {
+                        crate::nn::packed::attention_int_packed(
+                            src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool,
+                            scratch, &mut out,
+                        );
+                    } else {
+                        attention_affine_ref(
+                            src(node.inputs[0]), seq, dm, *heads, *head_dim,
+                            &aq.tx[&node.id], aq.act[node.inputs[0]].zero_point,
+                            aq.act[node.id].zero_point, &mut out,
+                        );
+                    }
                 }
                 other => panic!("affine executor: unsupported layer {}", other.type_name()),
             }
@@ -308,6 +356,149 @@ pub fn dense_affine_ref(
         }
         out.push(v);
     }
+}
+
+/// Affine softmax over one row: payloads in (any zero point — distances
+/// cancel it), probability payloads out at the fixed `prob_params`
+/// convention (scale 1/256, zero point -128). `sm_mult/sm_shift` is the
+/// gemmlowp decomposition of the INPUT scale: it turns integer payload
+/// distances into the exp LUT's Q0.15 argument.
+pub fn softmax_affine_row(x: &[i32], sm_mult: i32, sm_shift: i32, out: &mut [i32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let m = x.iter().copied().max().unwrap_or(0) as i64;
+    let mut sum = 0i64;
+    for (&v, e) in x.iter().zip(out.iter_mut()) {
+        // d15 = floor(d_q * s_in * 2^15): payload distance to real
+        // distance to Q0.15, all in one multiply-shift.
+        let d15 = ((m - v) * sm_mult as i64) >> (16 + sm_shift);
+        let q = exp_q(d15, 15);
+        *e = q;
+        sum += q as i64;
+    }
+    // The max element's distance is 0, so sum >= exp_lut()[0] > 0.
+    for e in out.iter_mut() {
+        *e = (-128 + ((*e as i64) << 8) / sum).clamp(-128, 127) as i32;
+    }
+}
+
+/// Whole-tensor affine softmax (node-level Softmax: one distribution).
+pub fn softmax_affine_ref(x: &[i32], sm_mult: i32, sm_shift: i32, out: &mut Vec<i32>) {
+    out.clear();
+    out.resize(x.len(), 0);
+    softmax_affine_row(x, sm_mult, sm_shift, out);
+}
+
+/// Affine LayerNorm reference over rows of `c` channels. Zero points
+/// cancel in the mean subtraction, so the normalized rows are scale-free;
+/// `gamma` payloads carry the build-time fold `gamma / s_out` at `g_n`
+/// fractional bits and `beta` is pre-divided into output quanta.
+pub fn layernorm_affine_ref(
+    x: &[i32],
+    c: usize,
+    gamma: &[i32],
+    g_n: i32,
+    beta: &[i64],
+    zp_out: i32,
+    out: &mut Vec<i32>,
+) {
+    out.clear();
+    out.reserve(x.len());
+    for row in x.chunks_exact(c) {
+        let sum: i64 = row.iter().map(|&v| v as i64).sum();
+        let mean = sum / c as i64;
+        let mut var_acc = 0i64;
+        for &v in row {
+            let d = v as i64 - mean;
+            var_acc += d * d;
+        }
+        let (r, h) = rsqrt_norm(var_acc / c as i64 + 1);
+        // d * r * 2^(-30-h) is the scale-free x_hat; gamma lands it on
+        // output quanta directly (the input scale cancelled in rsqrt).
+        let sh = 30 + h + g_n;
+        for (ci, &xv) in row.iter().enumerate() {
+            let d = xv as i64 - mean;
+            let v = rescale(d * r * gamma[ci] as i64, sh) + beta[ci] + zp_out as i64;
+            out.push(v.clamp(-128, 127) as i32);
+        }
+    }
+}
+
+/// Position-wise affine projection on payload rows: x (P, D) through a
+/// per-tensor symmetric weight (D, O).
+pub(crate) fn proj_affine_rows(
+    x: &[i32],
+    d: usize,
+    o: usize,
+    qw: &AffineNodeWeights,
+    zp_in: i32,
+    zp_out: i32,
+    out: &mut Vec<i32>,
+) {
+    out.clear();
+    out.reserve((x.len() / d) * o);
+    for row in x.chunks_exact(d) {
+        for oi in 0..o {
+            let mut acc: i64 = qw.b[oi];
+            for (ii, &xv) in row.iter().enumerate() {
+                acc += ((xv - zp_in) as i64) * (qw.w[ii * o + oi] as i64);
+            }
+            out.push(requantize(acc as i32, qw.mult[oi], qw.shift[oi], zp_out));
+        }
+    }
+}
+
+/// Affine multi-head self-attention, reference kernel: x (S, D) payloads
+/// at the node input params, out (S, D) at the node output params. The
+/// GEMM lowering must reproduce this kernel bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_affine_ref(
+    x: &[i32],
+    seq: usize,
+    dm: usize,
+    heads: usize,
+    hd: usize,
+    tx: &AffineTxWeights,
+    zp_in: i32,
+    zp_out: i32,
+    out: &mut Vec<i32>,
+) {
+    let AffineTxWeights::Attn {
+        wq, wk, wv, wo, q, k, v, s, ctx, s_mult, s_shift, c_mult, c_shift, sm_mult, sm_shift,
+    } = tx
+    else {
+        panic!("attention_affine_ref wants Attn params");
+    };
+    let (mut qp, mut kp, mut vp) = (Vec::new(), Vec::new(), Vec::new());
+    proj_affine_rows(x, dm, dm, wq, zp_in, q.zero_point, &mut qp);
+    proj_affine_rows(x, dm, dm, wk, zp_in, k.zero_point, &mut kp);
+    proj_affine_rows(x, dm, dm, wv, zp_in, v.zero_point, &mut vp);
+    let mut srow = vec![0i32; seq];
+    let mut prow = vec![0i32; seq];
+    let mut ctxp = vec![0i32; seq * dm];
+    for h in 0..heads {
+        let off = h * hd;
+        for i in 0..seq {
+            for (j, sj) in srow.iter_mut().enumerate() {
+                let mut acc = 0i64;
+                for t in 0..hd {
+                    acc += (qp[i * dm + off + t] - q.zero_point) as i64
+                        * (kp[j * dm + off + t] - k.zero_point) as i64;
+                }
+                // s_mult/s_shift folds s_q*s_k/(sqrt(hd)*s_s).
+                *sj = requantize(acc as i32, *s_mult, *s_shift, s.zero_point);
+            }
+            softmax_affine_row(&srow, *sm_mult, *sm_shift, &mut prow);
+            for t in 0..hd {
+                let mut acc = 0i64;
+                for (j, &pj) in prow.iter().enumerate() {
+                    acc += (pj + 128) as i64 * (vp[j * dm + off + t] - v.zero_point) as i64;
+                }
+                ctxp[i * dm + off + t] =
+                    requantize(acc as i32, *c_mult, *c_shift, ctx.zero_point);
+            }
+        }
+    }
+    proj_affine_rows(&ctxp, dm, dm, wo, ctx.zero_point, zp_out, out);
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -10,14 +10,57 @@ use crate::graph::ir::{Graph, LayerKind};
 use super::float_ops as ops;
 use super::gemm;
 
+/// Range triple of one internal (non-node-output) tensor, used for the
+/// attention internals that never appear as graph edges.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorStats {
+    pub max_abs: f32,
+    pub min: f32,
+    pub max: f32,
+}
+
+impl Default for TensorStats {
+    fn default() -> Self {
+        Self { max_abs: 0.0, min: f32::INFINITY, max: f32::NEG_INFINITY }
+    }
+}
+
+impl TensorStats {
+    pub fn record(&mut self, data: &[f32]) {
+        for &x in data {
+            self.max_abs = self.max_abs.max(x.abs());
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+    }
+
+    fn merge(&mut self, other: &TensorStats) {
+        self.max_abs = self.max_abs.max(other.max_abs);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Indices into an [`ActStats::attn`] entry: the Q/K/V projections, the
+/// scaled pre-softmax scores, and the concatenated head context.
+pub const ATTN_Q: usize = 0;
+pub const ATTN_K: usize = 1;
+pub const ATTN_V: usize = 2;
+pub const ATTN_S: usize = 3;
+pub const ATTN_CTX: usize = 4;
+
 /// Per-node activation statistics collected during calibration (§5.8).
 /// `max_abs` feeds the Qm.n scheme; `min`/`max` feed the affine
-/// (TFLite-style) scheme's asymmetric ranges.
+/// (TFLite-style) scheme's asymmetric ranges. `attn[id]` holds the ranges
+/// of the attention-internal tensors of a `SelfAttention` node `id` —
+/// those tensors are requantized inside the fused kernel, so the
+/// quantizers need their ranges even though they are not node outputs.
 #[derive(Clone, Debug, Default)]
 pub struct ActStats {
     pub max_abs: Vec<f32>,
     pub min: Vec<f32>,
     pub max: Vec<f32>,
+    pub attn: Vec<[TensorStats; 5]>,
 }
 
 impl ActStats {
@@ -26,6 +69,7 @@ impl ActStats {
             max_abs: vec![0.0; n_nodes],
             min: vec![f32::INFINITY; n_nodes],
             max: vec![f32::NEG_INFINITY; n_nodes],
+            attn: vec![[TensorStats::default(); 5]; n_nodes],
         }
     }
 
@@ -43,6 +87,21 @@ impl ActStats {
         }
     }
 
+    fn record_attn(&mut self, node: usize, tmp: &ops::AttnTmp) {
+        let s = &mut self.attn[node];
+        s[ATTN_Q].record(&tmp.q);
+        s[ATTN_K].record(&tmp.k);
+        s[ATTN_V].record(&tmp.v);
+        s[ATTN_S].record(&tmp.scores);
+        s[ATTN_CTX].record(&tmp.ctx);
+    }
+
+    /// Attention-internal ranges of node `id`, tolerant of stats built
+    /// before the transformer ops existed (empty `attn`).
+    pub fn attn_of(&self, id: usize) -> [TensorStats; 5] {
+        self.attn.get(id).copied().unwrap_or_default()
+    }
+
     pub fn merge(&mut self, other: &ActStats) {
         for (a, &b) in self.max_abs.iter_mut().zip(&other.max_abs) {
             *a = a.max(b);
@@ -52,6 +111,11 @@ impl ActStats {
         }
         for (a, &b) in self.max.iter_mut().zip(&other.max) {
             *a = a.max(b);
+        }
+        for (a, b) in self.attn.iter_mut().zip(&other.attn) {
+            for (s, o) in a.iter_mut().zip(b) {
+                s.merge(o);
+            }
         }
     }
 }
@@ -203,6 +267,38 @@ pub(crate) fn run_pooled(
                 LayerKind::Flatten => {
                     out.clear();
                     out.extend_from_slice(src(node.inputs[0]));
+                }
+                LayerKind::Embedding { w } => {
+                    ops::embedding(src(node.inputs[0]), &w.data, w.shape[1], &mut out);
+                }
+                LayerKind::LayerNorm { gamma, beta, eps } => {
+                    let c = *graph.nodes[node.inputs[0]].out_shape.last().unwrap();
+                    ops::layernorm(src(node.inputs[0]), c, gamma, beta, *eps, &mut out);
+                }
+                LayerKind::SelfAttention { heads, head_dim, w } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let (seq, dm) = (ish[0], ish[1]);
+                    // Calibration must see the attention-internal tensors,
+                    // which the fused packed kernel never materialises as a
+                    // whole; route stats runs through the reference path.
+                    let pa = if stats.is_some() { None } else { packed.attn(node.id) };
+                    if let Some(pa) = pa {
+                        super::packed::attention_f32_packed(
+                            src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool,
+                            scratch, &mut out,
+                        );
+                    } else {
+                        // Per-call reference path; calibration rides it to
+                        // record the attention-internal ranges.
+                        let mut tmp = ops::AttnTmp::default();
+                        ops::self_attention_ref(
+                            src(node.inputs[0]), seq, dm, *heads, *head_dim, w, &mut tmp,
+                            &mut out,
+                        );
+                        if let Some(stats) = stats.as_deref_mut() {
+                            stats.record_attn(node.id, &tmp);
+                        }
+                    }
                 }
             }
         }

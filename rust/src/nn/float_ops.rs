@@ -6,7 +6,7 @@
 //! (`*_ref`): the executors run the im2col + blocked-GEMM lowerings in
 //! [`super::gemm`], which are property-tested ULP-close against these.
 
-use crate::graph::ir::Padding;
+use crate::graph::ir::{AttnWeights, Padding};
 use crate::graph::Graph;
 
 /// 1-D convolution, reference kernel: x (S, C), w (K, C, F), b (F) ->
@@ -252,6 +252,107 @@ pub fn softmax(x: &[f32], out: &mut Vec<f32>) {
     out.extend(exps.iter().map(|&e| e / sum));
 }
 
+/// Embedding gather: ids (S, 1) — integer token ids carried as f32 — and
+/// table (V, D) -> (S, D). Out-of-range ids clamp to the table edge (the
+/// integer engines do the same, so all backends agree on malformed input).
+pub fn embedding(ids: &[f32], table: &[f32], d: usize, out: &mut Vec<f32>) {
+    let vocab = table.len() / d;
+    out.clear();
+    out.reserve(ids.len() * d);
+    for &id in ids {
+        let i = (id.round() as isize).clamp(0, vocab as isize - 1) as usize;
+        out.extend_from_slice(&table[i * d..(i + 1) * d]);
+    }
+}
+
+/// LayerNorm over the channel (last) axis: x (P, C) -> (P, C).
+pub fn layernorm(x: &[f32], c: usize, gamma: &[f32], beta: &[f32], eps: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(x.len());
+    for row in x.chunks_exact(c) {
+        let mean = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+        let r = 1.0 / (var + eps).sqrt();
+        for (ci, &v) in row.iter().enumerate() {
+            out.push((v - mean) * r * gamma[ci] + beta[ci]);
+        }
+    }
+}
+
+/// Internal activations of one self-attention node. The executors use the
+/// fields as a reusable workspace; calibration reads them afterwards to
+/// derive the fixed-point formats of the Q/K/V projections, the scaled
+/// pre-softmax scores, and the concatenated head context.
+#[derive(Clone, Debug, Default)]
+pub struct AttnTmp {
+    pub q: Vec<f32>,      // (S, D)
+    pub k: Vec<f32>,      // (S, D)
+    pub v: Vec<f32>,      // (S, D)
+    pub scores: Vec<f32>, // (H, S, S) scaled, pre-softmax
+    pub ctx: Vec<f32>,    // (S, D) concatenated head outputs, pre-Wo
+}
+
+/// Position-wise dense: x (S, D) with w (D, O), b (O) -> (S, O). The GEMM
+/// executors lower this onto `gemm::dense`-shaped calls with m = S.
+pub fn project(x: &[f32], d: usize, w: &[f32], b: &[f32], o: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve((x.len() / d) * o);
+    for row in x.chunks_exact(d) {
+        for oi in 0..o {
+            let mut acc = b[oi];
+            for (ii, &xv) in row.iter().enumerate() {
+                acc += xv * w[ii * o + oi];
+            }
+            out.push(acc);
+        }
+    }
+}
+
+/// Multi-head self-attention, reference kernel: x (S, D) -> (S, D) with
+/// D = heads * hd. Scores are scaled by 1/sqrt(hd) before the row softmax.
+#[allow(clippy::too_many_arguments)]
+pub fn self_attention_ref(
+    x: &[f32],
+    seq: usize,
+    dm: usize,
+    heads: usize,
+    hd: usize,
+    w: &AttnWeights,
+    tmp: &mut AttnTmp,
+    out: &mut Vec<f32>,
+) {
+    project(x, dm, &w.wq.data, &w.bq.data, dm, &mut tmp.q);
+    project(x, dm, &w.wk.data, &w.bk.data, dm, &mut tmp.k);
+    project(x, dm, &w.wv.data, &w.bv.data, dm, &mut tmp.v);
+    let scale = 1.0 / (hd as f32).sqrt();
+    tmp.scores.clear();
+    tmp.scores.reserve(heads * seq * seq);
+    tmp.ctx.clear();
+    tmp.ctx.resize(seq * dm, 0.0);
+    let mut probs = vec![0.0f32; seq];
+    for h in 0..heads {
+        let off = h * hd;
+        for i in 0..seq {
+            let qrow = &tmp.q[i * dm + off..i * dm + off + hd];
+            for j in 0..seq {
+                let krow = &tmp.k[j * dm + off..j * dm + off + hd];
+                let dot: f32 = qrow.iter().zip(krow).map(|(&a, &b)| a * b).sum();
+                tmp.scores.push(dot * scale);
+            }
+            let row = &tmp.scores[(h * seq + i) * seq..(h * seq + i + 1) * seq];
+            softmax(row, &mut probs);
+            for (j, &p) in probs.iter().enumerate() {
+                let vrow = &tmp.v[j * dm + off..j * dm + off + hd];
+                let crow = &mut tmp.ctx[i * dm + off..i * dm + off + hd];
+                for (cv, &vv) in crow.iter_mut().zip(vrow) {
+                    *cv += p * vv;
+                }
+            }
+        }
+    }
+    project(&tmp.ctx, dm, &w.wo.data, &w.bo.data, dm, out);
+}
+
 /// BatchNorm as affine y = w*x + b per channel.
 pub fn batchnorm_affine(x: &[f32], c: usize, w: &[f32], b: &[f32], out: &mut Vec<f32>) {
     out.clear();
@@ -398,6 +499,65 @@ mod tests {
         // Remainder window holds one sample; its average is that sample,
         // not sample/size.
         assert_eq!(out, vec![3.0, 7.0, 10.0]);
+    }
+
+    #[test]
+    fn embedding_gathers_and_clamps() {
+        let table = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // (3, 2)
+        let mut out = Vec::new();
+        embedding(&[2.0, 0.0, 9.0, -1.0], &table, 2, &mut out);
+        // id 9 and -1 clamp to the last/first row.
+        assert_eq!(out, vec![5.0, 6.0, 1.0, 2.0, 5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = [1.0, 3.0, -2.0, 2.0]; // (2, 2)
+        let mut out = Vec::new();
+        layernorm(&x, 2, &[1.0, 1.0], &[0.0, 0.0], 1e-5, &mut out);
+        for row in out.chunks_exact(2) {
+            let mean: f32 = row.iter().sum::<f32>() / 2.0;
+            let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 2.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_applies_gamma_beta() {
+        let x = [1.0, 3.0];
+        let mut out = Vec::new();
+        layernorm(&x, 2, &[2.0, 0.5], &[1.0, -1.0], 0.0, &mut out);
+        // normalized row is [-1, 1].
+        assert!((out[0] - (-2.0 + 1.0)).abs() < 1e-4);
+        assert!((out[1] - (0.5 - 1.0)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn attention_uniform_when_queries_zero() {
+        use crate::tensor::Tensor;
+        // Wq = 0 makes every score row uniform: context = mean of V rows.
+        let (seq, dm) = (3, 2);
+        let eye = Tensor::from_vec(&[dm, dm], vec![1.0, 0.0, 0.0, 1.0]);
+        let zero_w = Tensor::from_vec(&[dm, dm], vec![0.0; dm * dm]);
+        let zero_b = Tensor::from_vec(&[dm], vec![0.0; dm]);
+        let w = AttnWeights {
+            wq: zero_w.clone(),
+            bq: zero_b.clone(),
+            wk: eye.clone(),
+            bk: zero_b.clone(),
+            wv: eye.clone(),
+            bv: zero_b.clone(),
+            wo: eye,
+            bo: zero_b,
+        };
+        let x = [3.0, 0.0, 0.0, 3.0, 3.0, 3.0];
+        let (mut tmp, mut out) = (AttnTmp::default(), Vec::new());
+        self_attention_ref(&x, seq, dm, 1, dm, &w, &mut tmp, &mut out);
+        for row in out.chunks_exact(dm) {
+            assert!((row[0] - 2.0).abs() < 1e-5);
+            assert!((row[1] - 2.0).abs() < 1e-5);
+        }
     }
 
     #[test]

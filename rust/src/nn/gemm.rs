@@ -96,6 +96,14 @@ pub fn scratch_elems(graph: &Graph) -> usize {
             // The affine backend stages the zero-point-shifted input
             // before its dense GEMM.
             LayerKind::Dense { w, .. } => need = need.max(w.shape[0]),
+            // The prepacked attention lowering carves its whole
+            // workspace (Q/K/V/ctx staging, per-head GEMM operands, one
+            // head's score matrix) out of scratch slab 0.
+            LayerKind::SelfAttention { heads, head_dim, .. } => {
+                let seq = node.out_shape[0];
+                let dm = heads * head_dim;
+                need = need.max(super::packed::attn_scratch_elems(seq, dm, *head_dim));
+            }
             _ => {}
         }
     }

@@ -150,10 +150,53 @@ pub(crate) fn run_pooled(
                 LayerKind::ReLU => {
                     ops::relu_q(src(node.inputs[0]), &mut out);
                 }
-                LayerKind::Flatten | LayerKind::Softmax => {
-                    // Softmax is argmax-invariant on payloads.
+                LayerKind::Flatten => {
                     out.clear();
                     out.extend_from_slice(src(node.inputs[0]));
+                }
+                LayerKind::Softmax => {
+                    // Inference-time softmax: exp-LUT distances at the
+                    // input format, probabilities at width-1 fractional
+                    // bits (the quantizer pins act_n accordingly).
+                    ops::softmax_q_ref(
+                        src(node.inputs[0]), qg.act_n[node.inputs[0]], qg.act_n[node.id],
+                        width, &mut out,
+                    );
+                }
+                LayerKind::Embedding { w } => {
+                    let crate::quant::ptq::QTxWeights::Embed { table } = &qg.tx[&node.id]
+                    else {
+                        panic!("embedding node without Embed params");
+                    };
+                    ops::embedding_q(src(node.inputs[0]), table, w.shape[1], &mut out);
+                }
+                LayerKind::LayerNorm { .. } => {
+                    let crate::quant::ptq::QTxWeights::Norm { gamma, g_n, beta } =
+                        &qg.tx[&node.id]
+                    else {
+                        panic!("layernorm node without Norm params");
+                    };
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let c = *ish.last().unwrap();
+                    ops::layernorm_q_ref(
+                        src(node.inputs[0]), c, gamma, *g_n, beta, qg.act_n[node.id], width,
+                        &mut out,
+                    );
+                }
+                LayerKind::SelfAttention { heads, head_dim, .. } => {
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    let (seq, dm) = (ish[0], ish[1]);
+                    if let Some(pa) = packed.attn(node.id) {
+                        super::packed::attention_int_packed(
+                            src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool,
+                            scratch, &mut out,
+                        );
+                    } else {
+                        ops::attention_q_ref(
+                            src(node.inputs[0]), seq, dm, *heads, *head_dim,
+                            &qg.tx[&node.id], width, &mut out,
+                        );
+                    }
                 }
                 LayerKind::ZeroPad { pad } => {
                     let ish = &graph.nodes[node.inputs[0]].out_shape;

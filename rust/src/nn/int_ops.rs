@@ -8,10 +8,12 @@
 //! are order-independent; the i32-lane admission guard rules out
 //! intermediate overflow for any summation order).
 
+use crate::fixedpoint::lut::exp_q;
+use crate::fixedpoint::lut::rsqrt_norm;
 use crate::fixedpoint::ops::{clamp_to, rescale};
 use crate::graph::ir::Padding;
 use crate::graph::Graph;
-use crate::quant::ptq::QNodeWeights;
+use crate::quant::ptq::{QNodeWeights, QTxWeights};
 
 /// 1-D fixed-point convolution on integer payloads, reference kernel.
 /// x: (S, C) payloads at n_in; w/b/shift per `qw`; out at n_out.
@@ -430,6 +432,164 @@ pub fn relu_q(x: &[i32], out: &mut Vec<i32>) {
     out.extend(x.iter().map(|&v| v.max(0)));
 }
 
+/// Embedding gather on id payloads (n = 0): output rows ARE table rows
+/// (quantized at the node's activation format), so no arithmetic at all.
+/// Out-of-range ids clamp to the table edge, matching the float reference.
+pub fn embedding_q(ids: &[i32], table: &[i32], d: usize, out: &mut Vec<i32>) {
+    let vocab = table.len() / d;
+    out.clear();
+    out.reserve(ids.len() * d);
+    for &id in ids {
+        let i = (id as isize).clamp(0, vocab as isize - 1) as usize;
+        out.extend_from_slice(&table[i * d..(i + 1) * d]);
+    }
+}
+
+/// Numerically-stable fixed-point softmax over one row: payloads at
+/// `n_in` → probabilities at `n_out` (the quantizer pins `width - 1`).
+/// Max-subtraction makes every exp argument a non-negative distance, so
+/// the Q0.15 exp LUT covers the whole domain; the division truncates like
+/// C `/`, keeping Rust and the emitted C bit-exact.
+pub fn softmax_q_row(x: &[i32], n_in: i32, n_out: i32, width: u32, out: &mut [i32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let m = x.iter().copied().max().unwrap_or(0) as i64;
+    let mut sum = 0i64;
+    for (&v, e) in x.iter().zip(out.iter_mut()) {
+        let q = exp_q(m - v as i64, n_in);
+        *e = q;
+        sum += q as i64;
+    }
+    // The max element's distance is 0, so sum >= exp_lut()[0] > 0.
+    for e in out.iter_mut() {
+        *e = clamp_to(((*e as i64) << n_out) / sum, width);
+    }
+}
+
+/// Softmax as a graph node (the transformer head): the whole tensor is
+/// one distribution, like the float reference.
+pub fn softmax_q_ref(x: &[i32], n_in: i32, n_out: i32, width: u32, out: &mut Vec<i32>) {
+    out.clear();
+    out.resize(x.len(), 0);
+    softmax_q_row(x, n_in, n_out, width, out);
+}
+
+/// Fixed-point LayerNorm over rows of `c` channels, reference kernel.
+///
+/// Two-pass integer mean/variance at the input scale (truncating division,
+/// like C `/`), then `rsqrt_norm` supplies 1/sqrt(var_payload + 1) as a
+/// Q2.30 mantissa plus exponent. The variance `+1` keeps the rsqrt domain
+/// valid and acts as an epsilon of one accumulator ulp (2^-2n_in real).
+/// gamma payloads sit at `g_n`, beta payloads directly at `n_out`.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_q_ref(
+    x: &[i32],
+    c: usize,
+    gamma: &[i32],
+    g_n: i32,
+    beta: &[i32],
+    n_out: i32,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
+    out.clear();
+    out.reserve(x.len());
+    for row in x.chunks_exact(c) {
+        let sum: i64 = row.iter().map(|&v| v as i64).sum();
+        let mean = sum / c as i64;
+        let mut var_acc = 0i64;
+        for &v in row {
+            let d = v as i64 - mean;
+            var_acc += d * d;
+        }
+        let (r, h) = rsqrt_norm(var_acc / c as i64 + 1);
+        // x_hat = d * r * 2^(-30-h): the n_in scale of d cancels against
+        // the payload-domain rsqrt, so the shift below is n_in-free.
+        let sh = 30 + h + g_n - n_out;
+        for (ci, &xv) in row.iter().enumerate() {
+            let d = xv as i64 - mean;
+            let acc = d * r * gamma[ci] as i64;
+            out.push(clamp_to(rescale(acc, sh) + beta[ci] as i64, width));
+        }
+    }
+}
+
+/// Position-wise projection on payloads: x (P, D) rows through a
+/// dense-style quantized weight (D, O) with a single per-layer shift.
+pub(crate) fn proj_q_rows(
+    x: &[i32],
+    d: usize,
+    o: usize,
+    qw: &QNodeWeights,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
+    out.clear();
+    out.reserve((x.len() / d) * o);
+    for row in x.chunks_exact(d) {
+        for oi in 0..o {
+            let mut acc = qw.b_acc[oi];
+            for (ii, &xv) in row.iter().enumerate() {
+                acc += xv as i64 * qw.w[ii * o + oi] as i64;
+            }
+            out.push(clamp_to(rescale(acc, qw.shift[0]), width));
+        }
+    }
+}
+
+/// Fixed-point multi-head self-attention, reference kernel: x (S, D)
+/// payloads at the node input format, out (S, D) at the node output
+/// format. Requantization points (Q/K/V, scaled scores, softmax rows,
+/// context, output) follow the formats recorded in the `Attn` params; the
+/// GEMM lowering must reproduce this kernel bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_q_ref(
+    x: &[i32],
+    seq: usize,
+    dm: usize,
+    heads: usize,
+    hd: usize,
+    tx: &QTxWeights,
+    width: u32,
+    out: &mut Vec<i32>,
+) {
+    let QTxWeights::Attn {
+        wq, wk, wv, wo, n_q, n_k, n_v, n_s, n_p, n_ctx, inv_sqrt_hd_q15, ..
+    } = tx
+    else {
+        panic!("attention_q_ref wants Attn params");
+    };
+    let (mut q, mut k, mut v) = (Vec::new(), Vec::new(), Vec::new());
+    proj_q_rows(x, dm, dm, wq, width, &mut q);
+    proj_q_rows(x, dm, dm, wk, width, &mut k);
+    proj_q_rows(x, dm, dm, wv, width, &mut v);
+    let mut srow = vec![0i32; seq];
+    let mut prow = vec![0i32; seq];
+    let mut ctx = vec![0i32; seq * dm];
+    let score_sh = n_q + n_k + 15 - n_s;
+    let ctx_sh = n_p + n_v - n_ctx;
+    for h in 0..heads {
+        let off = h * hd;
+        for i in 0..seq {
+            for (j, sj) in srow.iter_mut().enumerate() {
+                let mut acc = 0i64;
+                for t in 0..hd {
+                    acc += q[i * dm + off + t] as i64 * k[j * dm + off + t] as i64;
+                }
+                *sj = clamp_to(rescale(acc * *inv_sqrt_hd_q15 as i64, score_sh), width);
+            }
+            softmax_q_row(&srow, *n_s, *n_p, width, &mut prow);
+            for t in 0..hd {
+                let mut acc = 0i64;
+                for (j, &pj) in prow.iter().enumerate() {
+                    acc += pj as i64 * v[j * dm + off + t] as i64;
+                }
+                ctx[i * dm + off + t] = clamp_to(rescale(acc, ctx_sh), width);
+            }
+        }
+    }
+    proj_q_rows(&ctx, dm, dm, wo, width, out);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -609,6 +769,95 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn embedding_q_gathers_and_clamps() {
+        let table = [1, 2, 3, 4, 5, 6]; // (3, 2)
+        let mut out = Vec::new();
+        embedding_q(&[2, 0, 9, -1], &table, 2, &mut out);
+        assert_eq!(out, vec![5, 6, 1, 2, 5, 6, 1, 2]);
+    }
+
+    #[test]
+    fn softmax_q_uniform_rows_are_uniform() {
+        let x = [37, 37, 37, 37];
+        let mut out = Vec::new();
+        softmax_q_ref(&x, 9, 15, 16, &mut out);
+        // All distances are 0: p = (e << 15) / (4e) = 8192 exactly.
+        assert_eq!(out, vec![8192; 4]);
+    }
+
+    #[test]
+    fn softmax_q_orders_and_normalizes() {
+        // Q4.3 inputs 0.0, 1.0, 2.0.
+        let x = [0, 8, 16];
+        let mut out = Vec::new();
+        softmax_q_ref(&x, 3, 7, 8, &mut out);
+        assert!(out[2] > out[1] && out[1] > out[0], "{out:?}");
+        let sum: i64 = out.iter().map(|&p| p as i64).sum();
+        // Truncating division loses at most 1 ulp per element.
+        assert!((sum - 128).unsigned_abs() <= 3, "sum {sum}");
+    }
+
+    #[test]
+    fn layernorm_q_zero_mean_unit_var_row() {
+        // Payloads at n=8: [-1.0, 1.0] normalizes to itself.
+        let x = [-256, 256];
+        let gamma = [1 << 6, 1 << 6]; // 1.0 at g_n=6
+        let beta = [0, 0];
+        let mut out = Vec::new();
+        layernorm_q_ref(&x, 2, &gamma, 6, &beta, 8, 16, &mut out);
+        // Expect ±1.0 at n=8 = ±256, within LUT tolerance (1/128 relative).
+        assert!((out[0] + 256).abs() <= 4, "{out:?}");
+        assert!((out[1] - 256).abs() <= 4, "{out:?}");
+    }
+
+    #[test]
+    fn layernorm_q_beta_offsets_output() {
+        let x = [100, 100]; // constant row: d = 0 everywhere
+        let gamma = [1 << 6; 2];
+        let beta = [7, -9];
+        let mut out = Vec::new();
+        layernorm_q_ref(&x, 2, &gamma, 6, &beta, 8, 16, &mut out);
+        assert_eq!(out, vec![7, -9]);
+    }
+
+    #[test]
+    fn attention_q_uniform_when_q_is_zero() {
+        use crate::quant::ptq::QTxWeights;
+        // Wq = 0: every probability row is uniform, context = mean of V
+        // rows; V = identity projection of x. All formats equal, shifts 0.
+        let (seq, dm) = (2, 2);
+        let zero = QNodeWeights { w: vec![0; 4], w_n: vec![0], b_acc: vec![0; 2], shift: vec![0] };
+        let eye = QNodeWeights {
+            w: vec![1, 0, 0, 1],
+            w_n: vec![0],
+            b_acc: vec![0; 2],
+            shift: vec![0],
+        };
+        let tx = QTxWeights::Attn {
+            wq: zero.clone(),
+            wk: eye.clone(),
+            wv: eye.clone(),
+            wo: eye,
+            n_q: 0,
+            n_k: 0,
+            n_v: 0,
+            n_s: 15,
+            n_p: 15,
+            n_ctx: 0,
+            inv_sqrt_hd_q15: (f64::powi(2.0, 15) / (dm as f64).sqrt()).round() as i32,
+        };
+        // ctx shift n_p + n_v - n_ctx = 15: ctx = (p·v) >> 15.
+        let x = [10, 0, 0, 10];
+        let mut out = Vec::new();
+        attention_q_ref(&x, seq, dm, 1, dm, &tx, 16, &mut out);
+        // Uniform probs ≈ 16384 each: ctx ≈ (16384*10 + 16384*0) >> 15 = 4 (floor of 5 - ulp).
+        assert_eq!(out.len(), 4);
+        let m = out[0];
+        assert!(out.iter().all(|&v| (v - m).abs() <= 1), "{out:?}");
+        assert!((4..=5).contains(&m), "{out:?}");
     }
 
     #[test]

@@ -10,8 +10,9 @@
 
 use std::collections::BTreeMap;
 
+use crate::fixedpoint::QFormat;
 use crate::graph::ir::{Graph, LayerKind};
-use crate::nn::float_exec::ActStats;
+use crate::nn::float_exec::{ActStats, ATTN_CTX, ATTN_K, ATTN_Q, ATTN_S, ATTN_V};
 
 /// Per-tensor activation quantization: real = scale * (q - zero_point).
 #[derive(Clone, Copy, Debug)]
@@ -105,11 +106,56 @@ pub struct AffineNodeWeights {
     pub shift: Vec<i32>,
 }
 
+/// Fixed output params of every softmax (node-level or attention-internal
+/// probability rows): real p = (q + 128) / 256, the TFLite convention.
+pub fn prob_params() -> AffineParams {
+    AffineParams { scale: 1.0 / 256.0, zero_point: -128 }
+}
+
+/// Transformer-op parameters in the affine scheme.
+#[derive(Clone, Debug)]
+pub enum AffineTxWeights {
+    /// Table payloads at the node's activation params (a gather's output
+    /// payloads ARE table payloads).
+    Embed { table: Vec<i32> },
+    /// LayerNorm: the normalized rows are scale-free (zero points cancel
+    /// in the mean subtraction), so gamma is folded with 1/s_out into a
+    /// Qm.n payload `gamma * 2^g_n / s_out` and beta becomes an integer
+    /// offset in output quanta.
+    Norm { gamma: Vec<i32>, g_n: i32, beta: Vec<i64> },
+    /// SelfAttention: per-tensor symmetric projection weights plus affine
+    /// params for every internal tensor and the gemmlowp requantization
+    /// multipliers between the stages.
+    Attn {
+        wq: AffineNodeWeights,
+        wk: AffineNodeWeights,
+        wv: AffineNodeWeights,
+        wo: AffineNodeWeights,
+        q: AffineParams,
+        k: AffineParams,
+        v: AffineParams,
+        s: AffineParams,
+        ctx: AffineParams,
+        /// Scores: s_q * s_k / (sqrt(hd) * s_s) as (mantissa, shift).
+        s_mult: i32,
+        s_shift: i32,
+        /// Context: s_p * s_v / s_ctx (s_p = 1/256).
+        c_mult: i32,
+        c_shift: i32,
+        /// Decomposition of s_s itself, used to turn integer score
+        /// distances into the exp LUT's Q0.15 argument.
+        sm_mult: i32,
+        sm_shift: i32,
+    },
+}
+
 #[derive(Clone, Debug)]
 pub struct AffineQuantizedGraph {
     pub graph: Graph,
     pub act: Vec<AffineParams>,
     pub weights: BTreeMap<usize, AffineNodeWeights>,
+    /// Transformer-op parameters (Embedding / LayerNorm / SelfAttention).
+    pub tx: BTreeMap<usize, AffineTxWeights>,
 }
 
 fn passthrough(kind: &LayerKind) -> bool {
@@ -119,20 +165,47 @@ fn passthrough(kind: &LayerKind) -> bool {
             | LayerKind::ReLU
             | LayerKind::Flatten
             | LayerKind::ZeroPad { .. }
-            | LayerKind::Softmax
             | LayerKind::GlobalAvgPool
             | LayerKind::AvgPool { .. }
     )
+}
+
+/// True when `id` is consumed by an Embedding node (integer token ids:
+/// identity quantization).
+fn feeds_embedding(graph: &Graph, id: usize) -> bool {
+    graph
+        .nodes
+        .iter()
+        .any(|n| matches!(n.kind, LayerKind::Embedding { .. }) && n.inputs.contains(&id))
+}
+
+/// Clamp a real multiplier into gemmlowp's (0, 1) domain and decompose.
+/// Shared with the executor, which decomposes the input scale of a
+/// node-level Softmax at dispatch time (attention-internal softmaxes get
+/// their decomposition from the quantizer's `Attn` params).
+pub fn decompose(m: f64) -> (i32, i32) {
+    quantize_multiplier(m.clamp(1e-9, 0.999_999_999))
 }
 
 /// Quantize a calibrated graph into the affine scheme.
 pub fn quantize_affine(graph: &Graph, stats: &ActStats) -> AffineQuantizedGraph {
     let mut act: Vec<AffineParams> = Vec::with_capacity(graph.nodes.len());
     for node in &graph.nodes {
-        let p = if passthrough(&node.kind) {
-            act[node.inputs[0]]
-        } else {
-            AffineParams::from_range(stats.min[node.id], stats.max[node.id])
+        let p = match &node.kind {
+            // Token ids quantize as identity: payload == id.
+            LayerKind::Input if feeds_embedding(graph, node.id) => {
+                AffineParams { scale: 1.0, zero_point: 0 }
+            }
+            LayerKind::Embedding { w } => {
+                let (lo, hi) = w
+                    .data
+                    .iter()
+                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+                AffineParams::from_range(lo, hi)
+            }
+            LayerKind::Softmax => prob_params(),
+            kind if passthrough(kind) => act[node.inputs[0]],
+            _ => AffineParams::from_range(stats.min[node.id], stats.max[node.id]),
         };
         act.push(p);
     }
@@ -177,7 +250,110 @@ pub fn quantize_affine(graph: &Graph, stats: &ActStats) -> AffineQuantizedGraph 
             AffineNodeWeights { w: payload, w_scale, b: bias, mult, shift },
         );
     }
-    AffineQuantizedGraph { graph: graph.clone(), act, weights }
+
+    let mut tx = BTreeMap::new();
+    for node in &graph.nodes {
+        match &node.kind {
+            LayerKind::Embedding { w } => {
+                let p = act[node.id];
+                tx.insert(
+                    node.id,
+                    AffineTxWeights::Embed {
+                        table: w.data.iter().map(|&x| p.quantize(x)).collect(),
+                    },
+                );
+            }
+            LayerKind::LayerNorm { gamma, beta, .. } => {
+                let s_out = act[node.id].scale;
+                let folded: Vec<f32> = gamma.iter().map(|&g| g / s_out).collect();
+                let gfmt = QFormat::from_slice(&folded, 16);
+                tx.insert(
+                    node.id,
+                    AffineTxWeights::Norm {
+                        gamma: gfmt.quantize_slice(&folded),
+                        g_n: gfmt.n,
+                        beta: beta
+                            .iter()
+                            .map(|&b| (b as f64 / s_out as f64).round() as i64)
+                            .collect(),
+                    },
+                );
+            }
+            LayerKind::SelfAttention { head_dim, w, .. } => {
+                let s_in = act[node.inputs[0]].scale;
+                let st = stats.attn_of(node.id);
+                let from = |t: &crate::nn::float_exec::TensorStats| {
+                    AffineParams::from_range(t.min, t.max)
+                };
+                let (q, k, v) = (from(&st[ATTN_Q]), from(&st[ATTN_K]), from(&st[ATTN_V]));
+                let (s, ctx) = (from(&st[ATTN_S]), from(&st[ATTN_CTX]));
+                let p = prob_params();
+                let dm = w.wq.shape[1];
+                let (s_mult, s_shift) = decompose(
+                    q.scale as f64 * k.scale as f64
+                        / ((*head_dim as f64).sqrt() * s.scale as f64),
+                );
+                let (c_mult, c_shift) =
+                    decompose(p.scale as f64 * v.scale as f64 / ctx.scale as f64);
+                let (sm_mult, sm_shift) = decompose(s.scale as f64);
+                tx.insert(
+                    node.id,
+                    AffineTxWeights::Attn {
+                        wq: quantize_proj_affine(&w.wq.data, &w.bq.data, dm, s_in, q.scale),
+                        wk: quantize_proj_affine(&w.wk.data, &w.bk.data, dm, s_in, k.scale),
+                        wv: quantize_proj_affine(&w.wv.data, &w.bv.data, dm, s_in, v.scale),
+                        wo: quantize_proj_affine(
+                            &w.wo.data, &w.bo.data, dm, ctx.scale, act[node.id].scale,
+                        ),
+                        q,
+                        k,
+                        v,
+                        s,
+                        ctx,
+                        s_mult,
+                        s_shift,
+                        c_mult,
+                        c_shift,
+                        sm_mult,
+                        sm_shift,
+                    },
+                );
+            }
+            _ => {}
+        }
+    }
+    AffineQuantizedGraph { graph: graph.clone(), act, weights, tx }
+}
+
+/// Quantize one attention projection: per-tensor symmetric weights (a
+/// single scale — the fused attention epilogue applies one multiplier per
+/// projection), int32-style bias at s_in * s_w, and the gemmlowp
+/// requantization multiplier onto the projection's own output params.
+fn quantize_proj_affine(
+    w: &[f32],
+    b: &[f32],
+    filters: usize,
+    s_in: f32,
+    s_out: f32,
+) -> AffineNodeWeights {
+    let max_abs = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let sw = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+    let payload = w.iter().map(|&x| (x / sw).round().clamp(-127.0, 127.0) as i32).collect();
+    let bias = b
+        .iter()
+        .map(|&x| (x as f64 / (s_in as f64 * sw as f64)).round() as i64)
+        .collect();
+    let (m0, sh) = decompose(s_in as f64 * sw as f64 / s_out as f64);
+    debug_assert_eq!(b.len(), filters);
+    // Per-tensor values broadcast to per-filter length: the reference and
+    // prepacked kernels index mult/shift by filter, same as conv/dense.
+    AffineNodeWeights {
+        w: payload,
+        w_scale: vec![sw; filters],
+        b: bias,
+        mult: vec![m0; filters],
+        shift: vec![sh; filters],
+    }
 }
 
 #[cfg(test)]

@@ -6,6 +6,6 @@ pub mod affine;
 pub mod ptq;
 pub mod scheme;
 
-pub use affine::{quantize_affine, AffineQuantizedGraph};
-pub use ptq::{quantize, QuantizedGraph};
+pub use affine::{quantize_affine, AffineQuantizedGraph, AffineTxWeights};
+pub use ptq::{quantize, QTxWeights, QuantizedGraph};
 pub use scheme::{Granularity, QuantSpec};

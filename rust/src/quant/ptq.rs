@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 
 use crate::fixedpoint::QFormat;
 use crate::graph::ir::{Graph, LayerKind};
-use crate::nn::float_exec::ActStats;
+use crate::nn::float_exec::{ActStats, TensorStats, ATTN_CTX, ATTN_K, ATTN_Q, ATTN_S, ATTN_V};
 
 use super::scheme::{Granularity, QuantSpec};
 
@@ -54,6 +54,43 @@ impl QNodeWeights {
     }
 }
 
+/// Quantized parameters of the transformer ops. A separate map from
+/// `weights` keeps the Conv/Dense contract (payload layout, per-filter
+/// formats, packed-panel consumers) untouched.
+#[derive(Clone, Debug)]
+pub enum QTxWeights {
+    /// Embedding table rows quantized directly at the node's activation
+    /// format: a gather IS the output, so table payloads and output
+    /// payloads coincide.
+    Embed { table: Vec<i32> },
+    /// LayerNorm: gamma at its own per-tensor format `g_n`, beta directly
+    /// at the node's output format (it adds post-normalization).
+    Norm { gamma: Vec<i32>, g_n: i32, beta: Vec<i32> },
+    /// SelfAttention: the four projections quantized dense-style
+    /// (per-layer weight formats; each shift lands on the calibrated
+    /// internal format), the internal activation formats, and the Q0.15
+    /// 1/sqrt(head_dim) score multiplier.
+    Attn {
+        wq: QNodeWeights,
+        wk: QNodeWeights,
+        wv: QNodeWeights,
+        wo: QNodeWeights,
+        /// Fractional bits of Q / K / V payloads.
+        n_q: i32,
+        n_k: i32,
+        n_v: i32,
+        /// Scaled pre-softmax scores.
+        n_s: i32,
+        /// Softmax probabilities: always `width - 1` ([0, 1) needs no
+        /// integer bits beyond the sign).
+        n_p: i32,
+        /// Concatenated head context (the Wo projection's input).
+        n_ctx: i32,
+        /// round(2^15 / sqrt(head_dim)).
+        inv_sqrt_hd_q15: i32,
+    },
+}
+
 /// A graph plus everything the integer engine needs to run it.
 #[derive(Clone, Debug)]
 pub struct QuantizedGraph {
@@ -62,6 +99,8 @@ pub struct QuantizedGraph {
     /// Fractional bits of each node's output activation format.
     pub act_n: Vec<i32>,
     pub weights: BTreeMap<usize, QNodeWeights>,
+    /// Transformer-op parameters (Embedding / LayerNorm / SelfAttention).
+    pub tx: BTreeMap<usize, QTxWeights>,
     pub spec: QuantSpec,
 }
 
@@ -78,10 +117,24 @@ impl QuantizedGraph {
     /// i64, so charging them at payload width undercounted ROM.
     pub fn weight_bytes(&self) -> usize {
         let per = self.payload_bytes();
-        self.weights
+        let conv_dense: usize = self
+            .weights
             .values()
             .map(|qw| qw.w.len() * per + qw.b_acc.len() * 8)
-            .sum()
+            .sum();
+        let tx: usize = self
+            .tx
+            .values()
+            .map(|t| match t {
+                QTxWeights::Embed { table } => table.len() * per,
+                QTxWeights::Norm { gamma, beta, .. } => (gamma.len() + beta.len()) * per,
+                QTxWeights::Attn { wq, wk, wv, wo, .. } => [wq, wk, wv, wo]
+                    .iter()
+                    .map(|qw| qw.w.len() * per + qw.b_acc.len() * 8)
+                    .sum(),
+            })
+            .sum();
+        conv_dense + tx
     }
 
     /// Bytes per weight payload element (the C `number_t`).
@@ -91,7 +144,9 @@ impl QuantizedGraph {
 }
 
 /// Nodes whose output format must equal their input's (no requantization:
-/// max-pool "can only shrink data", ReLU, reshapes — §4.3).
+/// max-pool "can only shrink data", ReLU, reshapes — §4.3). Softmax left
+/// this list when it became a real inference-time op (transformer PR): its
+/// output is a probability vector with its own fixed format `width - 1`.
 fn passthrough(kind: &LayerKind) -> bool {
     matches!(
         kind,
@@ -99,8 +154,16 @@ fn passthrough(kind: &LayerKind) -> bool {
             | LayerKind::ReLU
             | LayerKind::Flatten
             | LayerKind::ZeroPad { .. }
-            | LayerKind::Softmax
     )
+}
+
+/// True when `id` is consumed by an Embedding node: its payloads are
+/// integer token ids and must stay at n = 0 in every quantization mode.
+fn feeds_embedding(graph: &Graph, id: usize) -> bool {
+    graph
+        .nodes
+        .iter()
+        .any(|n| matches!(n.kind, LayerKind::Embedding { .. }) && n.inputs.contains(&id))
 }
 
 /// Quantize a calibrated float graph.
@@ -115,18 +178,33 @@ pub fn quantize(graph: &Graph, stats: &ActStats, spec: QuantSpec) -> QuantizedGr
     // --- activation formats ---
     let mut act_n: Vec<i32> = vec![0; graph.nodes.len()];
     for node in &graph.nodes {
-        act_n[node.id] = match (&spec.fixed_format, passthrough(&node.kind)) {
-            (Some(q), _) => q.n,
-            (None, true) => act_n[node.inputs[0]],
-            (None, false) => {
-                if matches!(node.kind, LayerKind::GlobalAvgPool | LayerKind::AvgPool { .. }) {
-                    // Averaging cannot expand the range; keep the input
-                    // format so the engine divides payloads directly.
-                    act_n[node.inputs[0]]
-                } else {
-                    QFormat::from_max_abs(stats.max_abs[node.id], width).n
+        act_n[node.id] = match &node.kind {
+            // Token ids are integers; a network-wide Qm.n format would
+            // saturate any id >= 2^m, so the embedding input overrides
+            // even `fixed_format`.
+            LayerKind::Input if feeds_embedding(graph, node.id) => 0,
+            // A gather's output payloads ARE table payloads: the node
+            // format is the table's format.
+            LayerKind::Embedding { w } => match &spec.fixed_format {
+                Some(q) => q.n,
+                None => QFormat::from_slice(&w.data, width).n,
+            },
+            // Probabilities live in [0, 1): give them every fractional
+            // bit regardless of the calibrated range.
+            LayerKind::Softmax => width as i32 - 1,
+            kind => match (&spec.fixed_format, passthrough(kind)) {
+                (Some(q), _) => q.n,
+                (None, true) => act_n[node.inputs[0]],
+                (None, false) => {
+                    if matches!(kind, LayerKind::GlobalAvgPool | LayerKind::AvgPool { .. }) {
+                        // Averaging cannot expand the range; keep the input
+                        // format so the engine divides payloads directly.
+                        act_n[node.inputs[0]]
+                    } else {
+                        QFormat::from_max_abs(stats.max_abs[node.id], width).n
+                    }
                 }
-            }
+            },
         };
     }
 
@@ -182,7 +260,93 @@ pub fn quantize(graph: &Graph, stats: &ActStats, spec: QuantSpec) -> QuantizedGr
         weights.insert(node.id, QNodeWeights { w: payload, w_n, b_acc, shift });
     }
 
-    QuantizedGraph { graph: graph.clone(), width, act_n, weights, spec }
+    // --- transformer-op parameters ---
+    let mut tx = BTreeMap::new();
+    for node in &graph.nodes {
+        match &node.kind {
+            LayerKind::Embedding { w } => {
+                let fmt = QFormat::new(width, act_n[node.id]);
+                tx.insert(node.id, QTxWeights::Embed { table: fmt.quantize_slice(&w.data) });
+            }
+            LayerKind::LayerNorm { gamma, beta, .. } => {
+                let gfmt = match &spec.fixed_format {
+                    Some(q) => QFormat::new(width, q.n),
+                    None => QFormat::from_slice(gamma, width),
+                };
+                let bfmt = QFormat::new(width, act_n[node.id]);
+                tx.insert(
+                    node.id,
+                    QTxWeights::Norm {
+                        gamma: gfmt.quantize_slice(gamma),
+                        g_n: gfmt.n,
+                        beta: bfmt.quantize_slice(beta),
+                    },
+                );
+            }
+            LayerKind::SelfAttention { head_dim, w, .. } => {
+                let n_in = act_n[node.inputs[0]];
+                let n_out = act_n[node.id];
+                let st = stats.attn_of(node.id);
+                let internal = |t: &TensorStats| match &spec.fixed_format {
+                    Some(q) => q.n,
+                    None => QFormat::from_max_abs(t.max_abs, width).n,
+                };
+                let (n_q, n_k, n_v) =
+                    (internal(&st[ATTN_Q]), internal(&st[ATTN_K]), internal(&st[ATTN_V]));
+                let n_s = internal(&st[ATTN_S]);
+                let n_p = width as i32 - 1;
+                let n_ctx = internal(&st[ATTN_CTX]);
+                tx.insert(
+                    node.id,
+                    QTxWeights::Attn {
+                        wq: quantize_proj(&w.wq.data, &w.bq.data, n_in, n_q, width, &spec),
+                        wk: quantize_proj(&w.wk.data, &w.bk.data, n_in, n_k, width, &spec),
+                        wv: quantize_proj(&w.wv.data, &w.bv.data, n_in, n_v, width, &spec),
+                        wo: quantize_proj(&w.wo.data, &w.bo.data, n_ctx, n_out, width, &spec),
+                        n_q,
+                        n_k,
+                        n_v,
+                        n_s,
+                        n_p,
+                        n_ctx,
+                        inv_sqrt_hd_q15: (f64::powi(2.0, 15) / (*head_dim as f64).sqrt())
+                            .round() as i32,
+                    },
+                );
+            }
+            _ => {}
+        }
+    }
+
+    QuantizedGraph { graph: graph.clone(), width, act_n, weights, tx, spec }
+}
+
+/// Quantize one attention projection dense-style: per-layer weight format
+/// (per-filter would force per-column shifts through the fused attention
+/// epilogues for negligible gain at d_model <= 64), bias at the
+/// accumulator scale `n_in + n_w`, shift landing on `n_out`.
+fn quantize_proj(
+    w: &[f32],
+    b: &[f32],
+    n_in: i32,
+    n_out: i32,
+    width: u32,
+    spec: &QuantSpec,
+) -> QNodeWeights {
+    let fmt = match &spec.fixed_format {
+        Some(q) => QFormat::new(width, q.n),
+        None => QFormat::from_slice(w, width),
+    };
+    let b_acc = b
+        .iter()
+        .map(|&x| (x as f64 * f64::powi(2.0, n_in + fmt.n)).round() as i64)
+        .collect();
+    QNodeWeights {
+        w: fmt.quantize_slice(w),
+        w_n: vec![fmt.n],
+        b_acc,
+        shift: vec![n_in + fmt.n - n_out],
+    }
 }
 
 /// Mean squared quantization error of the weights (diagnostics, Fig 1 era).

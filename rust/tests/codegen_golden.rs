@@ -52,6 +52,14 @@ fn run_golden(width: u32, seed: u64) {
 }
 
 fn run_golden_graph(qg: QuantizedGraph, tag: &str) {
+    run_golden_inputs(qg, tag, |rng, len| (0..len).map(|_| rng.normal()).collect())
+}
+
+fn run_golden_inputs(
+    qg: QuantizedGraph,
+    tag: &str,
+    mut sample: impl FnMut(&mut Pcg32, usize) -> Vec<f32>,
+) {
     let Some(cc) = find_cc() else {
         eprintln!("SKIP: no host C compiler");
         return;
@@ -102,7 +110,7 @@ int main(void) {
     let ex_len: usize = qg.graph.input_shape.iter().product();
     let in_fmt = microai::fixedpoint::QFormat::new(width, qg.act_n[0]);
     for _ in 0..5 {
-        let xf: Vec<f32> = (0..ex_len).map(|_| rng.normal()).collect();
+        let xf: Vec<f32> = sample(&mut rng, ex_len);
         let payload: Vec<i32> = xf.iter().map(|&v| in_fmt.quantize(v)).collect();
         let stdin_text: String =
             payload.iter().map(|p| p.to_string()).collect::<Vec<_>>().join("\n");
@@ -131,6 +139,85 @@ int main(void) {
             "C and Rust integer engines disagree (width {width})"
         );
     }
+}
+
+/// Randomized 2-block transformer plus a token-id input sampler. The
+/// deployment pipeline keeps the output softmax (`strip_softmax = false`
+/// in the builder), so the emitted C ends in the fixed-point softmax.
+fn quantized_transformer(seed: u64, width: u32) -> (QuantizedGraph, u32, usize) {
+    const VOCAB: u32 = 24;
+    let mut g = microai::graph::build::transformer("ctx", 12, VOCAB as usize, 16, 2, 2, 2, 4);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        match &mut n.kind {
+            LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+            LayerKind::Embedding { w } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.5;
+                }
+            }
+            LayerKind::LayerNorm { gamma, beta, .. } => {
+                for v in gamma.iter_mut() {
+                    *v = 1.0 + rng.normal() * 0.2;
+                }
+                for v in beta.iter_mut() {
+                    *v = rng.normal() * 0.1;
+                }
+            }
+            LayerKind::SelfAttention { w, .. } => {
+                for t in [&mut w.wq, &mut w.wk, &mut w.wv, &mut w.wo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.3;
+                    }
+                }
+                for t in [&mut w.bq, &mut w.bk, &mut w.bv, &mut w.bo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.05;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let g = deploy_pipeline(&g);
+    let ex_len: usize = g.input_shape.iter().product();
+    let mut stats = ActStats::new(g.nodes.len());
+    for _ in 0..6 {
+        let x: Vec<f32> = (0..ex_len).map(|_| rng.below(VOCAB) as f32).collect();
+        microai::nn::float_exec::run(&g, &x, Some(&mut stats));
+    }
+    let spec = if width == 8 {
+        QuantSpec::int8_per_layer()
+    } else {
+        QuantSpec::int16_per_layer()
+    };
+    (quantize(&g, &stats, spec), VOCAB, ex_len)
+}
+
+fn run_golden_transformer(width: u32, seed: u64) {
+    let (qg, vocab, _) = quantized_transformer(seed, width);
+    // Token ids quantize exactly (the embedding input is pinned to n = 0),
+    // so the C binary and the Rust engine see identical payloads.
+    run_golden_inputs(qg, &format!("tx_{width}_{seed}"), |rng, len| {
+        (0..len).map(|_| rng.below(vocab) as f32).collect()
+    });
+}
+
+#[test]
+fn c_transformer_int8_bit_exact_with_rust_engine() {
+    run_golden_transformer(8, 3);
+}
+
+#[test]
+fn c_transformer_int16_bit_exact_with_rust_engine() {
+    run_golden_transformer(16, 4);
 }
 
 #[test]
