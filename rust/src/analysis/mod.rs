@@ -1,0 +1,1185 @@
+//! Build-time fixed-point range verifier (DESIGN.md §10): abstract
+//! interpretation over the quantized graph IR with signed-integer
+//! interval domains.
+//!
+//! For every node of a [`QuantizedGraph`] (Qm.n engine) or
+//! [`AffineQuantizedGraph`] (TFLite-scheme engine) the pass propagates a
+//! payload interval through the SAME dataflow the integer executors run
+//! (`nn::int_exec` / `nn::affine_exec`), using the actual quantized
+//! weight payloads — per-filter `Σ max(|w·x_lo|, |w·x_hi|)` bounds, not
+//! worst-case width bounds. The result is a [`VerifiedFacts`] report
+//! consumed by:
+//!
+//! - `nn::session::SessionBuilder::try_build` — a graph whose
+//!   accumulator can exceed its widest lane (the i64 MACC for Qm.n, the
+//!   `as i32` requantize cast for affine) is REJECTED at build time
+//!   instead of silently wrapping in release mode;
+//! - `nn::packed` — the i32/i64 accumulator lane per conv/dense node
+//!   (and per attention projection) becomes a proven fact instead of the
+//!   `accum_fits_i32` call-site heuristic, falling back to i64 only
+//!   where the proof fails;
+//! - `codegen` — per-node facts ship in model.c as `_Static_assert`s.
+//!
+//! Soundness argument (§10): every transfer function is a monotone
+//! over-approximation of the exact integer kernel. For MACC nodes the
+//! per-filter magnitude bound `|b| + Σ_taps max(|w·x_lo|, |w·x_hi|)`
+//! dominates EVERY partial sum under any accumulation order — the
+//! kernels tile arbitrarily, skip zero activations (contribution 0,
+//! inside the tap interval whenever 0 is a reachable payload), and SAME
+//! zero-padding taps contribute 0 (the tap interval is unioned with 0) —
+//! so lane admission by `mag ≤ i32::MAX` is safe for any loop schedule.
+//! Interval arithmetic is carried in i128 so the verifier itself cannot
+//! overflow; any bound that fails to fit the runtime's lane is a
+//! verification error, not a wrap. The primitive transfers
+//! (`fixedpoint::qformat::{rescale_interval, clamp_interval}`,
+//! `fixedpoint::lut::{exp_q_index, rsqrt_r_bounds, rsqrt_h_max}`) are
+//! property-tested against their kernels in their home modules; the
+//! per-node containment property is tested here against capture runs of
+//! both integer executors.
+
+use std::fmt;
+
+use crate::fixedpoint::lut::{exp_q_index, rsqrt_h_max, rsqrt_r_bounds, EXP_IDX_SHIFT};
+use crate::fixedpoint::qformat::{clamp_interval, rescale_interval, QFormat};
+use crate::graph::ir::{LayerKind, Node, Padding};
+use crate::quant::affine::{decompose, AffineNodeWeights, AffineQuantizedGraph, AffineTxWeights};
+use crate::quant::ptq::{QNodeWeights, QTxWeights, QuantizedGraph};
+
+/// Closed signed-integer interval `[lo, hi]` — the abstract payload /
+/// accumulator domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    pub fn new(lo: i64, hi: i64) -> Self {
+        assert!(lo <= hi, "inverted interval [{lo}, {hi}]");
+        Self { lo, hi }
+    }
+
+    #[inline]
+    pub fn contains(&self, v: i64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    pub fn union(a: Self, b: Self) -> Self {
+        Self { lo: a.lo.min(b.lo), hi: a.hi.max(b.hi) }
+    }
+
+    /// Union with the point 0 (ZeroPad fill payloads).
+    pub fn with_zero(self) -> Self {
+        Self { lo: self.lo.min(0), hi: self.hi.max(0) }
+    }
+
+    /// Magnitude bound max(|lo|, |hi|).
+    pub fn mag(&self) -> i64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Payload interval of a `width`-bit format (its saturation limits).
+    pub fn of_width(width: u32) -> Self {
+        let (lo, hi) = QFormat::new(width, 0).payload_interval();
+        Self { lo, hi }
+    }
+}
+
+impl fmt::Display for Interval {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}, {}]", self.lo, self.hi)
+    }
+}
+
+/// Accumulator lane a MACC node was proven into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    I32,
+    I64,
+}
+
+impl Lane {
+    fn admit(mag: i64) -> Lane {
+        if mag <= i32::MAX as i64 {
+            Lane::I32
+        } else {
+            Lane::I64
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Lane::I32 => "i32",
+            Lane::I64 => "i64",
+        }
+    }
+}
+
+/// Op-specific proven facts beyond the accumulator interval.
+#[derive(Clone, Debug)]
+pub enum OpCheck {
+    /// Largest exp-LUT index a softmax can compute; indices past the
+    /// table (≥ 256) underflow to probability 0 by design, so this is
+    /// reachability information, not an error.
+    ExpLutIndex { max: i64 },
+    /// Proven range of the layernorm per-row rescale shift
+    /// (`30 + h + g_n − n_out` in the Qm.n scheme, `30 + h + g_n` in the
+    /// affine scheme whose beta is pre-divided into output quanta).
+    NormShift { lo: i32, hi: i32 },
+    /// i64 magnitude bound of an internal attention-stage accumulator.
+    AttnStage { stage: &'static str, mag: i64 },
+    /// Magnitude bound of the affine zero-point fold `b_eff = b − zp·Σw`
+    /// performed at pack time in `nn::packed`.
+    BiasFold { mag: i64 },
+    /// Magnitude bound of an affine accumulator at its `as i32`
+    /// requantize cast — proven < 2^31, else the build is rejected.
+    RequantAcc { stage: &'static str, mag: i64 },
+}
+
+impl fmt::Display for OpCheck {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpCheck::ExpLutIndex { max } => write!(f, "exp-lut idx<={max}"),
+            OpCheck::NormShift { lo, hi } => write!(f, "norm-shift in [{lo}, {hi}]"),
+            OpCheck::AttnStage { stage, mag } => write!(f, "{stage} |acc|<={mag}"),
+            OpCheck::BiasFold { mag } => write!(f, "|b_eff|<={mag}"),
+            OpCheck::RequantAcc { stage, mag } => write!(f, "{stage} requant |acc|<={mag}"),
+        }
+    }
+}
+
+/// Per-node proven facts.
+#[derive(Clone, Debug)]
+pub struct NodeFacts {
+    pub id: usize,
+    pub name: String,
+    pub kind: &'static str,
+    /// Proven payload interval of the node output.
+    pub out: Interval,
+    /// Proven accumulator value interval (bias included), MACC-like nodes.
+    pub acc: Option<Interval>,
+    /// Order-free bound on |any partial sum| of the accumulation — the
+    /// lane-admission fact (covers every tiling / sparsity-skip order).
+    pub acc_mag: Option<i64>,
+    /// Proven accumulator lane (conv/dense nodes only).
+    pub lane: Option<Lane>,
+    /// Per-projection lanes (wq, wk, wv, wo) of a self-attention node —
+    /// the packed lowering packs each projection separately.
+    pub attn_lanes: Option<[Lane; 4]>,
+    /// Whether the output clamp / requantize saturation is reachable
+    /// under the proven pre-clamp interval (advisory, not an error).
+    pub saturates: bool,
+    pub checks: Vec<OpCheck>,
+}
+
+impl NodeFacts {
+    fn flow(node: &Node, out: Interval) -> Self {
+        Self {
+            id: node.id,
+            name: node.name.clone(),
+            kind: node.kind.type_name(),
+            out,
+            acc: None,
+            acc_mag: None,
+            lane: None,
+            attn_lanes: None,
+            saturates: false,
+            checks: Vec::new(),
+        }
+    }
+}
+
+/// The report a verification pass attaches to a `Plan`.
+#[derive(Clone, Debug)]
+pub struct VerifiedFacts {
+    /// Which analyzer produced the facts ("fixed-qmn" / "affine-i8"), or
+    /// "unverified" for backends without integer accumulators.
+    pub backend: &'static str,
+    /// One entry per graph node (empty when unverified).
+    pub nodes: Vec<NodeFacts>,
+}
+
+impl VerifiedFacts {
+    /// Trivial facts for backends with nothing to prove (float32). Lane
+    /// queries return `None`, so weight packing keeps its legacy
+    /// heuristic.
+    pub fn unverified() -> Self {
+        Self { backend: "unverified", nodes: Vec::new() }
+    }
+
+    pub fn node(&self, id: usize) -> Option<&NodeFacts> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+
+    /// Proven lane of a conv/dense node: `Some(true)` = i32 admitted.
+    /// `None` when the node has no MACC lane or the graph is unverified.
+    pub fn lane_is_i32(&self, id: usize) -> Option<bool> {
+        self.node(id)?.lane.map(|l| l == Lane::I32)
+    }
+
+    /// Proven per-projection lanes (wq, wk, wv, wo) of an attention node.
+    pub fn attn_lanes_i32(&self, id: usize) -> Option<[bool; 4]> {
+        self.node(id)?.attn_lanes.map(|ls| ls.map(|l| l == Lane::I32))
+    }
+
+    /// Human-readable report (README: "Reading the VerifiedFacts report").
+    pub fn render_report(&self) -> String {
+        let mut i32_lanes = 0usize;
+        let mut i64_lanes = 0usize;
+        let mut saturable = 0usize;
+        for n in &self.nodes {
+            match n.lane {
+                Some(Lane::I32) => i32_lanes += 1,
+                Some(Lane::I64) => i64_lanes += 1,
+                None => {}
+            }
+            if n.saturates {
+                saturable += 1;
+            }
+        }
+        let mut s = format!(
+            "VerifiedFacts ({}): {} nodes, lanes i32={} i64={}, {} saturable clamp(s)\n",
+            self.backend,
+            self.nodes.len(),
+            i32_lanes,
+            i64_lanes,
+            saturable,
+        );
+        for n in &self.nodes {
+            s.push_str(&format!("  [{:>2}] {:<12} {:<13} out {}", n.id, n.name, n.kind, n.out));
+            if let (Some(acc), Some(mag)) = (n.acc, n.acc_mag) {
+                s.push_str(&format!("  acc {acc} |part|<={mag}"));
+            }
+            if let Some(l) = n.lane {
+                s.push_str(&format!("  lane {}", l.label()));
+            }
+            if let Some(ls) = n.attn_lanes {
+                s.push_str(&format!(
+                    "  proj q/k/v/o {}/{}/{}/{}",
+                    ls[0].label(),
+                    ls[1].label(),
+                    ls[2].label(),
+                    ls[3].label()
+                ));
+            }
+            if n.saturates {
+                s.push_str("  SAT");
+            }
+            for c in &n.checks {
+                s.push_str(&format!("  {c}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// A range proof failed: the graph can overflow an integer lane at
+/// runtime. `SessionBuilder::try_build` surfaces this instead of letting
+/// release-mode arithmetic wrap silently.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VerifyError {
+    pub node: String,
+    pub reason: String,
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "range verifier: node `{}`: {}", self.node, self.reason)
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+fn verr(node: &Node, reason: String) -> VerifyError {
+    VerifyError { node: format!("{} ({})", node.name, node.kind.type_name()), reason }
+}
+
+fn fit64(node: &Node, v: i128, what: &str) -> Result<i64, VerifyError> {
+    i64::try_from(v).map_err(|_| {
+        verr(node, format!("{what}: bound {v} exceeds the wide i64 accumulator lane"))
+    })
+}
+
+/// Interval transfer of `ops::rescale` over i128 accumulator bounds;
+/// errors when an endpoint escapes i64 or a left shift would drop high
+/// bits in the runtime's i64 lane.
+fn rescale_iv(
+    node: &Node,
+    lo: i128,
+    hi: i128,
+    shift: i32,
+    what: &str,
+) -> Result<(i128, i128), VerifyError> {
+    let lo = fit64(node, lo, what)?;
+    let hi = fit64(node, hi, what)?;
+    let (rlo, rhi) = rescale_interval(lo, hi, shift).ok_or_else(|| {
+        verr(node, format!("{what}: rescale by {shift} overflows the i64 lane on [{lo}, {hi}]"))
+    })?;
+    Ok((rlo as i128, rhi as i128))
+}
+
+/// Clamp-transfer to a width's saturation limits; reports whether the
+/// clamp is reachable. Pre-clamp bounds may exceed i64 (e.g. the Add
+/// realignment sum), so the clamp itself runs in i128.
+fn clamp_iv(lo: i128, hi: i128, width: u32) -> (Interval, bool) {
+    let (llo, lhi) = QFormat::new(width, 0).payload_interval();
+    if lo >= llo as i128 && hi <= lhi as i128 {
+        let ((clo, chi), sat) = clamp_interval(lo as i64, hi as i64, width);
+        (Interval::new(clo, chi), sat)
+    } else {
+        let clo = lo.clamp(llo as i128, lhi as i128) as i64;
+        let chi = hi.clamp(llo as i128, lhi as i128) as i64;
+        (Interval::new(clo, chi), true)
+    }
+}
+
+/// Clamped upper payload bound of a softmax probability at `n_out`
+/// fractional bits: `p = (e << n_out) / sum ≤ 2^n_out` since `e ≤ sum`,
+/// then the width clamp applies.
+fn prob_hi(n_out: i32, width: u32) -> i64 {
+    let (_, hi) = QFormat::new(width, 0).payload_interval();
+    (1i64 << n_out.clamp(0, 62)).min(hi)
+}
+
+/// Proven exp-LUT index bound for a softmax whose (max-subtracted) input
+/// distance is at most `span` payloads at format `n_in`.
+fn softmax_lut_fact(node: &Node, span: i64, n_in: i32) -> Result<i64, VerifyError> {
+    fit64(node, (span as i128) << EXP_IDX_SHIFT, "softmax exp-LUT argument")?;
+    Ok(exp_q_index(span, n_in))
+}
+
+/// (taps, filters) of a conv/dense weight in the packed column layout.
+fn mac_dims(kind: &LayerKind) -> (usize, usize) {
+    match kind {
+        LayerKind::Conv { w, .. } => {
+            (w.shape[..w.shape.len() - 1].iter().product(), *w.shape.last().unwrap())
+        }
+        LayerKind::Dense { w, .. } => (w.shape[0], w.shape[1]),
+        _ => unreachable!("mac_dims on non-MACC node"),
+    }
+}
+
+fn is_same_conv(kind: &LayerKind) -> bool {
+    matches!(kind, LayerKind::Conv { padding: Padding::Same, .. })
+}
+
+/// Result of the shared fixed-point MACC transfer.
+struct MacFacts {
+    acc: Interval,
+    mag: i64,
+    out: Interval,
+    saturates: bool,
+}
+
+/// Exact per-filter accumulator bounds for a Qm.n conv/dense/projection:
+/// weights in (taps, filters) layout, input payloads in `x`, optional
+/// zero-padding taps, per-filter (or uniform) rescale shift, clamp to
+/// `width`, optional fused ReLU.
+fn mac_transfer_fixed(
+    node: &Node,
+    qw: &QNodeWeights,
+    taps: usize,
+    filters: usize,
+    x: Interval,
+    pad_zero: bool,
+    relu: bool,
+    width: u32,
+) -> Result<MacFacts, VerifyError> {
+    let (xlo, xhi) = (x.lo as i128, x.hi as i128);
+    let mut acc_lo = i128::MAX;
+    let mut acc_hi = i128::MIN;
+    let mut mag_all = 0i64;
+    let mut out_all: Option<Interval> = None;
+    let mut sat_all = false;
+    for f in 0..filters {
+        let b = qw.b_acc[f] as i128;
+        let (mut lo, mut hi, mut mag) = (b, b, b.abs());
+        for t in 0..taps {
+            let w = qw.w[t * filters + f] as i128;
+            let (c1, c2) = (w * xlo, w * xhi);
+            let (mut clo, mut chi) = if c1 <= c2 { (c1, c2) } else { (c2, c1) };
+            if pad_zero {
+                clo = clo.min(0);
+                chi = chi.max(0);
+            }
+            lo += clo;
+            hi += chi;
+            mag += clo.abs().max(chi.abs());
+        }
+        // Every partial sum (any order, bias first or last, zero skips)
+        // is bounded by mag; the runtime's widest lane is i64.
+        let mag = fit64(node, mag, "accumulator partial-sum bound")?;
+        let (plo, phi) = rescale_iv(node, lo, hi, qw.shift_for(f), "requantize shift")?;
+        let (mut out_f, sat_f) = clamp_iv(plo, phi, width);
+        if relu {
+            out_f = Interval::new(out_f.lo.max(0), out_f.hi.max(0));
+        }
+        acc_lo = acc_lo.min(lo);
+        acc_hi = acc_hi.max(hi);
+        mag_all = mag_all.max(mag);
+        sat_all |= sat_f;
+        out_all = Some(match out_all {
+            Some(o) => Interval::union(o, out_f),
+            None => out_f,
+        });
+    }
+    let acc = Interval::new(
+        fit64(node, acc_lo, "accumulator interval")?,
+        fit64(node, acc_hi, "accumulator interval")?,
+    );
+    Ok(MacFacts {
+        acc,
+        mag: mag_all,
+        out: out_all.expect("MACC node with zero filters"),
+        saturates: sat_all,
+    })
+}
+
+/// Result of the shared layernorm transfer.
+struct NormFacts {
+    out: Interval,
+    mag: i64,
+    sh_lo: i32,
+    sh_hi: i32,
+    saturates: bool,
+}
+
+/// Shared fixed/affine layernorm transfer. The per-row rescale shift is
+/// `30 + h + g_n + extra_sh` (`extra_sh = −n_out` for Qm.n whose beta
+/// sits at n_out, 0 for the affine scheme whose beta is pre-divided into
+/// output quanta); `h` is bounded via `rsqrt_h_max` over the proven
+/// variance range, and the row accumulator `d·r·gamma` must fit i64.
+#[allow(clippy::too_many_arguments)]
+fn norm_transfer(
+    node: &Node,
+    x: Interval,
+    c: usize,
+    gamma: &[i32],
+    g_n: i32,
+    beta_lo: i128,
+    beta_hi: i128,
+    extra_sh: i32,
+    width: u32,
+) -> Result<NormFacts, VerifyError> {
+    let span = (x.hi - x.lo) as i128;
+    // mean = trunc(Σ_c x / c) stays inside the integer-endpoint interval,
+    // so |d| = |x − mean| ≤ span; all three row accumulators (mean sum,
+    // variance sum, d·r product chain) must fit i64.
+    fit64(node, c as i128 * x.mag() as i128, "layernorm mean accumulator")?;
+    fit64(node, c as i128 * span * span, "layernorm variance accumulator")?;
+    let v_max = fit64(node, span * span + 1, "layernorm rsqrt argument")?;
+    let h_max = rsqrt_h_max(v_max);
+    let (_, r_max) = rsqrt_r_bounds();
+    fit64(node, span * r_max as i128, "layernorm normalized row value")?;
+    let g_max = gamma.iter().map(|v| (*v as i128).abs()).max().unwrap_or(0);
+    let mag = fit64(node, span * r_max as i128 * g_max, "layernorm row accumulator")?;
+    let sh_lo = 30 + g_n + extra_sh; // h = 0
+    let sh_hi = 30 + h_max + g_n + extra_sh;
+    // Widest pre-clamp interval at the smallest shift.
+    let (plo, phi) =
+        rescale_iv(node, -(mag as i128), mag as i128, sh_lo, "layernorm output rescale")?;
+    let (out, sat) = clamp_iv(plo + beta_lo, phi + beta_hi, width);
+    Ok(NormFacts { out, mag, sh_lo, sh_hi, saturates: sat })
+}
+
+/// Abstract-interpretation pass over a Qm.n quantized graph. Returns the
+/// proven per-node facts, or an error naming the first node whose
+/// accumulator/shift can escape its integer lane.
+pub fn analyze_fixed(qg: &QuantizedGraph) -> Result<VerifiedFacts, VerifyError> {
+    let g = &qg.graph;
+    let width = qg.width;
+    let mut out: Vec<Interval> = Vec::with_capacity(g.nodes.len());
+    let mut nodes: Vec<NodeFacts> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let nf = match &node.kind {
+            LayerKind::Input => NodeFacts::flow(node, Interval::of_width(width)),
+            LayerKind::Conv { .. } | LayerKind::Dense { .. } => {
+                let (taps, filters) = mac_dims(&node.kind);
+                let x = out[node.inputs[0]];
+                let m = mac_transfer_fixed(
+                    node,
+                    &qg.weights[&node.id],
+                    taps,
+                    filters,
+                    x,
+                    is_same_conv(&node.kind),
+                    node.fused_relu,
+                    width,
+                )?;
+                let mut nf = NodeFacts::flow(node, m.out);
+                nf.acc = Some(m.acc);
+                nf.acc_mag = Some(m.mag);
+                nf.lane = Some(Lane::admit(m.mag));
+                nf.saturates = m.saturates;
+                nf
+            }
+            LayerKind::MaxPool { .. } => {
+                let x = out[node.inputs[0]];
+                let o = if node.fused_relu {
+                    Interval::new(x.lo.max(0), x.hi.max(0))
+                } else {
+                    x
+                };
+                NodeFacts::flow(node, o)
+            }
+            LayerKind::AvgPool { .. } | LayerKind::GlobalAvgPool => {
+                // Truncating integer mean of payloads in [lo, hi] stays in
+                // [lo, hi] (integer endpoints); the i64 window sum is
+                // bounded by elems·mag.
+                let x = out[node.inputs[0]];
+                let elems: usize = g.nodes[node.inputs[0]].out_shape.iter().product();
+                fit64(node, elems as i128 * x.mag() as i128, "pool window sum")?;
+                NodeFacts::flow(node, x)
+            }
+            LayerKind::Add => {
+                let (ia, ib) = (node.inputs[0], node.inputs[1]);
+                let n_out = qg.act_n[node.id];
+                let (a, b) = (out[ia], out[ib]);
+                let (alo, ahi) = rescale_iv(
+                    node, a.lo as i128, a.hi as i128, qg.act_n[ia] - n_out, "add lhs realign",
+                )?;
+                let (blo, bhi) = rescale_iv(
+                    node, b.lo as i128, b.hi as i128, qg.act_n[ib] - n_out, "add rhs realign",
+                )?;
+                let (mut o, sat) = clamp_iv(alo + blo, ahi + bhi, width);
+                if node.fused_relu {
+                    o = Interval::new(o.lo.max(0), o.hi.max(0));
+                }
+                let mut nf = NodeFacts::flow(node, o);
+                nf.saturates = sat;
+                nf
+            }
+            LayerKind::ReLU => {
+                let x = out[node.inputs[0]];
+                NodeFacts::flow(node, Interval::new(x.lo.max(0), x.hi.max(0)))
+            }
+            LayerKind::Flatten => NodeFacts::flow(node, out[node.inputs[0]]),
+            LayerKind::ZeroPad { .. } => NodeFacts::flow(node, out[node.inputs[0]].with_zero()),
+            LayerKind::Softmax => {
+                let x = out[node.inputs[0]];
+                let n_out = qg.act_n[node.id];
+                let jmax = softmax_lut_fact(node, x.hi - x.lo, qg.act_n[node.inputs[0]])?;
+                let p_hi = prob_hi(n_out, width);
+                let mut nf = NodeFacts::flow(node, Interval::new(0, p_hi));
+                nf.saturates = (1i64 << n_out.clamp(0, 62)) > p_hi;
+                nf.checks.push(OpCheck::ExpLutIndex { max: jmax });
+                nf
+            }
+            LayerKind::Embedding { .. } => {
+                let QTxWeights::Embed { table } = &qg.tx[&node.id] else {
+                    return Err(verr(node, "embedding node without Embed params".into()));
+                };
+                let lo = table.iter().copied().min().unwrap_or(0) as i64;
+                let hi = table.iter().copied().max().unwrap_or(0) as i64;
+                NodeFacts::flow(node, Interval::new(lo, hi))
+            }
+            LayerKind::LayerNorm { .. } => {
+                let QTxWeights::Norm { gamma, g_n, beta } = &qg.tx[&node.id] else {
+                    return Err(verr(node, "layernorm node without Norm params".into()));
+                };
+                let x = out[node.inputs[0]];
+                let c = *g.nodes[node.inputs[0]].out_shape.last().unwrap();
+                let beta_lo = beta.iter().copied().min().unwrap_or(0) as i128;
+                let beta_hi = beta.iter().copied().max().unwrap_or(0) as i128;
+                let ln = norm_transfer(
+                    node, x, c, gamma, *g_n, beta_lo, beta_hi, -qg.act_n[node.id], width,
+                )?;
+                let mut nf = NodeFacts::flow(node, ln.out);
+                nf.acc = Some(Interval::new(-ln.mag, ln.mag));
+                nf.acc_mag = Some(ln.mag);
+                nf.saturates = ln.saturates;
+                nf.checks.push(OpCheck::NormShift { lo: ln.sh_lo, hi: ln.sh_hi });
+                nf
+            }
+            LayerKind::SelfAttention { head_dim, .. } => {
+                let QTxWeights::Attn {
+                    wq, wk, wv, wo, n_q, n_k, n_v, n_s, n_p, n_ctx, inv_sqrt_hd_q15,
+                } = &qg.tx[&node.id]
+                else {
+                    return Err(verr(node, "attention node without Attn params".into()));
+                };
+                let x = out[node.inputs[0]];
+                let ish = &g.nodes[node.inputs[0]].out_shape;
+                let (seq, dm) = (ish[0], ish[1]);
+                let q = mac_transfer_fixed(node, wq, dm, dm, x, false, false, width)?;
+                let k = mac_transfer_fixed(node, wk, dm, dm, x, false, false, width)?;
+                let v = mac_transfer_fixed(node, wv, dm, dm, x, false, false, width)?;
+                // score = rescale(Σ_hd q·k · inv_sqrt_hd_q15, n_q+n_k+15−n_s):
+                // both the raw i64 accumulator and its Q0.15 scaling must
+                // fit the runtime lane.
+                let s_acc = *head_dim as i128 * q.out.mag() as i128 * k.out.mag() as i128;
+                fit64(node, s_acc, "attention score accumulator")?;
+                let s_scaled = s_acc * *inv_sqrt_hd_q15 as i128;
+                let s_mag = fit64(node, s_scaled, "attention scaled score")?;
+                let (slo, shi) =
+                    rescale_iv(node, -s_scaled, s_scaled, n_q + n_k + 15 - n_s, "score rescale")?;
+                let (s_iv, s_sat) = clamp_iv(slo, shi, width);
+                // Probability payloads (softmax over scores at n_s → n_p):
+                // each p ≤ 2^n_p (width-clamped), and one row sums to at
+                // most 2^n_p — the floor-division mass bound.
+                let jmax = softmax_lut_fact(node, s_iv.hi - s_iv.lo, *n_s)?;
+                let p_hi = prob_hi(*n_p, width);
+                let mass = (seq as i128 * p_hi as i128).min(1i128 << (*n_p).clamp(0, 62));
+                // ctx = rescale(Σ_seq p·v, n_p+n_v−n_ctx); p ≥ 0 keeps
+                // every prefix sum inside the total's interval.
+                let clo = (mass * v.out.lo as i128).min(0);
+                let chi = (mass * v.out.hi as i128).max(0);
+                let c_mag =
+                    fit64(node, chi.abs().max(clo.abs()), "attention context accumulator")?;
+                let (rlo, rhi) = rescale_iv(node, clo, chi, n_p + n_v - n_ctx, "context rescale")?;
+                let (ctx_iv, c_sat) = clamp_iv(rlo, rhi, width);
+                let o = mac_transfer_fixed(node, wo, dm, dm, ctx_iv, false, false, width)?;
+                let mut nf = NodeFacts::flow(node, o.out);
+                nf.acc = Some(o.acc);
+                nf.acc_mag = Some(o.mag);
+                nf.attn_lanes = Some([
+                    Lane::admit(q.mag),
+                    Lane::admit(k.mag),
+                    Lane::admit(v.mag),
+                    Lane::admit(o.mag),
+                ]);
+                nf.saturates =
+                    q.saturates || k.saturates || v.saturates || s_sat || c_sat || o.saturates;
+                nf.checks.push(OpCheck::AttnStage { stage: "score", mag: s_mag });
+                nf.checks.push(OpCheck::AttnStage { stage: "ctx", mag: c_mag });
+                nf.checks.push(OpCheck::ExpLutIndex { max: jmax });
+                nf
+            }
+            LayerKind::BatchNorm { .. } => {
+                return Err(verr(
+                    node,
+                    "BatchNorm must be folded before integer execution (run deploy_pipeline)"
+                        .into(),
+                ));
+            }
+        };
+        out.push(nf.out);
+        nodes.push(nf);
+    }
+    Ok(VerifiedFacts { backend: "fixed-qmn", nodes })
+}
+
+// ---------------------------------------------------------------------------
+// Affine (TFLite-scheme) analyzer
+// ---------------------------------------------------------------------------
+
+/// Result of the shared affine MACC transfer.
+struct AffMacFacts {
+    acc: Interval,
+    mag: i64,
+    fold_mag: i64,
+    requant_mag: i64,
+    out: Interval,
+}
+
+/// Exact per-filter bounds for an affine conv/dense/projection. The
+/// runtime computes `acc = b + Σ (x − zp_in)·w` (staged per call) or
+/// equivalently `b_eff + Σ x·w` with `b_eff = b − zp_in·Σw` (prepacked
+/// fold) — identical totals — then casts `acc as i32` into gemmlowp
+/// requantization. Both orders' partial sums are bounded here; the cast
+/// demands |acc| ≤ i32::MAX or the build is rejected.
+#[allow(clippy::too_many_arguments)]
+fn mac_transfer_affine(
+    node: &Node,
+    qw: &AffineNodeWeights,
+    taps: usize,
+    filters: usize,
+    x: Interval,
+    zp_in: i32,
+    pad_zero: bool,
+    relu: bool,
+    zp_out: i32,
+) -> Result<AffMacFacts, VerifyError> {
+    // Staged operand (x − zp) interval; SAME padding taps contribute
+    // exactly 0 in both lowerings (skipped in the staged path, raw
+    // payload zp_in cancelling against the fold in the prepacked path).
+    let (dlo, dhi) = ((x.lo - zp_in as i64) as i128, (x.hi - zp_in as i64) as i128);
+    let x_raw_mag = x.mag().max(zp_in.unsigned_abs() as i64) as i128;
+    let d_mag = dlo.abs().max(dhi.abs());
+    let mut acc_lo = i128::MAX;
+    let mut acc_hi = i128::MIN;
+    let mut mag_all = 0i64;
+    let mut fold_all = 0i64;
+    let mut req_all = 0i64;
+    for f in 0..filters {
+        let b = qw.b[f] as i128;
+        let mut col_sum = 0i128;
+        let mut abs_col = 0i128;
+        let (mut lo, mut hi) = (b, b);
+        for t in 0..taps {
+            let w = qw.w[t * filters + f] as i128;
+            col_sum += w;
+            abs_col += w.abs();
+            let (c1, c2) = (w * dlo, w * dhi);
+            let (mut clo, mut chi) = if c1 <= c2 { (c1, c2) } else { (c2, c1) };
+            if pad_zero {
+                clo = clo.min(0);
+                chi = chi.max(0);
+            }
+            lo += clo;
+            hi += chi;
+        }
+        // Pack-time zero-point fold must not wrap i64.
+        let fold = fit64(node, (b - zp_in as i128 * col_sum).abs(), "zero-point bias fold")?;
+        // Order-free i64 partial-sum bound covering BOTH lowerings: the
+        // prepacked path accumulates raw payloads onto b_eff, the staged
+        // path (x − zp) operands onto b.
+        let mag = fit64(
+            node,
+            (fold as i128 + abs_col * x_raw_mag).max(b.abs() + abs_col * d_mag),
+            "affine accumulator partial-sum bound",
+        )?;
+        // The gemmlowp requantize consumes the total through an `as i32`
+        // cast — a total outside i32 wraps silently in release builds.
+        let req = lo.abs().max(hi.abs());
+        if req > i32::MAX as i128 {
+            return Err(verr(
+                node,
+                format!(
+                    "affine accumulator can reach magnitude {req} (> i32::MAX) at the \
+                     requantize cast — the graph would wrap silently at runtime"
+                ),
+            ));
+        }
+        acc_lo = acc_lo.min(lo);
+        acc_hi = acc_hi.max(hi);
+        mag_all = mag_all.max(mag);
+        fold_all = fold_all.max(fold);
+        req_all = req_all.max(req as i64);
+    }
+    // requantize clamps to [-128, 127]; fused ReLU floors at zp_out.
+    let out = if relu {
+        Interval::new((zp_out as i64).min(127), 127)
+    } else {
+        Interval::new(-128, 127)
+    };
+    Ok(AffMacFacts {
+        acc: Interval::new(acc_lo as i64, acc_hi as i64),
+        mag: mag_all,
+        fold_mag: fold_all,
+        requant_mag: req_all,
+        out,
+    })
+}
+
+fn check_requant(node: &Node, stage: &str, mag: i128) -> Result<i64, VerifyError> {
+    if mag > i32::MAX as i128 {
+        return Err(verr(
+            node,
+            format!(
+                "{stage}: accumulator can reach magnitude {mag} (> i32::MAX) at the \
+                 requantize cast — the graph would wrap silently at runtime"
+            ),
+        ));
+    }
+    Ok(mag as i64)
+}
+
+/// Affine softmax exp-LUT index bound, mirroring `softmax_affine_row`:
+/// `d15 = (dist · sm_mult) >> (16 + sm_shift)` then the Q0.15 lookup.
+fn affine_softmax_lut_fact(
+    node: &Node,
+    span: i64,
+    sm_mult: i32,
+    sm_shift: i32,
+) -> Result<i64, VerifyError> {
+    let d15 = (span * sm_mult as i64) >> (16 + sm_shift).clamp(0, 63);
+    softmax_lut_fact(node, d15, 15)
+}
+
+/// Abstract-interpretation pass over an affine (TFLite-scheme) quantized
+/// graph. Every payload is an int8 in [-128, 127] by construction (every
+/// producer requantizes or clamps), so the proofs concern the i64 MACC
+/// partial sums, the pack-time zero-point fold, and the `as i32`
+/// requantize casts.
+pub fn analyze_affine(aq: &AffineQuantizedGraph) -> Result<VerifiedFacts, VerifyError> {
+    let g = &aq.graph;
+    let i8_full = Interval::new(-128, 127);
+    let mut out: Vec<Interval> = Vec::with_capacity(g.nodes.len());
+    let mut nodes: Vec<NodeFacts> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let nf = match &node.kind {
+            LayerKind::Input => NodeFacts::flow(node, i8_full),
+            LayerKind::Conv { .. } | LayerKind::Dense { .. } => {
+                let (taps, filters) = mac_dims(&node.kind);
+                let src = node.inputs[0];
+                let m = mac_transfer_affine(
+                    node,
+                    &aq.weights[&node.id],
+                    taps,
+                    filters,
+                    out[src],
+                    aq.act[src].zero_point,
+                    is_same_conv(&node.kind),
+                    node.fused_relu,
+                    aq.act[node.id].zero_point,
+                )?;
+                let mut nf = NodeFacts::flow(node, m.out);
+                nf.acc = Some(m.acc);
+                nf.acc_mag = Some(m.mag);
+                nf.lane = Some(Lane::I64); // affine panels always pack i64
+                nf.saturates = true; // the requantize clamp defines the output
+                nf.checks.push(OpCheck::BiasFold { mag: m.fold_mag });
+                nf.checks.push(OpCheck::RequantAcc { stage: "out", mag: m.requant_mag });
+                nf
+            }
+            LayerKind::MaxPool { .. } => {
+                let x = out[node.inputs[0]];
+                let zp = aq.act[node.id].zero_point as i64;
+                let o = if node.fused_relu {
+                    Interval::new(x.lo.max(zp), x.hi.max(zp))
+                } else {
+                    x
+                };
+                NodeFacts::flow(node, o)
+            }
+            LayerKind::AvgPool { .. } | LayerKind::GlobalAvgPool => {
+                // Rounding integer means stay inside the integer-endpoint
+                // input interval; the i64 window sum is bounded.
+                let x = out[node.inputs[0]];
+                let elems: usize = g.nodes[node.inputs[0]].out_shape.iter().product();
+                fit64(node, elems as i128 * x.mag() as i128, "pool window sum")?;
+                NodeFacts::flow(node, x)
+            }
+            LayerKind::Add => {
+                // Scale-ratio add, clamped to [-128, 127]; fused ReLU
+                // floors at the output zero point.
+                let zp = aq.act[node.id].zero_point as i64;
+                let o = if node.fused_relu {
+                    Interval::new(zp.min(127), 127)
+                } else {
+                    i8_full
+                };
+                NodeFacts::flow(node, o)
+            }
+            LayerKind::ReLU => {
+                let x = out[node.inputs[0]];
+                let zp = aq.act[node.id].zero_point as i64;
+                NodeFacts::flow(node, Interval::new(x.lo.max(zp), x.hi.max(zp)))
+            }
+            LayerKind::Flatten => NodeFacts::flow(node, out[node.inputs[0]]),
+            LayerKind::ZeroPad { .. } => {
+                // The pad fill is the real value 0 = payload zp.
+                let x = out[node.inputs[0]];
+                let zp = aq.act[node.id].zero_point as i64;
+                NodeFacts::flow(node, Interval::new(x.lo.min(zp), x.hi.max(zp)))
+            }
+            LayerKind::Softmax => {
+                let x = out[node.inputs[0]];
+                let (sm_mult, sm_shift) = decompose(aq.act[node.inputs[0]].scale as f64);
+                let jmax = affine_softmax_lut_fact(node, x.hi - x.lo, sm_mult, sm_shift)?;
+                let mut nf = NodeFacts::flow(node, i8_full);
+                nf.checks.push(OpCheck::ExpLutIndex { max: jmax });
+                nf
+            }
+            LayerKind::Embedding { .. } => {
+                let AffineTxWeights::Embed { table } = &aq.tx[&node.id] else {
+                    return Err(verr(node, "embedding node without Embed params".into()));
+                };
+                let lo = table.iter().copied().min().unwrap_or(0) as i64;
+                let hi = table.iter().copied().max().unwrap_or(0) as i64;
+                NodeFacts::flow(node, Interval::new(lo, hi))
+            }
+            LayerKind::LayerNorm { .. } => {
+                let AffineTxWeights::Norm { gamma, g_n, beta } = &aq.tx[&node.id] else {
+                    return Err(verr(node, "layernorm node without Norm params".into()));
+                };
+                let x = out[node.inputs[0]];
+                let c = *g.nodes[node.inputs[0]].out_shape.last().unwrap();
+                let zp = aq.act[node.id].zero_point as i128;
+                let beta_lo = beta.iter().copied().min().unwrap_or(0) as i128 + zp;
+                let beta_hi = beta.iter().copied().max().unwrap_or(0) as i128 + zp;
+                // The affine layernorm clamps straight to int8; beta is
+                // pre-divided into output quanta (no −n_out term).
+                let ln = norm_transfer(node, x, c, gamma, *g_n, beta_lo, beta_hi, 0, 8)?;
+                let mut nf = NodeFacts::flow(node, ln.out);
+                nf.acc = Some(Interval::new(-ln.mag, ln.mag));
+                nf.acc_mag = Some(ln.mag);
+                nf.saturates = ln.saturates;
+                nf.checks.push(OpCheck::NormShift { lo: ln.sh_lo, hi: ln.sh_hi });
+                nf
+            }
+            LayerKind::SelfAttention { head_dim, .. } => {
+                let AffineTxWeights::Attn {
+                    wq, wk, wv, wo, q, k, v, ctx, sm_mult, sm_shift, ..
+                } = &aq.tx[&node.id]
+                else {
+                    return Err(verr(node, "attention node without Attn params".into()));
+                };
+                let x = out[node.inputs[0]];
+                let ish = &g.nodes[node.inputs[0]].out_shape;
+                let (seq, dm) = (ish[0], ish[1]);
+                let zp_in = aq.act[node.inputs[0]].zero_point;
+                let mq =
+                    mac_transfer_affine(node, wq, dm, dm, x, zp_in, false, false, q.zero_point)?;
+                let mk =
+                    mac_transfer_affine(node, wk, dm, dm, x, zp_in, false, false, k.zero_point)?;
+                let mv =
+                    mac_transfer_affine(node, wv, dm, dm, x, zp_in, false, false, v.zero_point)?;
+                // score acc = Σ_hd (q − zp_q)(k − zp_k), consumed `as i32`.
+                let dq = 128i128 + q.zero_point.unsigned_abs() as i128;
+                let dk = 128i128 + k.zero_point.unsigned_abs() as i128;
+                let s_mag = check_requant(node, "attention score", *head_dim as i128 * dq * dk)?;
+                // Probability rows arrive at prob_params (zero point −128),
+                // staged as (p + 128) ∈ [0, 255]; ctx acc = Σ_seq
+                // (p + 128)(v − zp_v), consumed `as i32`.
+                let jmax = affine_softmax_lut_fact(node, 255, *sm_mult, *sm_shift)?;
+                let dv = 128i128 + v.zero_point.unsigned_abs() as i128;
+                let c_mag = check_requant(node, "attention context", seq as i128 * 255 * dv)?;
+                let mo = mac_transfer_affine(
+                    node,
+                    wo,
+                    dm,
+                    dm,
+                    i8_full,
+                    ctx.zero_point,
+                    false,
+                    false,
+                    aq.act[node.id].zero_point,
+                )?;
+                let mut nf = NodeFacts::flow(node, mo.out);
+                nf.acc = Some(mo.acc);
+                nf.acc_mag = Some(mo.mag);
+                nf.attn_lanes = Some([Lane::I64; 4]);
+                nf.saturates = true;
+                nf.checks.push(OpCheck::RequantAcc { stage: "score", mag: s_mag });
+                nf.checks.push(OpCheck::RequantAcc { stage: "ctx", mag: c_mag });
+                nf.checks.push(OpCheck::BiasFold {
+                    mag: mq.fold_mag.max(mk.fold_mag).max(mv.fold_mag).max(mo.fold_mag),
+                });
+                nf.checks.push(OpCheck::ExpLutIndex { max: jmax });
+                nf
+            }
+            LayerKind::BatchNorm { .. } => {
+                return Err(verr(
+                    node,
+                    "BatchNorm must be folded before integer execution (run deploy_pipeline)"
+                        .into(),
+                ));
+            }
+        };
+        out.push(nf.out);
+        nodes.push(nf);
+    }
+    Ok(VerifiedFacts { backend: "affine-i8", nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build::transformer;
+    use crate::graph::deploy_pipeline;
+    use crate::graph::ir::Graph;
+    use crate::nn::int_exec::{calib, random_inputs, randomized_resnet};
+    use crate::nn::int_ops::accum_fits_i32;
+    use crate::nn::{affine_exec, int_exec};
+    use crate::quant::affine::quantize_affine;
+    use crate::quant::{quantize, QuantSpec};
+    use crate::tensor::TensorF;
+    use crate::util::prng::Pcg32;
+
+    /// Randomize the zero-weight transformer builder output so the
+    /// quantized formats are non-degenerate.
+    fn randomized_transformer(seed: u64) -> Graph {
+        let mut g = transformer("ctx", 12, 24, 16, 2, 2, 2, 4);
+        let mut rng = Pcg32::seeded(seed);
+        for node in &mut g.nodes {
+            match &mut node.kind {
+                LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => {
+                    for v in &mut w.data {
+                        *v = rng.normal() * 0.3;
+                    }
+                    for v in &mut b.data {
+                        *v = rng.normal() * 0.05;
+                    }
+                }
+                LayerKind::Embedding { w } => {
+                    for v in &mut w.data {
+                        *v = rng.normal() * 0.5;
+                    }
+                }
+                LayerKind::LayerNorm { gamma, beta, .. } => {
+                    for v in &mut gamma.data {
+                        *v = 1.0 + rng.normal() * 0.2;
+                    }
+                    for v in &mut beta.data {
+                        *v = rng.normal() * 0.1;
+                    }
+                }
+                LayerKind::SelfAttention { w, .. } => {
+                    for t in [&mut w.wq, &mut w.wk, &mut w.wv, &mut w.wo] {
+                        for v in &mut t.data {
+                            *v = rng.normal() * 0.3;
+                        }
+                    }
+                    for t in [&mut w.bq, &mut w.bk, &mut w.bv, &mut w.bo] {
+                        for v in &mut t.data {
+                            *v = rng.normal() * 0.05;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        deploy_pipeline(&g)
+    }
+
+    fn token_inputs(n: usize, seq: usize, vocab: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|s| (0..seq).map(|i| ((i * 7 + s * 3) % vocab) as f32).collect())
+            .collect()
+    }
+
+    fn assert_contained(facts: &VerifiedFacts, observed: &[Vec<i32>], what: &str) {
+        assert_eq!(facts.nodes.len(), observed.len(), "{what}: node count");
+        for (nf, vals) in facts.nodes.iter().zip(observed) {
+            for &v in vals {
+                assert!(
+                    nf.out.contains(v as i64),
+                    "{what}: node {} ({}) payload {v} escapes proven {}",
+                    nf.name,
+                    nf.kind,
+                    nf.out
+                );
+            }
+        }
+    }
+
+    // Tentpole soundness property: the proven per-node output intervals
+    // contain every intermediate payload the integer executor actually
+    // produces, across random inputs, both model families, widths 8/16.
+    #[test]
+    fn fixed_facts_contain_all_observed_convnet_payloads() {
+        for (seed, spec) in [
+            (7u64, QuantSpec::int8_per_layer()),
+            (7, QuantSpec::int16_per_layer()),
+            (11, QuantSpec::int8_per_filter()),
+        ] {
+            let g = randomized_resnet(seed);
+            let inputs = random_inputs(6, g.input_shape.iter().product(), seed ^ 0xbeef);
+            let qg = quantize(&g, &calib(&g, &inputs), spec);
+            let facts = crate::analysis::analyze_fixed(&qg).expect("convnet must verify");
+            for x in &inputs {
+                let captured = int_exec::run_capture(&qg, x);
+                assert_contained(&facts, &captured, "fixed convnet");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_facts_contain_all_observed_transformer_payloads() {
+        for spec in [QuantSpec::int8_per_layer(), QuantSpec::int16_per_layer()] {
+            let g = randomized_transformer(13);
+            let inputs = token_inputs(5, 12, 24);
+            let qg = quantize(&g, &calib(&g, &inputs), spec);
+            let facts = crate::analysis::analyze_fixed(&qg).expect("transformer must verify");
+            for x in &inputs {
+                let captured = int_exec::run_capture(&qg, x);
+                assert_contained(&facts, &captured, "fixed transformer");
+            }
+        }
+    }
+
+    #[test]
+    fn affine_facts_contain_all_observed_payloads() {
+        let g = randomized_resnet(5);
+        let inputs = random_inputs(6, g.input_shape.iter().product(), 0x51de);
+        let aq = quantize_affine(&g, &calib(&g, &inputs));
+        let facts = crate::analysis::analyze_affine(&aq).expect("affine convnet must verify");
+        for x in &inputs {
+            let captured = affine_exec::run_capture(&aq, x);
+            assert_contained(&facts, &captured, "affine convnet");
+        }
+
+        let tg = randomized_transformer(17);
+        let tin = token_inputs(4, 12, 24);
+        let taq = quantize_affine(&tg, &calib(&tg, &tin));
+        let tfacts = crate::analysis::analyze_affine(&taq).expect("affine transformer");
+        for x in &tin {
+            let captured = affine_exec::run_capture(&taq, x);
+            assert_contained(&tfacts, &captured, "affine transformer");
+        }
+    }
+
+    // Lane admission must be a superset of the legacy heuristic: wherever
+    // `accum_fits_i32` admitted i32, the exact proof must too (the facts
+    // can only move i64 lanes down to i32, never the reverse).
+    #[test]
+    fn proven_lanes_refine_the_heuristic() {
+        for spec in [QuantSpec::int8_per_layer(), QuantSpec::int16_per_layer()] {
+            let g = randomized_resnet(3);
+            let inputs = random_inputs(4, g.input_shape.iter().product(), 99);
+            let qg = quantize(&g, &calib(&g, &inputs), spec);
+            let facts = crate::analysis::analyze_fixed(&qg).unwrap();
+            for node in &qg.graph.nodes {
+                if !matches!(node.kind, LayerKind::Conv { .. } | LayerKind::Dense { .. }) {
+                    continue;
+                }
+                let (taps, _) = mac_dims(&node.kind);
+                if accum_fits_i32(&qg.weights[&node.id], taps, qg.width) {
+                    assert_eq!(
+                        facts.lane_is_i32(node.id),
+                        Some(true),
+                        "node {} heuristic admits i32 but proof does not",
+                        node.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// A tiny dense graph whose bias is crafted to overflow: the affine
+    /// accumulator escapes the i32 requantize cast, and the fixed-point
+    /// `b_acc` fold saturates the i64 lane.
+    fn overflow_graph(bias: f32) -> Graph {
+        let mut g = Graph::new("overflow", 1, &[4, 1], 2);
+        let f = g.add("fl", LayerKind::Flatten, vec![0]);
+        let w = TensorF::from_vec(&[4, 2], vec![0.01; 8]);
+        let mut b = TensorF::from_vec(&[2], vec![0.0, 0.0]);
+        b.data[0] = bias;
+        g.add("fc", LayerKind::Dense { w, b }, vec![f]);
+        g
+    }
+
+    #[test]
+    fn crafted_affine_overflow_is_rejected() {
+        let g = deploy_pipeline(&overflow_graph(1.0e7));
+        let inputs = random_inputs(4, 4, 42)
+            .into_iter()
+            .map(|v| v.into_iter().map(|x| x * 0.01).collect::<Vec<f32>>())
+            .collect::<Vec<_>>();
+        let aq = quantize_affine(&g, &calib(&g, &inputs));
+        let err = crate::analysis::analyze_affine(&aq).unwrap_err();
+        assert!(
+            err.reason.contains("requantize cast"),
+            "wrong rejection reason: {err}"
+        );
+    }
+
+    #[test]
+    fn crafted_fixed_overflow_is_rejected() {
+        let g = deploy_pipeline(&overflow_graph(1.0e16));
+        let inputs = random_inputs(4, 4, 43);
+        let qg = quantize(&g, &calib(&g, &inputs), QuantSpec::int16_per_layer());
+        let err = crate::analysis::analyze_fixed(&qg).unwrap_err();
+        assert!(
+            err.reason.contains("i64"),
+            "wrong rejection reason: {err}"
+        );
+    }
+
+    #[test]
+    fn report_renders_lanes_and_checks() {
+        let g = randomized_transformer(23);
+        let inputs = token_inputs(3, 12, 24);
+        let qg = quantize(&g, &calib(&g, &inputs), QuantSpec::int8_per_layer());
+        let facts = crate::analysis::analyze_fixed(&qg).unwrap();
+        let report = facts.render_report();
+        assert!(report.contains("VerifiedFacts (fixed-qmn)"));
+        assert!(report.contains("exp-lut idx<="));
+        assert!(report.contains("norm-shift in ["));
+        assert!(report.contains("proj q/k/v/o"));
+        assert!(facts.nodes.iter().any(|n| n.lane.is_some()));
+    }
+}

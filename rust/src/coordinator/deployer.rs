@@ -132,6 +132,19 @@ pub fn deployment_matrix(
     rows
 }
 
+/// Render the range verifier's proof for a quantized deployment (see
+/// README, "Reading the VerifiedFacts report"): per-node proven payload
+/// ranges, accumulator bounds, lane admissions and clamp reachability. A
+/// failed proof renders as an `UNVERIFIABLE` line with the reason, so the
+/// deployment report can show WHY a model was refused without panicking
+/// mid-pipeline.
+pub fn verification_summary(qg: &QuantizedGraph) -> String {
+    match crate::graph::passes::verify_fixed_ranges(qg) {
+        Ok(facts) => facts.render_report(),
+        Err(e) => format!("UNVERIFIABLE: {e}\n"),
+    }
+}
+
 /// Render a deployment matrix as a paper-style table.
 pub fn render_matrix(rows: &[DeployReport]) -> String {
     let mut s = String::from(
@@ -180,6 +193,30 @@ mod tests {
         assert!(rows
             .iter()
             .all(|r| r.dtype != DType::I16 || r.engine == "MicroAI"));
+    }
+
+    #[test]
+    fn verification_summary_renders_proofs_and_refusals() {
+        use crate::nn::int_exec::{calib, random_inputs, randomized_resnet};
+        let g = randomized_resnet(51);
+        let stats = calib(&g, &random_inputs(4, 96, 52));
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let report = verification_summary(&qg);
+        assert!(report.contains("VerifiedFacts (fixed-qmn)"));
+        assert_eq!(report.lines().count(), qg.graph.nodes.len() + 1);
+
+        // A graph the prover refuses renders the reason, not a panic.
+        let mut g0 = Graph::new("overflow", 1, &[4, 1], 2);
+        let f = g0.add("fl", crate::graph::ir::LayerKind::Flatten, vec![0]);
+        let w = TensorF::from_vec(&[4, 2], vec![0.01; 8]);
+        let mut b = TensorF::from_vec(&[2], vec![0.0, 0.0]);
+        b.data[0] = 1.0e16;
+        g0.add("fc", crate::graph::ir::LayerKind::Dense { w, b }, vec![f]);
+        let bad = deploy_pipeline(&g0);
+        let bstats = calib(&bad, &random_inputs(4, 4, 53));
+        let bq = quantize(&bad, &bstats, QuantSpec::int16_per_layer());
+        let refusal = verification_summary(&bq);
+        assert!(refusal.starts_with("UNVERIFIABLE:"), "got: {refusal}");
     }
 
     #[test]

@@ -60,13 +60,22 @@ pub fn rsqrt_lut() -> &'static [i32; RSQRT_LUT_SIZE] {
     })
 }
 
+/// Bucket index the exp lookup reads for distance `d` at format `n` —
+/// the single definition shared by [`exp_q`] and the range verifier
+/// (`analysis`), so the proven index bound cannot drift from the kernel.
+/// Indices ≥ [`EXP_LUT_SIZE`] underflow to probability 0 by design.
+#[inline]
+pub fn exp_q_index(d: i64, n: i32) -> i64 {
+    rescale(d << EXP_IDX_SHIFT, n)
+}
+
 /// exp(−d · 2^−n) in Q0.15 for a non-negative payload distance `d` at
 /// fixed-point format n (the softmax inner lookup). Distances past the
 /// table range return 0 — the softmax max-subtraction guarantees d ≥ 0.
 #[inline]
 pub fn exp_q(d: i64, n: i32) -> i32 {
     debug_assert!(d >= 0, "exp_q wants a max-subtracted distance");
-    let j = rescale(d << EXP_IDX_SHIFT, n);
+    let j = exp_q_index(d, n);
     if j >= EXP_LUT_SIZE as i64 {
         0
     } else {
@@ -92,6 +101,25 @@ pub fn rsqrt_norm(v: i64) -> (i64, i32) {
     } else {
         (r, e / 2)
     }
+}
+
+/// Inclusive bounds of the Q2.30 mantissa `r` that [`rsqrt_norm`] can
+/// return for ANY v ≥ 1: the smallest is the last table cell folded by
+/// 1/sqrt(2) (odd exponent), the largest the first cell. Used by the
+/// range verifier's layernorm transfer function.
+pub fn rsqrt_r_bounds() -> (i64, i64) {
+    let lut = rsqrt_lut();
+    (
+        (lut[RSQRT_LUT_SIZE - 1] as i64 * INV_SQRT2_Q30) >> 30,
+        lut[0] as i64,
+    )
+}
+
+/// Largest half-exponent `h` that [`rsqrt_norm`] can return over the
+/// domain 1 ≤ v ≤ `v_max` (h grows monotonically with floor(log2 v)).
+pub fn rsqrt_h_max(v_max: i64) -> i32 {
+    debug_assert!(v_max >= 1, "rsqrt_norm domain is v >= 1");
+    (63 - v_max.leading_zeros() as i32) / 2
 }
 
 #[cfg(test)]
@@ -145,6 +173,48 @@ mod tests {
             prop_assert!(
                 (got - want).abs() <= want / 128.0,
                 "rsqrt_norm off at v={v}: got {got} want {want}"
+            );
+            Ok(())
+        });
+    }
+
+    // Soundness of the verifier-facing transfer functions: the bounds
+    // must dominate the exact kernel over the whole sampled domain.
+    #[test]
+    fn prop_exp_q_index_is_the_kernel_index() {
+        property(500, |g| {
+            let n = g.i32_in(0, 20);
+            let d = g.i32_in(0, i32::MAX) as i64;
+            let j = exp_q_index(d, n);
+            prop_assert!(j >= 0, "negative index for d={d} n={n}");
+            if j >= EXP_LUT_SIZE as i64 {
+                prop_assert!(exp_q(d, n) == 0, "underflow mismatch at d={d} n={n}");
+            } else {
+                prop_assert!(
+                    exp_q(d, n) == exp_lut()[j as usize],
+                    "index {j} disagrees with exp_q at d={d} n={n}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_rsqrt_bounds_contain_every_return() {
+        let (r_lo, r_hi) = rsqrt_r_bounds();
+        assert!(0 < r_lo && r_lo < r_hi && r_hi < 1i64 << 31);
+        property(500, |g| {
+            let v_max = 1 + g.i32_in(0, i32::MAX) as i64 * (1 + g.i32_in(0, 1 << 16) as i64);
+            let v = 1 + (g.i32_in(0, i32::MAX) as i64 * 65537) % v_max;
+            let (r, h) = rsqrt_norm(v);
+            prop_assert!(
+                (r_lo..=r_hi).contains(&r),
+                "r={r} escapes [{r_lo}, {r_hi}] at v={v}"
+            );
+            prop_assert!(
+                (0..=rsqrt_h_max(v_max)).contains(&h),
+                "h={h} escapes [0, {}] at v={v} v_max={v_max}",
+                rsqrt_h_max(v_max)
             );
             Ok(())
         });

@@ -90,6 +90,44 @@ impl QFormat {
     pub fn step(&self) -> f32 {
         self.scale()
     }
+
+    /// [`QFormat::limits`] widened to the i64 accumulator domain — the
+    /// payload interval every value of this format inhabits (the range
+    /// verifier's Input/clamp transfer).
+    pub fn payload_interval(&self) -> (i64, i64) {
+        let (lo, hi) = self.limits();
+        (lo as i64, hi as i64)
+    }
+}
+
+/// Monotone interval transfer of [`super::ops::rescale`]: the image of
+/// `[lo, hi]` under the floor-shift. Returns `None` when a left shift
+/// would push an endpoint past i64 — the runtime shift would silently
+/// drop high bits there, so the range verifier treats it as a proof
+/// failure rather than an interval.
+pub fn rescale_interval(lo: i64, hi: i64, shift: i32) -> Option<(i64, i64)> {
+    debug_assert!(lo <= hi);
+    if shift >= 0 {
+        // Arithmetic right shift is total and monotone.
+        Some((lo >> shift.min(63), hi >> shift.min(63)))
+    } else {
+        let k = (-shift).min(63) as u32;
+        let (llo, lhi) = ((lo as i128) << k, (hi as i128) << k);
+        if llo < i64::MIN as i128 || lhi > i64::MAX as i128 {
+            None
+        } else {
+            Some((llo as i64, lhi as i64))
+        }
+    }
+}
+
+/// Interval transfer of [`super::ops::clamp_to`]: the clamped image of
+/// `[lo, hi]` plus whether the saturation is reachable (some value of the
+/// input interval actually hits a rail).
+pub fn clamp_interval(lo: i64, hi: i64, width: u32) -> ((i64, i64), bool) {
+    debug_assert!(lo <= hi);
+    let (llo, lhi) = QFormat::new(width, 0).payload_interval();
+    ((lo.clamp(llo, lhi), hi.clamp(llo, lhi)), lo < llo || hi > lhi)
 }
 
 #[cfg(test)]
@@ -186,6 +224,86 @@ mod tests {
         assert_eq!(q.quantize(200.0), 100); // payload 100 * 2^1 = 200
         assert_eq!(q.dequantize(q.quantize(200.0)), 200.0);
         assert_eq!(q.dequantize(q.quantize(3.0)), 2.0); // truncated
+    }
+
+    // Soundness of the range verifier's primitive transfers: the interval
+    // image must contain the exact kernel result for every in-interval
+    // point (monotone over-approximation), across random widths/shifts.
+    #[test]
+    fn prop_rescale_interval_contains_rescale() {
+        use crate::fixedpoint::ops::rescale;
+        use crate::util::check::property;
+        property(500, |g| {
+            let a = g.i32_in(i32::MIN, i32::MAX) as i64 * (1 + g.i32_in(0, 1 << 20) as i64);
+            let b = g.i32_in(i32::MIN, i32::MAX) as i64;
+            let (lo, hi) = (a.min(b), a.max(b));
+            let shift = g.i32_in(-20, 40);
+            let v = lo + ((g.i32_in(0, i32::MAX) as i64 * 65537) % (hi - lo + 1)).abs();
+            match rescale_interval(lo, hi, shift) {
+                Some((rlo, rhi)) => {
+                    let r = rescale(v, shift);
+                    crate::prop_assert!(
+                        (rlo..=rhi).contains(&r),
+                        "rescale({v}, {shift}) = {r} escapes [{rlo}, {rhi}]"
+                    );
+                }
+                None => {
+                    // Refusal must only happen when an endpoint genuinely
+                    // escapes i64 under the capped left shift.
+                    let k = (-shift).min(63) as u32;
+                    let worst =
+                        ((lo as i128) << k).abs().max(((hi as i128) << k).abs());
+                    crate::prop_assert!(
+                        shift < 0 && worst > i64::MAX as i128,
+                        "spurious refusal at [{lo}, {hi}] shift {shift}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_clamp_interval_contains_clamp_to() {
+        use crate::fixedpoint::ops::clamp_to;
+        use crate::util::check::property;
+        property(500, |g| {
+            let width = *g.pick(&[8u32, 9, 16]);
+            let a = g.i32_in(i32::MIN, i32::MAX) as i64;
+            let b = g.i32_in(i32::MIN, i32::MAX) as i64;
+            let (lo, hi) = (a.min(b), a.max(b));
+            let v = lo + ((g.i32_in(0, i32::MAX) as i64 * 31) % (hi - lo + 1)).abs();
+            let ((clo, chi), sat) = clamp_interval(lo, hi, width);
+            let c = clamp_to(v, width) as i64;
+            crate::prop_assert!(
+                (clo..=chi).contains(&c),
+                "clamp_to({v}, {width}) = {c} escapes [{clo}, {chi}]"
+            );
+            // The saturation flag is exact: reachable iff some endpoint
+            // maps to a rail from outside.
+            let (llo, lhi) = QFormat::new(width, 0).payload_interval();
+            crate::prop_assert!(
+                sat == (lo < llo || hi > lhi),
+                "saturation flag wrong on [{lo}, {hi}] width {width}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantize_lands_in_payload_interval() {
+        use crate::util::check::property;
+        property(300, |g| {
+            let width = *g.pick(&[8u32, 9, 16]);
+            let q = QFormat::from_max_abs(g.f32_in(0.0, 100.0), width);
+            let (lo, hi) = q.payload_interval();
+            let v = q.quantize(g.f32_in(-1000.0, 1000.0)) as i64;
+            crate::prop_assert!(
+                (lo..=hi).contains(&v),
+                "payload {v} escapes [{lo}, {hi}] at width {width}"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -241,6 +241,27 @@ pub fn annotate_epilogues(g: &Graph) -> Vec<Option<EpilogueKind>> {
         .collect()
 }
 
+/// Pass 6 (verification): abstract-interpretation range proof over a
+/// quantized deployment graph (`crate::analysis`) — the pass-layer entry
+/// point for callers that verify without building a session (the C
+/// emitter's `_Static_assert` block, the deployer report). Every integer
+/// accumulator, rescale and requantize cast is bounded under worst-case
+/// inputs; `Err` means the graph can wrap at runtime.
+pub fn verify_fixed_ranges(
+    qg: &crate::quant::ptq::QuantizedGraph,
+) -> Result<crate::analysis::VerifiedFacts, crate::analysis::VerifyError> {
+    crate::analysis::analyze_fixed(qg)
+}
+
+/// [`verify_fixed_ranges`] for the affine int8 scheme: additionally
+/// proves the pack-time zero-point fold `b_eff = b − zp·Σw` and every
+/// `as i32` requantize cast in range.
+pub fn verify_affine_ranges(
+    aq: &crate::quant::affine::AffineQuantizedGraph,
+) -> Result<crate::analysis::VerifiedFacts, crate::analysis::VerifyError> {
+    crate::analysis::analyze_affine(aq)
+}
+
 /// Compute the affine (w, b) of a BatchNorm per Eqs 5–7 (exposed for the C
 /// emitter, which keeps unfolded BatchNorms as multiply-add layers).
 pub fn batchnorm_affine(
@@ -417,5 +438,22 @@ mod tests {
         let d = deploy_pipeline(&g);
         assert_eq!(d.param_count(), g.param_count());
         assert_eq!(d.nodes[d.output_id()].out_shape, vec![6]);
+    }
+
+    #[test]
+    fn verify_passes_prove_the_deployed_resnet() {
+        use crate::nn::int_exec::{calib, random_inputs, randomized_resnet};
+        use crate::quant::affine::quantize_affine;
+        use crate::quant::{quantize, QuantSpec};
+        let g = randomized_resnet(41);
+        let inputs = random_inputs(4, 96, 42);
+        let stats = calib(&g, &inputs);
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let facts = verify_fixed_ranges(&qg).expect("deployed resnet verifies");
+        assert_eq!(facts.nodes.len(), qg.graph.nodes.len());
+        assert!(facts.nodes.iter().any(|n| n.lane.is_some()));
+        let aq = quantize_affine(&g, &stats);
+        let afacts = verify_affine_ranges(&aq).expect("affine resnet verifies");
+        assert_eq!(afacts.backend, "affine-i8");
     }
 }

@@ -14,6 +14,7 @@
 //!   runs on the request path.
 
 pub mod allocator;
+pub mod analysis;
 pub mod codegen;
 pub mod coordinator;
 pub mod datasets;

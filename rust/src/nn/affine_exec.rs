@@ -43,6 +43,36 @@ pub fn run(aq: &AffineQuantizedGraph, input: &[f32]) -> Vec<f32> {
     output
 }
 
+/// Capture run for the range-verifier soundness tests (see
+/// `int_exec::run_capture`): one dedicated pool per node, payloads
+/// returned indexed by node id (entry 0 = the quantized input).
+#[cfg(test)]
+pub(crate) fn run_capture(aq: &AffineQuantizedGraph, input: &[f32]) -> Vec<Vec<i32>> {
+    let graph = &aq.graph;
+    let n = graph.nodes.len();
+    let node_elems = crate::nn::session::node_elems(graph);
+    let mut pool_of: Vec<usize> = (0..n).collect();
+    pool_of[0] = usize::MAX; // Input payloads live in qinput
+    let alloc = crate::allocator::Allocation {
+        pool_of,
+        pool_elems: node_elems.clone(),
+        gemm_scratch_elems: 0,
+        packed_b_elems: 0,
+    };
+    let mut pools: Vec<Vec<i32>> = vec![Vec::new(); n];
+    let mut qinput = Vec::new();
+    let pool = crate::nn::parallel::IntraOpPool::serial();
+    let mut scratch = vec![Vec::new()];
+    let mut output = Vec::new();
+    let packed = crate::nn::packed::PackedWeights::empty(n);
+    run_pooled(
+        aq, input, &alloc, &node_elems, &mut qinput, &mut pools, &pool, &mut scratch, &packed,
+        &mut output,
+    );
+    pools[0] = qinput;
+    pools
+}
+
 /// Pooled core shared by [`run`] and the affine [`crate::nn::session`]
 /// backend (see `int_exec::run_pooled` for the pool discipline; `scratch`
 /// carries one packing slab per intra-op thread of `pool`). Conv/dense

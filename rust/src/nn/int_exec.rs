@@ -246,44 +246,85 @@ fn zero_pad_q_into(src: &[i32], ish: &[usize], pad: &[(usize, usize)], out: &mut
     }
 }
 
+/// Capture run for the range-verifier soundness tests
+/// (`crate::analysis`): execute the pooled core with one dedicated pool
+/// per node (no §5.7 sharing) so every node's payloads survive, and
+/// return them indexed by node id (entry 0 = the quantized input).
+#[cfg(test)]
+pub(crate) fn run_capture(qg: &QuantizedGraph, input: &[f32]) -> Vec<Vec<i32>> {
+    let graph = &qg.graph;
+    let n = graph.nodes.len();
+    let node_elems = super::session::node_elems(graph);
+    let mut pool_of: Vec<usize> = (0..n).collect();
+    pool_of[0] = usize::MAX; // Input payloads live in qinput
+    let alloc = crate::allocator::Allocation {
+        pool_of,
+        pool_elems: node_elems.clone(),
+        gemm_scratch_elems: 0,
+        packed_b_elems: 0,
+    };
+    let mut pools: Vec<Vec<i32>> = vec![Vec::new(); n];
+    let mut qinput = Vec::new();
+    let pool = super::parallel::IntraOpPool::serial();
+    let mut scratch = vec![Vec::new()];
+    let mut output = Vec::new();
+    let packed = super::packed::PackedWeights::empty(n);
+    run_pooled(
+        qg, input, &alloc, &node_elems, &mut qinput, &mut pools, &pool, &mut scratch, &packed,
+        &mut output,
+    );
+    pools[0] = qinput;
+    pools
+}
+
+/// Randomized 6-layer resnet used by the executor, packing and analysis
+/// tests (the builder's weights are zero; tests need non-degenerate
+/// quantized formats).
+#[cfg(test)]
+pub(crate) fn randomized_resnet(seed: u64) -> crate::graph::ir::Graph {
+    use crate::util::prng::Pcg32;
+    let mut g = crate::graph::build::resnet_v1_6_shapes("t", 1, &[32, 3], 4, 8);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.4;
+            }
+            for v in b.data.iter_mut() {
+                *v = rng.normal() * 0.05;
+            }
+        }
+    }
+    crate::graph::deploy_pipeline(&g)
+}
+
+/// Collect float-run activation stats over a calibration set.
+#[cfg(test)]
+pub(crate) fn calib(
+    g: &crate::graph::ir::Graph,
+    inputs: &[Vec<f32>],
+) -> crate::nn::float_exec::ActStats {
+    let mut stats = crate::nn::float_exec::ActStats::new(g.nodes.len());
+    for x in inputs {
+        crate::nn::float_exec::run(g, x, Some(&mut stats));
+    }
+    stats
+}
+
+#[cfg(test)]
+pub(crate) fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = crate::util::prng::Pcg32::seeded(seed);
+    (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::build::resnet_v1_6_shapes;
     use crate::graph::deploy_pipeline;
-    use crate::graph::ir::{Graph, LayerKind};
-    use crate::nn::float_exec::{self, ActStats};
+    use crate::nn::float_exec;
     use crate::quant::{quantize, QuantSpec};
     use crate::util::prng::Pcg32;
-
-    fn randomized_resnet(seed: u64) -> Graph {
-        let mut g = resnet_v1_6_shapes("t", 1, &[32, 3], 4, 8);
-        let mut rng = Pcg32::seeded(seed);
-        for n in g.nodes.iter_mut() {
-            if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
-                for v in w.data.iter_mut() {
-                    *v = rng.normal() * 0.4;
-                }
-                for v in b.data.iter_mut() {
-                    *v = rng.normal() * 0.05;
-                }
-            }
-        }
-        deploy_pipeline(&g)
-    }
-
-    fn calib(g: &Graph, inputs: &[Vec<f32>]) -> ActStats {
-        let mut stats = ActStats::new(g.nodes.len());
-        for x in inputs {
-            float_exec::run(g, x, Some(&mut stats));
-        }
-        stats
-    }
-
-    fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
-        let mut rng = Pcg32::seeded(seed);
-        (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
-    }
 
     #[test]
     fn int16_logits_close_to_float() {

@@ -229,7 +229,26 @@ impl PackedNode {
         width: u32,
         relu: bool,
     ) -> PackedNode {
-        let b = if accum_fits_i32(qw, taps, width) {
+        Self::fixed_node_with_lane(qw, ks, taps, n, width, relu, None)
+    }
+
+    /// [`PackedNode::fixed_node`] with a lane decision supplied by the
+    /// range verifier: `Some(true)` = proven i32-safe, `Some(false)` =
+    /// proven to need the wide lane, `None` = fall back to the
+    /// `accum_fits_i32` heuristic (unverified plans, legacy entry
+    /// points). The exact proof admits a superset of the heuristic (see
+    /// `analysis::tests::proven_lanes_refine_the_heuristic`), so verified
+    /// plans route MORE nodes through the fast i32 kernel, never fewer.
+    pub fn fixed_node_with_lane(
+        qw: &QNodeWeights,
+        ks: &[usize],
+        taps: usize,
+        n: usize,
+        width: u32,
+        relu: bool,
+        i32_lane: Option<bool>,
+    ) -> PackedNode {
+        let b = if i32_lane.unwrap_or_else(|| accum_fits_i32(qw, taps, width)) {
             PackedB::I32(pack_panels(&qw.w, taps, n, |v| v))
         } else {
             PackedB::I64(pack_panels(&qw.w, taps, n, i64::from))
@@ -290,6 +309,11 @@ impl PackedNode {
     /// Host bytes this node's packed panels + epilogue copies occupy.
     pub fn host_bytes(&self) -> usize {
         self.b.bytes() + self.epi.bytes()
+    }
+
+    /// Whether this node packed into the narrow i32 accumulator lane.
+    pub fn is_i32_lane(&self) -> bool {
+        matches!(self.b, PackedB::I32(_))
     }
 }
 
@@ -360,20 +384,34 @@ impl PackedAttention {
     /// Fixed-point Qm.n backend: lanes decided per projection by the same
     /// `accum_fits_i32` guard as conv/dense; stage shifts precomputed.
     pub fn fixed(tx: &QTxWeights, heads: usize, head_dim: usize, width: u32) -> PackedAttention {
+        Self::fixed_with_lanes(tx, heads, head_dim, width, None)
+    }
+
+    /// [`PackedAttention::fixed`] with per-projection (wq, wk, wv, wo)
+    /// lane decisions from the range verifier; `None` = heuristic.
+    pub fn fixed_with_lanes(
+        tx: &QTxWeights,
+        heads: usize,
+        head_dim: usize,
+        width: u32,
+        lanes: Option<[bool; 4]>,
+    ) -> PackedAttention {
         let QTxWeights::Attn { wq, wk, wv, wo, n_q, n_k, n_v, n_s, n_p, n_ctx, inv_sqrt_hd_q15 } =
             tx
         else {
             panic!("PackedAttention::fixed wants Attn params");
         };
         let dm = heads * head_dim;
-        let pn = |qw: &QNodeWeights| PackedNode::fixed_node(qw, &[], dm, dm, width, false);
+        let pn = |qw: &QNodeWeights, pi: usize| {
+            PackedNode::fixed_node_with_lane(qw, &[], dm, dm, width, false, lanes.map(|ls| ls[pi]))
+        };
         PackedAttention {
             heads,
             head_dim,
-            wq: pn(wq),
-            wk: pn(wk),
-            wv: pn(wv),
-            wo: pn(wo),
+            wq: pn(wq, 0),
+            wk: pn(wk, 1),
+            wv: pn(wv, 2),
+            wo: pn(wo, 3),
             params: AttnParams::Fixed {
                 inv_sqrt_hd_q15: *inv_sqrt_hd_q15,
                 score_sh: n_q + n_k + 15 - n_s,
@@ -512,8 +550,21 @@ impl PackedWeights {
         PackedWeights { nodes, attn }
     }
 
-    /// Pack a fixed-point Qm.n graph's conv/dense/attention weights.
+    /// Pack a fixed-point Qm.n graph's conv/dense/attention weights with
+    /// the `accum_fits_i32` lane heuristic (legacy / unverified path).
     pub fn for_fixed(qg: &QuantizedGraph) -> PackedWeights {
+        Self::for_fixed_facts(qg, &crate::analysis::VerifiedFacts::unverified())
+    }
+
+    /// Pack a fixed-point Qm.n graph with lane decisions taken from the
+    /// range verifier's proven per-node accumulator bounds — the exact
+    /// Σ|w·x| proof replaces the width-census heuristic wherever a fact
+    /// exists (unproven nodes keep the heuristic). The verified session
+    /// path (`SessionBuilder::try_build`) lands here.
+    pub fn for_fixed_facts(
+        qg: &QuantizedGraph,
+        facts: &crate::analysis::VerifiedFacts,
+    ) -> PackedWeights {
         let epi = annotate_epilogues(&qg.graph);
         let nodes = qg
             .graph
@@ -522,7 +573,15 @@ impl PackedWeights {
             .map(|node| {
                 let (ks, taps, n) = node_dims(&node.kind)?;
                 let relu = matches!(epi[node.id], Some(EpilogueKind::Relu));
-                Some(PackedNode::fixed_node(&qg.weights[&node.id], &ks, taps, n, qg.width, relu))
+                Some(PackedNode::fixed_node_with_lane(
+                    &qg.weights[&node.id],
+                    &ks,
+                    taps,
+                    n,
+                    qg.width,
+                    relu,
+                    facts.lane_is_i32(node.id),
+                ))
             })
             .collect();
         let attn = qg
@@ -530,9 +589,15 @@ impl PackedWeights {
             .nodes
             .iter()
             .map(|node| match &node.kind {
-                LayerKind::SelfAttention { heads, head_dim, .. } => Some(PackedAttention::fixed(
-                    &qg.tx[&node.id], *heads, *head_dim, qg.width,
-                )),
+                LayerKind::SelfAttention { heads, head_dim, .. } => {
+                    Some(PackedAttention::fixed_with_lanes(
+                        &qg.tx[&node.id],
+                        *heads,
+                        *head_dim,
+                        qg.width,
+                        facts.attn_lanes_i32(node.id),
+                    ))
+                }
                 _ => None,
             })
             .collect();

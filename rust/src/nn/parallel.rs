@@ -182,9 +182,13 @@ pub struct SharedOut<T> {
     len: usize,
 }
 
-// SAFETY: dereferencing is gated behind `unsafe` methods whose contract
-// is range disjointness; the raw pointer itself is freely sendable.
+// SAFETY: the window holds only a raw pointer and a length; moving it to
+// another thread moves no `T`, and every dereference is gated behind
+// `unsafe` methods whose contract is range disjointness.
 unsafe impl<T: Send> Send for SharedOut<T> {}
+// SAFETY: shared (`&SharedOut`) access exposes no safe dereference; the
+// unsafe methods require callers to touch pairwise-disjoint ranges, so
+// concurrent use from many threads cannot alias a `T`.
 unsafe impl<T: Send> Sync for SharedOut<T> {}
 
 impl<T> SharedOut<T> {
@@ -200,6 +204,8 @@ impl<T> SharedOut<T> {
     #[inline]
     pub unsafe fn write(&self, i: usize, v: T) {
         debug_assert!(i < self.len, "SharedOut write {i} out of {}", self.len);
+        // SAFETY: caller contract (above): `i < len`, and no other thread
+        // touches index `i` during this call, so the write cannot alias.
         unsafe { *self.ptr.add(i) = v }
     }
 
@@ -216,6 +222,9 @@ impl<T> SharedOut<T> {
             "SharedOut slice {start}+{len} out of {}",
             self.len
         );
+        // SAFETY: caller contract (above): the range is in bounds of the
+        // borrowed slice and disjoint from every concurrent user, so this
+        // is the only live reference to these elements.
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
     }
 }

@@ -28,6 +28,7 @@
 use std::sync::Arc;
 
 use crate::allocator::{allocate, Allocation};
+use crate::analysis::{VerifiedFacts, VerifyError};
 use crate::graph::ir::Graph;
 use crate::mcu::board::Board;
 use crate::mcu::DType;
@@ -82,6 +83,11 @@ pub struct Plan {
     /// [`InferenceBackend::pack_weights`]. Empty (per-call fallback) for
     /// backends without a packer.
     pub packed: Arc<PackedWeights>,
+    /// Build-time range-verification facts from `crate::analysis`:
+    /// per-node proven accumulator intervals, lane admissions and clamp
+    /// saturation reachability. [`VerifiedFacts::unverified`] for
+    /// backends with nothing to prove (float32, custom engines).
+    pub facts: Arc<VerifiedFacts>,
 }
 
 impl Plan {
@@ -97,7 +103,62 @@ impl Plan {
             output_len,
             device_bytes_per_elem,
             packed: Arc::new(PackedWeights::empty(graph.nodes.len())),
+            facts: Arc::new(VerifiedFacts::unverified()),
         }
+    }
+
+    /// Build-time promotion of the kernels' release-invisible
+    /// `debug_assert!` buffer guards ("A panel too small", "B matrix too
+    /// small", pool sizing) to checked errors: every node's output slice
+    /// must fit the pool the §5.7 assignment parked it in, and the plan's
+    /// shape facts must be internally consistent. A violated invariant
+    /// here would surface in release mode as silent out-of-bounds panics
+    /// (or short slices) deep inside the GEMM hot path; `try_build`
+    /// rejects the plan instead.
+    pub fn validate(&self, graph: &Graph) -> Result<(), VerifyError> {
+        let perr = |node: &str, reason: String| VerifyError { node: node.into(), reason };
+        let n = graph.nodes.len();
+        if self.node_elems.len() != n || self.alloc.pool_of.len() != n {
+            return Err(perr(
+                "<plan>",
+                format!(
+                    "plan shape tables cover {}/{} nodes ({} pool slots)",
+                    self.node_elems.len(),
+                    n,
+                    self.alloc.pool_of.len()
+                ),
+            ));
+        }
+        for node in &graph.nodes {
+            let pool = self.alloc.pool_of[node.id];
+            if pool == usize::MAX {
+                continue; // caller-owned input buffer
+            }
+            let Some(&cap) = self.alloc.pool_elems.get(pool) else {
+                return Err(perr(&node.name, format!("assigned to missing pool {pool}")));
+            };
+            let need = self.node_elems[node.id];
+            if cap < need {
+                return Err(perr(
+                    &node.name,
+                    format!("pool {pool} holds {cap} elems but the node writes {need}"),
+                ));
+            }
+        }
+        let input_len: usize = graph.input_shape.iter().product();
+        if self.input_len != input_len || self.output_len != self.node_elems[graph.output_id()] {
+            return Err(perr(
+                "<plan>",
+                format!(
+                    "stale I/O lengths {}x{} for a graph with {}x{}",
+                    self.input_len,
+                    self.output_len,
+                    input_len,
+                    self.node_elems[graph.output_id()]
+                ),
+            ));
+        }
+        Ok(())
     }
 
     /// Predicted device activation RAM: allocator pools + the input
@@ -233,12 +294,34 @@ pub trait InferenceBackend: Send + Sync {
         PackedWeights::empty(self.graph().nodes.len())
     }
 
-    /// Compile-once step: §5.7 lifetime analysis → buffer plan, plus the
-    /// one-time weight packing.
-    fn prepare(&self) -> Plan {
+    /// Build-time range verification (`crate::analysis`): prove every
+    /// integer accumulator, rescale and requantize cast in the graph
+    /// overflow-free under worst-case inputs, returning the per-node
+    /// facts. Backends without integer arithmetic have nothing to prove
+    /// and return [`VerifiedFacts::unverified`]. An `Err` means the
+    /// quantized graph CAN wrap at runtime — `try_build` refuses to
+    /// construct a session for it.
+    fn verify(&self) -> Result<VerifiedFacts, VerifyError> {
+        Ok(VerifiedFacts::unverified())
+    }
+
+    /// [`InferenceBackend::pack_weights`] with the verifier's facts in
+    /// hand — backends whose packing makes lane decisions (fixed Qm.n)
+    /// override this to use the proven bounds instead of the heuristic.
+    fn pack_weights_with(&self, _facts: &VerifiedFacts) -> PackedWeights {
+        self.pack_weights()
+    }
+
+    /// Compile-once step: range verification → §5.7 lifetime analysis →
+    /// buffer plan → facts-driven weight packing. Fails (instead of
+    /// building a session that wraps in release mode) when the range
+    /// proof fails.
+    fn prepare(&self) -> Result<Plan, VerifyError> {
+        let facts = self.verify()?;
         let mut plan = Plan::for_graph(self.graph(), self.dtype().bytes());
-        plan.packed = Arc::new(self.pack_weights());
-        plan
+        plan.packed = Arc::new(self.pack_weights_with(&facts));
+        plan.facts = Arc::new(facts);
+        Ok(plan)
     }
 
     /// Preallocate an activation arena for `plan`, with one GEMM scratch
@@ -362,6 +445,14 @@ impl InferenceBackend for FixedQmnBackend {
         PackedWeights::for_fixed(&self.qg)
     }
 
+    fn verify(&self) -> Result<VerifiedFacts, VerifyError> {
+        crate::analysis::analyze_fixed(&self.qg)
+    }
+
+    fn pack_weights_with(&self, facts: &VerifiedFacts) -> PackedWeights {
+        PackedWeights::for_fixed_facts(&self.qg, facts)
+    }
+
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
         int_exec::run_pooled(
             &self.qg, input, &plan.alloc, &plan.node_elems,
@@ -406,6 +497,10 @@ impl InferenceBackend for AffineI8Backend {
 
     fn pack_weights(&self) -> PackedWeights {
         PackedWeights::for_affine(&self.aq)
+    }
+
+    fn verify(&self) -> Result<VerifiedFacts, VerifyError> {
+        crate::analysis::analyze_affine(&self.aq)
     }
 
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32] {
@@ -496,8 +591,26 @@ impl SessionBuilder {
         self
     }
 
+    /// [`SessionBuilder::build`], surfacing verification failures as an
+    /// error instead of a panic: the range proof (`crate::analysis`) must
+    /// admit every integer accumulator and the plan's buffer invariants
+    /// must hold ([`Plan::validate`] — the promoted kernel
+    /// `debug_assert!` guards) before a session exists. A graph whose
+    /// accumulators can wrap in release mode is REJECTED here at build
+    /// time, never silently mis-inferred.
+    pub fn try_build(self) -> Result<Session, VerifyError> {
+        let plan = self.backend.prepare()?;
+        plan.validate(self.backend.graph())?;
+        Ok(self.finish(plan))
+    }
+
     pub fn build(self) -> Session {
-        let plan = self.backend.prepare();
+        let plan = self.backend.prepare().unwrap_or_else(|e| panic!("{e}"));
+        plan.validate(self.backend.graph()).unwrap_or_else(|e| panic!("{e}"));
+        self.finish(plan)
+    }
+
+    fn finish(self, plan: Plan) -> Session {
         let arena = self.backend.new_arena(&plan, self.threads);
         let dtype = self.backend.dtype();
         let (device_latency_ms, device_energy_uwh) = match self.board {
@@ -669,6 +782,12 @@ impl Session {
 
     pub fn plan(&self) -> &Plan {
         &self.plan
+    }
+
+    /// The build-time range-verification facts this session was admitted
+    /// under ([`VerifiedFacts::unverified`] for the float32 backend).
+    pub fn facts(&self) -> &VerifiedFacts {
+        &self.plan.facts
     }
 
     pub fn arena(&self) -> &Arena {
@@ -988,6 +1107,100 @@ mod tests {
         assert!(sa.meta().packed_weight_bytes > 0);
         let sf = SessionBuilder::float32(g.clone()).build();
         assert!(sf.meta().packed_weight_bytes > 0);
+    }
+
+    #[test]
+    fn verified_sessions_carry_facts_and_proven_lanes() {
+        let g = randomized_graph(31);
+        let xs = inputs(4, 96, 32);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let sess = SessionBuilder::fixed_qmn(qg.clone())
+            .try_build()
+            .expect("shipped resnet must verify");
+        let facts = sess.facts();
+        assert_eq!(facts.backend, "fixed-qmn");
+        assert_eq!(facts.nodes.len(), qg.graph.nodes.len());
+        // The packed lanes agree with the proof on every conv/dense node.
+        for node in &qg.graph.nodes {
+            if let (Some(pn), Some(i32_proven)) =
+                (sess.plan().packed.get(node.id), facts.lane_is_i32(node.id))
+            {
+                assert_eq!(pn.is_i32_lane(), i32_proven, "lane/proof mismatch at {}", node.name);
+            }
+        }
+        let aq = quantize_affine(&g, &stats);
+        let sa = SessionBuilder::affine_i8(aq).try_build().expect("affine verifies");
+        assert_eq!(sa.facts().backend, "affine-i8");
+        // Float32 has nothing to prove: unverified facts, empty node list.
+        let sf = SessionBuilder::float32(g).try_build().expect("float always builds");
+        assert_eq!(sf.facts().backend, "unverified");
+        assert!(sf.facts().nodes.is_empty());
+    }
+
+    #[test]
+    fn try_build_rejects_crafted_overflow_graph() {
+        // A Dense whose folded bias payload overflows the i64 accumulator
+        // domain at width 16: pre-PR this built a session that silently
+        // wrapped in release mode; now it is rejected at build time.
+        let mut g0 = crate::graph::ir::Graph::new("overflow", 1, &[4, 1], 2);
+        let f = g0.add("fl", LayerKind::Flatten, vec![0]);
+        let w = crate::tensor::TensorF::from_vec(&[4, 2], vec![0.01; 8]);
+        let mut b = crate::tensor::TensorF::from_vec(&[2], vec![0.0, 0.0]);
+        b.data[0] = 1.0e16;
+        g0.add("fc", LayerKind::Dense { w, b }, vec![f]);
+        let g = deploy_pipeline(&g0);
+        let xs = inputs(4, 4, 33);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int16_per_layer());
+        let err = SessionBuilder::fixed_qmn(qg).try_build().unwrap_err();
+        assert!(err.reason.contains("i64"), "wrong rejection reason: {err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "range verifier")]
+    fn build_panics_on_unverifiable_graph() {
+        let mut g0 = crate::graph::ir::Graph::new("overflow", 1, &[4, 1], 2);
+        let f = g0.add("fl", LayerKind::Flatten, vec![0]);
+        let w = crate::tensor::TensorF::from_vec(&[4, 2], vec![0.01; 8]);
+        let mut b = crate::tensor::TensorF::from_vec(&[2], vec![0.0, 0.0]);
+        b.data[0] = 1.0e16;
+        g0.add("fc", LayerKind::Dense { w, b }, vec![f]);
+        let g = deploy_pipeline(&g0);
+        let xs = inputs(4, 4, 34);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int16_per_layer());
+        SessionBuilder::fixed_qmn(qg).build();
+    }
+
+    #[test]
+    fn plan_validate_catches_undersized_pools() {
+        // Regression for the promoted debug_assert guards: a plan whose
+        // pool table was corrupted (here: shrunk below a node's output
+        // size) must fail validation instead of reaching the kernels,
+        // where only debug builds would have caught the short buffer.
+        let g = randomized_graph(35);
+        let mut plan = Plan::for_graph(&g, 4);
+        assert!(plan.validate(&g).is_ok());
+        let victim = plan
+            .alloc
+            .pool_of
+            .iter()
+            .find(|&&p| p != usize::MAX)
+            .copied()
+            .expect("some pooled node");
+        plan.alloc.pool_elems[victim] = 0;
+        let err = plan.validate(&g).unwrap_err();
+        assert!(err.reason.contains("pool"), "wrong reason: {err}");
     }
 
     #[test]
