@@ -16,7 +16,7 @@ use microai::coordinator::trainer::{LrSchedule, Trainer};
 use microai::datasets;
 use microai::engines::all_engines;
 use microai::mcu::board::{BOARDS, SPARKFUN_EDGE};
-use microai::nn::SessionBuilder;
+use microai::nn::{Batch, SessionBuilder};
 use microai::quant::QuantSpec;
 use microai::runtime::Runtime;
 
@@ -110,8 +110,11 @@ fn main() -> anyhow::Result<()> {
         SessionBuilder::affine_i8(aq).board(&SPARKFUN_EDGE).build(),
     ];
     let probe = data.test_example(0);
+    let mut preds = Vec::new();
     for sess in sessions.iter_mut() {
-        let pred = sess.classify(probe);
+        preds.clear();
+        sess.infer(&Batch::single(probe), &mut preds);
+        let pred = preds[0];
         let m = sess.meta();
         println!(
             "  {:<16} -> class {} (conf {:.2})  {:>7} B weights  {:>6} B RAM  \

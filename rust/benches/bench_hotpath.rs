@@ -11,10 +11,14 @@
 //!    `prepack_speedup = gemm_ns / prepack_ns`). With `--threads N > 1`
 //!    the per-call GEMM is additionally raced at one thread, so the JSON
 //!    records the parallel speedup per shape (`gemm_1t_ns`,
-//!    `parallel_speedup`). Results land in machine-readable
+//!    `parallel_speedup`). Foldable shapes (dense, stride-1 1×1 conv)
+//!    additionally race the PR-8 batch-folded path at batch 8 against 8
+//!    looped per-example prepacked calls (`looped_ns`, `batched_ns`,
+//!    `batched_speedup` — schema v4). Results land in machine-readable
 //!    `BENCH_hotpath.json`; `--check` turns the per-shape speedups into a
-//!    CI gate (fail when GEMM is slower than reference, or the prepacked
-//!    path slower than per-call GEMM, beyond measurement tolerance, or a
+//!    CI gate (fail when GEMM is slower than reference, the prepacked
+//!    path slower than per-call GEMM, or the batch-folded path slower
+//!    than the per-example loop, beyond measurement tolerance, or a
 //!    regression vs the committed baseline — unless that baseline is
 //!    still the schema placeholder, which is skipped loudly).
 //! 2. **Whole-graph** — Session inference throughput per backend, plus the
@@ -26,12 +30,14 @@
 
 use std::collections::BTreeSet;
 
-use microai::graph::ir::LayerKind;
+use microai::graph::ir::{LayerKind, Padding};
 use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
 use microai::mcu::node_gemm_shape;
 use microai::nn::float_exec::{self, ActStats};
 use microai::nn::packed::{self, PackedNode};
-use microai::nn::{affine_exec, float_ops, gemm, int_exec, int_ops, IntraOpPool, SessionBuilder};
+use microai::nn::{
+    affine_exec, float_ops, gemm, int_exec, int_ops, Batch, IntraOpPool, SessionBuilder,
+};
 use microai::quant::affine::AffineQuantizedGraph;
 use microai::quant::{quantize, quantize_affine, QuantSpec, QuantizedGraph};
 use microai::util::bench::{black_box, print_header, Bencher};
@@ -47,6 +53,9 @@ const CHECK_TOLERANCE: f64 = 0.05;
 /// than raw nanoseconds; shared CI runners are still noisy, hence the
 /// generous band).
 const BASELINE_REGRESSION_TOLERANCE: f64 = 0.25;
+/// Micro-batch size for the PR-8 batch-folded race: one batched call vs
+/// this many looped per-example prepacked calls on every foldable shape.
+const FOLD_BATCH: usize = 8;
 
 struct RaceRow {
     model: String,
@@ -63,6 +72,11 @@ struct RaceRow {
     prepack_ns: f64,
     /// Single-thread GEMM median, measured only when `threads > 1`.
     gemm_1t_ns: Option<f64>,
+    /// `FOLD_BATCH` looped per-example prepacked calls; measured only on
+    /// foldable shapes (dense, stride-1 1×1 conv).
+    looped_ns: Option<f64>,
+    /// ONE batch-folded call over the same `FOLD_BATCH` examples.
+    batched_ns: Option<f64>,
 }
 
 impl RaceRow {
@@ -93,6 +107,16 @@ impl RaceRow {
         self.gemm_1t_ns.map(|one| one / self.gemm_ns.max(1.0))
     }
 
+    /// PR-8 gate: one batch-folded call vs the per-example loop at
+    /// `FOLD_BATCH` (None on unfoldable shapes). Must stay ≥ 1.0 minus
+    /// the noise deadband on every foldable shape.
+    fn batched_speedup(&self) -> Option<f64> {
+        match (self.looped_ns, self.batched_ns) {
+            (Some(lo), Some(ba)) => Some(lo / ba.max(1.0)),
+            _ => None,
+        }
+    }
+
     fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("model", Json::str(&self.model)),
@@ -113,6 +137,13 @@ impl RaceRow {
         if let (Some(one), Some(par)) = (self.gemm_1t_ns, self.parallel_speedup()) {
             pairs.push(("gemm_1t_ns", Json::num(one)));
             pairs.push(("parallel_speedup", Json::num(par)));
+        }
+        if let (Some(lo), Some(ba), Some(s)) =
+            (self.looped_ns, self.batched_ns, self.batched_speedup())
+        {
+            pairs.push(("looped_ns", Json::num(lo)));
+            pairs.push(("batched_ns", Json::num(ba)));
+            pairs.push(("batched_speedup", Json::num(s)));
         }
         Json::obj(pairs)
     }
@@ -156,6 +187,186 @@ fn rand_payloads(rng: &mut Pcg32, len: usize, width: u32) -> Vec<i32> {
     (0..len).map(|_| rng.below((2 * lim) as u32) as i32 - lim).collect()
 }
 
+/// Batch-folded race on one foldable integer node (dense or stride-1 1×1
+/// conv): `FOLD_BATCH` looped per-example prepacked calls vs ONE batched
+/// call over the same examples. `conv_ish` is `Some((input_shape,
+/// padding))` for the conv form, `None` for dense. Returns
+/// (looped_ns, batched_ns).
+#[allow(clippy::too_many_arguments)]
+fn race_fold_int(
+    ctx: &RaceCtx,
+    tag: &str,
+    model: &str,
+    node_name: &str,
+    pn: &PackedNode,
+    conv_ish: Option<(&[usize], Padding)>,
+    dims: usize,
+    width: u32,
+    rng: &mut Pcg32,
+    scratch: &mut [Vec<i32>],
+    out: &mut Vec<i32>,
+) -> (f64, f64) {
+    match conv_ish {
+        None => {
+            let taps = pn.taps;
+            let xb = rand_payloads(rng, FOLD_BATCH * taps, width);
+            let lo = ctx
+                .b
+                .run(&format!("{tag:<5} loop {model}/{node_name}"), || {
+                    for ex in 0..FOLD_BATCH {
+                        black_box(packed::dense_int_packed(
+                            &xb[ex * taps..(ex + 1) * taps], pn, ctx.pool, out,
+                        ));
+                    }
+                })
+                .median_ns;
+            let ba = ctx
+                .b
+                .run(&format!("{tag:<5} bat8 {model}/{node_name}"), || {
+                    black_box(packed::dense_int_batched(&xb, FOLD_BATCH, pn, ctx.pool, out));
+                })
+                .median_ns;
+            (lo, ba)
+        }
+        Some((ish, padding)) => {
+            let el: usize = ish.iter().product();
+            let xb = rand_payloads(rng, FOLD_BATCH * el, width);
+            if dims == 1 {
+                let s = ish[0];
+                let lo = ctx
+                    .b
+                    .run(&format!("{tag:<5} loop {model}/{node_name}"), || {
+                        for ex in 0..FOLD_BATCH {
+                            black_box(packed::conv1d_int_packed(
+                                &xb[ex * el..(ex + 1) * el], s, pn, 1, padding, ctx.pool,
+                                scratch, out,
+                            ));
+                        }
+                    })
+                    .median_ns;
+                let ba = ctx
+                    .b
+                    .run(&format!("{tag:<5} bat8 {model}/{node_name}"), || {
+                        black_box(packed::conv1d_int_packed(
+                            &xb, FOLD_BATCH * s, pn, 1, padding, ctx.pool, scratch, out,
+                        ));
+                    })
+                    .median_ns;
+                (lo, ba)
+            } else {
+                let (h, wd) = (ish[0], ish[1]);
+                let lo = ctx
+                    .b
+                    .run(&format!("{tag:<5} loop {model}/{node_name}"), || {
+                        for ex in 0..FOLD_BATCH {
+                            black_box(packed::conv2d_int_packed(
+                                &xb[ex * el..(ex + 1) * el], h, wd, pn, 1, padding, ctx.pool,
+                                scratch, out,
+                            ));
+                        }
+                    })
+                    .median_ns;
+                let ba = ctx
+                    .b
+                    .run(&format!("{tag:<5} bat8 {model}/{node_name}"), || {
+                        black_box(packed::conv2d_int_packed(
+                            &xb, FOLD_BATCH * h, wd, pn, 1, padding, ctx.pool, scratch, out,
+                        ));
+                    })
+                    .median_ns;
+                (lo, ba)
+            }
+        }
+    }
+}
+
+/// Float twin of [`race_fold_int`].
+#[allow(clippy::too_many_arguments)]
+fn race_fold_f32(
+    ctx: &RaceCtx,
+    model: &str,
+    node_name: &str,
+    pn: &PackedNode,
+    conv_ish: Option<(&[usize], Padding)>,
+    dims: usize,
+    rng: &mut Pcg32,
+    scratch: &mut [Vec<f32>],
+    out: &mut Vec<f32>,
+) -> (f64, f64) {
+    match conv_ish {
+        None => {
+            let taps = pn.taps;
+            let xb: Vec<f32> = (0..FOLD_BATCH * taps).map(|_| rng.normal()).collect();
+            let lo = ctx
+                .b
+                .run(&format!("f32   loop {model}/{node_name}"), || {
+                    for ex in 0..FOLD_BATCH {
+                        black_box(packed::dense_f32_packed(
+                            &xb[ex * taps..(ex + 1) * taps], pn, ctx.pool, out,
+                        ));
+                    }
+                })
+                .median_ns;
+            let ba = ctx
+                .b
+                .run(&format!("f32   bat8 {model}/{node_name}"), || {
+                    black_box(packed::dense_f32_batched(&xb, FOLD_BATCH, pn, ctx.pool, out));
+                })
+                .median_ns;
+            (lo, ba)
+        }
+        Some((ish, padding)) => {
+            let el: usize = ish.iter().product();
+            let xb: Vec<f32> = (0..FOLD_BATCH * el).map(|_| rng.normal()).collect();
+            if dims == 1 {
+                let s = ish[0];
+                let lo = ctx
+                    .b
+                    .run(&format!("f32   loop {model}/{node_name}"), || {
+                        for ex in 0..FOLD_BATCH {
+                            black_box(packed::conv1d_f32_packed(
+                                &xb[ex * el..(ex + 1) * el], s, pn, 1, padding, ctx.pool,
+                                scratch, out,
+                            ));
+                        }
+                    })
+                    .median_ns;
+                let ba = ctx
+                    .b
+                    .run(&format!("f32   bat8 {model}/{node_name}"), || {
+                        black_box(packed::conv1d_f32_packed(
+                            &xb, FOLD_BATCH * s, pn, 1, padding, ctx.pool, scratch, out,
+                        ));
+                    })
+                    .median_ns;
+                (lo, ba)
+            } else {
+                let (h, wd) = (ish[0], ish[1]);
+                let lo = ctx
+                    .b
+                    .run(&format!("f32   loop {model}/{node_name}"), || {
+                        for ex in 0..FOLD_BATCH {
+                            black_box(packed::conv2d_f32_packed(
+                                &xb[ex * el..(ex + 1) * el], h, wd, pn, 1, padding, ctx.pool,
+                                scratch, out,
+                            ));
+                        }
+                    })
+                    .median_ns;
+                let ba = ctx
+                    .b
+                    .run(&format!("f32   bat8 {model}/{node_name}"), || {
+                        black_box(packed::conv2d_f32_packed(
+                            &xb, FOLD_BATCH * h, wd, pn, 1, padding, ctx.pool, scratch, out,
+                        ));
+                    })
+                    .median_ns;
+                (lo, ba)
+            }
+        }
+    }
+}
+
 /// Race one fixed-point conv/dense node: `*_q_ref` vs GEMM lowering (at
 /// the context's thread budget, plus a 1-thread arm when threads > 1).
 #[allow(clippy::too_many_arguments)]
@@ -177,7 +388,7 @@ fn race_qmn(
     let relu = node.fused_relu;
     let mut out = Vec::new();
     let mut scratch = vec![Vec::new(); ctx.threads.max(1)];
-    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns) = match &node.kind {
+    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold) = match &node.kind {
         LayerKind::Conv { w, stride, padding, .. } => {
             let ish = &g.nodes[node.inputs[0]].out_shape;
             let x = rand_payloads(rng, ish.iter().product(), width);
@@ -210,7 +421,13 @@ fn race_qmn(
                         ));
                     })
                     .median_ns;
-                ("conv1d", r_ref, par, pre, one)
+                let fold = (k == 1 && *stride == 1).then(|| {
+                    race_fold_int(
+                        ctx, backend, model, node_name, &pn, Some((ish, *padding)), 1, width,
+                        rng, &mut scratch, &mut out,
+                    )
+                });
+                ("conv1d", r_ref, par, pre, one, fold)
             } else {
                 let (h, wd, c) = (ish[0], ish[1], ish[2]);
                 let (kh, kw, f) = (w.shape[0], w.shape[1], w.shape[3]);
@@ -241,7 +458,13 @@ fn race_qmn(
                         ));
                     })
                     .median_ns;
-                ("conv2d", r_ref, par, pre, one)
+                let fold = (kh == 1 && kw == 1 && *stride == 1).then(|| {
+                    race_fold_int(
+                        ctx, backend, model, node_name, &pn, Some((ish, *padding)), 2, width,
+                        rng, &mut scratch, &mut out,
+                    )
+                });
+                ("conv2d", r_ref, par, pre, one, fold)
             }
         }
         LayerKind::Dense { w, .. } => {
@@ -267,7 +490,11 @@ fn race_qmn(
                     black_box(packed::dense_int_packed(&x, &pn, ctx.pool, &mut out));
                 })
                 .median_ns;
-            ("dense", r_ref, par, pre, one)
+            let fold = Some(race_fold_int(
+                ctx, backend, model, node_name, &pn, None, g.dims, width, rng, &mut scratch,
+                &mut out,
+            ));
+            ("dense", r_ref, par, pre, one, fold)
         }
         _ => return,
     };
@@ -284,6 +511,8 @@ fn race_qmn(
         gemm_ns,
         prepack_ns,
         gemm_1t_ns,
+        looped_ns: fold.map(|f| f.0),
+        batched_ns: fold.map(|f| f.1),
     });
 }
 
@@ -302,7 +531,7 @@ fn race_f32(
     let relu = node.fused_relu;
     let mut out = Vec::new();
     let mut scratch = vec![Vec::new(); ctx.threads.max(1)];
-    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns) = match &node.kind {
+    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold) = match &node.kind {
         LayerKind::Conv { w, b: wb, stride, padding } => {
             let ish = &g.nodes[node.inputs[0]].out_shape;
             let x: Vec<f32> =
@@ -336,7 +565,13 @@ fn race_f32(
                         ));
                     })
                     .median_ns;
-                ("conv1d", r_ref, par, pre, one)
+                let fold = (k == 1 && *stride == 1).then(|| {
+                    race_fold_f32(
+                        ctx, model, node_name, &pn, Some((ish, *padding)), 1, rng,
+                        &mut scratch, &mut out,
+                    )
+                });
+                ("conv1d", r_ref, par, pre, one, fold)
             } else {
                 let (h, wd, c) = (ish[0], ish[1], ish[2]);
                 let (kh, kw, f) = (w.shape[0], w.shape[1], w.shape[3]);
@@ -369,7 +604,13 @@ fn race_f32(
                         ));
                     })
                     .median_ns;
-                ("conv2d", r_ref, par, pre, one)
+                let fold = (kh == 1 && kw == 1 && *stride == 1).then(|| {
+                    race_fold_f32(
+                        ctx, model, node_name, &pn, Some((ish, *padding)), 2, rng,
+                        &mut scratch, &mut out,
+                    )
+                });
+                ("conv2d", r_ref, par, pre, one, fold)
             }
         }
         LayerKind::Dense { w, b: wb } => {
@@ -395,7 +636,10 @@ fn race_f32(
                     black_box(packed::dense_f32_packed(&x, &pn, ctx.pool, &mut out));
                 })
                 .median_ns;
-            ("dense", r_ref, par, pre, one)
+            let fold = Some(race_fold_f32(
+                ctx, model, node_name, &pn, None, g.dims, rng, &mut scratch, &mut out,
+            ));
+            ("dense", r_ref, par, pre, one, fold)
         }
         _ => return,
     };
@@ -412,6 +656,8 @@ fn race_f32(
         gemm_ns,
         prepack_ns,
         gemm_1t_ns,
+        looped_ns: fold.map(|f| f.0),
+        batched_ns: fold.map(|f| f.1),
     });
 }
 
@@ -434,7 +680,7 @@ fn race_affine(
     let (zp_in, zp_out) = (aq.act[src_id].zero_point, aq.act[id].zero_point);
     let mut out = Vec::new();
     let mut scratch = vec![Vec::new(); ctx.threads.max(1)];
-    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns) = match &node.kind {
+    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold) = match &node.kind {
         LayerKind::Conv { w, stride, padding, .. } => {
             let ish = &g.nodes[src_id].out_shape;
             let x = rand_payloads(rng, ish.iter().product(), 8);
@@ -481,7 +727,13 @@ fn race_affine(
                     black_box(&out);
                 })
                 .median_ns;
-            (if g.dims == 1 { "conv1d" } else { "conv2d" }, r_ref, par, pre, one)
+            let fold = (*stride == 1 && pn.ks.iter().all(|&k| k == 1)).then(|| {
+                race_fold_int(
+                    ctx, "affin", model, node_name, &pn, Some((ish, *padding)), g.dims, 8,
+                    rng, &mut scratch, &mut out,
+                )
+            });
+            (if g.dims == 1 { "conv1d" } else { "conv2d" }, r_ref, par, pre, one, fold)
         }
         LayerKind::Dense { w, .. } => {
             let x = rand_payloads(rng, w.shape[0], 8);
@@ -511,7 +763,11 @@ fn race_affine(
                     black_box(&out);
                 })
                 .median_ns;
-            ("dense", r_ref, par, pre, one)
+            let fold = Some(race_fold_int(
+                ctx, "affin", model, node_name, &pn, None, g.dims, 8, rng, &mut scratch,
+                &mut out,
+            ));
+            ("dense", r_ref, par, pre, one, fold)
         }
         _ => return,
     };
@@ -528,6 +784,8 @@ fn race_affine(
         gemm_ns,
         prepack_ns,
         gemm_1t_ns,
+        looped_ns: fold.map(|f| f.0),
+        batched_ns: fold.map(|f| f.1),
     });
 }
 
@@ -600,6 +858,8 @@ fn race_attention(ctx: &RaceCtx, rows: &mut Vec<RaceRow>, rng: &mut Pcg32) {
                 gemm_ns: par,
                 prepack_ns: par,
                 gemm_1t_ns: one,
+                looped_ns: None,
+                batched_ns: None,
             });
         }
     }
@@ -826,9 +1086,13 @@ fn main() {
                 .parallel_speedup()
                 .map(|p| format!("  par {p:>4.2}x"))
                 .unwrap_or_default();
+            let bat = row
+                .batched_speedup()
+                .map(|s| format!("  bat8 {s:>4.2}x"))
+                .unwrap_or_default();
             println!(
                 "{:<28} {:<6} {:<7} m={:<5} n={:<4} k={:<5} ref {:>10.0} ns  gemm {:>10.0} ns  \
-                 {:>5.2}x  pack {:>10.0} ns  {:>4.2}x{par}",
+                 {:>5.2}x  pack {:>10.0} ns  {:>4.2}x{par}{bat}",
                 row.layer, row.kind, row.backend, row.m, row.n, row.k, row.ref_ns, row.gemm_ns,
                 row.speedup(), row.prepack_ns, row.prepack_speedup()
             );
@@ -927,6 +1191,15 @@ fn main() {
         .iter()
         .filter(|r| r.prepack_gated())
         .all(|r| r.prepack_speedup() >= 1.0 - CHECK_TOLERANCE);
+    // PR-8 gate: the batch-folded path must never lose to the per-example
+    // loop at batch 8 on any foldable (dense / stride-1 1×1 conv) shape.
+    let min_batched = race_rows
+        .iter()
+        .filter_map(RaceRow::batched_speedup)
+        .fold(f64::INFINITY, f64::min);
+    let batched_pass = race_rows
+        .iter()
+        .all(|r| r.batched_speedup().is_none_or(|s| s >= 1.0 - CHECK_TOLERANCE));
     // Baseline ratio gate: only against a REAL committed baseline. A
     // schema placeholder (no measured samples) must not gate anything —
     // skip it loudly so CI uploads this run as the first real baseline.
@@ -957,9 +1230,9 @@ fn main() {
             baseline_bad = baseline_regressions(&race_rows, doc);
         }
     }
-    let pass = live_pass && prepack_pass && baseline_bad.is_empty();
+    let pass = live_pass && prepack_pass && batched_pass && baseline_bad.is_empty();
     let doc = Json::obj(vec![
-        ("version", Json::num(3.0)),
+        ("version", Json::num(4.0)),
         ("bench", Json::str("hotpath")),
         ("mode", Json::str(if smoke { "smoke" } else { "full" })),
         ("threads", Json::num(threads as f64)),
@@ -977,6 +1250,13 @@ fn main() {
                          the row is reported but not gated)",
                     ),
                 ),
+                (
+                    "batched_rule",
+                    Json::str(
+                        "batched_speedup (looped_ns / batched_ns at batch 8) >= \
+                         1.0 - tolerance on every foldable shape (dense, stride-1 1x1 conv)",
+                    ),
+                ),
                 ("tolerance", Json::num(CHECK_TOLERANCE)),
                 ("baseline_rule", Json::str(
                     "speedup >= baseline speedup * (1 - baseline_tolerance) per matched shape; \
@@ -988,6 +1268,10 @@ fn main() {
                 (
                     "min_prepack_speedup",
                     Json::num(if min_prepack.is_finite() { min_prepack } else { 0.0 }),
+                ),
+                (
+                    "min_batched_speedup",
+                    Json::num(if min_batched.is_finite() { min_batched } else { 0.0 }),
                 ),
                 ("pass", Json::Bool(pass)),
             ]),
@@ -1015,7 +1299,8 @@ fn main() {
     std::fs::write(&out_path, text).expect("write bench json");
     println!(
         "\nwrote {out_path} (threads={threads}, min GEMM speedup {min_speedup:.2}x, min prepack \
-         speedup {min_prepack:.2}x over {} shapes)",
+         speedup {min_prepack:.2}x, min batched speedup {:.2}x over {} shapes)",
+        if min_batched.is_finite() { min_batched } else { 0.0 },
         race_rows.len()
     );
 
@@ -1042,6 +1327,24 @@ fn main() {
                 );
             }
         }
+        if !batched_pass {
+            eprintln!("--check FAILED: batch-folded path slower than the per-example loop on:");
+            for r in race_rows
+                .iter()
+                .filter(|r| r.batched_speedup().is_some_and(|s| s < 1.0 - CHECK_TOLERANCE))
+            {
+                eprintln!(
+                    "  {}/{} {} {}: {:.2}x (looped {:.0} ns, batched {:.0} ns)",
+                    r.model,
+                    r.layer,
+                    r.kind,
+                    r.backend,
+                    r.batched_speedup().unwrap_or(0.0),
+                    r.looped_ns.unwrap_or(0.0),
+                    r.batched_ns.unwrap_or(0.0)
+                );
+            }
+        }
         if !baseline_bad.is_empty() {
             eprintln!("--check FAILED: regression vs committed baseline on:");
             for line in &baseline_bad {
@@ -1062,7 +1365,7 @@ fn legacy_sections(b: &Bencher, rng: &mut Pcg32) {
     let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
     let x: Vec<f32> = (0..128 * 9).map(|_| rng.normal()).collect();
     let macc = microai::mcu::graph_ops(&g).macc as f64;
-    let mut sess = SessionBuilder::fixed_qmn(qg.clone()).build();
+    let mut sess = SessionBuilder::fixed_qmn(qg.clone()).max_batch(8).build();
     let r = b.run_throughput("session reuse (arena)", macc, "MACC/s", || {
         black_box(sess.run(&x));
     });
@@ -1073,9 +1376,9 @@ fn legacy_sections(b: &Bencher, rng: &mut Pcg32) {
     println!("{}", r.report());
     let batch: Vec<f32> = (0..8 * 128 * 9).map(|_| rng.normal()).collect();
     let mut preds = Vec::new();
-    let r = b.run_throughput("session classify_batch(8)", 8.0 * macc, "MACC/s", || {
+    let r = b.run_throughput("session infer batch(8)", 8.0 * macc, "MACC/s", || {
         preds.clear();
-        sess.classify_batch_into(&batch, &mut preds);
+        sess.infer(&Batch::contiguous(&batch, 128 * 9), &mut preds);
         black_box(&preds);
     });
     println!("{}", r.report());

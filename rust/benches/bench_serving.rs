@@ -191,6 +191,10 @@ fn main() {
         );
         json_rows.push(microai::util::json::Json::obj(vec![
             ("workers", microai::util::json::Json::num(workers as f64)),
+            // Worker micro-batch size: the sharded arm serves each batch
+            // through ONE batch-folded Session::infer call (PR-8); the
+            // single-channel baseline is always batch 1.
+            ("batch", microai::util::json::Json::num(cfg.max_batch as f64)),
             ("sharded_ns", microai::util::json::Json::num(sharded_ns)),
             ("single_channel_ns", microai::util::json::Json::num(r.median_ns)),
             (
@@ -228,6 +232,7 @@ fn main() {
         println!("{}", r.report());
         tx_rows.push(microai::util::json::Json::obj(vec![
             ("workers", microai::util::json::Json::num(workers as f64)),
+            ("batch", microai::util::json::Json::num(cfg.max_batch as f64)),
             ("sharded_ns", microai::util::json::Json::num(r.median_ns)),
         ]));
     }

@@ -11,7 +11,7 @@ use crate::graph::{deploy_pipeline, resnet_v1_6, Graph};
 use crate::mcu::board::Board;
 use crate::mcu::paper_data::DType;
 use crate::nn::float_exec::ActStats;
-use crate::nn::session::{Session, SessionBuilder};
+use crate::nn::session::{Batch, Session, SessionBuilder};
 use crate::quant::{quantize, QuantSpec, QuantizedGraph};
 use crate::runtime::ModelSpec;
 use crate::tensor::TensorF;
@@ -41,11 +41,12 @@ pub fn calibrate(graph: &Graph, data: &RawDataModel, n: usize) -> ActStats {
 
 /// Test accuracy of one session over the whole test set (run-many half of
 /// the compile-once/run-many contract). `test_x` is contiguous, so it
-/// feeds [`Session::classify_batch_into`] directly: the whole set is
-/// evaluated through one arena, zero-copy.
+/// feeds [`Session::infer`] as one zero-copy [`Batch`] view: the whole
+/// set is evaluated through one arena, in `max_batch`-sized folded
+/// micro-batches.
 pub fn session_accuracy(sess: &mut Session, data: &RawDataModel) -> f64 {
     let mut preds = Vec::with_capacity(data.n_test());
-    sess.classify_batch_into(&data.test_x, &mut preds);
+    sess.infer(&Batch::contiguous(&data.test_x, sess.input_len()), &mut preds);
     let correct = preds
         .iter()
         .zip(&data.test_y)

@@ -4,9 +4,9 @@
 //! Appendix C.
 //!
 //! Every evaluation arm runs through the Session API's batched path
-//! (`deployer::session_accuracy` → [`crate::nn::Session::classify_batch_into`]):
-//! one compiled session, one arena, the whole test set in flattened
-//! chunks.
+//! (`deployer::session_accuracy` → [`crate::nn::Session::infer`] over one
+//! contiguous [`crate::nn::Batch`] view): one compiled session, one
+//! arena, the whole test set in batch-folded micro-batches.
 
 use anyhow::{Context, Result};
 

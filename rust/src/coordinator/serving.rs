@@ -15,10 +15,11 @@
 //!   **least-loaded** worker (pending-request count), breaking ties
 //!   round-robin so equal load still spreads;
 //! - workers own forked [`Session`]s (weights shared via `Arc`, activation
-//!   arenas preallocated per worker) and run the little model over the
-//!   whole batch through one arena ([`Session::classify_each_into`]),
-//!   then escalate the low-confidence subset to the big model as a second
-//!   batch;
+//!   arenas sized for [`CascadeConfig::max_batch`] examples via
+//!   [`crate::nn::ForkOpts`]) and run the little model over the whole
+//!   micro-batch through ONE [`Session::infer`] call — dense and 1×1
+//!   stride-1 conv layers fold the batch into one GEMM — then escalate
+//!   the low-confidence subset to the big model as a second batch;
 //! - each worker session may additionally run its GEMM kernels across an
 //!   intra-op thread pool ([`CascadeConfig::intra_op_threads`], bit-exact
 //!   vs serial); the scheduler caps `workers × intra_op_threads` at the
@@ -63,7 +64,7 @@ use std::thread;
 use std::time::Instant;
 
 use crate::mcu::board::{Board, SPARKFUN_EDGE};
-use crate::nn::session::{Prediction, Session, SessionBuilder};
+use crate::nn::session::{Batch, ForkOpts, Predictions, Session, SessionBuilder};
 use crate::quant::QuantizedGraph;
 use crate::util::prng::Pcg32;
 use crate::util::stats::{summarize, Summary};
@@ -219,18 +220,17 @@ struct CascadeWorker {
     clock_ms: f64,
     /// Total device time served (utilization numerator).
     busy_ms: f64,
-    preds: Vec<Prediction>,
+    preds: Predictions,
     esc_idx: Vec<usize>,
-    esc_preds: Vec<Prediction>,
+    esc_preds: Predictions,
+    /// Contiguous staging of one micro-batch's inputs (little pass).
+    batch_buf: Vec<f32>,
+    /// Contiguous staging of the escalated subset (big pass).
+    esc_buf: Vec<f32>,
 }
 
 impl CascadeWorker {
-    fn new(
-        little: &Session,
-        big: &Session,
-        threshold: f32,
-        intra_op_threads: usize,
-    ) -> CascadeWorker {
+    fn new(little: &Session, big: &Session, threshold: f32, opts: ForkOpts) -> CascadeWorker {
         let (lm, bm) = (little.meta(), big.meta());
         // A board-attached session whose engine failed to price it is a
         // configuration bug (cost model not covering the board/dtype) —
@@ -255,8 +255,8 @@ impl CascadeWorker {
             _ => None,
         };
         CascadeWorker {
-            little: little.fork_with_threads(intra_op_threads),
-            big: big.fork_with_threads(intra_op_threads),
+            little: little.fork_with(opts),
+            big: big.fork_with(opts),
             threshold,
             prices,
             clock_ms: 0.0,
@@ -264,18 +264,25 @@ impl CascadeWorker {
             preds: Vec::new(),
             esc_idx: Vec::new(),
             esc_preds: Vec::new(),
+            batch_buf: Vec::new(),
+            esc_buf: Vec::new(),
         }
     }
 
-    /// Serve one micro-batch: little over the whole batch through one
-    /// arena, then the low-confidence subset through big as a second
-    /// batch. Queue accounting is FIFO on this worker's virtual clock.
+    /// Serve one micro-batch: stage the inputs contiguously and run
+    /// little over the whole batch through ONE [`Session::infer`] call
+    /// (batch-folded GEMMs, bit-exact vs per-example), then the
+    /// low-confidence subset through big as a second batch. Queue
+    /// accounting is FIFO on this worker's virtual clock.
     fn serve_batch(&mut self, batch: &[Scheduled], out: &mut Vec<Response>) {
+        let ilen = self.little.input_len();
+        self.batch_buf.clear();
+        for s in batch {
+            assert_eq!(s.req.input.len(), ilen, "example/input length mismatch");
+            self.batch_buf.extend_from_slice(&s.req.input);
+        }
         self.preds.clear();
-        self.little.classify_each_into(
-            batch.iter().map(|s| s.req.input.as_slice()),
-            &mut self.preds,
-        );
+        self.little.infer(&Batch::contiguous(&self.batch_buf, ilen), &mut self.preds);
 
         self.esc_idx.clear();
         for (i, p) in self.preds.iter().enumerate() {
@@ -283,11 +290,12 @@ impl CascadeWorker {
                 self.esc_idx.push(i);
             }
         }
+        self.esc_buf.clear();
+        for &i in &self.esc_idx {
+            self.esc_buf.extend_from_slice(&batch[i].req.input);
+        }
         self.esc_preds.clear();
-        self.big.classify_each_into(
-            self.esc_idx.iter().map(|&i| batch[i].req.input.as_slice()),
-            &mut self.esc_preds,
-        );
+        self.big.infer(&Batch::contiguous(&self.esc_buf, ilen), &mut self.esc_preds);
 
         let mut esc_cursor = 0usize;
         for (i, s) in batch.iter().enumerate() {
@@ -377,7 +385,8 @@ pub fn run_cascade_sessions(
         let depth = Arc::new(AtomicUsize::new(0));
         pending.push(depth.clone());
         let resp = resp_tx.clone();
-        let mut worker = CascadeWorker::new(little, big, cfg.threshold, intra);
+        let opts = ForkOpts::inherit().threads(intra).max_batch(max_batch);
+        let mut worker = CascadeWorker::new(little, big, cfg.threshold, opts);
         handles.push(thread::spawn(move || {
             let mut out = Vec::new();
             while let Ok(batch) = rx.recv() {
@@ -512,7 +521,8 @@ pub fn run_cascade_single_channel(
     for _ in 0..workers.max(1) {
         let rx = work_rx.clone();
         let tx = resp_tx.clone();
-        let mut worker = CascadeWorker::new(little, big, threshold, 1);
+        let opts = ForkOpts::inherit().threads(1).max_batch(1);
+        let mut worker = CascadeWorker::new(little, big, threshold, opts);
         handles.push(thread::spawn(move || {
             let mut out = Vec::new();
             loop {

@@ -111,159 +111,296 @@ pub(crate) fn run_pooled(
             let src = |i: usize| {
                 crate::nn::session::pool_src(pools, qin, &alloc.pool_of, node_elems, i)
             };
-            match &node.kind {
-                LayerKind::Input => unreachable!(),
-                LayerKind::Conv { w, stride, padding, .. } => {
-                    let src_id = node.inputs[0];
-                    let ish = &graph.nodes[src_id].out_shape;
-                    if let Some(pn) = packed.get(node.id) {
-                        if graph.dims == 1 {
-                            crate::nn::packed::conv1d_int_packed(
-                                src(src_id), ish[0], pn, *stride, *padding, pool, scratch,
-                                &mut out,
-                            );
-                        } else {
-                            crate::nn::packed::conv2d_int_packed(
-                                src(src_id), ish[0], ish[1], pn, *stride, *padding, pool,
-                                scratch, &mut out,
-                            );
-                        }
-                    } else {
-                        gemm::conv_affine_gemm(
-                            src(src_id), ish, &w.shape, &aq.weights[&node.id],
-                            aq.act[src_id].zero_point, aq.act[node.id].zero_point,
-                            *stride, *padding, node.fused_relu, graph.dims, pool, scratch,
-                            &mut out,
-                        );
-                    }
+            exec_node(aq, node, &src, packed, pool, scratch, &mut out);
+        }
+        pools[p] = out;
+    }
+
+    dequantize_output(aq, alloc, node_elems, qinput, pools, 1, output);
+}
+
+/// Batch-folded twin of [`run_pooled`] — see `int_exec::run_pooled_batch`
+/// for the fold criteria and the bit-exactness argument (the prepacked
+/// affine kernels are the same `PackedB::I32/I64` + `BiasRequant` core,
+/// so the same M-dimension/leading-spatial-axis stacking applies).
+/// Unfoldable layers loop per example through the shared [`exec_node`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_pooled_batch(
+    aq: &AffineQuantizedGraph,
+    inputs: &[f32],
+    batch: usize,
+    alloc: &crate::allocator::Allocation,
+    node_elems: &[usize],
+    qinput: &mut Vec<i32>,
+    pools: &mut [Vec<i32>],
+    pool: &crate::nn::parallel::IntraOpPool,
+    scratch: &mut [Vec<i32>],
+    packed: &crate::nn::packed::PackedWeights,
+    tmp: &mut Vec<i32>,
+    output: &mut Vec<f32>,
+) {
+    if batch <= 1 {
+        // Single example: the per-example driver IS the folded path
+        // (no per-node fold dispatch to pay for).
+        return run_pooled(
+            aq, inputs, alloc, node_elems, qinput, pools, pool, scratch, packed, output,
+        );
+    }
+    let graph = &aq.graph;
+    let ilen: usize = graph.input_shape.iter().product();
+    assert_eq!(inputs.len(), batch * ilen, "ragged batch");
+
+    let in_params = aq.act[0];
+    qinput.clear();
+    qinput.extend(inputs.iter().map(|&x| in_params.quantize(x)));
+
+    for node in &graph.nodes {
+        if matches!(node.kind, LayerKind::Input) {
+            continue;
+        }
+        let p = alloc.pool_of[node.id];
+        let ne = node_elems[node.id];
+        let mut out = std::mem::take(&mut pools[p]);
+        let folded = {
+            let qin: &[i32] = qinput;
+            // Whole-batch producer slice: example-major payloads are
+            // contiguous, so a folded GEMM reads them as one A matrix.
+            let whole = |i: usize| {
+                let q = alloc.pool_of[i];
+                if q == usize::MAX {
+                    qin
+                } else {
+                    &pools[q][..batch * node_elems[i]]
                 }
-                LayerKind::Dense { w, .. } => {
-                    let src_id = node.inputs[0];
-                    if let Some(pn) = packed.get(node.id) {
-                        crate::nn::packed::dense_int_packed(src(src_id), pn, pool, &mut out);
-                    } else {
-                        gemm::dense_affine_gemm(
-                            src(src_id), &aq.weights[&node.id],
-                            aq.act[src_id].zero_point, aq.act[node.id].zero_point,
-                            w.shape[1], node.fused_relu, pool, scratch, &mut out,
-                        );
-                    }
-                }
-                LayerKind::MaxPool { size } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    crate::nn::int_ops::maxpool_q(
-                        src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, false, &mut out,
+            };
+            match (&node.kind, packed.get(node.id)) {
+                (LayerKind::Dense { .. }, Some(pn)) => {
+                    crate::nn::packed::dense_int_batched(
+                        whole(node.inputs[0]), batch, pn, pool, &mut out,
                     );
-                    if node.fused_relu {
-                        let zp = aq.act[node.id].zero_point;
-                        for v in out.iter_mut() {
-                            *v = (*v).max(zp);
-                        }
-                    }
+                    true
                 }
-                LayerKind::GlobalAvgPool => {
-                    // Mean of payloads; zero point is unchanged (same params in
-                    // and out — TFLite AVERAGE_POOL_2D requirement).
-                    // Channel-major accumulation: no per-request allocation.
-                    let x = src(node.inputs[0]);
+                (LayerKind::Conv { stride: 1, padding, .. }, Some(pn))
+                    if pn.ks.iter().all(|&k| k == 1) =>
+                {
+                    // Stride-1 1×1 conv is pointwise: concatenating the
+                    // batch along the leading spatial axis runs the whole
+                    // micro-batch as one call (see int_exec for why this
+                    // is the example-major concatenation, bit-identical).
                     let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    let positions: usize = ish[..ish.len() - 1].iter().product();
-                    out.clear();
-                    out.reserve(c);
-                    let n = positions as i64;
-                    for ci in 0..c {
-                        let mut s = 0i64;
-                        for p in 0..positions {
-                            s += x[p * c + ci] as i64;
-                        }
-                        // Round-to-nearest division, per TFLite.
-                        let r = if s >= 0 { (s + n / 2) / n } else { (s - n / 2) / n };
-                        out.push(r.clamp(-128, 127) as i32);
-                    }
-                }
-                LayerKind::AvgPool { size } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    crate::nn::int_ops::avgpool_q(
-                        src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, &mut out,
-                    );
-                }
-                LayerKind::Add => {
-                    add_affine(
-                        aq, node.id, node.inputs[0], node.inputs[1],
-                        src(node.inputs[0]), src(node.inputs[1]),
-                        node.fused_relu, &mut out,
-                    );
-                }
-                LayerKind::ReLU => {
-                    let zp = aq.act[node.id].zero_point;
-                    out.clear();
-                    out.extend(src(node.inputs[0]).iter().map(|&v| v.max(zp)));
-                }
-                LayerKind::Flatten => {
-                    out.clear();
-                    out.extend_from_slice(src(node.inputs[0]));
-                }
-                LayerKind::Softmax => {
-                    // Node-level softmax: decompose the input scale at
-                    // dispatch time (tiny final node; the attention-
-                    // internal softmaxes carry theirs in the Attn params).
-                    let (m, sh) = decompose(aq.act[node.inputs[0]].scale as f64);
-                    softmax_affine_ref(src(node.inputs[0]), m, sh, &mut out);
-                }
-                LayerKind::Embedding { w } => {
-                    let AffineTxWeights::Embed { table } = &aq.tx[&node.id] else {
-                        panic!("embedding node without Embed params");
-                    };
-                    // Ids quantize as identity (scale 1, zp 0), so the
-                    // payload gather is the fixed-point one.
-                    crate::nn::int_ops::embedding_q(
-                        src(node.inputs[0]), table, w.shape[1], &mut out,
-                    );
-                }
-                LayerKind::LayerNorm { .. } => {
-                    let AffineTxWeights::Norm { gamma, g_n, beta } = &aq.tx[&node.id] else {
-                        panic!("layernorm node without Norm params");
-                    };
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    layernorm_affine_ref(
-                        src(node.inputs[0]), c, gamma, *g_n, beta,
-                        aq.act[node.id].zero_point, &mut out,
-                    );
-                }
-                LayerKind::SelfAttention { heads, head_dim, .. } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let (seq, dm) = (ish[0], ish[1]);
-                    if let Some(pa) = packed.attn(node.id) {
-                        crate::nn::packed::attention_int_packed(
-                            src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool,
+                    if graph.dims == 1 {
+                        crate::nn::packed::conv1d_int_packed(
+                            whole(node.inputs[0]), batch * ish[0], pn, 1, *padding, pool,
                             scratch, &mut out,
                         );
                     } else {
-                        attention_affine_ref(
-                            src(node.inputs[0]), seq, dm, *heads, *head_dim,
-                            &aq.tx[&node.id], aq.act[node.inputs[0]].zero_point,
-                            aq.act[node.id].zero_point, &mut out,
+                        crate::nn::packed::conv2d_int_packed(
+                            whole(node.inputs[0]), batch * ish[0], ish[1], pn, 1, *padding,
+                            pool, scratch, &mut out,
                         );
                     }
+                    true
                 }
-                other => panic!("affine executor: unsupported layer {}", other.type_name()),
+                _ => false,
+            }
+        };
+        if !folded {
+            out.clear();
+            out.resize(batch * ne, 0);
+            for ex in 0..batch {
+                {
+                    let qin: &[i32] = qinput;
+                    let src = |i: usize| {
+                        let q = alloc.pool_of[i];
+                        if q == usize::MAX {
+                            &qin[ex * ilen..(ex + 1) * ilen]
+                        } else {
+                            let nei = node_elems[i];
+                            &pools[q][ex * nei..(ex + 1) * nei]
+                        }
+                    };
+                    exec_node(aq, node, &src, packed, pool, scratch, tmp);
+                }
+                out[ex * ne..(ex + 1) * ne].copy_from_slice(tmp);
             }
         }
         pools[p] = out;
     }
 
-    let out_id = graph.output_id();
+    dequantize_output(aq, alloc, node_elems, qinput, pools, batch, output);
+}
+
+/// One node's single-example compute, shared verbatim by the per-example
+/// driver ([`run_pooled`]) and the unfoldable arm of the batch-folded
+/// driver ([`run_pooled_batch`]) — the batched path inherits every
+/// property pinned on this code.
+fn exec_node<'a>(
+    aq: &AffineQuantizedGraph,
+    node: &crate::graph::ir::Node,
+    src: &dyn Fn(usize) -> &'a [i32],
+    packed: &crate::nn::packed::PackedWeights,
+    pool: &crate::nn::parallel::IntraOpPool,
+    scratch: &mut [Vec<i32>],
+    out: &mut Vec<i32>,
+) {
+    let graph = &aq.graph;
+    match &node.kind {
+        LayerKind::Input => unreachable!(),
+        LayerKind::Conv { w, stride, padding, .. } => {
+            let src_id = node.inputs[0];
+            let ish = &graph.nodes[src_id].out_shape;
+            if let Some(pn) = packed.get(node.id) {
+                if graph.dims == 1 {
+                    crate::nn::packed::conv1d_int_packed(
+                        src(src_id), ish[0], pn, *stride, *padding, pool, scratch, out,
+                    );
+                } else {
+                    crate::nn::packed::conv2d_int_packed(
+                        src(src_id), ish[0], ish[1], pn, *stride, *padding, pool, scratch,
+                        out,
+                    );
+                }
+            } else {
+                gemm::conv_affine_gemm(
+                    src(src_id), ish, &w.shape, &aq.weights[&node.id],
+                    aq.act[src_id].zero_point, aq.act[node.id].zero_point,
+                    *stride, *padding, node.fused_relu, graph.dims, pool, scratch, out,
+                );
+            }
+        }
+        LayerKind::Dense { w, .. } => {
+            let src_id = node.inputs[0];
+            if let Some(pn) = packed.get(node.id) {
+                crate::nn::packed::dense_int_packed(src(src_id), pn, pool, out);
+            } else {
+                gemm::dense_affine_gemm(
+                    src(src_id), &aq.weights[&node.id],
+                    aq.act[src_id].zero_point, aq.act[node.id].zero_point,
+                    w.shape[1], node.fused_relu, pool, scratch, out,
+                );
+            }
+        }
+        LayerKind::MaxPool { size } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            crate::nn::int_ops::maxpool_q(
+                src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, false, out,
+            );
+            if node.fused_relu {
+                let zp = aq.act[node.id].zero_point;
+                for v in out.iter_mut() {
+                    *v = (*v).max(zp);
+                }
+            }
+        }
+        LayerKind::GlobalAvgPool => {
+            // Mean of payloads; zero point is unchanged (same params in
+            // and out — TFLite AVERAGE_POOL_2D requirement).
+            // Channel-major accumulation: no per-request allocation.
+            let x = src(node.inputs[0]);
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            let positions: usize = ish[..ish.len() - 1].iter().product();
+            out.clear();
+            out.reserve(c);
+            let n = positions as i64;
+            for ci in 0..c {
+                let mut s = 0i64;
+                for p in 0..positions {
+                    s += x[p * c + ci] as i64;
+                }
+                // Round-to-nearest division, per TFLite.
+                let r = if s >= 0 { (s + n / 2) / n } else { (s - n / 2) / n };
+                out.push(r.clamp(-128, 127) as i32);
+            }
+        }
+        LayerKind::AvgPool { size } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            crate::nn::int_ops::avgpool_q(
+                src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, out,
+            );
+        }
+        LayerKind::Add => {
+            add_affine(
+                aq, node.id, node.inputs[0], node.inputs[1],
+                src(node.inputs[0]), src(node.inputs[1]),
+                node.fused_relu, out,
+            );
+        }
+        LayerKind::ReLU => {
+            let zp = aq.act[node.id].zero_point;
+            out.clear();
+            out.extend(src(node.inputs[0]).iter().map(|&v| v.max(zp)));
+        }
+        LayerKind::Flatten => {
+            out.clear();
+            out.extend_from_slice(src(node.inputs[0]));
+        }
+        LayerKind::Softmax => {
+            // Node-level softmax: decompose the input scale at
+            // dispatch time (tiny final node; the attention-
+            // internal softmaxes carry theirs in the Attn params).
+            let (m, sh) = decompose(aq.act[node.inputs[0]].scale as f64);
+            softmax_affine_ref(src(node.inputs[0]), m, sh, out);
+        }
+        LayerKind::Embedding { w } => {
+            let AffineTxWeights::Embed { table } = &aq.tx[&node.id] else {
+                panic!("embedding node without Embed params");
+            };
+            // Ids quantize as identity (scale 1, zp 0), so the
+            // payload gather is the fixed-point one.
+            crate::nn::int_ops::embedding_q(src(node.inputs[0]), table, w.shape[1], out);
+        }
+        LayerKind::LayerNorm { .. } => {
+            let AffineTxWeights::Norm { gamma, g_n, beta } = &aq.tx[&node.id] else {
+                panic!("layernorm node without Norm params");
+            };
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            layernorm_affine_ref(
+                src(node.inputs[0]), c, gamma, *g_n, beta, aq.act[node.id].zero_point, out,
+            );
+        }
+        LayerKind::SelfAttention { heads, head_dim, .. } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let (seq, dm) = (ish[0], ish[1]);
+            if let Some(pa) = packed.attn(node.id) {
+                crate::nn::packed::attention_int_packed(
+                    src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool, scratch, out,
+                );
+            } else {
+                attention_affine_ref(
+                    src(node.inputs[0]), seq, dm, *heads, *head_dim,
+                    &aq.tx[&node.id], aq.act[node.inputs[0]].zero_point,
+                    aq.act[node.id].zero_point, out,
+                );
+            }
+        }
+        other => panic!("affine executor: unsupported layer {}", other.type_name()),
+    }
+}
+
+/// Dequantize the output node's payloads — `batch` consecutive examples
+/// when called from the batch-folded driver.
+fn dequantize_output(
+    aq: &AffineQuantizedGraph,
+    alloc: &crate::allocator::Allocation,
+    node_elems: &[usize],
+    qinput: &[i32],
+    pools: &[Vec<i32>],
+    batch: usize,
+    output: &mut Vec<f32>,
+) {
+    let out_id = aq.graph.output_id();
     let params = aq.act[out_id];
     output.clear();
     let p = alloc.pool_of[out_id];
     if p == usize::MAX {
         output.extend(qinput.iter().map(|&q| params.dequantize(q)));
     } else {
-        output.extend(pools[p][..node_elems[out_id]].iter().map(|&q| params.dequantize(q)));
+        let n = batch * node_elems[out_id];
+        output.extend(pools[p][..n].iter().map(|&q| params.dequantize(q)));
     }
 }
 

@@ -182,125 +182,7 @@ pub(crate) fn run_pooled(
             // other producer's output sits at the head of its pool. The
             // allocator invariant guarantees none of them share pool `p`.
             let src = |i: usize| super::session::pool_src(pools, input, &alloc.pool_of, node_elems, i);
-            match &node.kind {
-                LayerKind::Input => unreachable!(),
-                LayerKind::Conv { w, b, stride, padding } => {
-                    // Prepacked fused path when the plan carries packed
-                    // weights; per-call im2col + blocked GEMM (nn::gemm)
-                    // otherwise. The naive loops survive as
-                    // float_ops::conv*_ref.
-                    let x = src(node.inputs[0]);
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    if let Some(pn) = packed.get(node.id) {
-                        if graph.dims == 1 {
-                            super::packed::conv1d_f32_packed(
-                                x, ish[0], pn, *stride, *padding, pool, scratch, &mut out,
-                            );
-                        } else {
-                            super::packed::conv2d_f32_packed(
-                                x, ish[0], ish[1], pn, *stride, *padding, pool, scratch,
-                                &mut out,
-                            );
-                        }
-                    } else if graph.dims == 1 {
-                        gemm::conv1d_gemm(
-                            x, ish[0], ish[1], &w.data, w.shape[0], w.shape[2], &b.data,
-                            *stride, *padding, node.fused_relu, pool, scratch, &mut out,
-                        );
-                    } else {
-                        gemm::conv2d_gemm(
-                            x, ish[0], ish[1], ish[2], &w.data, w.shape[0], w.shape[1],
-                            w.shape[3], &b.data, *stride, *padding, node.fused_relu,
-                            pool, scratch, &mut out,
-                        );
-                    }
-                }
-                LayerKind::Dense { w, b } => {
-                    if let Some(pn) = packed.get(node.id) {
-                        super::packed::dense_f32_packed(src(node.inputs[0]), pn, pool, &mut out);
-                    } else {
-                        gemm::dense_gemm(
-                            src(node.inputs[0]), &w.data, &b.data, w.shape[1],
-                            node.fused_relu, pool, &mut out,
-                        );
-                    }
-                }
-                LayerKind::MaxPool { size } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    ops::maxpool(
-                        src(node.inputs[0]), &ish[..ish.len() - 1], c, *size,
-                        node.fused_relu, &mut out,
-                    );
-                }
-                LayerKind::AvgPool { size } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    ops::avgpool(src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, &mut out);
-                }
-                LayerKind::GlobalAvgPool => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    let positions: usize = ish[..ish.len() - 1].iter().product();
-                    ops::global_avgpool(src(node.inputs[0]), positions, c, &mut out);
-                }
-                LayerKind::Add => {
-                    ops::add(src(node.inputs[0]), src(node.inputs[1]), node.fused_relu, &mut out);
-                }
-                LayerKind::ReLU => {
-                    ops::relu(src(node.inputs[0]), &mut out);
-                }
-                LayerKind::Softmax => {
-                    ops::softmax(src(node.inputs[0]), &mut out);
-                }
-                LayerKind::ZeroPad { pad } => {
-                    // Materialized zero padding (only when not fused away).
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    zero_pad_into(src(node.inputs[0]), ish, pad, &mut out);
-                }
-                LayerKind::BatchNorm { mean, var, gamma, beta, eps } => {
-                    let (w, b) =
-                        crate::graph::passes::batchnorm_affine(mean, var, gamma, beta, *eps);
-                    let c = *graph.nodes[node.inputs[0]].out_shape.last().unwrap();
-                    ops::batchnorm_affine(src(node.inputs[0]), c, &w, &b, &mut out);
-                }
-                LayerKind::Flatten => {
-                    out.clear();
-                    out.extend_from_slice(src(node.inputs[0]));
-                }
-                LayerKind::Embedding { w } => {
-                    ops::embedding(src(node.inputs[0]), &w.data, w.shape[1], &mut out);
-                }
-                LayerKind::LayerNorm { gamma, beta, eps } => {
-                    let c = *graph.nodes[node.inputs[0]].out_shape.last().unwrap();
-                    ops::layernorm(src(node.inputs[0]), c, gamma, beta, *eps, &mut out);
-                }
-                LayerKind::SelfAttention { heads, head_dim, w } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let (seq, dm) = (ish[0], ish[1]);
-                    // Calibration must see the attention-internal tensors,
-                    // which the fused packed kernel never materialises as a
-                    // whole; route stats runs through the reference path.
-                    let pa = if stats.is_some() { None } else { packed.attn(node.id) };
-                    if let Some(pa) = pa {
-                        super::packed::attention_f32_packed(
-                            src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool,
-                            scratch, &mut out,
-                        );
-                    } else {
-                        // Per-call reference path; calibration rides it to
-                        // record the attention-internal ranges.
-                        let mut tmp = ops::AttnTmp::default();
-                        ops::self_attention_ref(
-                            src(node.inputs[0]), seq, dm, *heads, *head_dim, w, &mut tmp,
-                            &mut out,
-                        );
-                        if let Some(stats) = stats.as_deref_mut() {
-                            stats.record_attn(node.id, &tmp);
-                        }
-                    }
-                }
-            }
+            exec_node(graph, node, &src, packed, pool, scratch, &mut stats, &mut out);
         }
         if let Some(stats) = stats.as_deref_mut() {
             stats.record(node.id, &out);
@@ -314,6 +196,250 @@ pub(crate) fn run_pooled(
         output.extend_from_slice(input); // degenerate input-only graph
     } else {
         output.extend_from_slice(&pools[p][..node_elems[out_id]]);
+    }
+}
+
+/// Batch-folded twin of [`run_pooled`] (no calibration — stats recording
+/// stays per-example on [`run_pooled`]): dense layers and stride-1 1×1
+/// convs fold the whole micro-batch into one packed GEMM; every other
+/// layer loops per example through the shared [`exec_node`], staging one
+/// example's output in `tmp`. Pools hold example-major payloads sized by
+/// the arena's `max_batch` factor. See `int_exec::run_pooled_batch` for
+/// the fold argument; the f32 fold is additionally BITWISE identical to
+/// the per-example loop because the per-element k-major accumulation
+/// order is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_pooled_batch(
+    graph: &Graph,
+    inputs: &[f32],
+    batch: usize,
+    alloc: &crate::allocator::Allocation,
+    node_elems: &[usize],
+    pools: &mut [Vec<f32>],
+    pool: &super::parallel::IntraOpPool,
+    scratch: &mut [Vec<f32>],
+    packed: &super::packed::PackedWeights,
+    tmp: &mut Vec<f32>,
+    output: &mut Vec<f32>,
+) {
+    if batch <= 1 {
+        return run_pooled(
+            graph, inputs, alloc, node_elems, pools, pool, scratch, packed, None, output,
+        );
+    }
+    let ilen: usize = graph.input_shape.iter().product();
+    assert_eq!(inputs.len(), batch * ilen, "ragged batch");
+
+    for node in &graph.nodes {
+        if matches!(node.kind, LayerKind::Input) {
+            continue;
+        }
+        let p = alloc.pool_of[node.id];
+        let ne = node_elems[node.id];
+        let mut out = std::mem::take(&mut pools[p]);
+        let folded = {
+            // Whole-batch producer slice: example-major payloads are
+            // contiguous, so a folded GEMM reads them as one A matrix.
+            let whole = |i: usize| {
+                let q = alloc.pool_of[i];
+                if q == usize::MAX {
+                    inputs
+                } else {
+                    &pools[q][..batch * node_elems[i]]
+                }
+            };
+            match (&node.kind, packed.get(node.id)) {
+                (LayerKind::Dense { .. }, Some(pn)) => {
+                    super::packed::dense_f32_batched(
+                        whole(node.inputs[0]), batch, pn, pool, &mut out,
+                    );
+                    true
+                }
+                (LayerKind::Conv { stride: 1, padding, .. }, Some(pn))
+                    if pn.ks.iter().all(|&k| k == 1) =>
+                {
+                    // Pointwise conv: concatenating the batch along the
+                    // leading spatial axis is the same computation (see
+                    // int_exec::run_pooled_batch).
+                    let ish = &graph.nodes[node.inputs[0]].out_shape;
+                    if graph.dims == 1 {
+                        super::packed::conv1d_f32_packed(
+                            whole(node.inputs[0]), batch * ish[0], pn, 1, *padding, pool,
+                            scratch, &mut out,
+                        );
+                    } else {
+                        super::packed::conv2d_f32_packed(
+                            whole(node.inputs[0]), batch * ish[0], ish[1], pn, 1, *padding,
+                            pool, scratch, &mut out,
+                        );
+                    }
+                    true
+                }
+                _ => false,
+            }
+        };
+        if !folded {
+            out.clear();
+            out.resize(batch * ne, 0.0);
+            for ex in 0..batch {
+                {
+                    let src = |i: usize| {
+                        let q = alloc.pool_of[i];
+                        if q == usize::MAX {
+                            &inputs[ex * ilen..(ex + 1) * ilen]
+                        } else {
+                            let nei = node_elems[i];
+                            &pools[q][ex * nei..(ex + 1) * nei]
+                        }
+                    };
+                    exec_node(graph, node, &src, packed, pool, scratch, &mut None, tmp);
+                }
+                out[ex * ne..(ex + 1) * ne].copy_from_slice(tmp);
+            }
+        }
+        pools[p] = out;
+    }
+
+    let out_id = graph.output_id();
+    output.clear();
+    let p = alloc.pool_of[out_id];
+    if p == usize::MAX {
+        output.extend_from_slice(inputs); // degenerate input-only graph
+    } else {
+        output.extend_from_slice(&pools[p][..batch * node_elems[out_id]]);
+    }
+}
+
+/// One node's single-example compute: read producer payloads through
+/// `src`, write the node's output into `out`. Shared verbatim by the
+/// per-example driver ([`run_pooled`]) and the unfoldable arm of the
+/// batch-folded driver ([`run_pooled_batch`]) — the batched path
+/// inherits every property pinned on this code. `stats` is only ever
+/// `Some` on the per-example calibration path.
+#[allow(clippy::too_many_arguments)]
+fn exec_node<'a>(
+    graph: &Graph,
+    node: &crate::graph::ir::Node,
+    src: &dyn Fn(usize) -> &'a [f32],
+    packed: &super::packed::PackedWeights,
+    pool: &super::parallel::IntraOpPool,
+    scratch: &mut [Vec<f32>],
+    stats: &mut Option<&mut ActStats>,
+    out: &mut Vec<f32>,
+) {
+    match &node.kind {
+        LayerKind::Input => unreachable!(),
+        LayerKind::Conv { w, b, stride, padding } => {
+            // Prepacked fused path when the plan carries packed
+            // weights; per-call im2col + blocked GEMM (nn::gemm)
+            // otherwise. The naive loops survive as
+            // float_ops::conv*_ref.
+            let x = src(node.inputs[0]);
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            if let Some(pn) = packed.get(node.id) {
+                if graph.dims == 1 {
+                    super::packed::conv1d_f32_packed(
+                        x, ish[0], pn, *stride, *padding, pool, scratch, out,
+                    );
+                } else {
+                    super::packed::conv2d_f32_packed(
+                        x, ish[0], ish[1], pn, *stride, *padding, pool, scratch, out,
+                    );
+                }
+            } else if graph.dims == 1 {
+                gemm::conv1d_gemm(
+                    x, ish[0], ish[1], &w.data, w.shape[0], w.shape[2], &b.data,
+                    *stride, *padding, node.fused_relu, pool, scratch, out,
+                );
+            } else {
+                gemm::conv2d_gemm(
+                    x, ish[0], ish[1], ish[2], &w.data, w.shape[0], w.shape[1],
+                    w.shape[3], &b.data, *stride, *padding, node.fused_relu,
+                    pool, scratch, out,
+                );
+            }
+        }
+        LayerKind::Dense { w, b } => {
+            if let Some(pn) = packed.get(node.id) {
+                super::packed::dense_f32_packed(src(node.inputs[0]), pn, pool, out);
+            } else {
+                gemm::dense_gemm(
+                    src(node.inputs[0]), &w.data, &b.data, w.shape[1], node.fused_relu,
+                    pool, out,
+                );
+            }
+        }
+        LayerKind::MaxPool { size } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            ops::maxpool(
+                src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, node.fused_relu, out,
+            );
+        }
+        LayerKind::AvgPool { size } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            ops::avgpool(src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, out);
+        }
+        LayerKind::GlobalAvgPool => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            let positions: usize = ish[..ish.len() - 1].iter().product();
+            ops::global_avgpool(src(node.inputs[0]), positions, c, out);
+        }
+        LayerKind::Add => {
+            ops::add(src(node.inputs[0]), src(node.inputs[1]), node.fused_relu, out);
+        }
+        LayerKind::ReLU => {
+            ops::relu(src(node.inputs[0]), out);
+        }
+        LayerKind::Softmax => {
+            ops::softmax(src(node.inputs[0]), out);
+        }
+        LayerKind::ZeroPad { pad } => {
+            // Materialized zero padding (only when not fused away).
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            zero_pad_into(src(node.inputs[0]), ish, pad, out);
+        }
+        LayerKind::BatchNorm { mean, var, gamma, beta, eps } => {
+            let (w, b) = crate::graph::passes::batchnorm_affine(mean, var, gamma, beta, *eps);
+            let c = *graph.nodes[node.inputs[0]].out_shape.last().unwrap();
+            ops::batchnorm_affine(src(node.inputs[0]), c, &w, &b, out);
+        }
+        LayerKind::Flatten => {
+            out.clear();
+            out.extend_from_slice(src(node.inputs[0]));
+        }
+        LayerKind::Embedding { w } => {
+            ops::embedding(src(node.inputs[0]), &w.data, w.shape[1], out);
+        }
+        LayerKind::LayerNorm { gamma, beta, eps } => {
+            let c = *graph.nodes[node.inputs[0]].out_shape.last().unwrap();
+            ops::layernorm(src(node.inputs[0]), c, gamma, beta, *eps, out);
+        }
+        LayerKind::SelfAttention { heads, head_dim, w } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let (seq, dm) = (ish[0], ish[1]);
+            // Calibration must see the attention-internal tensors,
+            // which the fused packed kernel never materialises as a
+            // whole; route stats runs through the reference path.
+            let pa = if stats.is_some() { None } else { packed.attn(node.id) };
+            if let Some(pa) = pa {
+                super::packed::attention_f32_packed(
+                    src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool, scratch, out,
+                );
+            } else {
+                // Per-call reference path; calibration rides it to
+                // record the attention-internal ranges.
+                let mut tmp = ops::AttnTmp::default();
+                ops::self_attention_ref(
+                    src(node.inputs[0]), seq, dm, *heads, *head_dim, w, &mut tmp, out,
+                );
+                if let Some(stats) = stats.as_deref_mut() {
+                    stats.record_attn(node.id, &tmp);
+                }
+            }
+        }
     }
 }
 

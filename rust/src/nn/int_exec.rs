@@ -57,10 +57,9 @@ pub(crate) fn run_pooled(
     output: &mut Vec<f32>,
 ) {
     let graph = &qg.graph;
-    let width = qg.width;
     assert_eq!(input.len(), graph.input_shape.iter().product::<usize>());
 
-    let in_fmt = QFormat::new(width, qg.act_n[0]);
+    let in_fmt = QFormat::new(qg.width, qg.act_n[0]);
     qinput.clear();
     qinput.extend(input.iter().map(|&x| in_fmt.quantize(x)));
 
@@ -74,150 +73,300 @@ pub(crate) fn run_pooled(
             let qin: &[i32] = qinput;
             let src =
                 |i: usize| super::session::pool_src(pools, qin, &alloc.pool_of, node_elems, i);
-            match &node.kind {
-                LayerKind::Input => unreachable!(),
-                LayerKind::Conv { w, stride, padding, .. } => {
-                    // Prepacked fused path (never touches qg.weights) or
-                    // per-call im2col + blocked GEMM — both bit-exact
-                    // with the naive int_ops::conv*_q_ref kernels
-                    // (property-pinned).
-                    let x = src(node.inputs[0]);
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    if let Some(pn) = packed.get(node.id) {
-                        if graph.dims == 1 {
-                            super::packed::conv1d_int_packed(
-                                x, ish[0], pn, *stride, *padding, pool, scratch, &mut out,
-                            );
-                        } else {
-                            super::packed::conv2d_int_packed(
-                                x, ish[0], ish[1], pn, *stride, *padding, pool, scratch,
-                                &mut out,
-                            );
-                        }
-                    } else {
-                        let qw = &qg.weights[&node.id];
-                        if graph.dims == 1 {
-                            gemm::conv1d_q_gemm(
-                                x, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
-                                *padding, node.fused_relu, width, pool, scratch, &mut out,
-                            );
-                        } else {
-                            gemm::conv2d_q_gemm(
-                                x, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
-                                w.shape[3], *stride, *padding, node.fused_relu, width,
-                                pool, scratch, &mut out,
-                            );
-                        }
-                    }
+            exec_node(qg, node, &src, packed, pool, scratch, &mut out);
+        }
+        pools[p] = out;
+    }
+
+    dequantize_output(qg, alloc, node_elems, qinput, pools, 1, output);
+}
+
+/// Batch-folded twin of [`run_pooled`]: run `batch` examples laid out
+/// contiguously in `inputs` through ONE pass over the graph. Per node,
+/// dense layers and stride-1 1×1 convs fold the whole micro-batch into
+/// one packed GEMM — the batch stacks into the M dimension (dense) or
+/// the leading spatial axis (pointwise conv) of the SAME kernel call, so
+/// every output element sees the identical k-major accumulation and
+/// fused epilogue the per-example call produces, bit-exactly. Every
+/// other layer loops per example through the shared [`exec_node`].
+/// Pools hold example-major payloads (`pools[q][ex · node_elems[i]..]`
+/// is example `ex` of producer `i`), sized by the arena's `max_batch`
+/// factor; `tmp` stages one example's output in the unfoldable loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_pooled_batch(
+    qg: &QuantizedGraph,
+    inputs: &[f32],
+    batch: usize,
+    alloc: &crate::allocator::Allocation,
+    node_elems: &[usize],
+    qinput: &mut Vec<i32>,
+    pools: &mut [Vec<i32>],
+    pool: &super::parallel::IntraOpPool,
+    scratch: &mut [Vec<i32>],
+    packed: &super::packed::PackedWeights,
+    tmp: &mut Vec<i32>,
+    output: &mut Vec<f32>,
+) {
+    if batch <= 1 {
+        // Single example: the per-example driver IS the folded path
+        // (no per-node fold dispatch to pay for).
+        return run_pooled(
+            qg, inputs, alloc, node_elems, qinput, pools, pool, scratch, packed, output,
+        );
+    }
+    let graph = &qg.graph;
+    let ilen: usize = graph.input_shape.iter().product();
+    assert_eq!(inputs.len(), batch * ilen, "ragged batch");
+
+    let in_fmt = QFormat::new(qg.width, qg.act_n[0]);
+    qinput.clear();
+    qinput.extend(inputs.iter().map(|&x| in_fmt.quantize(x)));
+
+    for node in &graph.nodes {
+        if matches!(node.kind, LayerKind::Input) {
+            continue;
+        }
+        let p = alloc.pool_of[node.id];
+        let ne = node_elems[node.id];
+        let mut out = std::mem::take(&mut pools[p]);
+        let folded = {
+            let qin: &[i32] = qinput;
+            // Whole-batch producer slice: example-major payloads are
+            // contiguous, so a folded GEMM reads them as one A matrix.
+            let whole = |i: usize| {
+                let q = alloc.pool_of[i];
+                if q == usize::MAX {
+                    qin
+                } else {
+                    &pools[q][..batch * node_elems[i]]
                 }
-                LayerKind::Dense { w, .. } => {
-                    if let Some(pn) = packed.get(node.id) {
-                        super::packed::dense_int_packed(src(node.inputs[0]), pn, pool, &mut out);
-                    } else {
-                        let qw = &qg.weights[&node.id];
-                        gemm::dense_q_gemm(
-                            src(node.inputs[0]), qw, w.shape[1], node.fused_relu, width, pool,
-                            &mut out,
-                        );
-                    }
-                }
-                LayerKind::MaxPool { size } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    ops::maxpool_q(
-                        src(node.inputs[0]), &ish[..ish.len() - 1], c, *size,
-                        node.fused_relu, &mut out,
+            };
+            match (&node.kind, packed.get(node.id)) {
+                (LayerKind::Dense { .. }, Some(pn)) => {
+                    super::packed::dense_int_batched(
+                        whole(node.inputs[0]), batch, pn, pool, &mut out,
                     );
+                    true
                 }
-                LayerKind::AvgPool { size } => {
+                (LayerKind::Conv { stride: 1, padding, .. }, Some(pn))
+                    if pn.ks.iter().all(|&k| k == 1) =>
+                {
+                    // A stride-1 1×1 conv is pointwise: no window ever
+                    // crosses an example boundary, and its geometry maps
+                    // every input position to one output position under
+                    // either padding, so concatenating the batch along
+                    // the leading spatial axis runs the whole micro-batch
+                    // as one call with batch× the positions — output is
+                    // the example-major concatenation, bit-identical.
                     let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    ops::avgpool_q(src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, &mut out);
-                }
-                LayerKind::GlobalAvgPool => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    let positions: usize = ish[..ish.len() - 1].iter().product();
-                    ops::global_avgpool_q(src(node.inputs[0]), positions, c, &mut out);
-                }
-                LayerKind::Add => {
-                    let (ia, ib) = (node.inputs[0], node.inputs[1]);
-                    ops::add_q(
-                        src(ia), qg.act_n[ia], src(ib), qg.act_n[ib],
-                        qg.act_n[node.id], node.fused_relu, width, &mut out,
-                    );
-                }
-                LayerKind::ReLU => {
-                    ops::relu_q(src(node.inputs[0]), &mut out);
-                }
-                LayerKind::Flatten => {
-                    out.clear();
-                    out.extend_from_slice(src(node.inputs[0]));
-                }
-                LayerKind::Softmax => {
-                    // Inference-time softmax: exp-LUT distances at the
-                    // input format, probabilities at width-1 fractional
-                    // bits (the quantizer pins act_n accordingly).
-                    ops::softmax_q_ref(
-                        src(node.inputs[0]), qg.act_n[node.inputs[0]], qg.act_n[node.id],
-                        width, &mut out,
-                    );
-                }
-                LayerKind::Embedding { w } => {
-                    let crate::quant::ptq::QTxWeights::Embed { table } = &qg.tx[&node.id]
-                    else {
-                        panic!("embedding node without Embed params");
-                    };
-                    ops::embedding_q(src(node.inputs[0]), table, w.shape[1], &mut out);
-                }
-                LayerKind::LayerNorm { .. } => {
-                    let crate::quant::ptq::QTxWeights::Norm { gamma, g_n, beta } =
-                        &qg.tx[&node.id]
-                    else {
-                        panic!("layernorm node without Norm params");
-                    };
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let c = *ish.last().unwrap();
-                    ops::layernorm_q_ref(
-                        src(node.inputs[0]), c, gamma, *g_n, beta, qg.act_n[node.id], width,
-                        &mut out,
-                    );
-                }
-                LayerKind::SelfAttention { heads, head_dim, .. } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    let (seq, dm) = (ish[0], ish[1]);
-                    if let Some(pa) = packed.attn(node.id) {
-                        super::packed::attention_int_packed(
-                            src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool,
+                    if graph.dims == 1 {
+                        super::packed::conv1d_int_packed(
+                            whole(node.inputs[0]), batch * ish[0], pn, 1, *padding, pool,
                             scratch, &mut out,
                         );
                     } else {
-                        ops::attention_q_ref(
-                            src(node.inputs[0]), seq, dm, *heads, *head_dim,
-                            &qg.tx[&node.id], width, &mut out,
+                        super::packed::conv2d_int_packed(
+                            whole(node.inputs[0]), batch * ish[0], ish[1], pn, 1, *padding,
+                            pool, scratch, &mut out,
                         );
                     }
+                    true
                 }
-                LayerKind::ZeroPad { pad } => {
-                    let ish = &graph.nodes[node.inputs[0]].out_shape;
-                    zero_pad_q_into(src(node.inputs[0]), ish, pad, &mut out);
+                _ => false,
+            }
+        };
+        if !folded {
+            // Unfoldable layer (spatial conv, pooling, attention, ...):
+            // loop per example inside the same plan, staging each
+            // example's output through `tmp`.
+            out.clear();
+            out.resize(batch * ne, 0);
+            for ex in 0..batch {
+                {
+                    let qin: &[i32] = qinput;
+                    let src = |i: usize| {
+                        let q = alloc.pool_of[i];
+                        if q == usize::MAX {
+                            &qin[ex * ilen..(ex + 1) * ilen]
+                        } else {
+                            let nei = node_elems[i];
+                            &pools[q][ex * nei..(ex + 1) * nei]
+                        }
+                    };
+                    exec_node(qg, node, &src, packed, pool, scratch, tmp);
                 }
-                LayerKind::BatchNorm { .. } => {
-                    panic!("BatchNorm must be folded before integer execution (run deploy_pipeline)")
-                }
+                out[ex * ne..(ex + 1) * ne].copy_from_slice(tmp);
             }
         }
         pools[p] = out;
     }
 
+    dequantize_output(qg, alloc, node_elems, qinput, pools, batch, output);
+}
+
+/// One node's single-example compute: read producer payloads through
+/// `src`, write the node's output payload into `out`. Shared verbatim by
+/// the per-example driver ([`run_pooled`]) and the unfoldable arm of the
+/// batch-folded driver ([`run_pooled_batch`]) — so the batched path
+/// inherits every property pinned on this code.
+fn exec_node<'a>(
+    qg: &QuantizedGraph,
+    node: &crate::graph::ir::Node,
+    src: &dyn Fn(usize) -> &'a [i32],
+    packed: &super::packed::PackedWeights,
+    pool: &super::parallel::IntraOpPool,
+    scratch: &mut [Vec<i32>],
+    out: &mut Vec<i32>,
+) {
+    let graph = &qg.graph;
+    let width = qg.width;
+    match &node.kind {
+        LayerKind::Input => unreachable!(),
+        LayerKind::Conv { w, stride, padding, .. } => {
+            // Prepacked fused path (never touches qg.weights) or
+            // per-call im2col + blocked GEMM — both bit-exact
+            // with the naive int_ops::conv*_q_ref kernels
+            // (property-pinned).
+            let x = src(node.inputs[0]);
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            if let Some(pn) = packed.get(node.id) {
+                if graph.dims == 1 {
+                    super::packed::conv1d_int_packed(
+                        x, ish[0], pn, *stride, *padding, pool, scratch, out,
+                    );
+                } else {
+                    super::packed::conv2d_int_packed(
+                        x, ish[0], ish[1], pn, *stride, *padding, pool, scratch, out,
+                    );
+                }
+            } else {
+                let qw = &qg.weights[&node.id];
+                if graph.dims == 1 {
+                    gemm::conv1d_q_gemm(
+                        x, ish[0], ish[1], qw, w.shape[0], w.shape[2], *stride,
+                        *padding, node.fused_relu, width, pool, scratch, out,
+                    );
+                } else {
+                    gemm::conv2d_q_gemm(
+                        x, ish[0], ish[1], ish[2], qw, w.shape[0], w.shape[1],
+                        w.shape[3], *stride, *padding, node.fused_relu, width,
+                        pool, scratch, out,
+                    );
+                }
+            }
+        }
+        LayerKind::Dense { w, .. } => {
+            if let Some(pn) = packed.get(node.id) {
+                super::packed::dense_int_packed(src(node.inputs[0]), pn, pool, out);
+            } else {
+                let qw = &qg.weights[&node.id];
+                gemm::dense_q_gemm(
+                    src(node.inputs[0]), qw, w.shape[1], node.fused_relu, width, pool, out,
+                );
+            }
+        }
+        LayerKind::MaxPool { size } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            ops::maxpool_q(
+                src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, node.fused_relu, out,
+            );
+        }
+        LayerKind::AvgPool { size } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            ops::avgpool_q(src(node.inputs[0]), &ish[..ish.len() - 1], c, *size, out);
+        }
+        LayerKind::GlobalAvgPool => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            let positions: usize = ish[..ish.len() - 1].iter().product();
+            ops::global_avgpool_q(src(node.inputs[0]), positions, c, out);
+        }
+        LayerKind::Add => {
+            let (ia, ib) = (node.inputs[0], node.inputs[1]);
+            ops::add_q(
+                src(ia), qg.act_n[ia], src(ib), qg.act_n[ib],
+                qg.act_n[node.id], node.fused_relu, width, out,
+            );
+        }
+        LayerKind::ReLU => {
+            ops::relu_q(src(node.inputs[0]), out);
+        }
+        LayerKind::Flatten => {
+            out.clear();
+            out.extend_from_slice(src(node.inputs[0]));
+        }
+        LayerKind::Softmax => {
+            // Inference-time softmax: exp-LUT distances at the
+            // input format, probabilities at width-1 fractional
+            // bits (the quantizer pins act_n accordingly).
+            ops::softmax_q_ref(
+                src(node.inputs[0]), qg.act_n[node.inputs[0]], qg.act_n[node.id], width, out,
+            );
+        }
+        LayerKind::Embedding { w } => {
+            let crate::quant::ptq::QTxWeights::Embed { table } = &qg.tx[&node.id] else {
+                panic!("embedding node without Embed params");
+            };
+            ops::embedding_q(src(node.inputs[0]), table, w.shape[1], out);
+        }
+        LayerKind::LayerNorm { .. } => {
+            let crate::quant::ptq::QTxWeights::Norm { gamma, g_n, beta } = &qg.tx[&node.id]
+            else {
+                panic!("layernorm node without Norm params");
+            };
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let c = *ish.last().unwrap();
+            ops::layernorm_q_ref(
+                src(node.inputs[0]), c, gamma, *g_n, beta, qg.act_n[node.id], width, out,
+            );
+        }
+        LayerKind::SelfAttention { heads, head_dim, .. } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            let (seq, dm) = (ish[0], ish[1]);
+            if let Some(pa) = packed.attn(node.id) {
+                super::packed::attention_int_packed(
+                    src(node.inputs[0]), seq, dm, *heads, *head_dim, pa, pool, scratch, out,
+                );
+            } else {
+                ops::attention_q_ref(
+                    src(node.inputs[0]), seq, dm, *heads, *head_dim, &qg.tx[&node.id], width,
+                    out,
+                );
+            }
+        }
+        LayerKind::ZeroPad { pad } => {
+            let ish = &graph.nodes[node.inputs[0]].out_shape;
+            zero_pad_q_into(src(node.inputs[0]), ish, pad, out);
+        }
+        LayerKind::BatchNorm { .. } => {
+            panic!("BatchNorm must be folded before integer execution (run deploy_pipeline)")
+        }
+    }
+}
+
+/// Dequantize the output node's example-major payloads into `output`.
+fn dequantize_output(
+    qg: &QuantizedGraph,
+    alloc: &crate::allocator::Allocation,
+    node_elems: &[usize],
+    qinput: &[i32],
+    pools: &[Vec<i32>],
+    batch: usize,
+    output: &mut Vec<f32>,
+) {
+    let graph = &qg.graph;
     let out_id = graph.output_id();
-    let out_fmt = QFormat::new(width, qg.act_n[out_id]);
+    let out_fmt = QFormat::new(qg.width, qg.act_n[out_id]);
     output.clear();
     let p = alloc.pool_of[out_id];
     if p == usize::MAX {
         output.extend(qinput.iter().map(|&q| out_fmt.dequantize(q)));
     } else {
-        output.extend(pools[p][..node_elems[out_id]].iter().map(|&q| out_fmt.dequantize(q)));
+        output.extend(
+            pools[p][..batch * node_elems[out_id]].iter().map(|&q| out_fmt.dequantize(q)),
+        );
     }
 }
 

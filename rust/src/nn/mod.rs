@@ -16,6 +16,6 @@ pub use float_exec::{argmax, ActStats};
 pub use packed::{Epilogue, PackedNode, PackedWeights};
 pub use parallel::IntraOpPool;
 pub use session::{
-    AffineI8Backend, Arena, FixedQmnBackend, Float32Backend, InferenceBackend, Plan,
-    Prediction, Session, SessionBuilder, SessionMeta,
+    AffineI8Backend, Arena, Batch, FixedQmnBackend, Float32Backend, ForkOpts,
+    InferenceBackend, Plan, Prediction, Predictions, Session, SessionBuilder, SessionMeta,
 };

@@ -1121,6 +1121,71 @@ pub fn dense_int_packed(x: &[i32], pn: &PackedNode, pool: &IntraOpPool, out: &mu
     });
 }
 
+/// Prepacked float dense over a batch-folded micro-batch: the `batch`
+/// examples (example-major rows of `xs`) stack into the M dimension of
+/// ONE GEMM against the same packed B, filling the 4×8 register tiles
+/// that m = 1 per-example calls leave mostly empty. Work splits across
+/// the pool in MR-row × NR-column register-tile units, each owned by
+/// exactly one worker (disjoint output rectangles). Per output element
+/// the kernel runs the identical k-major accumulation + epilogue the
+/// m = 1 call runs — results are BIT-identical to looping
+/// [`dense_f32_packed`] per example, at any batch, tiling or thread
+/// count (DESIGN.md §11).
+pub fn dense_f32_batched(
+    xs: &[f32],
+    batch: usize,
+    pn: &PackedNode,
+    pool: &IntraOpPool,
+    out: &mut Vec<f32>,
+) {
+    let (PackedB::F32(bp), Epilogue::BiasRelu { bias, relu }) = (&pn.b, &pn.epi) else {
+        panic!("float dense on a non-float packed node");
+    };
+    debug_assert_eq!(xs.len(), batch * pn.taps, "batched dense input length");
+    let (taps, n) = (pn.taps, pn.n);
+    out.clear();
+    out.resize(batch * n, 0.0);
+    let out_view = SharedOut::new(&mut out[..]);
+    let col_tiles = n.div_ceil(NR);
+    let units = batch.div_ceil(MR) * col_tiles;
+    pool.run_partitioned(units, &|_tid, u0, u1| {
+        for u in u0..u1 {
+            let (mi0, j0) = ((u / col_tiles) * MR, (u % col_tiles) * NR);
+            let rows = MR.min(batch - mi0);
+            kernel_f32(
+                &xs[mi0 * taps..], bp, rows, n, taps, j0, (j0 + NR).min(n), bias, *relu,
+                mi0, &out_view,
+            );
+        }
+    });
+}
+
+/// Integer twin of [`dense_f32_batched`] (fixed-point or affine): one
+/// GEMM per micro-batch, bit-exact with a per-example
+/// [`dense_int_packed`] loop by the same per-element argument.
+pub fn dense_int_batched(
+    xs: &[i32],
+    batch: usize,
+    pn: &PackedNode,
+    pool: &IntraOpPool,
+    out: &mut Vec<i32>,
+) {
+    debug_assert_eq!(xs.len(), batch * pn.taps, "batched dense input length");
+    let (taps, n) = (pn.taps, pn.n);
+    out.clear();
+    out.resize(batch * n, 0);
+    let out_view = SharedOut::new(&mut out[..]);
+    let col_tiles = n.div_ceil(NR);
+    let units = batch.div_ceil(MR) * col_tiles;
+    pool.run_partitioned(units, &|_tid, u0, u1| {
+        for u in u0..u1 {
+            let (mi0, j0) = ((u / col_tiles) * MR, (u % col_tiles) * NR);
+            let rows = MR.min(batch - mi0);
+            run_int_kernel(&xs[mi0 * taps..], pn, rows, j0, (j0 + NR).min(n), mi0, &out_view);
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Prepacked self-attention (two batched GEMMs around a row softmax)
 // ---------------------------------------------------------------------------

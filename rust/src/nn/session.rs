@@ -13,8 +13,11 @@
 //!   their worst-case sizes.
 //! - **run many**: [`Session::run`] executes one example with no
 //!   per-request activation-buffer allocation (the arena pools are
-//!   reused; see `bench_hotpath` for the measured win),
-//!   [`Session::run_batch`] maps a flattened batch.
+//!   reused; see `bench_hotpath` for the measured win);
+//!   [`Session::infer`] classifies a [`Batch`] view (contiguous or
+//!   strided examples) in micro-batches of up to
+//!   [`SessionBuilder::max_batch`] examples, folding each micro-batch
+//!   into ONE GEMM per dense/1×1 layer (DESIGN.md §11).
 //! - **priced**: [`SessionMeta`] carries the deployment facts every
 //!   consumer used to hand-wire — dtype, weight bytes, device activation
 //!   RAM, and (when a [`Board`] is attached) predicted per-inference
@@ -185,8 +188,19 @@ pub struct Arena {
     /// im2col / zero-point staging slabs (integer backends), one per
     /// intra-op thread.
     pub(crate) scratch_i32: Vec<Vec<i32>>,
-    /// Dequantized output logits of the latest run.
+    /// Dequantized output logits of the latest run (up to
+    /// `max_batch × output_len` for batch-folded runs).
     pub(crate) output: Vec<f32>,
+    /// Contiguous staging buffer for non-contiguous [`Batch`] views
+    /// (sized `max_batch × input_len`).
+    pub(crate) batch_stage: Vec<f32>,
+    /// One example's output staging for the batch-folded executors'
+    /// unfoldable-layer loop (float lane; empty when `max_batch == 1`).
+    pub(crate) batch_tmp_f32: Vec<f32>,
+    /// Integer-lane twin of `batch_tmp_f32`.
+    pub(crate) batch_tmp_i32: Vec<i32>,
+    /// Micro-batch capacity the pools / qinput / output are sized for.
+    pub(crate) max_batch: usize,
     /// Persistent intra-op worker pool (thread budget from
     /// [`SessionBuilder::threads`]; 1 = serial, no OS threads).
     pub(crate) pool: IntraOpPool,
@@ -199,13 +213,18 @@ impl Arena {
         (0..threads).map(|_| Vec::with_capacity(elems)).collect()
     }
 
-    fn preallocated(plan: &Plan, float: bool, threads: usize) -> Arena {
+    fn preallocated(plan: &Plan, float: bool, threads: usize, max_batch: usize) -> Arena {
         let threads = threads.max(1);
+        let mb = max_batch.max(1);
         let pools = &plan.alloc.pool_elems;
         let scratch = plan.alloc.gemm_scratch_elems;
+        // Per-example staging for the batch-folded drivers' unfoldable
+        // loop: one slab at the largest node output. Single-example
+        // sessions never enter that loop, so they carry none.
+        let tmp = if mb > 1 { plan.node_elems.iter().copied().max().unwrap_or(0) } else { 0 };
         let (f32_pools, i32_pools, qinput, scratch_f32, scratch_i32) = if float {
             (
-                pools.iter().map(|&n| Vec::with_capacity(n)).collect(),
+                pools.iter().map(|&n| Vec::with_capacity(mb * n)).collect(),
                 Vec::new(),
                 Vec::new(),
                 Arena::slabs(threads, scratch),
@@ -214,8 +233,8 @@ impl Arena {
         } else {
             (
                 Vec::new(),
-                pools.iter().map(|&n| Vec::with_capacity(n)).collect(),
-                Vec::with_capacity(plan.input_len),
+                pools.iter().map(|&n| Vec::with_capacity(mb * n)).collect(),
+                Vec::with_capacity(mb * plan.input_len),
                 Vec::new(),
                 Arena::slabs(threads, scratch),
             )
@@ -226,7 +245,11 @@ impl Arena {
             qinput,
             scratch_f32,
             scratch_i32,
-            output: Vec::with_capacity(plan.output_len),
+            output: Vec::with_capacity(mb * plan.output_len),
+            batch_stage: Vec::with_capacity(mb * plan.input_len),
+            batch_tmp_f32: if float { Vec::with_capacity(tmp) } else { Vec::new() },
+            batch_tmp_i32: if float { Vec::new() } else { Vec::with_capacity(tmp) },
+            max_batch: mb,
             pool: IntraOpPool::new(threads),
         }
     }
@@ -239,11 +262,19 @@ impl Arena {
             + self.scratch_f32.iter().map(|s| s.capacity() * 4).sum::<usize>()
             + self.scratch_i32.iter().map(|s| s.capacity() * 4).sum::<usize>()
             + self.output.capacity() * 4
+            + self.batch_stage.capacity() * 4
+            + self.batch_tmp_f32.capacity() * 4
+            + self.batch_tmp_i32.capacity() * 4
     }
 
     /// Intra-op thread budget this arena executes with.
     pub fn intra_op_threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Micro-batch capacity this arena is sized for.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
     }
 
     /// Buffer base addresses — stable across `run` calls iff the arena is
@@ -259,6 +290,9 @@ impl Arena {
             .chain(self.scratch_f32.iter().map(|s| s.as_ptr() as usize))
             .chain(self.scratch_i32.iter().map(|s| s.as_ptr() as usize))
             .chain(std::iter::once(self.output.as_ptr() as usize))
+            .chain(std::iter::once(self.batch_stage.as_ptr() as usize))
+            .chain(std::iter::once(self.batch_tmp_f32.as_ptr() as usize))
+            .chain(std::iter::once(self.batch_tmp_i32.as_ptr() as usize))
             .collect()
     }
 }
@@ -325,12 +359,41 @@ pub trait InferenceBackend: Send + Sync {
     }
 
     /// Preallocate an activation arena for `plan`, with one GEMM scratch
-    /// slab per intra-op thread and a worker pool of `threads` total
-    /// threads (1 = serial).
-    fn new_arena(&self, plan: &Plan, threads: usize) -> Arena;
+    /// slab per intra-op thread, a worker pool of `threads` total threads
+    /// (1 = serial), and activation pools sized for micro-batches of up
+    /// to `max_batch` examples.
+    fn new_arena(&self, plan: &Plan, threads: usize, max_batch: usize) -> Arena;
 
     /// Run one example; logits land in (and are returned from) the arena.
     fn run<'a>(&self, plan: &Plan, arena: &'a mut Arena, input: &[f32]) -> &'a [f32];
+
+    /// Run `batch` examples laid out contiguously in `inputs` as ONE
+    /// micro-batch; the concatenated logits (`batch × output_len`) land
+    /// in (and are returned from) the arena. The default loops per
+    /// example through [`InferenceBackend::run`]; the built-in backends
+    /// override it with the batch-folded executors (one GEMM per
+    /// dense/1×1 layer for the whole micro-batch — bit-exact with this
+    /// loop by construction, see DESIGN.md §11). Callers must not exceed
+    /// the arena's `max_batch` capacity.
+    fn run_many<'a>(
+        &self,
+        plan: &Plan,
+        arena: &'a mut Arena,
+        inputs: &[f32],
+        batch: usize,
+    ) -> &'a [f32] {
+        assert_eq!(inputs.len(), batch * plan.input_len, "ragged batch");
+        let mut acc = std::mem::take(&mut arena.batch_tmp_f32);
+        acc.clear();
+        for ex in inputs.chunks_exact(plan.input_len.max(1)) {
+            acc.extend_from_slice(self.run(plan, arena, ex));
+        }
+        arena.output.clear();
+        arena.output.extend_from_slice(&acc);
+        acc.clear();
+        arena.batch_tmp_f32 = acc;
+        &arena.output
+    }
 
     /// Run a flattened batch (`inputs.len()` must be a multiple of the
     /// input length), appending each example's logits to `out`.
@@ -377,8 +440,8 @@ impl InferenceBackend for Float32Backend {
         self.graph.param_count() * 4
     }
 
-    fn new_arena(&self, plan: &Plan, threads: usize) -> Arena {
-        Arena::preallocated(plan, true, threads)
+    fn new_arena(&self, plan: &Plan, threads: usize, max_batch: usize) -> Arena {
+        Arena::preallocated(plan, true, threads, max_batch)
     }
 
     fn pack_weights(&self) -> PackedWeights {
@@ -390,6 +453,21 @@ impl InferenceBackend for Float32Backend {
             &self.graph, input, &plan.alloc, &plan.node_elems,
             &mut arena.f32_pools, &arena.pool, &mut arena.scratch_f32, &plan.packed, None,
             &mut arena.output,
+        );
+        &arena.output
+    }
+
+    fn run_many<'a>(
+        &self,
+        plan: &Plan,
+        arena: &'a mut Arena,
+        inputs: &[f32],
+        batch: usize,
+    ) -> &'a [f32] {
+        float_exec::run_pooled_batch(
+            &self.graph, inputs, batch, &plan.alloc, &plan.node_elems,
+            &mut arena.f32_pools, &arena.pool, &mut arena.scratch_f32, &plan.packed,
+            &mut arena.batch_tmp_f32, &mut arena.output,
         );
         &arena.output
     }
@@ -437,8 +515,8 @@ impl InferenceBackend for FixedQmnBackend {
         self.qg.weight_bytes()
     }
 
-    fn new_arena(&self, plan: &Plan, threads: usize) -> Arena {
-        Arena::preallocated(plan, false, threads)
+    fn new_arena(&self, plan: &Plan, threads: usize, max_batch: usize) -> Arena {
+        Arena::preallocated(plan, false, threads, max_batch)
     }
 
     fn pack_weights(&self) -> PackedWeights {
@@ -458,6 +536,22 @@ impl InferenceBackend for FixedQmnBackend {
             &self.qg, input, &plan.alloc, &plan.node_elems,
             &mut arena.qinput, &mut arena.i32_pools, &arena.pool,
             &mut arena.scratch_i32, &plan.packed, &mut arena.output,
+        );
+        &arena.output
+    }
+
+    fn run_many<'a>(
+        &self,
+        plan: &Plan,
+        arena: &'a mut Arena,
+        inputs: &[f32],
+        batch: usize,
+    ) -> &'a [f32] {
+        int_exec::run_pooled_batch(
+            &self.qg, inputs, batch, &plan.alloc, &plan.node_elems,
+            &mut arena.qinput, &mut arena.i32_pools, &arena.pool,
+            &mut arena.scratch_i32, &plan.packed, &mut arena.batch_tmp_i32,
+            &mut arena.output,
         );
         &arena.output
     }
@@ -491,8 +585,8 @@ impl InferenceBackend for AffineI8Backend {
         self.aq.graph.param_count()
     }
 
-    fn new_arena(&self, plan: &Plan, threads: usize) -> Arena {
-        Arena::preallocated(plan, false, threads)
+    fn new_arena(&self, plan: &Plan, threads: usize, max_batch: usize) -> Arena {
+        Arena::preallocated(plan, false, threads, max_batch)
     }
 
     fn pack_weights(&self) -> PackedWeights {
@@ -508,6 +602,22 @@ impl InferenceBackend for AffineI8Backend {
             &self.aq, input, &plan.alloc, &plan.node_elems,
             &mut arena.qinput, &mut arena.i32_pools, &arena.pool,
             &mut arena.scratch_i32, &plan.packed, &mut arena.output,
+        );
+        &arena.output
+    }
+
+    fn run_many<'a>(
+        &self,
+        plan: &Plan,
+        arena: &'a mut Arena,
+        inputs: &[f32],
+        batch: usize,
+    ) -> &'a [f32] {
+        affine_exec::run_pooled_batch(
+            &self.aq, inputs, batch, &plan.alloc, &plan.node_elems,
+            &mut arena.qinput, &mut arena.i32_pools, &arena.pool,
+            &mut arena.scratch_i32, &plan.packed, &mut arena.batch_tmp_i32,
+            &mut arena.output,
         );
         &arena.output
     }
@@ -539,9 +649,13 @@ pub struct SessionMeta {
     /// pricing is untouched.
     pub packed_weight_bytes: usize,
     /// Intra-op thread budget (host-side GEMM parallelism; 1 = serial).
-    /// Forked sessions inherit it unless re-threaded via
-    /// [`Session::fork_with_threads`].
+    /// Forked sessions inherit it unless overridden via
+    /// [`Session::fork_with`].
     pub intra_op_threads: usize,
+    /// Micro-batch capacity the arena is sized for
+    /// ([`SessionBuilder::max_batch`]); [`Session::infer`] splits larger
+    /// batches into micro-batches of this size. Host-side only.
+    pub max_batch: usize,
 }
 
 /// Builder: pick a backend, optionally attach a deployment board, build.
@@ -549,6 +663,7 @@ pub struct SessionBuilder {
     backend: Arc<dyn InferenceBackend>,
     board: Option<&'static Board>,
     threads: usize,
+    max_batch: usize,
 }
 
 impl SessionBuilder {
@@ -570,7 +685,7 @@ impl SessionBuilder {
 
     /// Any custom [`InferenceBackend`] implementation.
     pub fn from_backend(backend: Arc<dyn InferenceBackend>) -> SessionBuilder {
-        SessionBuilder { backend, board: None, threads: 1 }
+        SessionBuilder { backend, board: None, threads: 1, max_batch: 1 }
     }
 
     /// Attach a deployment board: the session metadata then carries
@@ -588,6 +703,17 @@ impl SessionBuilder {
     /// the device cost model is untouched.
     pub fn threads(mut self, n: usize) -> SessionBuilder {
         self.threads = n.max(1);
+        self
+    }
+
+    /// Micro-batch capacity (default 1 = single-example serving): the
+    /// arena's pools, quantized-input and output buffers are sized for up
+    /// to `n` examples, and [`Session::infer`] folds each micro-batch of
+    /// up to `n` examples into ONE GEMM per dense/1×1 layer. Larger
+    /// batches split into `n`-sized micro-batches. Host-side only — the
+    /// device cost model and RAM accounting stay per-example.
+    pub fn max_batch(mut self, n: usize) -> SessionBuilder {
+        self.max_batch = n.max(1);
         self
     }
 
@@ -611,7 +737,7 @@ impl SessionBuilder {
     }
 
     fn finish(self, plan: Plan) -> Session {
-        let arena = self.backend.new_arena(&plan, self.threads);
+        let arena = self.backend.new_arena(&plan, self.threads, self.max_batch);
         let dtype = self.backend.dtype();
         let (device_latency_ms, device_energy_uwh) = match self.board {
             None => (None, None),
@@ -642,6 +768,7 @@ impl SessionBuilder {
             arena_bytes: arena.host_bytes(),
             packed_weight_bytes: plan.packed.host_bytes(),
             intra_op_threads: self.threads,
+            max_batch: self.max_batch,
         };
         Session { backend: self.backend, plan, arena, meta, runs: 0 }
     }
@@ -664,6 +791,126 @@ pub fn confidence(logits: &[f32]) -> f32 {
     1.0 / sum
 }
 
+/// A length-checked view over a micro-batch of examples for
+/// [`Session::infer`] — either contiguous (flattened examples
+/// back-to-back) or strided (examples embedded at a fixed stride in
+/// larger records, e.g. a feature row followed by metadata columns).
+/// Construction checks the geometry once, so the inference path never
+/// smears payloads across neighbouring examples.
+#[derive(Clone, Copy, Debug)]
+pub struct Batch<'a> {
+    data: &'a [f32],
+    n: usize,
+    example_len: usize,
+    stride: usize,
+}
+
+impl<'a> Batch<'a> {
+    /// Flattened contiguous examples: `data.len()` must be a whole
+    /// multiple of `example_len`.
+    pub fn contiguous(data: &'a [f32], example_len: usize) -> Batch<'a> {
+        let el = example_len.max(1);
+        assert_eq!(data.len() % el, 0, "ragged batch");
+        Batch { data, n: data.len() / el, example_len: el, stride: el }
+    }
+
+    /// A single example.
+    pub fn single(example: &'a [f32]) -> Batch<'a> {
+        Batch { data: example, n: 1, example_len: example.len(), stride: example.len() }
+    }
+
+    /// `n` examples at a fixed `stride ≥ example_len` into `data`: the
+    /// first `example_len` elements of each record are the example.
+    pub fn strided(data: &'a [f32], n: usize, example_len: usize, stride: usize) -> Batch<'a> {
+        assert!(
+            stride >= example_len,
+            "stride {stride} shorter than an example ({example_len})"
+        );
+        assert!(
+            n == 0 || (n - 1) * stride + example_len <= data.len(),
+            "strided batch overruns its backing slice"
+        );
+        Batch { data, n, example_len, stride }
+    }
+
+    /// Number of examples in the view.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Elements per example.
+    pub fn example_len(&self) -> usize {
+        self.example_len
+    }
+
+    /// Whether consecutive examples touch (the zero-copy fold path).
+    pub fn is_contiguous(&self) -> bool {
+        self.stride == self.example_len
+    }
+
+    /// Example `i` (panics when out of range).
+    pub fn example(&self, i: usize) -> &'a [f32] {
+        assert!(i < self.n, "example index {i} out of range ({} examples)", self.n);
+        &self.data[i * self.stride..i * self.stride + self.example_len]
+    }
+
+    /// `count` consecutive examples starting at `lo` as one contiguous
+    /// slice — contiguous views only.
+    fn contiguous_slice(&self, lo: usize, count: usize) -> &'a [f32] {
+        debug_assert!(self.is_contiguous());
+        &self.data[lo * self.example_len..(lo + count) * self.example_len]
+    }
+}
+
+/// Caller-owned prediction buffer for [`Session::infer`] (append-only;
+/// reuse it across batches to classify allocation-free).
+pub type Predictions = Vec<Prediction>;
+
+/// Classify `n` examples' worth of concatenated logits into `out`.
+fn push_predictions(logits: &[f32], olen: usize, n: usize, out: &mut Predictions) {
+    for e in 0..n {
+        let l = &logits[e * olen..(e + 1) * olen];
+        out.push(Prediction { class: argmax(l), confidence: confidence(l) });
+    }
+}
+
+/// Shape overrides for [`Session::fork_with`]: `None` fields inherit
+/// from the parent session, so `ForkOpts::inherit()` reproduces
+/// [`Session::fork`]. One builder carries BOTH knobs a serving worker
+/// needs (thread budget and arena micro-batch capacity), replacing the
+/// old two-place plumbing of `fork_with_threads` plus scheduler-side
+/// batch sizing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ForkOpts {
+    /// Intra-op GEMM thread budget (`None` = inherit the parent's).
+    pub threads: Option<usize>,
+    /// Micro-batch capacity of the forked arena (`None` = inherit).
+    pub max_batch: Option<usize>,
+}
+
+impl ForkOpts {
+    /// Inherit everything from the parent session.
+    pub fn inherit() -> ForkOpts {
+        ForkOpts::default()
+    }
+
+    /// Override the intra-op thread budget.
+    pub fn threads(mut self, n: usize) -> ForkOpts {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Override the arena micro-batch capacity.
+    pub fn max_batch(mut self, n: usize) -> ForkOpts {
+        self.max_batch = Some(n);
+        self
+    }
+}
+
 /// A compiled, preallocated inference session (compile once, run many).
 pub struct Session {
     backend: Arc<dyn InferenceBackend>,
@@ -680,38 +927,80 @@ impl Session {
         self.backend.run(&self.plan, &mut self.arena, input)
     }
 
+    /// The unified inference entry point: classify every example of
+    /// `batch` in order, appending one [`Prediction`] per example to
+    /// `out`. The batch splits into micro-batches of up to
+    /// [`SessionMeta::max_batch`] examples; within a micro-batch, dense
+    /// layers and stride-1 1×1 convs execute as ONE folded GEMM over the
+    /// whole micro-batch while unfoldable layers (spatial convs,
+    /// attention, pooling) loop per example inside the same plan — so
+    /// batched results are bit-exact with the per-example path by
+    /// construction (DESIGN.md §11). Everything runs through this
+    /// session's one preallocated arena; non-contiguous views are staged
+    /// into the arena first (the only copy on this path).
+    pub fn infer(&mut self, batch: &Batch<'_>, out: &mut Predictions) {
+        assert_eq!(batch.example_len(), self.plan.input_len, "example/input length mismatch");
+        out.reserve(batch.len());
+        let olen = self.plan.output_len;
+        let mb = self.meta.max_batch.max(1);
+        let mut lo = 0usize;
+        while lo < batch.len() {
+            let n = mb.min(batch.len() - lo);
+            self.runs += n as u64;
+            if batch.is_contiguous() {
+                let logits = self.backend.run_many(
+                    &self.plan,
+                    &mut self.arena,
+                    batch.contiguous_slice(lo, n),
+                    n,
+                );
+                push_predictions(logits, olen, n, out);
+            } else {
+                let mut staged = std::mem::take(&mut self.arena.batch_stage);
+                staged.clear();
+                for i in lo..lo + n {
+                    staged.extend_from_slice(batch.example(i));
+                }
+                let logits = self.backend.run_many(&self.plan, &mut self.arena, &staged, n);
+                push_predictions(logits, olen, n, out);
+                staged.clear();
+                self.arena.batch_stage = staged;
+            }
+            lo += n;
+        }
+    }
+
     /// Run one example and classify it.
+    #[deprecated(note = "use Session::infer with Batch::single")]
     pub fn classify(&mut self, input: &[f32]) -> Prediction {
-        let logits = self.run(input);
-        Prediction { class: argmax(logits), confidence: confidence(logits) }
+        let mut out = Predictions::with_capacity(1);
+        self.infer(&Batch::single(input), &mut out);
+        out[0]
     }
 
     /// Classify a flattened batch (`inputs.len()` must be a multiple of
     /// the input length); returns one [`Prediction`] per example.
+    #[deprecated(note = "use Session::infer with Batch::contiguous")]
     pub fn classify_batch(&mut self, inputs: &[f32]) -> Vec<Prediction> {
         let mut out = Vec::with_capacity(inputs.len() / self.plan.input_len.max(1));
-        self.classify_batch_into(inputs, &mut out);
+        self.infer(&Batch::contiguous(inputs, self.plan.input_len), &mut out);
         out
     }
 
     /// Classify a flattened batch into a caller-owned buffer (appends).
-    /// The whole batch runs through this session's one preallocated
-    /// arena — no per-example clear/alloc — so a worker that reuses the
-    /// same `out` buffer across batches classifies allocation-free.
+    #[deprecated(note = "use Session::infer with Batch::contiguous")]
     pub fn classify_batch_into(&mut self, inputs: &[f32], out: &mut Vec<Prediction>) {
-        let ilen = self.plan.input_len.max(1);
-        assert_eq!(inputs.len() % ilen, 0, "ragged batch");
-        out.reserve(inputs.len() / ilen);
-        self.classify_each_into(inputs.chunks_exact(ilen), out);
+        self.infer(&Batch::contiguous(inputs, self.plan.input_len), out);
     }
 
     /// Classify each input slice in order (appends one [`Prediction`]
-    /// per example): the batch entry point for NON-contiguous inputs —
-    /// same one-arena, caller-owned-buffer contract as
-    /// [`Session::classify_batch_into`] without staging the examples into
-    /// a flat buffer first. Every slice must be exactly one input long;
-    /// a wrong-length example fails loudly instead of smearing payloads
-    /// across its neighbours.
+    /// per example). Kept as a real per-example loop: arbitrary
+    /// unrelated slices cannot fold into one GEMM without staging — use
+    /// [`Session::infer`] with [`Batch::strided`] (or stage into
+    /// [`Batch::contiguous`]) to get the folded path. Every slice must
+    /// be exactly one input long; a wrong-length example fails loudly
+    /// instead of smearing payloads across its neighbours.
+    #[deprecated(note = "use Session::infer with Batch::strided or Batch::contiguous")]
     pub fn classify_each_into<'a>(
         &mut self,
         inputs: impl IntoIterator<Item = &'a [f32]>,
@@ -734,9 +1023,22 @@ impl Session {
     }
 
     /// Batch into a caller-owned buffer (appends; no arena allocation).
+    /// Runs in batch-folded micro-batches of up to
+    /// [`SessionMeta::max_batch`] examples, like [`Session::infer`].
     pub fn run_batch_into(&mut self, inputs: &[f32], out: &mut Vec<f32>) {
-        self.runs += (inputs.len() / self.plan.input_len.max(1)) as u64;
-        self.backend.run_batch(&self.plan, &mut self.arena, inputs, out);
+        let ilen = self.plan.input_len.max(1);
+        assert_eq!(inputs.len() % ilen, 0, "ragged batch");
+        let total = inputs.len() / ilen;
+        self.runs += total as u64;
+        let mb = self.meta.max_batch.max(1);
+        let mut lo = 0usize;
+        while lo < total {
+            let n = mb.min(total - lo);
+            let chunk = &inputs[lo * ilen..(lo + n) * ilen];
+            let logits = self.backend.run_many(&self.plan, &mut self.arena, chunk, n);
+            out.extend_from_slice(logits);
+            lo += n;
+        }
     }
 
     /// Calibration run (float backend): records activation ranges into
@@ -754,26 +1056,62 @@ impl Session {
     /// thread. The §5.7 lifetime analysis is not recomputed and the
     /// prepacked weight arena is ALIASED (`Arc` clone, read-only), never
     /// re-packed or copied — N serving workers share one `PackedWeights`
-    /// allocation. The intra-op thread budget is inherited (each fork
-    /// gets its OWN worker pool — pools are never shared across
-    /// sessions).
+    /// allocation. Thread budget and micro-batch capacity are inherited
+    /// (each fork gets its OWN worker pool — pools are never shared
+    /// across sessions); override them via [`Session::fork_with`].
     pub fn fork(&self) -> Session {
-        self.fork_with_threads(self.meta.intra_op_threads)
+        self.fork_with(ForkOpts::inherit())
     }
 
-    /// [`Session::fork`] with a different intra-op thread budget — the
-    /// serving coordinator uses this to cap `workers × intra_op_threads`
-    /// at the host's available parallelism.
-    pub fn fork_with_threads(&self, threads: usize) -> Session {
-        let threads = threads.max(1);
+    /// [`Session::fork`] with explicit shape overrides — the serving
+    /// coordinator uses this both to cap `workers × intra_op_threads` at
+    /// the host's available parallelism and to size each worker's arena
+    /// for its micro-batch. Panicking twin of
+    /// [`Session::try_fork_with`].
+    pub fn fork_with(&self, opts: ForkOpts) -> Session {
+        self.try_fork_with(opts).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible fork: rejects shapes whose arena sizing is degenerate or
+    /// arithmetically unrepresentable (`max_batch == 0`, or a pool whose
+    /// batched byte size overflows `usize`) instead of panicking deep in
+    /// the allocator.
+    pub fn try_fork_with(&self, opts: ForkOpts) -> Result<Session, VerifyError> {
+        let perr = |reason: String| VerifyError { node: "<fork>".into(), reason };
+        let threads = opts.threads.unwrap_or(self.meta.intra_op_threads).max(1);
+        let max_batch = opts.max_batch.unwrap_or(self.meta.max_batch);
+        if max_batch == 0 {
+            return Err(perr("fork max_batch must be at least 1".into()));
+        }
+        for &elems in self
+            .plan
+            .alloc
+            .pool_elems
+            .iter()
+            .chain([self.plan.input_len, self.plan.output_len].iter())
+        {
+            if elems.checked_mul(max_batch).and_then(|e| e.checked_mul(4)).is_none() {
+                return Err(perr(format!(
+                    "max_batch {max_batch} overflows the arena sizing of a \
+                     {elems}-element buffer"
+                )));
+            }
+        }
         let plan = self.plan.clone();
-        let arena = self.backend.new_arena(&plan, threads);
+        let arena = self.backend.new_arena(&plan, threads, max_batch);
         let meta = SessionMeta {
             intra_op_threads: threads,
+            max_batch,
             arena_bytes: arena.host_bytes(),
             ..self.meta.clone()
         };
-        Session { backend: self.backend.clone(), plan, arena, meta, runs: 0 }
+        Ok(Session { backend: self.backend.clone(), plan, arena, meta, runs: 0 })
+    }
+
+    /// [`Session::fork`] with a different intra-op thread budget.
+    #[deprecated(note = "use Session::fork_with(ForkOpts::inherit().threads(n))")]
+    pub fn fork_with_threads(&self, threads: usize) -> Session {
+        self.fork_with(ForkOpts::inherit().threads(threads))
     }
 
     pub fn meta(&self) -> &SessionMeta {
@@ -814,6 +1152,10 @@ impl Session {
 
 #[cfg(test)]
 mod tests {
+    // The deprecated classify/fork wrappers must stay green — exercised
+    // deliberately below.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::graph::build::resnet_v1_6_shapes;
     use crate::graph::deploy_pipeline;
@@ -976,6 +1318,95 @@ mod tests {
         let short = vec![0.0f32; 95]; // model input is 96
         let mut out = Vec::new();
         sess.classify_each_into([short.as_slice()], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "example/input length mismatch")]
+    fn infer_rejects_wrong_length_examples() {
+        let g = randomized_graph(21);
+        let mut sess = SessionBuilder::float32(g).build();
+        let short = vec![0.0f32; 95]; // model input is 96
+        let mut out = Predictions::new();
+        sess.infer(&Batch::single(&short), &mut out);
+    }
+
+    #[test]
+    fn infer_matches_wrappers_across_batch_geometries() {
+        let g = randomized_graph(37);
+        let xs = inputs(7, 96, 38);
+        let mut stats = ActStats::new(g.nodes.len());
+        for x in &xs {
+            float_exec::run(&g, x, Some(&mut stats));
+        }
+        let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
+        let mut sess = SessionBuilder::fixed_qmn(qg).max_batch(4).build();
+        assert_eq!(sess.meta().max_batch, 4);
+        assert_eq!(sess.arena().max_batch(), 4);
+        let singles: Vec<Prediction> = xs.iter().map(|x| sess.classify(x)).collect();
+
+        // Contiguous view, larger than max_batch → micro-batch chunking.
+        let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+        let mut preds = Predictions::new();
+        sess.infer(&Batch::contiguous(&flat, 96), &mut preds);
+        assert_eq!(preds.len(), singles.len());
+        for (a, b) in singles.iter().zip(&preds) {
+            assert_eq!((a.class, a.confidence), (b.class, b.confidence));
+        }
+
+        // Strided view: examples padded with 4 garbage trailer columns.
+        let stride = 96 + 4;
+        let mut recs = vec![f32::NAN; xs.len() * stride];
+        for (i, x) in xs.iter().enumerate() {
+            recs[i * stride..i * stride + 96].copy_from_slice(x);
+        }
+        let strided = Batch::strided(&recs, xs.len(), 96, stride);
+        assert!(!strided.is_contiguous());
+        preds.clear();
+        sess.infer(&strided, &mut preds);
+        for (a, b) in singles.iter().zip(&preds) {
+            assert_eq!((a.class, a.confidence), (b.class, b.confidence));
+        }
+
+        // All of the above ran in the session's one preallocated arena.
+        let ptrs = sess.arena().buffer_ptrs();
+        preds.clear();
+        sess.infer(&Batch::contiguous(&flat, 96), &mut preds);
+        assert_eq!(ptrs, sess.arena().buffer_ptrs(), "infer reallocated the arena");
+        assert_eq!(sess.runs(), 7 + 7 + 7 + 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged batch")]
+    fn contiguous_batch_rejects_ragged_input() {
+        let _ = Batch::contiguous(&[0.0; 97], 96);
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns its backing slice")]
+    fn strided_batch_rejects_overrun() {
+        let _ = Batch::strided(&[0.0; 100], 2, 96, 96);
+    }
+
+    #[test]
+    fn fork_with_opts_shapes_the_worker() {
+        let g = randomized_graph(39);
+        let template = SessionBuilder::float32(g).threads(4).max_batch(8).build();
+        let fork = template.fork();
+        assert_eq!(fork.meta().intra_op_threads, 4);
+        assert_eq!(fork.meta().max_batch, 8);
+        let shaped = template.fork_with(ForkOpts::inherit().threads(2).max_batch(1));
+        assert_eq!(shaped.meta().intra_op_threads, 2);
+        assert_eq!(shaped.meta().max_batch, 1);
+        assert_eq!(shaped.arena().max_batch(), 1);
+        // Batched pools + extra scratch slabs show up in the accounting.
+        assert!(fork.meta().arena_bytes > shaped.meta().arena_bytes);
+        // Degenerate shapes are rejected, not built.
+        let err = template.try_fork_with(ForkOpts::inherit().max_batch(0)).unwrap_err();
+        assert!(err.reason.contains("max_batch"), "wrong reason: {err}");
+        let err = template
+            .try_fork_with(ForkOpts::inherit().max_batch(usize::MAX / 2))
+            .unwrap_err();
+        assert!(err.reason.contains("overflows"), "wrong reason: {err}");
     }
 
     #[test]

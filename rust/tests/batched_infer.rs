@@ -1,0 +1,257 @@
+//! ISSUE 8 property pin: batch-folded `Session::infer` is BIT-EXACT
+//! against serving the same examples one at a time — on every backend,
+//! at widths {8, 16}, batch sizes {1, 2, 7, 64}, and threads {1, 4} —
+//! including a non-contiguous strided `Batch` view and the transformer's
+//! unfoldable layers (embedding → layernorm → attention → softmax loop
+//! per example inside the same plan).
+//!
+//! The fold argument (DESIGN.md §11): batched dense / 1×1-conv layers
+//! stack examples into the GEMM M dimension, leaving the per-element
+//! k-major accumulation order and fused epilogue untouched, so the
+//! integer engines reproduce the serial bits and float32 is bitwise
+//! identical; everything else loops per example through the exact code
+//! the single-example path runs. These tests pin that claim instead of
+//! trusting it.
+
+use std::sync::Arc;
+
+use microai::graph::ir::LayerKind;
+use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
+use microai::nn::float_exec::ActStats;
+use microai::nn::{Batch, ForkOpts, Predictions, Session, SessionBuilder};
+use microai::quant::{quantize, quantize_affine, QuantSpec};
+use microai::util::prng::Pcg32;
+
+/// 64 exceeds the arenas' `max_batch(8)`, so it pins the chunked
+/// micro-batch loop; 7 pins a partial final fold; 1 pins the fast path.
+const BATCHES: [usize; 4] = [1, 2, 7, 64];
+const THREADS: [usize; 2] = [1, 4];
+
+fn fixture_graph(dims: usize, shape: &[usize], classes: usize, filters: usize, seed: u64) -> Graph {
+    let mut g = resnet_v1_6_shapes("fix", dims, shape, classes, filters);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.35;
+            }
+            for v in b.data.iter_mut() {
+                *v = rng.normal() * 0.05;
+            }
+        }
+    }
+    deploy_pipeline(&g)
+}
+
+fn fixture_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
+}
+
+fn calibrate(g: &Graph, inputs: &[Vec<f32>]) -> ActStats {
+    let mut sess = SessionBuilder::float32(g.clone()).build();
+    let mut stats = ActStats::new(g.nodes.len());
+    for x in inputs {
+        assert!(sess.calibrate(x, &mut stats));
+    }
+    stats
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The property itself: for every batch size, the folded batch produces
+/// the same LOGIT BITS as running each example alone, and `infer`'s
+/// predictions agree per example (class + confidence bits).
+fn pin_batched_vs_singles(sess: &mut Session, pool: &[Vec<f32>], label: &str) {
+    let ilen = sess.input_len();
+    for &n in &BATCHES {
+        // Cycle the example pool so n can exceed its size.
+        let flat: Vec<f32> = (0..n).flat_map(|i| pool[i % pool.len()].clone()).collect();
+
+        let mut singles: Vec<f32> = Vec::new();
+        for ex in flat.chunks_exact(ilen) {
+            singles.extend_from_slice(sess.run(ex));
+        }
+        let batched = sess.run_batch(&flat);
+        assert_eq!(bits(&singles), bits(&batched), "{label} n={n}: batched logits diverge");
+
+        let mut preds: Predictions = Vec::new();
+        sess.infer(&Batch::contiguous(&flat, ilen), &mut preds);
+        assert_eq!(preds.len(), n, "{label} n={n}: one prediction per example");
+        let mut one: Predictions = Vec::new();
+        for (e, ex) in flat.chunks_exact(ilen).enumerate() {
+            one.clear();
+            sess.infer(&Batch::single(ex), &mut one);
+            assert_eq!(
+                (one[0].class, one[0].confidence.to_bits()),
+                (preds[e].class, preds[e].confidence.to_bits()),
+                "{label} n={n} ex={e}: prediction diverges"
+            );
+        }
+    }
+}
+
+/// All four engine/width arms over one deployed graph, `max_batch(8)`.
+fn pin_all_backends(g: &Graph, pool: &[Vec<f32>]) {
+    let stats = calibrate(g, pool);
+    let q16 = Arc::new(quantize(g, &stats, QuantSpec::int16_per_layer()));
+    let q8 = Arc::new(quantize(g, &stats, QuantSpec::int8_per_layer()));
+    let aq = Arc::new(quantize_affine(g, &stats));
+
+    for &t in &THREADS {
+        let mut arms = vec![
+            ("float32", SessionBuilder::float32(g.clone()).threads(t).max_batch(8).build()),
+            ("int16", SessionBuilder::fixed_qmn(q16.clone()).threads(t).max_batch(8).build()),
+            ("int8", SessionBuilder::fixed_qmn(q8.clone()).threads(t).max_batch(8).build()),
+            ("affine", SessionBuilder::affine_i8(aq.clone()).threads(t).max_batch(8).build()),
+        ];
+        for (name, sess) in arms.iter_mut() {
+            pin_batched_vs_singles(sess, pool, &format!("{name} t={t}"));
+        }
+    }
+}
+
+#[test]
+fn batched_infer_bit_exact_resnet_1d() {
+    // HAR-shaped: dense head folds, k=3 convs loop, 1×1 shortcut convs fold.
+    let g = fixture_graph(1, &[64, 6], 5, 8, 42);
+    let pool = fixture_inputs(16, 64 * 6, 7);
+    pin_all_backends(&g, &pool);
+}
+
+#[test]
+fn batched_infer_bit_exact_resnet_2d() {
+    // conv2d topology: the 2-D im2col path folds only its 1×1 layers.
+    let g = fixture_graph(2, &[12, 12, 3], 4, 4, 9);
+    let pool = fixture_inputs(8, 12 * 12 * 3, 11);
+    pin_all_backends(&g, &pool);
+}
+
+#[test]
+fn strided_batch_view_matches_contiguous() {
+    // Records longer than an example (payload + trailing telemetry
+    // fields): the zero-copy strided view must classify identically to a
+    // contiguous copy of the payloads — the executor falls back to its
+    // per-example gather, which must not change a single bit.
+    let g = fixture_graph(1, &[64, 6], 5, 8, 17);
+    let pool = fixture_inputs(8, 64 * 6, 18);
+    let stats = calibrate(&g, &pool);
+    let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+
+    let ilen = 64 * 6;
+    let stride = ilen + 5;
+    let n = 7usize;
+    let mut rng = Pcg32::seeded(19);
+    let records: Vec<f32> = (0..(n - 1) * stride + ilen).map(|_| rng.normal()).collect();
+    let flat: Vec<f32> = (0..n)
+        .flat_map(|e| records[e * stride..e * stride + ilen].to_vec())
+        .collect();
+
+    let mut arms = vec![
+        SessionBuilder::float32(g.clone()).max_batch(4).build(),
+        SessionBuilder::fixed_qmn(q8).threads(4).max_batch(4).build(),
+    ];
+    for sess in arms.iter_mut() {
+        let mut strided: Predictions = Vec::new();
+        sess.infer(&Batch::strided(&records, n, ilen, stride), &mut strided);
+        let mut contiguous: Predictions = Vec::new();
+        sess.infer(&Batch::contiguous(&flat, ilen), &mut contiguous);
+        assert_eq!(strided.len(), n);
+        for (a, b) in strided.iter().zip(&contiguous) {
+            assert_eq!(
+                (a.class, a.confidence.to_bits()),
+                (b.class, b.confidence.to_bits()),
+                "{}: strided view diverges from contiguous copy",
+                sess.meta().backend
+            );
+        }
+    }
+}
+
+/// Randomized 2-block transformer: embedding → [LN → MHSA → add → LN →
+/// FFN → add] ×2 → GAP → dense → softmax. Every block layer except the
+/// FFN 1×1s is unfoldable, so this pins the per-example loop inside the
+/// batched plan (and the fold/loop interleaving around it).
+fn transformer_fixture(seed: u64) -> (Graph, u32) {
+    const VOCAB: u32 = 20;
+    let mut g = microai::graph::build::transformer("txfix", 12, VOCAB as usize, 16, 2, 2, 2, 5);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        match &mut n.kind {
+            LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+            LayerKind::Embedding { w } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.5;
+                }
+            }
+            LayerKind::LayerNorm { gamma, beta, .. } => {
+                for v in gamma.iter_mut() {
+                    *v = 1.0 + rng.normal() * 0.2;
+                }
+                for v in beta.iter_mut() {
+                    *v = rng.normal() * 0.1;
+                }
+            }
+            LayerKind::SelfAttention { w, .. } => {
+                for t in [&mut w.wq, &mut w.wk, &mut w.wv, &mut w.wo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.3;
+                    }
+                }
+                for t in [&mut w.bq, &mut w.bk, &mut w.bv, &mut w.bo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.05;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    (deploy_pipeline(&g), VOCAB)
+}
+
+#[test]
+fn batched_infer_bit_exact_transformer_unfoldable_layers() {
+    let (g, vocab) = transformer_fixture(91);
+    let seq: usize = g.input_shape.iter().product();
+    let mut rng = Pcg32::seeded(92);
+    let pool: Vec<Vec<f32>> =
+        (0..8).map(|_| (0..seq).map(|_| rng.below(vocab) as f32).collect()).collect();
+    pin_all_backends(&g, &pool);
+}
+
+#[test]
+fn forked_worker_with_batch_capacity_matches_template() {
+    // ISSUE 8 satellite: `ForkOpts` sizes the worker's arena for folded
+    // micro-batches; its batched answers must match the template serving
+    // one example at a time from its own (max_batch = 1) arena.
+    let g = fixture_graph(1, &[64, 6], 5, 8, 61);
+    let pool = fixture_inputs(8, 64 * 6, 62);
+    let stats = calibrate(&g, &pool);
+    let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+
+    let mut root = SessionBuilder::fixed_qmn(q8).build();
+    assert_eq!(root.meta().max_batch, 1);
+    let mut worker = root.fork_with(ForkOpts::inherit().threads(4).max_batch(4));
+    assert_eq!(worker.meta().max_batch, 4);
+
+    let flat: Vec<f32> = pool.iter().flatten().copied().collect();
+    let mut singles: Vec<f32> = Vec::new();
+    for x in &pool {
+        singles.extend_from_slice(root.run(x));
+    }
+    assert_eq!(bits(&singles), bits(&worker.run_batch(&flat)));
+
+    // Degenerate capacities are refused up front, not deep in the
+    // allocator.
+    assert!(root.try_fork_with(ForkOpts::inherit().max_batch(0)).is_err());
+}

@@ -257,8 +257,11 @@ fn forked_sessions_alias_one_packed_weights_arena_with_stable_buffers() {
 
     let root = SessionBuilder::fixed_qmn(q8).build();
     assert!(root.meta().packed_weight_bytes > 0, "fixed backend must prepack");
+    // The deprecated wrapper must stay green (ISSUE 8 acceptance) and
+    // mean exactly `ForkOpts::inherit().threads(4)`.
+    #[allow(deprecated)]
     let mut w1 = root.fork_with_threads(4);
-    let mut w2 = root.fork_with_threads(4);
+    let mut w2 = root.fork_with(microai::nn::ForkOpts::inherit().threads(4));
     assert!(
         Arc::ptr_eq(&root.plan().packed, &w1.plan().packed)
             && Arc::ptr_eq(&root.plan().packed, &w2.plan().packed),
