@@ -1,0 +1,577 @@
+"""Mirror fuzz of the verified offset-based memory planner (DESIGN.md §12).
+
+No Rust toolchain lives in this container, so the planner/checker pair in
+``rust/src/allocator`` (exact liveness -> in-place classes -> host
+first-fit -> best-fit-decreasing offsets, re-proven by the trusted
+byte-range checker) is mirrored 1:1 in pure Python here and fuzzed over
+random synthetic DAGs:
+
+- P1  the mirrored checker accepts every mirrored planner output;
+- P2  planned arena <= pooled baseline on every graph (never-worse);
+- P3  a crafted overlapping plan (consumer parked on its live producer's
+      offset without the in-place sanction) is refused;
+- P4  layout soundness by *simulation*: replaying unique per-node tokens
+      through the planned offsets, every read a node performs still
+      observes its producer's token — this would catch a planner AND
+      checker agreeing on something unsound;
+- P5  the in-place kernel twins (add / softmax / embedding descending
+      gather, incl. the batched flat walk) are bit-identical to their
+      out-of-place references under aliasing.
+
+Mirroring rules that matter (see .claude/skills/verify/SKILL.md):
+``rescale`` is a plain arithmetic shift (Python ``>>`` on negative ints
+floors, same as two's-complement ``>>``); integer division in the
+softmax normalize pass TRUNCATES toward zero in Rust/C (``tdiv`` below,
+not Python ``//``).
+"""
+
+import random
+
+INF = 1 << 60  # usize::MAX stand-in (never added to, only compared)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic graph: list of dicts {kind, inputs, elems, d?}. Node ids are
+# list indices == the topological schedule, like the Rust IR.
+# ---------------------------------------------------------------------------
+
+def node(kind, inputs, elems, d=1):
+    return {"kind": kind, "inputs": inputs, "elems": elems, "d": d}
+
+
+INPLACE_KINDS = ("add", "relu", "softmax", "flatten", "embedding")
+
+
+def random_graph(rng):
+    """Random DAG over the planner-relevant kinds, input first, single
+    output (the last node), every node reachable as someone's input or
+    the output."""
+    nodes = [node("input", [], rng.randint(4, 64))]
+    n_body = rng.randint(3, 14)
+    for _ in range(n_body):
+        nid = len(nodes)
+        kind = rng.choice(
+            ["generic", "generic", "generic", "add", "relu", "softmax",
+             "flatten", "embedding", "attention"]
+        )
+        src = rng.randrange(nid)
+        if kind == "add":
+            peers = [i for i in range(nid) if nodes[i]["elems"] == nodes[src]["elems"]]
+            other = rng.choice(peers)
+            nodes.append(node("add", [src, other], nodes[src]["elems"]))
+        elif kind in ("relu", "softmax", "flatten"):
+            nodes.append(node(kind, [src], nodes[src]["elems"]))
+        elif kind == "embedding":
+            d = rng.randint(1, 6)
+            nodes.append(node("embedding", [src], nodes[src]["elems"] * d, d))
+        elif kind == "attention":
+            # window size == out elems (seq * d_model), like the Rust IR
+            nodes.append(node("attention", [src], nodes[src]["elems"]))
+        else:
+            nodes.append(node("generic", [src], rng.randint(4, 96)))
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# Mirror of analysis::liveness + allocator::planner
+# ---------------------------------------------------------------------------
+
+def last_use(nodes):
+    last = list(range(len(nodes)))
+    for nid, nd in enumerate(nodes):
+        for i in nd["inputs"]:
+            last[i] = max(last[i], nid)
+    last[len(nodes) - 1] = INF  # graph output read by the caller forever
+    return last
+
+
+def inplace_candidate(nodes, last, nid):
+    nd = nodes[nid]
+
+    def legal(i, grow):
+        return (
+            nodes[i]["kind"] != "input"
+            and last[i] == nid
+            and nodes[i]["elems"] * grow == nd["elems"]
+        )
+
+    if nd["kind"] == "add":
+        if nd["inputs"][0] == nd["inputs"][1]:
+            return None
+        for i in nd["inputs"]:
+            if legal(i, 1):
+                return i
+        return None
+    if nd["kind"] in ("relu", "softmax", "flatten"):
+        i = nd["inputs"][0]
+        return i if legal(i, 1) else None
+    if nd["kind"] == "embedding":
+        i = nd["inputs"][0]
+        return i if legal(i, nd["d"]) else None
+    return None
+
+
+def bfd_offsets(chunks):
+    """chunks: list of dicts {elems, birth, death, members, window}."""
+    def tie(c):
+        if c["members"]:
+            return c["members"][0]
+        if c["window"] is not None:
+            return c["window"][0] * 4 + c["window"][1]
+        return 0
+
+    order = sorted(range(len(chunks)),
+                   key=lambda i: (-chunks[i]["elems"], chunks[i]["birth"], tie(chunks[i])))
+    offsets = [0] * len(chunks)
+    placed = []
+    arena = 0
+    for i in order:
+        ci = chunks[i]
+        live = [j for j in placed
+                if ci["birth"] <= chunks[j]["death"] and chunks[j]["birth"] <= ci["death"]]
+        candidates = sorted({0} | {offsets[j] + chunks[j]["elems"] for j in live})
+        off = next(c for c in candidates
+                   if all(c + ci["elems"] <= offsets[j]
+                          or offsets[j] + chunks[j]["elems"] <= c for j in live))
+        offsets[i] = off
+        arena = max(arena, off + ci["elems"])
+        placed.append(i)
+    return offsets, arena
+
+
+def pooled_first_fit(nodes, last):
+    n = len(nodes)
+    pool_of = [INF] * n
+    pool_elems = []
+    occupant = []
+    for nid, nd in enumerate(nodes):
+        if nd["kind"] == "input":
+            continue
+        chosen = None
+        for p, occ in enumerate(occupant):
+            if occ is None:
+                chosen = p
+                break
+            still_needed = last[occ] > nid
+            is_my_input = any(pool_of[i] == p for i in nd["inputs"])
+            if not still_needed and not is_my_input:
+                chosen = p
+                break
+        if chosen is None:
+            occupant.append(None)
+            pool_elems.append(0)
+            chosen = len(occupant) - 1
+        pool_of[nid] = chosen
+        occupant[chosen] = nid
+        pool_elems[chosen] = max(pool_elems[chosen], nd["elems"])
+    return pool_of, pool_elems
+
+
+def plan(nodes):
+    n = len(nodes)
+    last = last_use(nodes)
+
+    inplace_with = [None] * n
+    class_root = list(range(n))
+    for nid in range(n):
+        s = inplace_candidate(nodes, last, nid)
+        if s is not None:
+            inplace_with[nid] = s
+            class_root[nid] = class_root[s]
+
+    chunks = []
+    chunk_of_root = [None] * n
+    for nid, nd in enumerate(nodes):
+        if nd["kind"] == "input":
+            continue
+        root = class_root[nid]
+        if chunk_of_root[root] is None:
+            chunk_of_root[root] = len(chunks)
+            chunks.append({"elems": 0, "birth": nid, "death": max(last[nid], nid),
+                           "members": [], "window": None})
+        c = chunks[chunk_of_root[root]]
+        c["elems"] = max(c["elems"], nd["elems"])
+        c["birth"] = min(c["birth"], nid)
+        c["death"] = max(c["death"], max(last[nid], nid))
+        c["members"].append(nid)
+    n_classes = len(chunks)
+
+    pool_of = [INF] * n
+    pool_elems = []
+    slot_tenants = []
+    for ci in range(n_classes):
+        cc = chunks[ci]
+
+        def free(tenants):
+            return all(not (cc["birth"] <= chunks[t]["death"]
+                            and chunks[t]["birth"] <= cc["death"]) for t in tenants)
+
+        slot = next((s for s, t in enumerate(slot_tenants) if free(t)), None)
+        if slot is None:
+            slot_tenants.append([])
+            pool_elems.append(0)
+            slot = len(slot_tenants) - 1
+        slot_tenants[slot].append(ci)
+        pool_elems[slot] = max(pool_elems[slot], cc["elems"])
+        for m in cc["members"]:
+            pool_of[m] = slot
+
+    for nid, nd in enumerate(nodes):
+        if nd["kind"] == "attention":
+            for k in range(4):
+                chunks.append({"elems": nd["elems"], "birth": nid, "death": nid,
+                               "members": [], "window": (nid, k)})
+    chunk_off, arena_elems = bfd_offsets(chunks)
+    offset_of = [INF] * n
+    attn_scratch_of = [None] * n
+    for ci, c in enumerate(chunks):
+        for m in c["members"]:
+            offset_of[m] = chunk_off[ci]
+        if c["window"] is not None:
+            nid, k = c["window"]
+            if attn_scratch_of[nid] is None:
+                attn_scratch_of[nid] = [0, 0, 0, 0]
+            attn_scratch_of[nid][k] = chunk_off[ci]
+
+    pool_of_57, pool_elems_57 = pooled_first_fit(nodes, last)
+    attn_total = sum(4 * nd["elems"] for nd in nodes if nd["kind"] == "attention")
+    pooled_elems = sum(pool_elems_57) + attn_total
+
+    alloc = {"pool_of": pool_of, "pool_elems": pool_elems,
+             "inplace_with": inplace_with, "offset_of": offset_of,
+             "arena_elems": arena_elems, "pooled_elems": pooled_elems,
+             "attn_scratch_of": attn_scratch_of}
+
+    if arena_elems > pooled_elems:  # never-worse fallback
+        base, acc = [0] * len(pool_elems_57), 0
+        for p, e in enumerate(pool_elems_57):
+            base[p] = acc
+            acc += e
+        alloc["offset_of"] = [INF if p == INF else base[p] for p in pool_of_57]
+        scratch = [None] * n
+        for nid, nd in enumerate(nodes):
+            if nd["kind"] == "attention":
+                sd = nd["elems"]
+                scratch[nid] = [acc, acc + sd, acc + 2 * sd, acc + 3 * sd]
+                acc += 4 * sd
+        alloc["attn_scratch_of"] = scratch
+        alloc["pool_of"] = pool_of_57
+        alloc["pool_elems"] = pool_elems_57
+        alloc["inplace_with"] = [None] * n
+        alloc["arena_elems"] = pooled_elems
+    return alloc
+
+
+# ---------------------------------------------------------------------------
+# Mirror of allocator::check_no_conflict (the trusted side)
+# ---------------------------------------------------------------------------
+
+def check_no_conflict(nodes, alloc):
+    n = len(nodes)
+    last = last_use(nodes)
+    elems = [nd["elems"] for nd in nodes]
+
+    def death(i):
+        return max(last[i], i)
+
+    def lives_at(i, t):
+        return i <= t <= death(i)
+
+    def temporal(i, j):
+        return i <= death(j) and j <= death(i)
+
+    def disjoint(o1, e1, o2, e2):
+        return o1 + e1 <= o2 or o2 + e2 <= o1
+
+    host_base, acc = [0] * len(alloc["pool_elems"]), 0
+    for p, e in enumerate(alloc["pool_elems"]):
+        host_base[p] = acc
+        acc += e
+
+    for nid, nd in enumerate(nodes):
+        if nd["kind"] == "input":
+            if alloc["pool_of"][nid] != INF or alloc["offset_of"][nid] != INF:
+                return f"caller-owned Input {nid} must not be planned"
+            if alloc["inplace_with"][nid] is not None:
+                return f"Input {nid} cannot be in-place"
+            continue
+        p = alloc["pool_of"][nid]
+        if p == INF or p >= len(alloc["pool_elems"]):
+            return f"node {nid} has no host slot"
+        if alloc["pool_elems"][p] < elems[nid]:
+            return f"node {nid} undersized host slot"
+        off = alloc["offset_of"][nid]
+        if off == INF or off + elems[nid] > alloc["arena_elems"]:
+            return f"node {nid} escapes the arena"
+        for i in nd["inputs"]:
+            if i >= nid:
+                return f"node {nid} reads {i} out of schedule order"
+            if not lives_at(i, nid):
+                return f"node {nid} reads {i} after its death"
+        s = alloc["inplace_with"][nid]
+        if s is not None:
+            if s not in nd["inputs"]:
+                return f"node {nid} claims in-place over non-input {s}"
+            if nodes[s]["kind"] == "input":
+                return f"node {nid} may not overwrite the caller's input"
+            if last[s] != nid:
+                return f"node {nid} overwrites {s} while still read"
+            if nd["kind"] == "add":
+                ok = nd["inputs"][0] != nd["inputs"][1] and elems[nid] == elems[s]
+            elif nd["kind"] in ("relu", "softmax", "flatten"):
+                ok = elems[nid] == elems[s]
+            elif nd["kind"] == "embedding":
+                ok = elems[nid] == elems[s] * nd["d"]
+            else:
+                return f"node {nid} is not an alias-safe in-place kind"
+            if not ok:
+                return f"node {nid} in-place size rule violated"
+            if alloc["offset_of"][s] != off or alloc["pool_of"][s] != p:
+                return f"in-place node {nid} does not alias {s} exactly"
+        w = alloc["attn_scratch_of"][nid]
+        if nd["kind"] == "attention":
+            if w is None:
+                return f"attention node {nid} lacks stage windows"
+            sd = nd["elems"]
+            for k, wo in enumerate(w):
+                if wo + sd > alloc["arena_elems"]:
+                    return f"attention window {k} of {nid} escapes arena"
+                for k2 in range(k + 1, 4):
+                    if not disjoint(wo, sd, w[k2], sd):
+                        return f"attention windows {k}/{k2} of {nid} overlap"
+                for o, od in enumerate(nodes):
+                    if od["kind"] == "input" or not lives_at(o, nid):
+                        continue
+                    if not disjoint(wo, sd, alloc["offset_of"][o], elems[o]):
+                        return f"attention window {k} of {nid} overlaps live node {o}"
+        elif w is not None:
+            return f"non-attention node {nid} carries stage windows"
+
+    for i in range(n):
+        if nodes[i]["kind"] == "input":
+            continue
+        for j in range(i + 1, n):
+            if nodes[j]["kind"] == "input" or not temporal(i, j):
+                continue
+            if alloc["inplace_with"][j] == i:
+                continue
+            if not disjoint(alloc["offset_of"][i], elems[i],
+                            alloc["offset_of"][j], elems[j]):
+                return f"nodes {i} and {j} overlap in the arena"
+            hi, hj = host_base[alloc["pool_of"][i]], host_base[alloc["pool_of"][j]]
+            if not disjoint(hi, elems[i], hj, elems[j]):
+                return f"nodes {i} and {j} share host slot bytes"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# P1/P2: planner output verifies; planned <= pooled
+# ---------------------------------------------------------------------------
+
+def test_planner_passes_checker_and_never_loses_to_pools():
+    rng = random.Random(901)
+    for trial in range(500):
+        nodes = random_graph(rng)
+        alloc = plan(nodes)
+        err = check_no_conflict(nodes, alloc)
+        assert err is None, f"trial {trial}: {err}\n{nodes}"
+        assert alloc["arena_elems"] <= alloc["pooled_elems"], (
+            f"trial {trial}: planned {alloc['arena_elems']} > "
+            f"pooled {alloc['pooled_elems']}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# P3: crafted overlap refused
+# ---------------------------------------------------------------------------
+
+def test_checker_rejects_crafted_overlap():
+    rng = random.Random(902)
+    rejected = 0
+    for _ in range(300):
+        nodes = random_graph(rng)
+        alloc = plan(nodes)
+        victim = next(
+            (nid for nid, nd in enumerate(nodes)
+             if nd["kind"] != "input" and alloc["inplace_with"][nid] is None
+             and any(alloc["offset_of"][i] != INF for i in nd["inputs"])),
+            None,
+        )
+        if victim is None:
+            continue
+        src = next(i for i in nodes[victim]["inputs"] if alloc["offset_of"][i] != INF)
+        evil = dict(alloc)
+        evil["offset_of"] = list(alloc["offset_of"])
+        evil["offset_of"][victim] = alloc["offset_of"][src]
+        err = check_no_conflict(nodes, evil)
+        assert err is not None, f"overlap on {victim}/{src} not refused: {nodes}"
+        rejected += 1
+    assert rejected > 100, "fuzz never exercised the overlap recipe"
+
+
+# ---------------------------------------------------------------------------
+# P4: soundness by simulation — every read observes its producer's token
+# ---------------------------------------------------------------------------
+
+def test_layout_simulation_every_read_sees_its_producer():
+    rng = random.Random(903)
+    for trial in range(300):
+        nodes = random_graph(rng)
+        alloc = plan(nodes)
+        assert check_no_conflict(nodes, alloc) is None
+        arena = [None] * alloc["arena_elems"]
+        token = lambda nid, k: (nid, k)  # unique per node and element
+
+        def assert_inputs(nid, when):
+            for i in nodes[nid]["inputs"]:
+                off = alloc["offset_of"][i]
+                if off == INF:
+                    continue  # caller-owned input buffer
+                for k in range(nodes[i]["elems"]):
+                    assert arena[off + k] == token(i, k), (
+                        f"trial {trial}: node {nid} reads {i} elem {k} "
+                        f"clobbered ({when})\n{nodes}"
+                    )
+
+        for nid, nd in enumerate(nodes):
+            if nd["kind"] == "input":
+                continue
+            assert_inputs(nid, "before execute")
+            if alloc["attn_scratch_of"][nid] is not None:
+                # the attention kernel fills q/k/v/ctx while reading x
+                for wo in alloc["attn_scratch_of"][nid]:
+                    for k in range(nd["elems"]):
+                        arena[wo + k] = "garbage"
+                assert_inputs(nid, "after stage windows")
+            off = alloc["offset_of"][nid]
+            for k in range(nd["elems"]):
+                arena[off + k] = token(nid, k)
+        out = len(nodes) - 1
+        off = alloc["offset_of"][out]
+        for k in range(nodes[out]["elems"]):
+            assert arena[off + k] == token(out, k), "output clobbered"
+
+
+# ---------------------------------------------------------------------------
+# P5: in-place kernel twins bit-identical under aliasing
+# (mirrors nn::int_ops — rescale = arithmetic shift, tdiv = C division)
+# ---------------------------------------------------------------------------
+
+def clamp_to(acc, width):
+    lo, hi = -(1 << (width - 1)), (1 << (width - 1)) - 1
+    return max(lo, min(hi, acc))
+
+
+def rescale(acc, shift):
+    return acc >> min(shift, 63) if shift >= 0 else acc << min(-shift, 63)
+
+
+def tdiv(a, b):
+    q = abs(a) // abs(b)
+    return q if (a >= 0) == (b >= 0) else -q
+
+
+def exp_stub(dist, n_in):
+    # Deterministic positive stand-in for the Q0.15 exp LUT: the twin
+    # equality below holds for ANY pure function here (LUT accuracy is
+    # pinned separately since PR 6).
+    return ((dist * 2654435761 + n_in) % 32000) + 1
+
+
+def add_q(a, n_a, b, n_b, n_out, relu, width):
+    out = []
+    for x, y in zip(a, b):
+        v = clamp_to(rescale(x, n_a - n_out) + rescale(y, n_b - n_out), width)
+        out.append(max(v, 0) if relu else v)
+    return out
+
+
+def add_q_inplace(acc, n_acc, other, n_other, n_out, relu, width):
+    for t in range(len(acc)):
+        v = clamp_to(rescale(acc[t], n_acc - n_out) + rescale(other[t], n_other - n_out),
+                     width)
+        acc[t] = max(v, 0) if relu else v
+
+
+def softmax_q_row(x, n_in, n_out, width):
+    m = max(x) if x else 0
+    es = [exp_stub(m - v, n_in) for v in x]
+    s = sum(es)
+    return [clamp_to(tdiv(e << n_out, s), width) for e in es]
+
+
+def softmax_q_inplace(x, n_in, n_out, width):
+    m = max(x) if x else 0
+    s = 0
+    for t in range(len(x)):
+        x[t] = exp_stub(m - x[t], n_in)
+        s += x[t]
+    for t in range(len(x)):
+        x[t] = clamp_to(tdiv(x[t] << n_out, s), width)
+
+
+def embedding_q(ids, table, d):
+    vocab = len(table) // d
+    out = []
+    for i in ids:
+        i = max(0, min(vocab - 1, i))
+        out.extend(table[i * d:(i + 1) * d])
+    return out
+
+
+def embedding_q_inplace(buf, table, d):
+    vocab = len(table) // d
+    n = len(buf)
+    buf.extend([0] * (n * d - n))
+    for t in range(n - 1, -1, -1):
+        i = max(0, min(vocab - 1, buf[t]))
+        buf[t * d:(t + 1) * d] = table[i * d:(i + 1) * d]
+
+
+def test_inplace_kernel_twins_bit_identical():
+    rng = random.Random(904)
+    for _ in range(400):
+        width = rng.choice((8, 16))
+        lim = (1 << (width - 1)) - 1
+        n = rng.randint(1, 40)
+        payload = lambda: [rng.randint(-lim - 1, lim) for _ in range(n)]
+
+        # add: both aliasing orders reproduce the out-of-place kernel
+        a, b = payload(), payload()
+        n_a, n_b, n_out = (rng.randint(0, width - 1) for _ in range(3))
+        relu = rng.random() < 0.5
+        ref = add_q(a, n_a, b, n_b, n_out, relu, width)
+        acc = list(a)
+        add_q_inplace(acc, n_a, b, n_b, n_out, relu, width)
+        assert acc == ref, "add aliased over operand 0 diverged"
+        acc = list(b)
+        add_q_inplace(acc, n_b, a, n_a, n_out, relu, width)
+        assert acc == ref, "add aliased over operand 1 diverged"
+
+        # softmax: 3-pass in-place == two-buffer kernel
+        x = payload()
+        n_in, sm_out = rng.randint(0, width - 1), width - 1
+        ref = softmax_q_row(x, n_in, sm_out, width)
+        buf = list(x)
+        softmax_q_inplace(buf, n_in, sm_out, width)
+        assert buf == ref, "softmax in-place diverged"
+
+        # embedding: descending gather == forward out-of-place, and the
+        # batched flat walk over an example-major concatenation is the
+        # per-example gather verbatim
+        d = rng.randint(1, 5)
+        vocab = rng.randint(1, 9)
+        table = [rng.randint(-lim - 1, lim) for _ in range(vocab * d)]
+        ids = [rng.randint(-1, vocab) for _ in range(rng.randint(1, 12))]
+        ref = embedding_q(ids, table, d)
+        buf = list(ids)
+        embedding_q_inplace(buf, table, d)
+        assert buf == ref, "embedding descending gather diverged"
+        batch = rng.randint(2, 4)
+        flat = [rng.randint(-1, vocab) for _ in range(batch * len(ids))]
+        per_example = []
+        for e in range(batch):
+            per_example.extend(embedding_q(flat[e * len(ids):(e + 1) * len(ids)], table, d))
+        fbuf = list(flat)
+        embedding_q_inplace(fbuf, table, d)
+        assert fbuf == per_example, "batched flat embedding walk diverged"

@@ -25,6 +25,12 @@
 //!    longstanding quantizer/calibration/allocator/codegen sections (full
 //!    mode only).
 //!
+//! Since ISSUE 9 the JSON additionally carries a `ram_plan` section
+//! (schema v5): per dataset topology (incl. the transformer), the
+//! checker-verified coalesced-arena element count vs the §5.7 pooled
+//! baseline it replaced — the Table-A6 RAM trajectory, measured by
+//! analysis rather than a timer, so it is stable across runners.
+//!
 //! Run: `cargo bench --bench bench_hotpath`
 //! CI:  `cargo bench --bench bench_hotpath -- --smoke --check --threads 4 --out BENCH_hotpath.json`
 
@@ -1231,8 +1237,46 @@ fn main() {
         }
     }
     let pass = live_pass && prepack_pass && batched_pass && baseline_bad.is_empty();
+    // ISSUE 9: planned-vs-pooled activation RAM per dataset topology.
+    // Pure analysis (no timer), so the rows are identical on every
+    // runner; the transformer is planned here too since its graph never
+    // enters the `topologies` race above.
+    let tx_graph = deploy_pipeline(&microai::graph::build::transformer(
+        "tx", 12, 20, 16, 2, 2, 2, 5,
+    ));
+    let mut ram_models: Vec<(&str, &Graph)> =
+        topologies.iter().map(|(m, g, _)| (*m, g)).collect();
+    ram_models.push(("transformer", &tx_graph));
+    let ram_plan_rows: Vec<Json> = ram_models
+        .iter()
+        .map(|(model, g)| {
+            let alloc = microai::allocator::allocate(g);
+            microai::allocator::check_no_conflict(g, &alloc)
+                .unwrap_or_else(|e| panic!("{model}: shipped plan refused: {e}"));
+            assert!(
+                alloc.arena_elems <= alloc.pooled_elems,
+                "{model}: planned arena exceeds the pooled baseline"
+            );
+            Json::obj(vec![
+                ("model", Json::str(model)),
+                ("planned_elems", Json::num(alloc.arena_elems as f64)),
+                ("pooled_elems", Json::num(alloc.pooled_elems as f64)),
+                ("planned_bytes_int8", Json::num(alloc.ram_bytes(1) as f64)),
+                ("pooled_bytes_int8", Json::num(alloc.pooled_ram_bytes(1) as f64)),
+                (
+                    "saved_pct",
+                    Json::num(if alloc.pooled_elems == 0 {
+                        0.0
+                    } else {
+                        100.0 * (alloc.pooled_elems - alloc.arena_elems) as f64
+                            / alloc.pooled_elems as f64
+                    }),
+                ),
+            ])
+        })
+        .collect();
     let doc = Json::obj(vec![
-        ("version", Json::num(4.0)),
+        ("version", Json::num(5.0)),
         ("bench", Json::str("hotpath")),
         ("mode", Json::str(if smoke { "smoke" } else { "full" })),
         ("threads", Json::num(threads as f64)),
@@ -1293,6 +1337,7 @@ fn main() {
                     .collect(),
             ),
         ),
+        ("ram_plan", Json::Arr(ram_plan_rows)),
     ]);
     let mut text = doc.to_string();
     text.push('\n');

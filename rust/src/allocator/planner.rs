@@ -1,0 +1,535 @@
+//! Offset-based memory planner (DESIGN.md §12) — the UNTRUSTED half of
+//! the planner/checker split.
+//!
+//! The paper's §5.7 allocator first-fits whole *pools*; TFLite-Micro's
+//! greedy planner (the Table-A6 rival) packs buffers at byte offsets
+//! inside one arena. This module closes that gap in three passes over
+//! the exact liveness facts (`analysis::liveness`):
+//!
+//! 1. **In-place lowering** (`inplace_candidate`): an element-wise node
+//!    may write straight into an input buffer when it is that buffer's
+//!    LAST reader — `Add` residual tails, standalone `ReLU`, `Softmax`,
+//!    `Flatten`, and `Embedding` gather targets. Legality additionally
+//!    requires: the source is not the caller-owned Input; sizes match
+//!    (Embedding grows by the row width, which is safe because the
+//!    gather walks ids backwards — position `t` writes `[t·d, (t+1)·d)`,
+//!    never clobbering an unread id at `t' < t ≤ t·d`); and `Add` never
+//!    aliases when both operands are the same buffer. Chained in-place
+//!    nodes merge into a *class* sharing one buffer whose size is the
+//!    max member and whose live interval is the union (members tile it,
+//!    overlapping only at the sanctioned producer/consumer handoff).
+//! 2. **Host slots** (first-fit over classes): the Rust executors keep
+//!    their take/put `Vec<Vec<T>>` arena, so classes — not nodes — get
+//!    slots, with INCLUSIVE interval conflict (a consumer born at its
+//!    producer's death still reads it while writing itself).
+//! 3. **Device offsets** (best-fit-decreasing): class chunks plus the
+//!    four `seq × d_model` attention stage windows (point intervals
+//!    `[n, n]`, replacing the per-node `static` buffers the C emitter
+//!    used to hoard for the model's whole lifetime) are sorted by size
+//!    descending and each placed at the lowest gap that fits among
+//!    temporally-overlapping, already-placed chunks.
+//!
+//! If the offset plan somehow beats nothing — i.e. the BFD arena comes
+//! out LARGER than the §5.7 pools plus attention statics — the planner
+//! falls back to the pooled layout expressed as offsets, so planned
+//! RAM ≤ pooled RAM holds by construction on every graph.
+//!
+//! Nothing here is trusted: `super::check_no_conflict` independently
+//! re-proves every placement at element/byte granularity, and
+//! `Plan::validate` / `codegen` / the deployer refuse plans it rejects.
+
+use crate::analysis::liveness::{self, LiveRange, Liveness};
+use crate::graph::ir::{Graph, LayerKind, Node};
+
+/// Kinds eligible for in-place lowering, and the legal source input if
+/// the node is that input's last reader. Deterministic: the first legal
+/// input wins (matters only for `Add`).
+pub(crate) fn inplace_candidate(graph: &Graph, last: &[usize], node: &Node) -> Option<usize> {
+    let elems = |i: usize| graph.nodes[i].out_shape.iter().product::<usize>();
+    let legal = |i: usize, grow: usize| {
+        !matches!(graph.nodes[i].kind, LayerKind::Input)
+            && last[i] == node.id
+            && elems(i) * grow == elems(node.id)
+    };
+    match &node.kind {
+        LayerKind::Add => {
+            // x + x reads the source twice; aliasing the accumulator over
+            // it would double the first rescale. Refuse outright.
+            if node.inputs[0] == node.inputs[1] {
+                return None;
+            }
+            node.inputs.iter().copied().find(|&i| legal(i, 1))
+        }
+        LayerKind::ReLU | LayerKind::Softmax | LayerKind::Flatten => {
+            let i = node.inputs[0];
+            legal(i, 1).then_some(i)
+        }
+        LayerKind::Embedding { w } => {
+            let i = node.inputs[0];
+            legal(i, w.shape[1]).then_some(i)
+        }
+        _ => None,
+    }
+}
+
+/// One buffer the device arena must hold: an in-place class of nodes or
+/// a single attention stage window.
+#[derive(Clone, Debug)]
+struct Chunk {
+    elems: usize,
+    birth: usize,
+    death: usize,
+    /// Node ids whose `offset_of` this chunk defines (class members), or
+    /// empty for attention windows (delivered via `attn_scratch_of`).
+    members: Vec<usize>,
+    /// `Some((node, k))` for the k-th q/k/v/ctx window of `node`.
+    window: Option<(usize, usize)>,
+}
+
+impl Chunk {
+    fn overlaps(&self, other: &Chunk) -> bool {
+        self.birth <= other.death && other.birth <= self.death
+    }
+}
+
+/// Greedy best-fit-decreasing placement: chunks sorted by size (desc,
+/// then birth, then first member/window id for determinism) are dropped
+/// at the lowest offset that fits among temporally-overlapping placed
+/// chunks. Returns per-chunk offsets and the arena size in elements.
+fn bfd_offsets(chunks: &[Chunk]) -> (Vec<usize>, usize) {
+    let mut order: Vec<usize> = (0..chunks.len()).collect();
+    order.sort_by_key(|&i| {
+        let c = &chunks[i];
+        let tie = c.members.first().copied().or(c.window.map(|(n, k)| n * 4 + k)).unwrap_or(0);
+        (usize::MAX - c.elems, c.birth, tie)
+    });
+    let mut offsets = vec![0usize; chunks.len()];
+    let mut placed: Vec<usize> = Vec::new();
+    let mut arena = 0usize;
+    for &i in &order {
+        let live: Vec<usize> = placed
+            .iter()
+            .copied()
+            .filter(|&j| chunks[i].overlaps(&chunks[j]))
+            .collect();
+        let mut candidates: Vec<usize> = std::iter::once(0)
+            .chain(live.iter().map(|&j| offsets[j] + chunks[j].elems))
+            .collect();
+        candidates.sort_unstable();
+        candidates.dedup();
+        let off = candidates
+            .into_iter()
+            .find(|&c| {
+                live.iter().all(|&j| {
+                    c + chunks[i].elems <= offsets[j] || offsets[j] + chunks[j].elems <= c
+                })
+            })
+            .expect("offset 0 or some gap end always fits");
+        offsets[i] = off;
+        arena = arena.max(off + chunks[i].elems);
+        placed.push(i);
+    }
+    (offsets, arena)
+}
+
+/// The paper's §5.7 first-fit pool assignment, kept verbatim as the
+/// baseline the planner must never lose to (and the fallback layout if
+/// it somehow would). Returns (pool_of, pool_elems).
+pub(crate) fn pooled_first_fit(graph: &Graph, last: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    let n = graph.nodes.len();
+    let mut pool_of = vec![usize::MAX; n];
+    let mut pool_elems: Vec<usize> = Vec::new();
+    let mut occupant: Vec<Option<usize>> = Vec::new();
+    for node in &graph.nodes {
+        if matches!(node.kind, LayerKind::Input) {
+            continue;
+        }
+        let elems: usize = node.out_shape.iter().product();
+        let mut chosen = None;
+        for (p, occ) in occupant.iter().enumerate() {
+            let free = match occ {
+                None => true,
+                Some(o) => {
+                    let still_needed = last[*o] > node.id;
+                    let is_my_input = node.inputs.iter().any(|&i| pool_of[i] == p);
+                    !still_needed && !is_my_input
+                }
+            };
+            if free {
+                chosen = Some(p);
+                break;
+            }
+        }
+        let p = match chosen {
+            Some(p) => p,
+            None => {
+                occupant.push(None);
+                pool_elems.push(0);
+                occupant.len() - 1
+            }
+        };
+        pool_of[node.id] = p;
+        occupant[p] = Some(node.id);
+        pool_elems[p] = pool_elems[p].max(elems);
+    }
+    (pool_of, pool_elems)
+}
+
+/// Build the full offset plan for `graph`. Untrusted — callers must run
+/// it through [`super::check_no_conflict`].
+pub(crate) fn plan(graph: &Graph) -> super::Allocation {
+    let n = graph.nodes.len();
+    let lv: Liveness = liveness::analyze(graph);
+    let last = liveness::last_use(graph);
+
+    // Pass 1: in-place annotations and their classes.
+    let mut inplace_with: Vec<Option<usize>> = vec![None; n];
+    let mut class_root: Vec<usize> = (0..n).collect();
+    for node in &graph.nodes {
+        if let Some(s) = inplace_candidate(graph, &last, node) {
+            inplace_with[node.id] = Some(s);
+            class_root[node.id] = class_root[s]; // s < id, so already final
+        }
+    }
+
+    // Class chunks: size = max member, interval = union of members.
+    let mut chunks: Vec<Chunk> = Vec::new();
+    let mut chunk_of_root = vec![usize::MAX; n];
+    for r in &lv.ranges {
+        if r.caller_owned {
+            continue;
+        }
+        let root = class_root[r.node];
+        if chunk_of_root[root] == usize::MAX {
+            chunk_of_root[root] = chunks.len();
+            chunks.push(Chunk {
+                elems: 0,
+                birth: r.birth,
+                death: r.death,
+                members: Vec::new(),
+                window: None,
+            });
+        }
+        let c = &mut chunks[chunk_of_root[root]];
+        c.elems = c.elems.max(r.elems);
+        c.birth = c.birth.min(r.birth);
+        c.death = c.death.max(r.death);
+        c.members.push(r.node);
+    }
+    let n_classes = chunks.len();
+
+    // Pass 2: host execution slots, first-fit over classes in birth
+    // order with inclusive-interval conflict.
+    let mut pool_of = vec![usize::MAX; n];
+    let mut pool_elems: Vec<usize> = Vec::new();
+    let mut slot_tenants: Vec<Vec<usize>> = Vec::new(); // chunk ids per slot
+    for ci in 0..n_classes {
+        let free = |tenants: &[usize]| tenants.iter().all(|&t| !chunks[ci].overlaps(&chunks[t]));
+        let slot = match slot_tenants.iter().position(|t| free(t)) {
+            Some(s) => s,
+            None => {
+                slot_tenants.push(Vec::new());
+                pool_elems.push(0);
+                slot_tenants.len() - 1
+            }
+        };
+        slot_tenants[slot].push(ci);
+        pool_elems[slot] = pool_elems[slot].max(chunks[ci].elems);
+        for &m in &chunks[ci].members {
+            pool_of[m] = slot;
+        }
+    }
+
+    // Pass 3: device offsets — classes plus attention stage windows.
+    for (id, w) in lv.attn_window_elems.iter().enumerate() {
+        if let Some(sd) = w {
+            for k in 0..4 {
+                chunks.push(Chunk {
+                    elems: *sd,
+                    birth: id,
+                    death: id,
+                    members: Vec::new(),
+                    window: Some((id, k)),
+                });
+            }
+        }
+    }
+    let (chunk_off, arena_elems) = bfd_offsets(&chunks);
+    let mut offset_of = vec![usize::MAX; n];
+    let mut attn_scratch_of: Vec<Option<[usize; 4]>> = vec![None; n];
+    for (ci, c) in chunks.iter().enumerate() {
+        for &m in &c.members {
+            offset_of[m] = chunk_off[ci];
+        }
+        if let Some((id, k)) = c.window {
+            let w = attn_scratch_of[id].get_or_insert([0; 4]);
+            w[k] = chunk_off[ci];
+        }
+    }
+
+    // §5.7 baseline: pools plus the attention statics the old C emitter
+    // kept alive forever — the apples-to-apples pooled RAM figure.
+    let (pool_of_57, pool_elems_57) = pooled_first_fit(graph, &last);
+    let attn_total: usize = lv.attn_window_elems.iter().flatten().map(|sd| 4 * sd).sum();
+    let pooled_elems = pool_elems_57.iter().sum::<usize>() + attn_total;
+
+    let mut alloc = super::Allocation {
+        pool_of,
+        pool_elems,
+        inplace_with,
+        offset_of,
+        arena_elems,
+        pooled_elems,
+        attn_scratch_of,
+        gemm_scratch_elems: lv.gemm_scratch_elems,
+        packed_b_elems: crate::nn::packed::packed_b_elems(graph),
+    };
+
+    // Never-worse guard: if BFD lost to the paper's pools (it shouldn't,
+    // but the planner is untrusted), ship the pooled layout as offsets.
+    if alloc.arena_elems > pooled_elems {
+        let mut base = vec![0usize; pool_elems_57.len()];
+        let mut acc = 0usize;
+        for (p, &e) in pool_elems_57.iter().enumerate() {
+            base[p] = acc;
+            acc += e;
+        }
+        alloc.offset_of = pool_of_57
+            .iter()
+            .map(|&p| if p == usize::MAX { usize::MAX } else { base[p] })
+            .collect();
+        alloc.attn_scratch_of = lv
+            .attn_window_elems
+            .iter()
+            .map(|w| {
+                w.map(|sd| {
+                    let w0 = acc;
+                    acc += 4 * sd;
+                    [w0, w0 + sd, w0 + 2 * sd, w0 + 3 * sd]
+                })
+            })
+            .collect();
+        alloc.pool_of = pool_of_57;
+        alloc.pool_elems = pool_elems_57;
+        alloc.inplace_with = vec![None; n];
+        alloc.arena_elems = pooled_elems;
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::check_no_conflict;
+    use crate::graph::build::{cnn, resnet_v1_6_shapes, transformer};
+    use crate::graph::deploy_pipeline;
+    use crate::graph::ir::PadSpec;
+    use crate::tensor::TensorF;
+
+    #[test]
+    fn bfd_packs_disjoint_intervals_at_offset_zero() {
+        let mk = |elems, birth, death, id| Chunk {
+            elems,
+            birth,
+            death,
+            members: vec![id],
+            window: None,
+        };
+        let chunks = vec![mk(10, 1, 2, 1), mk(20, 3, 4, 3), mk(30, 5, 6, 5)];
+        let (off, arena) = bfd_offsets(&chunks);
+        assert_eq!(off, vec![0, 0, 0]);
+        assert_eq!(arena, 30);
+    }
+
+    #[test]
+    fn bfd_stacks_overlapping_intervals() {
+        let mk = |elems, birth, death, id| Chunk {
+            elems,
+            birth,
+            death,
+            members: vec![id],
+            window: None,
+        };
+        // All three alive at node 5: must occupy disjoint ranges; the
+        // largest goes first (offset 0) and the rest best-fit above.
+        let chunks = vec![mk(10, 1, 5, 1), mk(30, 2, 5, 2), mk(20, 3, 6, 3)];
+        let (off, arena) = bfd_offsets(&chunks);
+        assert_eq!(off[1], 0, "largest chunk first");
+        assert_eq!(arena, 60);
+        for (i, j) in [(0usize, 1usize), (0, 2), (1, 2)] {
+            let disjoint =
+                off[i] + chunks[i].elems <= off[j] || off[j] + chunks[j].elems <= off[i];
+            assert!(disjoint, "chunks {i}/{j} overlap");
+        }
+    }
+
+    #[test]
+    fn bfd_reuses_gaps_best_fit() {
+        let mk = |elems, birth, death, id| Chunk {
+            elems,
+            birth,
+            death,
+            members: vec![id],
+            window: None,
+        };
+        // big [1,9] at 0; mid [1,3] stacks above it; small [5,9] should
+        // re-use mid's range (dead by 5) instead of growing the arena.
+        let chunks = vec![mk(100, 1, 9, 1), mk(40, 1, 3, 2), mk(20, 5, 9, 3)];
+        let (off, arena) = bfd_offsets(&chunks);
+        assert_eq!(off[0], 0);
+        assert_eq!(off[1], 100);
+        assert_eq!(off[2], 100, "dead chunk's range is reusable");
+        assert_eq!(arena, 140);
+    }
+
+    #[test]
+    fn residual_add_lowered_in_place() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("pr", 1, &[128, 9], 6, 16));
+        let a = plan(&g);
+        check_no_conflict(&g, &a).unwrap();
+        let adds: Vec<_> = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, crate::graph::ir::LayerKind::Add))
+            .collect();
+        assert!(!adds.is_empty());
+        for add in &adds {
+            let s = a.inplace_with[add.id].expect("residual add should fuse in place");
+            assert!(add.inputs.contains(&s));
+            assert_eq!(a.offset_of[add.id], a.offset_of[s]);
+            assert_eq!(a.pool_of[add.id], a.pool_of[s]);
+        }
+    }
+
+    #[test]
+    fn embedding_after_non_input_node_goes_in_place() {
+        // The stock transformer embeds the caller-owned Input directly
+        // (never in-place); pad the ids first so the gather's source is
+        // a planner-managed buffer and the descending-gather rule fires.
+        let mut g = crate::graph::ir::Graph::new("pe", 1, &[6, 1], 3);
+        let pad: PadSpec = vec![(1, 1)];
+        let z = g.add("z", LayerKind::ZeroPad { pad }, vec![0]);
+        let e = g.add(
+            "emb",
+            LayerKind::Embedding { w: TensorF::from_vec(&[5, 4], vec![0.1; 20]) },
+            vec![z],
+        );
+        let d = g.add(
+            "fc",
+            LayerKind::Dense {
+                w: TensorF::from_vec(&[32, 3], vec![0.01; 96]),
+                b: TensorF::from_vec(&[3], vec![0.0; 3]),
+            },
+            vec![e],
+        );
+        let _ = d;
+        let a = plan(&g);
+        check_no_conflict(&g, &a).unwrap();
+        assert_eq!(a.inplace_with[e], Some(z), "embedding should gather in place");
+        // The class chunk is sized for the GROWN output (ids * d).
+        assert!(a.pool_elems[a.pool_of[e]] >= 8 * 4);
+    }
+
+    #[test]
+    fn add_over_same_buffer_twice_is_refused() {
+        let mut g = crate::graph::ir::Graph::new("px", 1, &[8, 1], 3);
+        let r = g.add("r", LayerKind::ReLU, vec![0]);
+        let a = g.add("a2", LayerKind::Add, vec![r, r]);
+        let _ = a;
+        let last = liveness::last_use(&g);
+        assert_eq!(inplace_candidate(&g, &last, &g.nodes[a]), None);
+        let alloc = plan(&g);
+        check_no_conflict(&g, &alloc).unwrap();
+        assert_eq!(alloc.inplace_with[a], None);
+    }
+
+    #[test]
+    fn planned_never_exceeds_pooled_and_wins_on_paper_models() {
+        // Acceptance criterion: planned <= pooled everywhere, strictly
+        // smaller on at least 2 of {UCI-HAR, SMNIST, GTSRB, transformer}.
+        let models: Vec<(&str, crate::graph::ir::Graph)> = vec![
+            ("uci-har", deploy_pipeline(&resnet_v1_6_shapes("har", 1, &[128, 9], 6, 16))),
+            ("smnist", deploy_pipeline(&cnn("smnist", 1, &[39, 13], 10, &[8, 8], 3, 32))),
+            ("gtsrb", deploy_pipeline(&resnet_v1_6_shapes("gtsrb", 2, &[32, 32, 3], 43, 8))),
+            ("transformer", deploy_pipeline(&transformer("tx", 12, 20, 16, 2, 2, 2, 5))),
+        ];
+        let mut strict_wins = 0usize;
+        for (name, g) in &models {
+            let a = plan(g);
+            check_no_conflict(g, &a).unwrap();
+            assert!(
+                a.arena_elems <= a.pooled_elems,
+                "{name}: planned {} > pooled {}",
+                a.arena_elems,
+                a.pooled_elems
+            );
+            if a.arena_elems < a.pooled_elems {
+                strict_wins += 1;
+            }
+        }
+        assert!(strict_wins >= 2, "only {strict_wins} strict RAM wins");
+    }
+
+    #[test]
+    fn prop_random_resnets_pass_the_trusted_checker() {
+        use crate::util::check::property;
+        property(25, |pg| {
+            let filters = pg.usize_in(4, 32);
+            let s = 8 * pg.usize_in(2, 16);
+            let c = pg.usize_in(1, 8);
+            let graph = deploy_pipeline(&resnet_v1_6_shapes(
+                "pp", 1, &[s, c], pg.usize_in(2, 10), filters,
+            ));
+            let a = plan(&graph);
+            check_no_conflict(&graph, &a)?;
+            if a.arena_elems > a.pooled_elems {
+                return Err(format!("planned {} > pooled {}", a.arena_elems, a.pooled_elems));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pooled_fallback_layout_also_passes_the_checker() {
+        // The never-worse guard ships this layout when BFD loses; prove
+        // it is sound in its own right by constructing it directly.
+        let g = deploy_pipeline(&transformer("pf", 12, 20, 16, 2, 2, 2, 5));
+        let last = liveness::last_use(&g);
+        let lv = liveness::analyze(&g);
+        let (pool_of, pool_elems) = pooled_first_fit(&g, &last);
+        let mut base = vec![0usize; pool_elems.len()];
+        let mut acc = 0usize;
+        for (p, &e) in pool_elems.iter().enumerate() {
+            base[p] = acc;
+            acc += e;
+        }
+        let offset_of: Vec<usize> = pool_of
+            .iter()
+            .map(|&p| if p == usize::MAX { usize::MAX } else { base[p] })
+            .collect();
+        let attn_scratch_of: Vec<Option<[usize; 4]>> = lv
+            .attn_window_elems
+            .iter()
+            .map(|w| {
+                w.map(|sd| {
+                    let w0 = acc;
+                    acc += 4 * sd;
+                    [w0, w0 + sd, w0 + 2 * sd, w0 + 3 * sd]
+                })
+            })
+            .collect();
+        let n = g.nodes.len();
+        let alloc = crate::allocator::Allocation {
+            pool_of,
+            pool_elems,
+            inplace_with: vec![None; n],
+            offset_of,
+            arena_elems: acc,
+            pooled_elems: acc,
+            attn_scratch_of,
+            gemm_scratch_elems: lv.gemm_scratch_elems,
+            packed_b_elems: crate::nn::packed::packed_b_elems(&g),
+        };
+        check_no_conflict(&g, &alloc).unwrap();
+    }
+}

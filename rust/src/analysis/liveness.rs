@@ -1,0 +1,227 @@
+//! Byte-exact liveness analysis over the graph IR (DESIGN.md §12).
+//!
+//! The executors run nodes in topological order (node ids ARE the
+//! schedule), so every buffer's lifetime is a closed interval of node
+//! ids: it is *born* when its producer writes it and *dies* at its last
+//! reader. This module computes those intervals exactly — no
+//! approximation lattice is needed because the schedule is total — and
+//! states the companion facts the memory planner consumes:
+//!
+//! - **Activation ranges**: node `i`'s output is live over
+//!   `[i, last_use(i)]` inclusive. The graph output is read by the
+//!   caller after the last node, so its death is `usize::MAX`. The
+//!   Input node's payload lives in the caller's buffer for as long as
+//!   any node reads it; it never occupies planner-managed memory.
+//! - **Attention stage windows**: a `SelfAttention` node stages its
+//!   q/k/v/context projections in four scratch buffers of `seq × d_model`
+//!   elements each. They are born and die inside the node's own
+//!   execution — the point interval `[n, n]` — which is exactly why the
+//!   planner may overlap them with any buffer NOT live at `n`.
+//! - **GEMM/im2col scratch**: host-side packing panels are live only
+//!   inside one node's execution and are sized by the worst node
+//!   (`nn::gemm::scratch_elems`), one slab per intra-op thread. They
+//!   stay host-only facts (the generated C runs loop-nest kernels, not
+//!   the packed GEMM), carried here so the planner/report can account
+//!   them without re-deriving.
+//! - **`max_batch` staging slabs**: a batch-capable host arena scales
+//!   every activation slot by `max_batch` and adds one `max(node_elems)`
+//!   staging buffer for unfoldable layers (DESIGN.md §11). Scaling a
+//!   whole layout uniformly preserves every disjointness fact, so the
+//!   planner plans single-example element offsets and the arena
+//!   multiplies; `staging_elems` reports the slab for completeness.
+//!
+//! Overlap rule: intervals `[b1, d1]` and `[b2, d2]` conflict iff
+//! `b1 <= d2 && b2 <= d1` (saturating at `usize::MAX`). The INCLUSIVE
+//! comparison is load-bearing: a consumer born at its producer's death
+//! node reads the producer *while* writing itself, so same-address
+//! placement is only sound for the planner's explicitly sanctioned
+//! in-place pairs (`allocator::planner`), never by interval accident.
+
+use crate::graph::ir::{Graph, LayerKind};
+
+/// Closed live interval of one node's output buffer, in schedule
+/// (node-id) coordinates, plus its single-example element count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LiveRange {
+    /// Producing node id (== position in the topological schedule).
+    pub node: usize,
+    /// First schedule point at which the buffer holds the payload.
+    pub birth: usize,
+    /// Last schedule point that reads the buffer (`usize::MAX` for the
+    /// graph output, which the caller reads after every node).
+    pub death: usize,
+    /// Payload elements for ONE example (batched arenas scale by
+    /// `max_batch`; dtype width multiplies at pricing time).
+    pub elems: usize,
+    /// Whether this is the caller-owned Input buffer (never planned).
+    pub caller_owned: bool,
+}
+
+impl LiveRange {
+    /// Inclusive interval overlap (see module docs for why inclusive).
+    #[inline]
+    pub fn overlaps(&self, other: &LiveRange) -> bool {
+        self.birth <= other.death && other.birth <= self.death
+    }
+}
+
+/// Exact liveness facts for one graph under its topological schedule.
+#[derive(Clone, Debug)]
+pub struct Liveness {
+    /// Per-node live range, indexed by node id.
+    pub ranges: Vec<LiveRange>,
+    /// Per-node attention stage-window size: `Some(seq * d_model)` (the
+    /// size of EACH of the four q/k/v/ctx windows, all live exactly at
+    /// `[node, node]`) for `SelfAttention` nodes, `None` otherwise.
+    pub attn_window_elems: Vec<Option<usize>>,
+    /// Host-side GEMM/im2col packing scratch (elements per intra-op
+    /// thread), live only within a single node's execution.
+    pub gemm_scratch_elems: usize,
+    /// Host-side staging slab for unfoldable layers in batched runs:
+    /// `max(node_elems)` elements per example (DESIGN.md §11).
+    pub staging_elems: usize,
+}
+
+impl Liveness {
+    /// Number of scheduled nodes.
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+/// Last node (in topological order) that reads each node's output; the
+/// graph output is read by the caller after everything (`usize::MAX`).
+/// A node nobody reads dies the moment it is written (its own id).
+pub fn last_use(graph: &Graph) -> Vec<usize> {
+    let mut last: Vec<usize> = (0..graph.nodes.len()).collect();
+    for node in &graph.nodes {
+        for &i in &node.inputs {
+            last[i] = last[i].max(node.id);
+        }
+    }
+    last[graph.output_id()] = usize::MAX;
+    last
+}
+
+/// Compute the exact per-node live intervals for `graph`.
+pub fn analyze(graph: &Graph) -> Liveness {
+    let last = last_use(graph);
+    let mut ranges = Vec::with_capacity(graph.nodes.len());
+    let mut attn_window_elems = vec![None; graph.nodes.len()];
+    let mut staging_elems = 0usize;
+    for node in &graph.nodes {
+        let elems: usize = node.out_shape.iter().product();
+        let caller_owned = matches!(node.kind, LayerKind::Input);
+        ranges.push(LiveRange {
+            node: node.id,
+            birth: node.id,
+            death: last[node.id],
+            elems,
+            caller_owned,
+        });
+        if !caller_owned {
+            staging_elems = staging_elems.max(elems);
+        }
+        if let LayerKind::SelfAttention { heads, head_dim, .. } = &node.kind {
+            let seq = node.out_shape[0];
+            attn_window_elems[node.id] = Some(seq * heads * head_dim);
+        }
+    }
+    Liveness {
+        ranges,
+        attn_window_elems,
+        gemm_scratch_elems: crate::nn::gemm::scratch_elems(graph),
+        staging_elems,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build::{cnn, resnet_v1_6_shapes, transformer};
+    use crate::graph::deploy_pipeline;
+
+    #[test]
+    fn chain_intervals_tile_the_schedule() {
+        let g = cnn("lc", 1, &[64, 4], 5, &[8, 8], 3, 16);
+        let lv = analyze(&g);
+        assert_eq!(lv.len(), g.nodes.len());
+        for r in &lv.ranges {
+            assert!(r.birth <= r.death, "inverted interval on node {}", r.node);
+        }
+        // In a pure chain every node is read exactly by its successor.
+        for node in &g.nodes {
+            for &i in &node.inputs {
+                assert!(
+                    lv.ranges[i].death >= node.id,
+                    "read of {} at {} lands outside its live range",
+                    i,
+                    node.id
+                );
+            }
+        }
+        assert_eq!(lv.ranges[g.output_id()].death, usize::MAX);
+    }
+
+    #[test]
+    fn residual_tap_outlives_block_body() {
+        // The resnet skip connection keeps the tap alive until the Add.
+        let g = deploy_pipeline(&resnet_v1_6_shapes("lr", 1, &[128, 9], 6, 16));
+        let lv = analyze(&g);
+        let add = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.kind, LayerKind::Add))
+            .expect("resnet has a residual Add");
+        let tap = *add.inputs.iter().min().unwrap();
+        assert!(lv.ranges[tap].death >= add.id);
+        // The tap's interval must overlap every body node in between.
+        for id in tap + 1..add.id {
+            assert!(lv.ranges[tap].overlaps(&lv.ranges[id]));
+        }
+    }
+
+    #[test]
+    fn attention_windows_are_point_intervals() {
+        let g = deploy_pipeline(&transformer("lt", 12, 20, 16, 2, 2, 2, 5));
+        let lv = analyze(&g);
+        let mut seen = 0;
+        for node in &g.nodes {
+            match &node.kind {
+                LayerKind::SelfAttention { heads, head_dim, .. } => {
+                    let sd = node.out_shape[0] * heads * head_dim;
+                    assert_eq!(lv.attn_window_elems[node.id], Some(sd));
+                    seen += 1;
+                }
+                _ => assert_eq!(lv.attn_window_elems[node.id], None),
+            }
+        }
+        assert!(seen >= 2, "fixture should carry attention nodes");
+        assert!(lv.gemm_scratch_elems > 0);
+        assert!(lv.staging_elems > 0);
+    }
+
+    #[test]
+    fn overlap_is_inclusive_and_symmetric() {
+        let mk = |b, d| LiveRange { node: 0, birth: b, death: d, elems: 1, caller_owned: false };
+        // Adjacent producer/consumer intervals DO overlap (read-during-write).
+        assert!(mk(1, 3).overlaps(&mk(3, 5)));
+        assert!(mk(3, 5).overlaps(&mk(1, 3)));
+        assert!(!mk(1, 2).overlaps(&mk(3, 5)));
+        // MAX-death (graph output) overlaps everything after its birth.
+        assert!(mk(4, usize::MAX).overlaps(&mk(9, 9)));
+        assert!(!mk(4, usize::MAX).overlaps(&mk(1, 3)));
+    }
+
+    #[test]
+    fn input_is_caller_owned() {
+        let g = cnn("li", 1, &[64, 4], 5, &[8], 3, 16);
+        let lv = analyze(&g);
+        assert!(lv.ranges[0].caller_owned);
+        assert!(lv.ranges[1..].iter().all(|r| !r.caller_owned));
+    }
+}

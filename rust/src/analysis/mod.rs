@@ -37,6 +37,13 @@
 //! per-node containment property is tested here against capture runs of
 //! both integer executors.
 
+// The analyzers are pure graph-walking proofs; nothing here may touch
+// raw memory (ISSUE 9 satellite: the planner/checker chain must be
+// trivially sound to audit).
+#![forbid(unsafe_code)]
+
+pub mod liveness;
+
 use std::fmt;
 
 use crate::fixedpoint::lut::{exp_q_index, rsqrt_h_max, rsqrt_r_bounds, EXP_IDX_SHIFT};

@@ -141,8 +141,35 @@ pub fn deployment_matrix(
 /// mid-pipeline.
 pub fn verification_summary(qg: &QuantizedGraph) -> String {
     match crate::graph::passes::verify_fixed_ranges(qg) {
-        Ok(facts) => facts.render_report(),
+        Ok(facts) => {
+            // The memory plan is part of the deployment proof surface:
+            // the report carries the planned-vs-pooled RAM line (Table A6
+            // framing) next to the range facts, re-running the trusted
+            // byte-range checker on the plan it describes.
+            let alloc = crate::allocator::allocate(&qg.graph);
+            format!("{}{}\n", facts.render_report(), ram_plan_summary(&qg.graph, &alloc))
+        }
         Err(e) => format!("UNVERIFIABLE: {e}\n"),
+    }
+}
+
+/// One-line RAM plan report: the planner's coalesced arena against the
+/// paper's §5.7 pool baseline (plus attention statics), in elements — the
+/// Table A6 "offset calculation vs pool allocation" comparison. The plan
+/// is re-proven by the trusted byte-range checker HERE, so a corrupted
+/// plan renders as a refusal instead of advertising unsound savings.
+pub fn ram_plan_summary(graph: &Graph, alloc: &crate::allocator::Allocation) -> String {
+    match crate::allocator::check_no_conflict(graph, alloc) {
+        Err(e) => format!("RAM plan REFUSED by the byte-range checker: {e}"),
+        Ok(()) => format!(
+            "RAM plan: {arena} arena elems vs {pooled} pooled ({saved} saved, \
+             {pct:.1}%, byte-range checker verified)",
+            arena = alloc.arena_elems,
+            pooled = alloc.pooled_elems,
+            saved = alloc.pooled_elems - alloc.arena_elems,
+            pct = 100.0 * (alloc.pooled_elems - alloc.arena_elems) as f64
+                / alloc.pooled_elems.max(1) as f64,
+        ),
     }
 }
 
@@ -204,7 +231,9 @@ mod tests {
         let qg = quantize(&g, &stats, QuantSpec::int8_per_layer());
         let report = verification_summary(&qg);
         assert!(report.contains("VerifiedFacts (fixed-qmn)"));
-        assert_eq!(report.lines().count(), qg.graph.nodes.len() + 1);
+        // Header + one line per node + the RAM plan line.
+        assert_eq!(report.lines().count(), qg.graph.nodes.len() + 2);
+        assert!(report.contains("RAM plan:"), "missing RAM plan line: {report}");
 
         // A graph the prover refuses renders the reason, not a panic.
         let mut g0 = Graph::new("overflow", 1, &[4, 1], 2);
@@ -218,6 +247,34 @@ mod tests {
         let bq = quantize(&bad, &bstats, QuantSpec::int16_per_layer());
         let refusal = verification_summary(&bq);
         assert!(refusal.starts_with("UNVERIFIABLE:"), "got: {refusal}");
+    }
+
+    #[test]
+    fn ram_plan_line_never_exceeds_pooled_and_refuses_corrupt_plans() {
+        let g = deploy_pipeline(&resnet_v1_6_shapes("har", 1, &[128, 9], 6, 16));
+        let alloc = crate::allocator::allocate(&g);
+        let line = ram_plan_summary(&g, &alloc);
+        assert!(line.starts_with("RAM plan:"), "got: {line}");
+        assert!(alloc.arena_elems <= alloc.pooled_elems);
+
+        // Deliberately overlapping plan: a consumer parked on its live
+        // producer's offset with no in-place sanction → REFUSED in the
+        // report (third refusal site after try_build and codegen).
+        let mut bad = alloc.clone();
+        let victim = g
+            .nodes
+            .iter()
+            .find(|n| {
+                !matches!(n.kind, crate::graph::ir::LayerKind::Input)
+                    && bad.inplace_with[n.id].is_none()
+                    && n.inputs.iter().any(|&i| bad.offset_of[i] != usize::MAX)
+            })
+            .expect("no corruptible node");
+        let producer =
+            *victim.inputs.iter().find(|&&i| bad.offset_of[i] != usize::MAX).unwrap();
+        bad.offset_of[victim.id] = bad.offset_of[producer];
+        let refusal = ram_plan_summary(&g, &bad);
+        assert!(refusal.starts_with("RAM plan REFUSED"), "got: {refusal}");
     }
 
     #[test]

@@ -53,9 +53,23 @@ pub(crate) fn run_capture(aq: &AffineQuantizedGraph, input: &[f32]) -> Vec<Vec<i
     let node_elems = crate::nn::session::node_elems(graph);
     let mut pool_of: Vec<usize> = (0..n).collect();
     pool_of[0] = usize::MAX; // Input payloads live in qinput
+    // Dedicated pools and a sequential device layout, no in-place
+    // lowering: every node's payload survives for inspection. (This
+    // synthetic plan drives the pools only; it is never checker-gated.)
+    let mut offset_of = vec![usize::MAX; n];
+    let mut total = 0usize;
+    for id in 1..n {
+        offset_of[id] = total;
+        total += node_elems[id];
+    }
     let alloc = crate::allocator::Allocation {
         pool_of,
         pool_elems: node_elems.clone(),
+        inplace_with: vec![None; n],
+        offset_of,
+        arena_elems: total,
+        pooled_elems: total,
+        attn_scratch_of: vec![None; n],
         gemm_scratch_elems: 0,
         packed_b_elems: 0,
     };
@@ -105,6 +119,14 @@ pub(crate) fn run_pooled(
             continue;
         }
         let p = alloc.pool_of[node.id];
+        if let Some(s) = alloc.inplace_with[node.id] {
+            // In-place lowering: the slot already holds input `s`'s
+            // payload (same class ⇒ same slot); mutate it directly.
+            let mut buf = std::mem::take(&mut pools[p]);
+            exec_node_inplace(aq, node, s, 1, qinput, pools, &alloc.pool_of, node_elems, &mut buf);
+            pools[p] = buf;
+            continue;
+        }
         let mut out = std::mem::take(&mut pools[p]);
         {
             let qin: &[i32] = qinput;
@@ -160,6 +182,16 @@ pub(crate) fn run_pooled_batch(
         }
         let p = alloc.pool_of[node.id];
         let ne = node_elems[node.id];
+        if let Some(s) = alloc.inplace_with[node.id] {
+            // In-place lowering over the example-major slot (flat for
+            // elementwise arms, per-example rows for softmax).
+            let mut buf = std::mem::take(&mut pools[p]);
+            exec_node_inplace(
+                aq, node, s, batch, qinput, pools, &alloc.pool_of, node_elems, &mut buf,
+            );
+            pools[p] = buf;
+            continue;
+        }
         let mut out = std::mem::take(&mut pools[p]);
         let folded = {
             let qin: &[i32] = qinput;
@@ -381,6 +413,59 @@ fn exec_node<'a>(
     }
 }
 
+/// In-place twin of [`exec_node`] for nodes the memory plan lowered onto
+/// an input buffer (`alloc.inplace_with[id] = Some(s)`): the shared slot
+/// already holds `s`'s example-major payloads, so the kernel mutates
+/// `buf` directly. Only the planner's alias-safe kinds appear here
+/// (checker-enforced); each arm is bit-exact against its out-of-place
+/// twin. `batch` folds flat where the op is elementwise and loops
+/// per-example rows where it is not.
+#[allow(clippy::too_many_arguments)]
+fn exec_node_inplace(
+    aq: &AffineQuantizedGraph,
+    node: &crate::graph::ir::Node,
+    s: usize,
+    batch: usize,
+    qin: &[i32],
+    pools: &[Vec<i32>],
+    pool_of: &[usize],
+    node_elems: &[usize],
+    buf: &mut Vec<i32>,
+) {
+    match &node.kind {
+        LayerKind::Add => {
+            // The other operand is proven by the checker to live in a
+            // different slot, so this read never aliases `buf`.
+            let o = if node.inputs[0] == s { node.inputs[1] } else { node.inputs[0] };
+            let q = pool_of[o];
+            let other: &[i32] =
+                if q == usize::MAX { qin } else { &pools[q][..batch * node_elems[o]] };
+            add_affine_inplace(aq, node.id, s, o, buf, other, node.fused_relu);
+        }
+        LayerKind::ReLU => {
+            let zp = aq.act[node.id].zero_point;
+            for v in buf.iter_mut() {
+                *v = (*v).max(zp);
+            }
+        }
+        LayerKind::Flatten => {} // payload is already the flattened tensor
+        LayerKind::Softmax => {
+            let (m, sh) = decompose(aq.act[node.inputs[0]].scale as f64);
+            let ne = node_elems[node.id];
+            for row in buf.chunks_exact_mut(ne) {
+                softmax_affine_inplace(row, m, sh);
+            }
+        }
+        LayerKind::Embedding { w } => {
+            let AffineTxWeights::Embed { table } = &aq.tx[&node.id] else {
+                panic!("embedding node without Embed params");
+            };
+            crate::nn::int_ops::embedding_q_inplace(buf, table, w.shape[1]);
+        }
+        other => panic!("in-place lowering of non-elementwise layer {}", other.type_name()),
+    }
+}
+
 /// Dequantize the output node's payloads — `batch` consecutive examples
 /// when called from the batch-folded driver.
 fn dequantize_output(
@@ -555,6 +640,25 @@ pub fn softmax_affine_ref(x: &[i32], sm_mult: i32, sm_shift: i32, out: &mut Vec<
     softmax_affine_row(x, sm_mult, sm_shift, out);
 }
 
+/// In-place twin of [`softmax_affine_row`]: the max pass is read-only,
+/// the exp pass rewrites each element from its own already-read value,
+/// and the normalize pass rewrites again — the exact element and
+/// accumulation order of the two-buffer kernel, so the probability
+/// payloads are bit-identical.
+pub fn softmax_affine_inplace(x: &mut [i32], sm_mult: i32, sm_shift: i32) {
+    let m = x.iter().copied().max().unwrap_or(0) as i64;
+    let mut sum = 0i64;
+    for v in x.iter_mut() {
+        let d15 = ((m - *v) * sm_mult as i64) >> (16 + sm_shift);
+        let q = exp_q(d15, 15);
+        *v = q;
+        sum += q as i64;
+    }
+    for v in x.iter_mut() {
+        *v = (-128 + ((*v as i64) << 8) / sum).clamp(-128, 127) as i32;
+    }
+}
+
 /// Affine LayerNorm reference over rows of `c` channels. Zero points
 /// cancel in the mean subtraction, so the normalized rows are scale-free;
 /// `gamma` payloads carry the build-time fold `gamma / s_out` at `g_n`
@@ -694,6 +798,32 @@ fn add_affine(
         }
         v
     }));
+}
+
+/// In-place twin of [`add_affine`]: `acc` holds operand `iacc`'s payloads
+/// and receives the sum. The per-operand real terms are summed with one
+/// f32 `+` (commutative), so which operand the planner aliased cannot
+/// change the result — bit-exact with the out-of-place kernel either way.
+fn add_affine_inplace(
+    aq: &AffineQuantizedGraph,
+    id: usize,
+    iacc: usize,
+    iother: usize,
+    acc: &mut [i32],
+    other: &[i32],
+    relu: bool,
+) {
+    let (pa, pb, po) = (aq.act[iacc], aq.act[iother], aq.act[id]);
+    let ra = pa.scale / po.scale;
+    let rb = pb.scale / po.scale;
+    for (x, &y) in acc.iter_mut().zip(other.iter()) {
+        let real = (*x - pa.zero_point) as f32 * ra + (y - pb.zero_point) as f32 * rb;
+        let mut v = (real.round() as i32 + po.zero_point).clamp(-128, 127);
+        if relu {
+            v = v.max(po.zero_point);
+        }
+        *x = v;
+    }
 }
 
 #[cfg(test)]

@@ -176,6 +176,19 @@ pub(crate) fn run_pooled(
             continue;
         }
         let p = alloc.pool_of[node.id];
+        if let Some(s) = alloc.inplace_with[node.id] {
+            // In-place lowering: the slot already holds input `s`'s
+            // payload (same class ⇒ same slot); mutate it directly.
+            // Calibration already recorded `s` when it executed, so
+            // overwriting its payload here cannot lose ranges.
+            let mut buf = std::mem::take(&mut pools[p]);
+            exec_node_inplace(node, s, 1, input, pools, &alloc.pool_of, node_elems, &mut buf);
+            if let Some(stats) = stats.as_deref_mut() {
+                stats.record(node.id, &buf);
+            }
+            pools[p] = buf;
+            continue;
+        }
         let mut out = std::mem::take(&mut pools[p]);
         {
             // Input slices: the graph input is the caller's buffer; every
@@ -236,6 +249,14 @@ pub(crate) fn run_pooled_batch(
         }
         let p = alloc.pool_of[node.id];
         let ne = node_elems[node.id];
+        if let Some(s) = alloc.inplace_with[node.id] {
+            // In-place lowering over the example-major slot (flat for
+            // elementwise arms, per-example rows for softmax).
+            let mut buf = std::mem::take(&mut pools[p]);
+            exec_node_inplace(node, s, batch, inputs, pools, &alloc.pool_of, node_elems, &mut buf);
+            pools[p] = buf;
+            continue;
+        }
         let mut out = std::mem::take(&mut pools[p]);
         let folded = {
             // Whole-batch producer slice: example-major payloads are
@@ -440,6 +461,46 @@ fn exec_node<'a>(
                 }
             }
         }
+    }
+}
+
+/// In-place twin of [`exec_node`] for nodes the memory plan lowered onto
+/// an input buffer (`alloc.inplace_with[id] = Some(s)`): the shared slot
+/// already holds `s`'s example-major payloads, so the kernel mutates
+/// `buf` directly. Only the planner's alias-safe kinds appear here
+/// (checker-enforced); each arm is bit-exact against its out-of-place
+/// twin (see the `float_ops` in-place kernels). `batch` folds flat where
+/// the op is elementwise and loops per-example rows where it is not.
+fn exec_node_inplace(
+    node: &crate::graph::ir::Node,
+    s: usize,
+    batch: usize,
+    input: &[f32],
+    pools: &[Vec<f32>],
+    pool_of: &[usize],
+    node_elems: &[usize],
+    buf: &mut Vec<f32>,
+) {
+    match &node.kind {
+        LayerKind::Add => {
+            // The other operand is proven by the checker to live in a
+            // different slot, so this read never aliases `buf`.
+            let o = if node.inputs[0] == s { node.inputs[1] } else { node.inputs[0] };
+            let q = pool_of[o];
+            let other: &[f32] =
+                if q == usize::MAX { input } else { &pools[q][..batch * node_elems[o]] };
+            ops::add_inplace(buf, other, node.fused_relu);
+        }
+        LayerKind::ReLU => ops::relu_inplace(buf),
+        LayerKind::Flatten => {} // payload is already the flattened tensor
+        LayerKind::Softmax => {
+            let ne = node_elems[node.id];
+            for row in buf.chunks_exact_mut(ne) {
+                ops::softmax_inplace(row);
+            }
+        }
+        LayerKind::Embedding { w } => ops::embedding_inplace(buf, &w.data, w.shape[1]),
+        other => panic!("in-place lowering of non-elementwise layer {}", other.type_name()),
     }
 }
 

@@ -239,9 +239,26 @@ pub fn add(a: &[f32], b: &[f32], relu: bool, out: &mut Vec<f32>) {
     }));
 }
 
+/// In-place [`add`] for the planner's aliased residuals (DESIGN.md
+/// §12): IEEE f32 addition is commutative, so one kernel serves
+/// whichever operand the planner aliased, bitwise equal to [`add`].
+pub fn add_inplace(acc: &mut [f32], other: &[f32], relu: bool) {
+    for (a, &y) in acc.iter_mut().zip(other.iter()) {
+        let s = *a + y;
+        *a = if relu { s.max(0.0) } else { s };
+    }
+}
+
 pub fn relu(x: &[f32], out: &mut Vec<f32>) {
     out.clear();
     out.extend(x.iter().map(|&v| v.max(0.0)));
+}
+
+/// In-place [`relu`] (element-wise, trivially alias-safe).
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.max(0.0);
+    }
 }
 
 pub fn softmax(x: &[f32], out: &mut Vec<f32>) {
@@ -250,6 +267,21 @@ pub fn softmax(x: &[f32], out: &mut Vec<f32>) {
     let sum: f32 = exps.iter().sum();
     out.clear();
     out.extend(exps.iter().map(|&e| e / sum));
+}
+
+/// In-place [`softmax`]: max read-only, exp rewrites each element from
+/// its own value, the sum runs over the SAME values in the SAME order
+/// as the two-buffer kernel's `exps` vector, and the divide is
+/// element-wise — bitwise identical output.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+    }
+    let sum: f32 = x.iter().sum();
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
 }
 
 /// Embedding gather: ids (S, 1) — integer token ids carried as f32 — and
@@ -262,6 +294,20 @@ pub fn embedding(ids: &[f32], table: &[f32], d: usize, out: &mut Vec<f32>) {
     for &id in ids {
         let i = (id.round() as isize).clamp(0, vocab as isize - 1) as usize;
         out.extend_from_slice(&table[i * d..(i + 1) * d]);
+    }
+}
+
+/// In-place [`embedding`]: `buf` holds the f32-carried ids and leaves
+/// holding the gathered rows. Descending walk — position `t` writes
+/// `[t*d, (t+1)*d)` after reading id `t`, and unread ids sit at
+/// `t' < t <= t*d` — so growth over the alias is safe (DESIGN.md §12).
+pub fn embedding_inplace(buf: &mut Vec<f32>, table: &[f32], d: usize) {
+    let n = buf.len();
+    let vocab = table.len() / d;
+    buf.resize(n * d, 0.0);
+    for t in (0..n).rev() {
+        let i = (buf[t].round() as isize).clamp(0, vocab as isize - 1) as usize;
+        buf[t * d..(t + 1) * d].copy_from_slice(&table[i * d..(i + 1) * d]);
     }
 }
 

@@ -68,6 +68,14 @@ pub(crate) fn run_pooled(
             continue;
         }
         let p = alloc.pool_of[node.id];
+        if let Some(s) = alloc.inplace_with[node.id] {
+            // In-place lowering: the slot already holds input `s`'s
+            // payload (same class ⇒ same slot); mutate it directly.
+            let mut buf = std::mem::take(&mut pools[p]);
+            exec_node_inplace(qg, node, s, 1, qinput, pools, &alloc.pool_of, node_elems, &mut buf);
+            pools[p] = buf;
+            continue;
+        }
         let mut out = std::mem::take(&mut pools[p]);
         {
             let qin: &[i32] = qinput;
@@ -128,6 +136,16 @@ pub(crate) fn run_pooled_batch(
         }
         let p = alloc.pool_of[node.id];
         let ne = node_elems[node.id];
+        if let Some(s) = alloc.inplace_with[node.id] {
+            // In-place lowering over the example-major slot (flat for
+            // elementwise arms, per-example rows for softmax).
+            let mut buf = std::mem::take(&mut pools[p]);
+            exec_node_inplace(
+                qg, node, s, batch, qinput, pools, &alloc.pool_of, node_elems, &mut buf,
+            );
+            pools[p] = buf;
+            continue;
+        }
         let mut out = std::mem::take(&mut pools[p]);
         let folded = {
             let qin: &[i32] = qinput;
@@ -346,6 +364,55 @@ fn exec_node<'a>(
     }
 }
 
+/// In-place twin of [`exec_node`] for nodes the memory plan lowered onto
+/// an input buffer (`alloc.inplace_with[id] = Some(s)`): the shared slot
+/// already holds `s`'s example-major payloads, so the kernel mutates
+/// `buf` directly. Only the planner's alias-safe kinds appear here
+/// (checker-enforced); each arm is bit-exact against its out-of-place
+/// twin (see the `int_ops` in-place kernels). `batch` folds flat where
+/// the op is elementwise and loops per-example rows where it is not.
+fn exec_node_inplace(
+    qg: &QuantizedGraph,
+    node: &crate::graph::ir::Node,
+    s: usize,
+    batch: usize,
+    qin: &[i32],
+    pools: &[Vec<i32>],
+    pool_of: &[usize],
+    node_elems: &[usize],
+    buf: &mut Vec<i32>,
+) {
+    match &node.kind {
+        LayerKind::Add => {
+            // The other operand is proven by the checker to live in a
+            // different slot, so this read never aliases `buf`.
+            let o = if node.inputs[0] == s { node.inputs[1] } else { node.inputs[0] };
+            let q = pool_of[o];
+            let other: &[i32] =
+                if q == usize::MAX { qin } else { &pools[q][..batch * node_elems[o]] };
+            ops::add_q_inplace(
+                buf, qg.act_n[s], other, qg.act_n[o], qg.act_n[node.id], node.fused_relu,
+                qg.width,
+            );
+        }
+        LayerKind::ReLU => ops::relu_q_inplace(buf),
+        LayerKind::Flatten => {} // payload is already the flattened tensor
+        LayerKind::Softmax => {
+            let ne = node_elems[node.id];
+            for row in buf.chunks_exact_mut(ne) {
+                ops::softmax_q_inplace(row, qg.act_n[node.inputs[0]], qg.act_n[node.id], qg.width);
+            }
+        }
+        LayerKind::Embedding { w } => {
+            let crate::quant::ptq::QTxWeights::Embed { table } = &qg.tx[&node.id] else {
+                panic!("embedding node without Embed params");
+            };
+            ops::embedding_q_inplace(buf, table, w.shape[1]);
+        }
+        other => panic!("in-place lowering of non-elementwise layer {}", other.type_name()),
+    }
+}
+
 /// Dequantize the output node's example-major payloads into `output`.
 fn dequantize_output(
     qg: &QuantizedGraph,
@@ -406,9 +473,23 @@ pub(crate) fn run_capture(qg: &QuantizedGraph, input: &[f32]) -> Vec<Vec<i32>> {
     let node_elems = super::session::node_elems(graph);
     let mut pool_of: Vec<usize> = (0..n).collect();
     pool_of[0] = usize::MAX; // Input payloads live in qinput
+    // Dedicated pools and a sequential device layout, no in-place
+    // lowering: every node's payload survives for inspection. (This
+    // synthetic plan drives the pools only; it is never checker-gated.)
+    let mut offset_of = vec![usize::MAX; n];
+    let mut total = 0usize;
+    for id in 1..n {
+        offset_of[id] = total;
+        total += node_elems[id];
+    }
     let alloc = crate::allocator::Allocation {
         pool_of,
         pool_elems: node_elems.clone(),
+        inplace_with: vec![None; n],
+        offset_of,
+        arena_elems: total,
+        pooled_elems: total,
+        attn_scratch_of: vec![None; n],
         gemm_scratch_elems: 0,
         packed_b_elems: 0,
     };

@@ -427,9 +427,43 @@ pub fn add_q(
     }
 }
 
+/// In-place [`add_q`] for the planner's aliased residual tails
+/// (DESIGN.md §12): `acc` holds one operand's payload and receives the
+/// sum. The i64 `rescale(a) + rescale(b)` is commutative, so one kernel
+/// serves whichever operand the planner aliased — bit-exact with
+/// `add_q` by construction.
+pub fn add_q_inplace(
+    acc: &mut [i32],
+    n_acc: i32,
+    other: &[i32],
+    n_other: i32,
+    n_out: i32,
+    relu: bool,
+    width: u32,
+) {
+    let sh_a = n_acc - n_out;
+    let sh_b = n_other - n_out;
+    for (a, &y) in acc.iter_mut().zip(other.iter()) {
+        let xa = rescale(*a as i64, sh_a);
+        let yb = rescale(y as i64, sh_b);
+        let mut v = clamp_to(xa + yb, width);
+        if relu && v < 0 {
+            v = 0;
+        }
+        *a = v;
+    }
+}
+
 pub fn relu_q(x: &[i32], out: &mut Vec<i32>) {
     out.clear();
     out.extend(x.iter().map(|&v| v.max(0)));
+}
+
+/// In-place [`relu_q`] (element-wise, trivially alias-safe).
+pub fn relu_q_inplace(x: &mut [i32]) {
+    for v in x.iter_mut() {
+        *v = (*v).max(0);
+    }
 }
 
 /// Embedding gather on id payloads (n = 0): output rows ARE table rows
@@ -442,6 +476,22 @@ pub fn embedding_q(ids: &[i32], table: &[i32], d: usize, out: &mut Vec<i32>) {
     for &id in ids {
         let i = (id as isize).clamp(0, vocab as isize - 1) as usize;
         out.extend_from_slice(&table[i * d..(i + 1) * d]);
+    }
+}
+
+/// In-place [`embedding_q`]: `buf` arrives holding the id payloads and
+/// leaves holding the gathered rows. Walking ids BACKWARDS makes the
+/// aliasing safe — position `t` writes `[t*d, (t+1)*d)` after reading
+/// the id at index `t`, and every still-unread id sits at an index
+/// `t' < t <= t*d`. Batched callers pass the example-major concatenation
+/// (`batch*ids` ids): the flat walk is exactly the single-example case.
+pub fn embedding_q_inplace(buf: &mut Vec<i32>, table: &[i32], d: usize) {
+    let n = buf.len();
+    let vocab = table.len() / d;
+    buf.resize(n * d, 0);
+    for t in (0..n).rev() {
+        let i = (buf[t] as isize).clamp(0, vocab as isize - 1) as usize;
+        buf[t * d..(t + 1) * d].copy_from_slice(&table[i * d..(i + 1) * d]);
     }
 }
 
@@ -471,6 +521,23 @@ pub fn softmax_q_ref(x: &[i32], n_in: i32, n_out: i32, width: u32, out: &mut Vec
     out.clear();
     out.resize(x.len(), 0);
     softmax_q_row(x, n_in, n_out, width, out);
+}
+
+/// In-place [`softmax_q_row`]: the max pass is read-only, the exp pass
+/// rewrites each element from its own (already-read) value, and the
+/// normalize pass rewrites again — the exact element/accumulation order
+/// of the two-buffer kernel, so the payloads are bit-identical.
+pub fn softmax_q_inplace(x: &mut [i32], n_in: i32, n_out: i32, width: u32) {
+    let m = x.iter().copied().max().unwrap_or(0) as i64;
+    let mut sum = 0i64;
+    for e in x.iter_mut() {
+        let q = exp_q(m - *e as i64, n_in);
+        *e = q;
+        sum += q as i64;
+    }
+    for e in x.iter_mut() {
+        *e = clamp_to(((*e as i64) << n_out) / sum, width);
+    }
 }
 
 /// Fixed-point LayerNorm over rows of `c` channels, reference kernel.

@@ -10,6 +10,8 @@ pub mod int_exec;
 pub mod int_ops;
 pub mod packed;
 pub mod parallel;
+#[cfg(test)]
+mod plan_soundness;
 pub mod session;
 
 pub use float_exec::{argmax, ActStats};

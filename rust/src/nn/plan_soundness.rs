@@ -1,0 +1,249 @@
+//! Soundness property tests for the verified memory plan (DESIGN.md §12):
+//! replay real captured payloads through the planner's device-arena
+//! layout and assert that EVERY intermediate read a node performs still
+//! observes its producer's payload — i.e. every read lands inside the
+//! buffer's proven live range, for all four engine arms. A planner or
+//! checker bug that let a live buffer be clobbered (bad offset, bogus
+//! in-place annotation, attention window overlap) fails these asserts
+//! with the exact node and element.
+//!
+//! The second half pins the in-place executor arms end to end: batched
+//! threaded sessions over the planned (coalesced, in-place) arena must
+//! be bit-exact with per-example serial runs, across engines × widths
+//! {8,16} × batch {1,7} × threads {1,4}.
+
+use std::sync::Arc;
+
+use crate::graph::ir::{Graph, LayerKind};
+use crate::nn::session::SessionBuilder;
+use crate::quant::{quantize, QuantSpec};
+use crate::util::prng::Pcg32;
+
+/// Replay `captured` (per-node single-example payloads, entry 0 = the
+/// input) through the planner's offset layout. `None` cells are
+/// never-written arena bytes; every read must observe the producer's
+/// exact payload, which fails loudly if any earlier write — including the
+/// attention stage windows scribbled mid-node — clobbered a live range.
+fn simulate_device_arena<T: Copy + PartialEq + std::fmt::Debug>(
+    graph: &Graph,
+    captured: &[Vec<T>],
+    window_garbage: T,
+) {
+    let alloc = crate::allocator::allocate(graph);
+    crate::allocator::check_no_conflict(graph, &alloc).expect("shipped plan refused");
+    let node_elems = crate::nn::session::node_elems(graph);
+    let mut arena: Vec<Option<T>> = vec![None; alloc.arena_elems];
+    let check_inputs = |arena: &[Option<T>], node: &crate::graph::ir::Node, when: &str| {
+        for &i in &node.inputs {
+            let off = alloc.offset_of[i];
+            if off == usize::MAX {
+                continue; // caller-owned input buffer
+            }
+            for (k, &v) in captured[i].iter().enumerate() {
+                assert_eq!(
+                    arena[off + k],
+                    Some(v),
+                    "{} reads node {i} outside its live range ({when}, elem {k})",
+                    node.name
+                );
+            }
+        }
+    };
+    for node in &graph.nodes {
+        if matches!(node.kind, LayerKind::Input) {
+            continue;
+        }
+        check_inputs(&arena, node, "before execute");
+        if let Some(wins) = alloc.attn_scratch_of[node.id] {
+            // The fused attention kernel fills q/k/v/ctx while it still
+            // reads x: scribble the windows, then re-check the inputs.
+            for w in wins {
+                for k in 0..node_elems[node.id] {
+                    arena[w + k] = Some(window_garbage);
+                }
+            }
+            check_inputs(&arena, node, "after stage windows");
+        }
+        let off = alloc.offset_of[node.id];
+        for (k, &v) in captured[node.id].iter().enumerate() {
+            arena[off + k] = Some(v);
+        }
+    }
+    // The output buffer's death is ∞: it must survive the whole schedule.
+    let out = graph.output_id();
+    let off = alloc.offset_of[out];
+    for (k, &v) in captured[out].iter().enumerate() {
+        assert_eq!(arena[off + k], Some(v), "output payload clobbered at elem {k}");
+    }
+}
+
+/// Float twin of `int_exec::run_capture`: dedicated pools, sequential
+/// offsets, no in-place lowering — every node's payload survives.
+fn capture_float(graph: &Graph, input: &[f32]) -> Vec<Vec<f32>> {
+    let n = graph.nodes.len();
+    let node_elems = crate::nn::session::node_elems(graph);
+    let mut pool_of: Vec<usize> = (0..n).collect();
+    pool_of[0] = usize::MAX;
+    let mut offset_of = vec![usize::MAX; n];
+    let mut total = 0usize;
+    for id in 1..n {
+        offset_of[id] = total;
+        total += node_elems[id];
+    }
+    let alloc = crate::allocator::Allocation {
+        pool_of,
+        pool_elems: node_elems.clone(),
+        inplace_with: vec![None; n],
+        offset_of,
+        arena_elems: total,
+        pooled_elems: total,
+        attn_scratch_of: vec![None; n],
+        gemm_scratch_elems: 0,
+        packed_b_elems: 0,
+    };
+    let mut pools: Vec<Vec<f32>> = vec![Vec::new(); n];
+    let pool = crate::nn::parallel::IntraOpPool::serial();
+    let mut scratch = vec![Vec::new()];
+    let mut output = Vec::new();
+    let packed = crate::nn::packed::PackedWeights::empty(n);
+    crate::nn::float_exec::run_pooled(
+        graph, input, &alloc, &node_elems, &mut pools, &pool, &mut scratch, &packed, None,
+        &mut output,
+    );
+    pools[0] = input.to_vec();
+    pools
+}
+
+/// Randomized one-block transformer (the codegen fixture's shape) plus a
+/// calibration/test id set.
+fn transformer_fixture(seed: u64) -> (Graph, Vec<Vec<f32>>) {
+    const VOCAB: u32 = 20;
+    let mut g = crate::graph::build::transformer("tx", 10, VOCAB as usize, 16, 2, 1, 2, 4);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        match &mut n.kind {
+            LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+            LayerKind::Embedding { w } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.5;
+                }
+            }
+            LayerKind::LayerNorm { gamma, beta, .. } => {
+                for v in gamma.iter_mut() {
+                    *v = 1.0 + rng.normal() * 0.2;
+                }
+                for v in beta.iter_mut() {
+                    *v = rng.normal() * 0.1;
+                }
+            }
+            LayerKind::SelfAttention { w, .. } => {
+                for t in [&mut w.wq, &mut w.wk, &mut w.wv, &mut w.wo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.3;
+                    }
+                }
+                for t in [&mut w.bq, &mut w.bk, &mut w.bv, &mut w.bo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.05;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let g = crate::graph::deploy_pipeline(&g);
+    let inputs: Vec<Vec<f32>> =
+        (0..7).map(|_| (0..10).map(|_| rng.below(VOCAB) as f32).collect()).collect();
+    (g, inputs)
+}
+
+fn resnet_fixture(seed: u64) -> (Graph, Vec<Vec<f32>>) {
+    let g = crate::nn::int_exec::randomized_resnet(seed);
+    let inputs = crate::nn::int_exec::random_inputs(7, 96, seed + 1);
+    (g, inputs)
+}
+
+fn fixtures() -> Vec<(Graph, Vec<Vec<f32>>)> {
+    vec![resnet_fixture(61), transformer_fixture(62)]
+}
+
+fn spec_for(width: u32) -> QuantSpec {
+    if width == 8 { QuantSpec::int8_per_layer() } else { QuantSpec::int16_per_layer() }
+}
+
+#[test]
+fn qmn_reads_stay_inside_proven_live_ranges() {
+    for width in [8u32, 16] {
+        for (g, inputs) in fixtures() {
+            let stats = crate::nn::int_exec::calib(&g, &inputs);
+            let qg = quantize(&g, &stats, spec_for(width));
+            for x in inputs.iter().take(3) {
+                let captured = crate::nn::int_exec::run_capture(&qg, x);
+                simulate_device_arena(&g, &captured, i32::MIN);
+            }
+        }
+    }
+}
+
+#[test]
+fn affine_reads_stay_inside_proven_live_ranges() {
+    for (g, inputs) in fixtures() {
+        let stats = crate::nn::int_exec::calib(&g, &inputs);
+        let aq = crate::quant::quantize_affine(&g, &stats);
+        for x in inputs.iter().take(3) {
+            let captured = crate::nn::affine_exec::run_capture(&aq, x);
+            simulate_device_arena(&g, &captured, i32::MIN);
+        }
+    }
+}
+
+#[test]
+fn float_reads_stay_inside_proven_live_ranges() {
+    for (g, inputs) in fixtures() {
+        for x in inputs.iter().take(3) {
+            let captured = capture_float(&g, x);
+            simulate_device_arena(&g, &captured, f32::NEG_INFINITY);
+        }
+    }
+}
+
+/// End-to-end pin across all four engine arms: the batch-7, 4-thread
+/// session (folded GEMMs + flat in-place arms over the coalesced arena)
+/// is BIT-exact with the serial per-example session (batch 1, 1 thread).
+#[test]
+fn batched_threaded_sessions_bit_exact_over_planned_arena() {
+    for (g, inputs) in fixtures() {
+        let flat: Vec<f32> = inputs.iter().flatten().copied().collect();
+        let stats = crate::nn::int_exec::calib(&g, &inputs);
+
+        // float32 arm
+        let mut s1 = SessionBuilder::float32(g.clone()).build();
+        let singles: Vec<f32> = inputs.iter().flat_map(|x| s1.run(x).to_vec()).collect();
+        let mut s7 = SessionBuilder::float32(g.clone()).threads(4).max_batch(7).build();
+        assert_eq!(singles, s7.run_batch(&flat), "float arm diverged");
+
+        // fixed Qm.n arms at both deployed widths
+        for width in [8u32, 16] {
+            let qg = Arc::new(quantize(&g, &stats, spec_for(width)));
+            let mut s1 = SessionBuilder::fixed_qmn(qg.clone()).build();
+            let singles: Vec<f32> = inputs.iter().flat_map(|x| s1.run(x).to_vec()).collect();
+            let mut s7 =
+                SessionBuilder::fixed_qmn(qg.clone()).threads(4).max_batch(7).build();
+            assert_eq!(singles, s7.run_batch(&flat), "qmn{width} arm diverged");
+        }
+
+        // affine int8 arm
+        let aq = Arc::new(crate::quant::quantize_affine(&g, &stats));
+        let mut s1 = SessionBuilder::affine_i8(aq.clone()).build();
+        let singles: Vec<f32> = inputs.iter().flat_map(|x| s1.run(x).to_vec()).collect();
+        let mut s7 = SessionBuilder::affine_i8(aq).threads(4).max_batch(7).build();
+        assert_eq!(singles, s7.run_batch(&flat), "affine arm diverged");
+    }
+}

@@ -161,11 +161,19 @@ impl Plan {
                 ),
             ));
         }
+        // The memory plan itself is UNTRUSTED (allocator::planner): the
+        // trusted byte-range checker must independently prove that no
+        // two live buffers overlap (host slots and device offsets) and
+        // that every in-place annotation is alias-safe, or the session
+        // refuses to build (DESIGN.md §12).
+        crate::allocator::check_no_conflict(graph, &self.alloc)
+            .map_err(|reason| perr("<memory-plan>", format!("refused by the memory checker: {reason}")))?;
         Ok(())
     }
 
-    /// Predicted device activation RAM: allocator pools + the input
-    /// buffer held by the caller, at the device dtype width (§5.7).
+    /// Predicted device activation RAM: the planned coalesced arena
+    /// (allocator offsets, checker-verified) + the input buffer held by
+    /// the caller, at the device dtype width (§5.7 upgraded, §12).
     pub fn device_ram_bytes(&self) -> usize {
         self.alloc.ram_bytes(self.device_bytes_per_elem)
             + self.input_len * self.device_bytes_per_elem

@@ -108,6 +108,18 @@ fn pin_all_backends(g: &Graph, pool: &[Vec<f32>]) {
             ("affine", SessionBuilder::affine_i8(aq.clone()).threads(t).max_batch(8).build()),
         ];
         for (name, sess) in arms.iter_mut() {
+            // ISSUE 9 satellite: every built session's memory plan must
+            // re-prove under the trusted byte-range checker, and the
+            // coalesced arena must never exceed the §5.7 pooled baseline.
+            let alloc = &sess.plan().alloc;
+            microai::allocator::check_no_conflict(g, alloc)
+                .unwrap_or_else(|e| panic!("{name} t={t}: shipped plan refused: {e}"));
+            assert!(
+                alloc.arena_elems <= alloc.pooled_elems,
+                "{name} t={t}: planned arena {} exceeds pooled baseline {}",
+                alloc.arena_elems,
+                alloc.pooled_elems
+            );
             pin_batched_vs_singles(sess, pool, &format!("{name} t={t}"));
         }
     }

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use microai::graph::ir::LayerKind;
 use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
 use microai::nn::float_exec::ActStats;
-use microai::nn::{argmax, SessionBuilder};
+use microai::nn::{argmax, InferenceBackend, SessionBuilder};
 use microai::quant::{quantize, quantize_affine, QuantSpec};
 use microai::util::prng::Pcg32;
 
@@ -453,4 +453,118 @@ fn session_metadata_tracks_deployment_costs() {
     assert!(
         s8.meta().device_energy_uwh.unwrap() < s8n.meta().device_energy_uwh.unwrap()
     );
+}
+
+#[test]
+fn every_built_session_plan_passes_the_independent_checker() {
+    // ISSUE 9 satellite: the planner (allocator::planner) is UNTRUSTED;
+    // every session the builder admits must carry a plan the trusted
+    // byte-range checker independently re-proves, and the coalesced
+    // arena must never exceed the §5.7 pooled baseline it replaced.
+    let (tg, vocab) = transformer_fixture(95);
+    let seq: usize = tg.input_shape.iter().product();
+    let fixtures: Vec<(Graph, Vec<Vec<f32>>)> = vec![
+        (fixture_graph(1, &[64, 6], 5, 8, 93), fixture_inputs(6, 64 * 6, 94)),
+        (tg.clone(), token_inputs(6, seq, vocab, 96)),
+    ];
+    for (g, inputs) in fixtures {
+        let stats = calibrate(&g, &inputs);
+        let q16 = Arc::new(quantize(&g, &stats, QuantSpec::int16_per_layer()));
+        let q8 = Arc::new(quantize(&g, &stats, QuantSpec::int8_per_layer()));
+        let aq = Arc::new(quantize_affine(&g, &stats));
+        let sessions = [
+            SessionBuilder::float32(g.clone()).build(),
+            SessionBuilder::fixed_qmn(q16).build(),
+            SessionBuilder::fixed_qmn(q8).build(),
+            SessionBuilder::affine_i8(aq).max_batch(4).build(),
+        ];
+        for sess in &sessions {
+            let alloc = &sess.plan().alloc;
+            microai::allocator::check_no_conflict(&g, alloc)
+                .unwrap_or_else(|e| panic!("{}: shipped plan refused: {e}", sess.meta().backend));
+            assert!(
+                alloc.arena_elems <= alloc.pooled_elems,
+                "{}: planned arena {} exceeds pooled baseline {}",
+                sess.meta().backend,
+                alloc.arena_elems,
+                alloc.pooled_elems
+            );
+        }
+    }
+}
+
+/// Backend whose `prepare` ships a deliberately overlapping offset plan:
+/// a consumer is parked on its still-live producer's device offset with
+/// no in-place sanction. `try_build` must refuse it.
+struct OverlappingPlanBackend {
+    graph: Arc<Graph>,
+}
+
+impl microai::nn::InferenceBackend for OverlappingPlanBackend {
+    fn label(&self) -> String {
+        "crafted-overlap".into()
+    }
+
+    fn dtype(&self) -> microai::mcu::DType {
+        microai::mcu::DType::F32
+    }
+
+    fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn weight_bytes(&self) -> usize {
+        0
+    }
+
+    fn prepare(&self) -> Result<microai::nn::Plan, microai::analysis::VerifyError> {
+        let mut plan = microai::nn::Plan::for_graph(&self.graph, 4);
+        let victim = self
+            .graph
+            .nodes
+            .iter()
+            .find(|n| {
+                !matches!(n.kind, LayerKind::Input)
+                    && plan.alloc.inplace_with[n.id].is_none()
+                    && n.inputs.iter().any(|&i| plan.alloc.offset_of[i] != usize::MAX)
+            })
+            .expect("fixture has an out-of-place node with a planned input");
+        let producer =
+            *victim.inputs.iter().find(|&&i| plan.alloc.offset_of[i] != usize::MAX).unwrap();
+        plan.alloc.offset_of[victim.id] = plan.alloc.offset_of[producer];
+        Ok(plan)
+    }
+
+    fn new_arena(&self, _: &microai::nn::Plan, _: usize, _: usize) -> microai::nn::Arena {
+        unreachable!("the overlapping plan must be refused before arena construction")
+    }
+
+    fn run<'a>(
+        &self,
+        _: &microai::nn::Plan,
+        _: &'a mut microai::nn::Arena,
+        _: &[f32],
+    ) -> &'a [f32] {
+        unreachable!("the overlapping plan must be refused before any run")
+    }
+}
+
+#[test]
+fn try_build_refuses_a_crafted_overlapping_plan() {
+    let g = Arc::new(fixture_graph(1, &[32, 3], 4, 8, 97));
+    let backend = OverlappingPlanBackend { graph: g.clone() };
+
+    // The checker alone rejects the corrupted allocation...
+    let bad = backend.prepare().unwrap();
+    let refusal = microai::allocator::check_no_conflict(&g, &bad.alloc)
+        .expect_err("overlapping offsets must not verify");
+    assert!(!refusal.is_empty());
+
+    // ...and the builder refuses to construct a session around it.
+    let err = SessionBuilder::from_backend(Arc::new(backend))
+        .try_build()
+        .err()
+        .expect("try_build must refuse the overlapping plan");
+    let msg = format!("{err}");
+    assert!(msg.contains("memory checker"), "unexpected refusal: {msg}");
 }
