@@ -31,6 +31,17 @@
 //! baseline it replaced — the Table-A6 RAM trajectory, measured by
 //! analysis rather than a timer, so it is stable across runners.
 //!
+//! Since ISSUE 10 (schema v6) every prepacked arm is additionally raced
+//! against the SAME prepacked path forced onto the scalar kernel set
+//! (`scalar_kern_ns`, `simd_speedup = scalar_kern_ns / prepack_ns`) —
+//! same panels, same epilogue, only the microkernel differs — so the
+//! SIMD dispatch (`nn::simd`) pays for itself on every raced shape.
+//! Rows carry `simd` (the kernel-set name the dispatched arm ran);
+//! `--force-scalar` pins everything to the scalar set (the extra arm is
+//! then skipped, since it would race scalar against itself). `--check`
+//! gates `simd_speedup >= 1.0 - tolerance` on every row where a
+//! non-scalar set was dispatched.
+//!
 //! Run: `cargo bench --bench bench_hotpath`
 //! CI:  `cargo bench --bench bench_hotpath -- --smoke --check --threads 4 --out BENCH_hotpath.json`
 
@@ -41,6 +52,7 @@ use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
 use microai::mcu::node_gemm_shape;
 use microai::nn::float_exec::{self, ActStats};
 use microai::nn::packed::{self, PackedNode};
+use microai::nn::simd;
 use microai::nn::{
     affine_exec, float_ops, gemm, int_exec, int_ops, Batch, IntraOpPool, SessionBuilder,
 };
@@ -83,6 +95,13 @@ struct RaceRow {
     looped_ns: Option<f64>,
     /// ONE batch-folded call over the same `FOLD_BATCH` examples.
     batched_ns: Option<f64>,
+    /// Kernel-set name the dispatched prepacked arm ran ("scalar",
+    /// "avx2", "avx2+fma").
+    simd: &'static str,
+    /// The SAME prepacked path forced onto the scalar kernel set (same
+    /// panels and epilogue, scalar microkernel); measured only when a
+    /// non-scalar set was dispatched.
+    scalar_kern_ns: Option<f64>,
 }
 
 impl RaceRow {
@@ -123,6 +142,14 @@ impl RaceRow {
         }
     }
 
+    /// ISSUE 10 gate: the dispatched microkernel vs the scalar set on the
+    /// same prepacked panels (None when scalar was dispatched — nothing
+    /// to race). Must stay ≥ 1.0 minus the noise deadband on every row
+    /// where a non-scalar set ran.
+    fn simd_speedup(&self) -> Option<f64> {
+        self.scalar_kern_ns.map(|sc| sc / self.prepack_ns.max(1.0))
+    }
+
     fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("model", Json::str(&self.model)),
@@ -139,7 +166,12 @@ impl RaceRow {
             ("prepack_ns", Json::num(self.prepack_ns)),
             ("prepack_speedup", Json::num(self.prepack_speedup())),
             ("prepack_gated", Json::Bool(self.prepack_gated())),
+            ("simd", Json::str(self.simd)),
         ];
+        if let (Some(sc), Some(s)) = (self.scalar_kern_ns, self.simd_speedup()) {
+            pairs.push(("scalar_kern_ns", Json::num(sc)));
+            pairs.push(("simd_speedup", Json::num(s)));
+        }
         if let (Some(one), Some(par)) = (self.gemm_1t_ns, self.parallel_speedup()) {
             pairs.push(("gemm_1t_ns", Json::num(one)));
             pairs.push(("parallel_speedup", Json::num(par)));
@@ -161,6 +193,38 @@ struct RaceCtx<'a> {
     pool: &'a IntraOpPool,
     serial: &'a IntraOpPool,
     threads: usize,
+    /// Kernel-set name the dispatched arms run: `simd::detected()`, or
+    /// "scalar" under `--force-scalar`.
+    simd: &'static str,
+}
+
+impl RaceCtx<'_> {
+    /// Retarget a freshly built node under `--force-scalar` (constructors
+    /// default to the detected set).
+    fn tune(&self, pn: PackedNode) -> PackedNode {
+        if self.simd == "scalar" {
+            pn.with_kernels(simd::scalar())
+        } else {
+            pn
+        }
+    }
+
+    /// Whether the extra scalar-kernel arm is worth racing: skipped when
+    /// scalar is what the dispatched arm already runs.
+    fn simd_raced(&self) -> bool {
+        self.simd != "scalar"
+    }
+}
+
+/// Clone of a packed attention block with all four projection kernels
+/// retargeted to the scalar set (the per-head score GEMMs inside the
+/// attention body are per-call `gemm_i64` and unaffected by dispatch).
+fn scalarized_attention(pa: &packed::PackedAttention) -> packed::PackedAttention {
+    let mut p = pa.clone();
+    for pn in [&mut p.wq, &mut p.wk, &mut p.wv, &mut p.wo] {
+        *pn = pn.clone().with_kernels(simd::scalar());
+    }
+    p
 }
 
 fn randomized(mut g: Graph, seed: u64) -> Graph {
@@ -394,7 +458,7 @@ fn race_qmn(
     let relu = node.fused_relu;
     let mut out = Vec::new();
     let mut scratch = vec![Vec::new(); ctx.threads.max(1)];
-    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold) = match &node.kind {
+    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold, sc) = match &node.kind {
         LayerKind::Conv { w, stride, padding, .. } => {
             let ish = &g.nodes[node.inputs[0]].out_shape;
             let x = rand_payloads(rng, ish.iter().product(), width);
@@ -418,22 +482,30 @@ fn race_qmn(
                 let par = arm(ctx.pool, format!("{backend:<5} gemm {model}/{node_name}"));
                 let one = (ctx.threads > 1)
                     .then(|| arm(ctx.serial, format!("{backend:<5} g@1t {model}/{node_name}")));
-                let pn = PackedNode::fixed_node(qw, &[k], k * c, f, width, relu);
-                let pre = ctx
-                    .b
-                    .run(&format!("{backend:<5} pack {model}/{node_name}"), || {
-                        black_box(packed::conv1d_int_packed(
-                            &x, s, &pn, *stride, *padding, ctx.pool, &mut scratch, &mut out,
-                        ));
-                    })
-                    .median_ns;
+                let pn = ctx.tune(PackedNode::fixed_node(qw, &[k], k * c, f, width, relu));
+                let mut parm = |pn: &PackedNode, label: String| {
+                    ctx.b
+                        .run(&label, || {
+                            black_box(packed::conv1d_int_packed(
+                                &x, s, pn, *stride, *padding, ctx.pool, &mut scratch, &mut out,
+                            ));
+                        })
+                        .median_ns
+                };
+                let pre = parm(&pn, format!("{backend:<5} pack {model}/{node_name}"));
+                let sc = ctx.simd_raced().then(|| {
+                    parm(
+                        &pn.clone().with_kernels(simd::scalar()),
+                        format!("{backend:<5} sclr {model}/{node_name}"),
+                    )
+                });
                 let fold = (k == 1 && *stride == 1).then(|| {
                     race_fold_int(
                         ctx, backend, model, node_name, &pn, Some((ish, *padding)), 1, width,
                         rng, &mut scratch, &mut out,
                     )
                 });
-                ("conv1d", r_ref, par, pre, one, fold)
+                ("conv1d", r_ref, par, pre, one, fold, sc)
             } else {
                 let (h, wd, c) = (ish[0], ish[1], ish[2]);
                 let (kh, kw, f) = (w.shape[0], w.shape[1], w.shape[3]);
@@ -455,22 +527,32 @@ fn race_qmn(
                 let par = arm(ctx.pool, format!("{backend:<5} gemm {model}/{node_name}"));
                 let one = (ctx.threads > 1)
                     .then(|| arm(ctx.serial, format!("{backend:<5} g@1t {model}/{node_name}")));
-                let pn = PackedNode::fixed_node(qw, &[kh, kw], kh * kw * c, f, width, relu);
-                let pre = ctx
-                    .b
-                    .run(&format!("{backend:<5} pack {model}/{node_name}"), || {
-                        black_box(packed::conv2d_int_packed(
-                            &x, h, wd, &pn, *stride, *padding, ctx.pool, &mut scratch, &mut out,
-                        ));
-                    })
-                    .median_ns;
+                let pn =
+                    ctx.tune(PackedNode::fixed_node(qw, &[kh, kw], kh * kw * c, f, width, relu));
+                let mut parm = |pn: &PackedNode, label: String| {
+                    ctx.b
+                        .run(&label, || {
+                            black_box(packed::conv2d_int_packed(
+                                &x, h, wd, pn, *stride, *padding, ctx.pool, &mut scratch,
+                                &mut out,
+                            ));
+                        })
+                        .median_ns
+                };
+                let pre = parm(&pn, format!("{backend:<5} pack {model}/{node_name}"));
+                let sc = ctx.simd_raced().then(|| {
+                    parm(
+                        &pn.clone().with_kernels(simd::scalar()),
+                        format!("{backend:<5} sclr {model}/{node_name}"),
+                    )
+                });
                 let fold = (kh == 1 && kw == 1 && *stride == 1).then(|| {
                     race_fold_int(
                         ctx, backend, model, node_name, &pn, Some((ish, *padding)), 2, width,
                         rng, &mut scratch, &mut out,
                     )
                 });
-                ("conv2d", r_ref, par, pre, one, fold)
+                ("conv2d", r_ref, par, pre, one, fold, sc)
             }
         }
         LayerKind::Dense { w, .. } => {
@@ -489,18 +571,26 @@ fn race_qmn(
             let par = arm(ctx.pool, format!("{backend:<5} gemm {model}/{node_name}"));
             let one = (ctx.threads > 1)
                 .then(|| arm(ctx.serial, format!("{backend:<5} g@1t {model}/{node_name}")));
-            let pn = PackedNode::fixed_node(qw, &[], w.shape[0], o, width, relu);
-            let pre = ctx
-                .b
-                .run(&format!("{backend:<5} pack {model}/{node_name}"), || {
-                    black_box(packed::dense_int_packed(&x, &pn, ctx.pool, &mut out));
-                })
-                .median_ns;
+            let pn = ctx.tune(PackedNode::fixed_node(qw, &[], w.shape[0], o, width, relu));
+            let mut parm = |pn: &PackedNode, label: String| {
+                ctx.b
+                    .run(&label, || {
+                        black_box(packed::dense_int_packed(&x, pn, ctx.pool, &mut out));
+                    })
+                    .median_ns
+            };
+            let pre = parm(&pn, format!("{backend:<5} pack {model}/{node_name}"));
+            let sc = ctx.simd_raced().then(|| {
+                parm(
+                    &pn.clone().with_kernels(simd::scalar()),
+                    format!("{backend:<5} sclr {model}/{node_name}"),
+                )
+            });
             let fold = Some(race_fold_int(
                 ctx, backend, model, node_name, &pn, None, g.dims, width, rng, &mut scratch,
                 &mut out,
             ));
-            ("dense", r_ref, par, pre, one, fold)
+            ("dense", r_ref, par, pre, one, fold, sc)
         }
         _ => return,
     };
@@ -519,6 +609,8 @@ fn race_qmn(
         gemm_1t_ns,
         looped_ns: fold.map(|f| f.0),
         batched_ns: fold.map(|f| f.1),
+        simd: ctx.simd,
+        scalar_kern_ns: sc,
     });
 }
 
@@ -537,7 +629,7 @@ fn race_f32(
     let relu = node.fused_relu;
     let mut out = Vec::new();
     let mut scratch = vec![Vec::new(); ctx.threads.max(1)];
-    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold) = match &node.kind {
+    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold, sc) = match &node.kind {
         LayerKind::Conv { w, b: wb, stride, padding } => {
             let ish = &g.nodes[node.inputs[0]].out_shape;
             let x: Vec<f32> =
@@ -562,22 +654,30 @@ fn race_f32(
                 let par = arm(ctx.pool, format!("f32   gemm {model}/{node_name}"));
                 let one = (ctx.threads > 1)
                     .then(|| arm(ctx.serial, format!("f32   g@1t {model}/{node_name}")));
-                let pn = PackedNode::f32_node(&w.data, &wb.data, &[k], k * c, f, relu);
-                let pre = ctx
-                    .b
-                    .run(&format!("f32   pack {model}/{node_name}"), || {
-                        black_box(packed::conv1d_f32_packed(
-                            &x, s, &pn, *stride, *padding, ctx.pool, &mut scratch, &mut out,
-                        ));
-                    })
-                    .median_ns;
+                let pn = ctx.tune(PackedNode::f32_node(&w.data, &wb.data, &[k], k * c, f, relu));
+                let mut parm = |pn: &PackedNode, label: String| {
+                    ctx.b
+                        .run(&label, || {
+                            black_box(packed::conv1d_f32_packed(
+                                &x, s, pn, *stride, *padding, ctx.pool, &mut scratch, &mut out,
+                            ));
+                        })
+                        .median_ns
+                };
+                let pre = parm(&pn, format!("f32   pack {model}/{node_name}"));
+                let sc = ctx.simd_raced().then(|| {
+                    parm(
+                        &pn.clone().with_kernels(simd::scalar()),
+                        format!("f32   sclr {model}/{node_name}"),
+                    )
+                });
                 let fold = (k == 1 && *stride == 1).then(|| {
                     race_fold_f32(
                         ctx, model, node_name, &pn, Some((ish, *padding)), 1, rng,
                         &mut scratch, &mut out,
                     )
                 });
-                ("conv1d", r_ref, par, pre, one, fold)
+                ("conv1d", r_ref, par, pre, one, fold, sc)
             } else {
                 let (h, wd, c) = (ish[0], ish[1], ish[2]);
                 let (kh, kw, f) = (w.shape[0], w.shape[1], w.shape[3]);
@@ -600,23 +700,33 @@ fn race_f32(
                 let par = arm(ctx.pool, format!("f32   gemm {model}/{node_name}"));
                 let one = (ctx.threads > 1)
                     .then(|| arm(ctx.serial, format!("f32   g@1t {model}/{node_name}")));
-                let pn =
-                    PackedNode::f32_node(&w.data, &wb.data, &[kh, kw], kh * kw * c, f, relu);
-                let pre = ctx
-                    .b
-                    .run(&format!("f32   pack {model}/{node_name}"), || {
-                        black_box(packed::conv2d_f32_packed(
-                            &x, h, wd, &pn, *stride, *padding, ctx.pool, &mut scratch, &mut out,
-                        ));
-                    })
-                    .median_ns;
+                let pn = ctx.tune(PackedNode::f32_node(
+                    &w.data, &wb.data, &[kh, kw], kh * kw * c, f, relu,
+                ));
+                let mut parm = |pn: &PackedNode, label: String| {
+                    ctx.b
+                        .run(&label, || {
+                            black_box(packed::conv2d_f32_packed(
+                                &x, h, wd, pn, *stride, *padding, ctx.pool, &mut scratch,
+                                &mut out,
+                            ));
+                        })
+                        .median_ns
+                };
+                let pre = parm(&pn, format!("f32   pack {model}/{node_name}"));
+                let sc = ctx.simd_raced().then(|| {
+                    parm(
+                        &pn.clone().with_kernels(simd::scalar()),
+                        format!("f32   sclr {model}/{node_name}"),
+                    )
+                });
                 let fold = (kh == 1 && kw == 1 && *stride == 1).then(|| {
                     race_fold_f32(
                         ctx, model, node_name, &pn, Some((ish, *padding)), 2, rng,
                         &mut scratch, &mut out,
                     )
                 });
-                ("conv2d", r_ref, par, pre, one, fold)
+                ("conv2d", r_ref, par, pre, one, fold, sc)
             }
         }
         LayerKind::Dense { w, b: wb } => {
@@ -635,17 +745,25 @@ fn race_f32(
             let par = arm(ctx.pool, format!("f32   gemm {model}/{node_name}"));
             let one = (ctx.threads > 1)
                 .then(|| arm(ctx.serial, format!("f32   g@1t {model}/{node_name}")));
-            let pn = PackedNode::f32_node(&w.data, &wb.data, &[], w.shape[0], o, relu);
-            let pre = ctx
-                .b
-                .run(&format!("f32   pack {model}/{node_name}"), || {
-                    black_box(packed::dense_f32_packed(&x, &pn, ctx.pool, &mut out));
-                })
-                .median_ns;
+            let pn = ctx.tune(PackedNode::f32_node(&w.data, &wb.data, &[], w.shape[0], o, relu));
+            let mut parm = |pn: &PackedNode, label: String| {
+                ctx.b
+                    .run(&label, || {
+                        black_box(packed::dense_f32_packed(&x, pn, ctx.pool, &mut out));
+                    })
+                    .median_ns
+            };
+            let pre = parm(&pn, format!("f32   pack {model}/{node_name}"));
+            let sc = ctx.simd_raced().then(|| {
+                parm(
+                    &pn.clone().with_kernels(simd::scalar()),
+                    format!("f32   sclr {model}/{node_name}"),
+                )
+            });
             let fold = Some(race_fold_f32(
                 ctx, model, node_name, &pn, None, g.dims, rng, &mut scratch, &mut out,
             ));
-            ("dense", r_ref, par, pre, one, fold)
+            ("dense", r_ref, par, pre, one, fold, sc)
         }
         _ => return,
     };
@@ -664,6 +782,8 @@ fn race_f32(
         gemm_1t_ns,
         looped_ns: fold.map(|f| f.0),
         batched_ns: fold.map(|f| f.1),
+        simd: ctx.simd,
+        scalar_kern_ns: sc,
     });
 }
 
@@ -686,7 +806,7 @@ fn race_affine(
     let (zp_in, zp_out) = (aq.act[src_id].zero_point, aq.act[id].zero_point);
     let mut out = Vec::new();
     let mut scratch = vec![Vec::new(); ctx.threads.max(1)];
-    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold) = match &node.kind {
+    let (kind, r_ref, gemm_ns, prepack_ns, gemm_1t_ns, fold, sc) = match &node.kind {
         LayerKind::Conv { w, stride, padding, .. } => {
             let ish = &g.nodes[src_id].out_shape;
             let x = rand_payloads(rng, ish.iter().product(), 8);
@@ -713,33 +833,41 @@ fn race_affine(
                 .then(|| arm(ctx.serial, format!("affin g@1t {model}/{node_name}")));
             let taps: usize = w.shape[..w.shape.len() - 1].iter().product();
             let f = *w.shape.last().unwrap();
-            let pn = PackedNode::affine_node(
+            let pn = ctx.tune(PackedNode::affine_node(
                 qw, &w.shape[..w.shape.len() - 2], taps, f, zp_in, zp_out, relu,
-            );
-            let pre = ctx
-                .b
-                .run(&format!("affin pack {model}/{node_name}"), || {
-                    if g.dims == 1 {
-                        packed::conv1d_int_packed(
-                            &x, ish[0], &pn, *stride, *padding, ctx.pool, &mut scratch,
-                            &mut out,
-                        );
-                    } else {
-                        packed::conv2d_int_packed(
-                            &x, ish[0], ish[1], &pn, *stride, *padding, ctx.pool, &mut scratch,
-                            &mut out,
-                        );
-                    }
-                    black_box(&out);
-                })
-                .median_ns;
+            ));
+            let mut parm = |pn: &PackedNode, label: String| {
+                ctx.b
+                    .run(&label, || {
+                        if g.dims == 1 {
+                            packed::conv1d_int_packed(
+                                &x, ish[0], pn, *stride, *padding, ctx.pool, &mut scratch,
+                                &mut out,
+                            );
+                        } else {
+                            packed::conv2d_int_packed(
+                                &x, ish[0], ish[1], pn, *stride, *padding, ctx.pool,
+                                &mut scratch, &mut out,
+                            );
+                        }
+                        black_box(&out);
+                    })
+                    .median_ns
+            };
+            let pre = parm(&pn, format!("affin pack {model}/{node_name}"));
+            let sc = ctx.simd_raced().then(|| {
+                parm(
+                    &pn.clone().with_kernels(simd::scalar()),
+                    format!("affin sclr {model}/{node_name}"),
+                )
+            });
             let fold = (*stride == 1 && pn.ks.iter().all(|&k| k == 1)).then(|| {
                 race_fold_int(
                     ctx, "affin", model, node_name, &pn, Some((ish, *padding)), g.dims, 8,
                     rng, &mut scratch, &mut out,
                 )
             });
-            (if g.dims == 1 { "conv1d" } else { "conv2d" }, r_ref, par, pre, one, fold)
+            (if g.dims == 1 { "conv1d" } else { "conv2d" }, r_ref, par, pre, one, fold, sc)
         }
         LayerKind::Dense { w, .. } => {
             let x = rand_payloads(rng, w.shape[0], 8);
@@ -761,19 +889,28 @@ fn race_affine(
             let par = arm(ctx.pool, format!("affin gemm {model}/{node_name}"));
             let one = (ctx.threads > 1)
                 .then(|| arm(ctx.serial, format!("affin g@1t {model}/{node_name}")));
-            let pn = PackedNode::affine_node(qw, &[], w.shape[0], o, zp_in, zp_out, relu);
-            let pre = ctx
-                .b
-                .run(&format!("affin pack {model}/{node_name}"), || {
-                    packed::dense_int_packed(&x, &pn, ctx.pool, &mut out);
-                    black_box(&out);
-                })
-                .median_ns;
+            let pn =
+                ctx.tune(PackedNode::affine_node(qw, &[], w.shape[0], o, zp_in, zp_out, relu));
+            let mut parm = |pn: &PackedNode, label: String| {
+                ctx.b
+                    .run(&label, || {
+                        packed::dense_int_packed(&x, pn, ctx.pool, &mut out);
+                        black_box(&out);
+                    })
+                    .median_ns
+            };
+            let pre = parm(&pn, format!("affin pack {model}/{node_name}"));
+            let sc = ctx.simd_raced().then(|| {
+                parm(
+                    &pn.clone().with_kernels(simd::scalar()),
+                    format!("affin sclr {model}/{node_name}"),
+                )
+            });
             let fold = Some(race_fold_int(
                 ctx, "affin", model, node_name, &pn, None, g.dims, 8, rng, &mut scratch,
                 &mut out,
             ));
-            ("dense", r_ref, par, pre, one, fold)
+            ("dense", r_ref, par, pre, one, fold, sc)
         }
         _ => return,
     };
@@ -792,6 +929,8 @@ fn race_affine(
         gemm_1t_ns,
         looped_ns: fold.map(|f| f.0),
         batched_ns: fold.map(|f| f.1),
+        simd: ctx.simd,
+        scalar_kern_ns: sc,
     });
 }
 
@@ -837,20 +976,31 @@ fn race_attention(ctx: &RaceCtx, rows: &mut Vec<RaceRow>, rng: &mut Pcg32) {
                     &x, seq, dm, heads, hd, &tx, width, &mut out,
                 ));
             });
-            let pa = packed::PackedAttention::fixed(&tx, heads, hd, width);
+            let mut pa = packed::PackedAttention::fixed(&tx, heads, hd, width);
+            if ctx.simd == "scalar" {
+                pa = scalarized_attention(&pa);
+            }
             let mut scratch: Vec<Vec<i32>> = vec![Vec::new(); ctx.threads.max(1)];
-            let mut arm = |pool: &IntraOpPool, label: String| {
+            let mut arm = |pa: &packed::PackedAttention, pool: &IntraOpPool, label: String| {
                 ctx.b
                     .run(&label, || {
                         black_box(packed::attention_int_packed(
-                            &x, seq, dm, heads, hd, &pa, pool, &mut scratch, &mut out,
+                            &x, seq, dm, heads, hd, pa, pool, &mut scratch, &mut out,
                         ));
                     })
                     .median_ns
             };
-            let par = arm(ctx.pool, format!("{backend:<5} pack transformer/{name}"));
-            let one = (ctx.threads > 1)
-                .then(|| arm(ctx.serial, format!("{backend:<5} p@1t transformer/{name}")));
+            let par = arm(&pa, ctx.pool, format!("{backend:<5} pack transformer/{name}"));
+            let one = (ctx.threads > 1).then(|| {
+                arm(&pa, ctx.serial, format!("{backend:<5} p@1t transformer/{name}"))
+            });
+            let sc = ctx.simd_raced().then(|| {
+                arm(
+                    &scalarized_attention(&pa),
+                    ctx.pool,
+                    format!("{backend:<5} sclr transformer/{name}"),
+                )
+            });
             rows.push(RaceRow {
                 model: "transformer".to_string(),
                 layer: name,
@@ -866,6 +1016,8 @@ fn race_attention(ctx: &RaceCtx, rows: &mut Vec<RaceRow>, rng: &mut Pcg32) {
                 gemm_1t_ns: one,
                 looped_ns: None,
                 batched_ns: None,
+                simd: ctx.simd,
+                scalar_kern_ns: sc,
             });
         }
     }
@@ -981,6 +1133,7 @@ fn baseline_regressions(rows: &[RaceRow], doc: &Json) -> Vec<String> {
 fn main() {
     let mut smoke = std::env::var("MICROAI_BENCH_SMOKE").is_ok();
     let mut check = false;
+    let mut force_scalar = false;
     let mut threads = 1usize;
     let mut out_path = String::from("BENCH_hotpath.json");
     // Cargo runs bench binaries with CWD = the package root (rust/), but
@@ -992,6 +1145,7 @@ fn main() {
         match a.as_str() {
             "--smoke" => smoke = true,
             "--check" => check = true,
+            "--force-scalar" => force_scalar = true,
             "--threads" => {
                 threads = args
                     .next()
@@ -1028,7 +1182,11 @@ fn main() {
     };
     let pool = IntraOpPool::new(threads);
     let serial = IntraOpPool::serial();
-    let ctx = RaceCtx { b: &b, pool: &pool, serial: &serial, threads };
+    // `--force-scalar` pins every dispatched arm (and the Sessions below)
+    // to the scalar kernel set — an A/B switch, not a different code path.
+    let kern_name = if force_scalar { "scalar" } else { simd::detected().name };
+    println!("gemm kernel set: {kern_name}");
+    let ctx = RaceCtx { b: &b, pool: &pool, serial: &serial, threads, simd: kern_name };
     let mut rng = Pcg32::seeded(3);
     let mut race_rows: Vec<RaceRow> = Vec::new();
     let mut graph_rows: Vec<GraphRow> = Vec::new();
@@ -1096,9 +1254,13 @@ fn main() {
                 .batched_speedup()
                 .map(|s| format!("  bat8 {s:>4.2}x"))
                 .unwrap_or_default();
+            let sd = row
+                .simd_speedup()
+                .map(|s| format!("  simd {s:>4.2}x"))
+                .unwrap_or_default();
             println!(
                 "{:<28} {:<6} {:<7} m={:<5} n={:<4} k={:<5} ref {:>10.0} ns  gemm {:>10.0} ns  \
-                 {:>5.2}x  pack {:>10.0} ns  {:>4.2}x{par}{bat}",
+                 {:>5.2}x  pack {:>10.0} ns  {:>4.2}x{par}{bat}{sd}",
                 row.layer, row.kind, row.backend, row.m, row.n, row.k, row.ref_ns, row.gemm_ns,
                 row.speedup(), row.prepack_ns, row.prepack_speedup()
             );
@@ -1116,22 +1278,34 @@ fn main() {
                 macc_per_s: r.throughput.map(|(v, _)| v).unwrap_or(0.0),
             });
         };
-        let mut fsess = SessionBuilder::float32(g.clone()).threads(threads).build();
+        let mut fsess = SessionBuilder::float32(g.clone())
+            .threads(threads)
+            .force_scalar_kernels(force_scalar)
+            .build();
         let r = b.run_throughput(&format!("float32     {model}"), macc, "MACC/s", || {
             black_box(fsess.run(&x));
         });
         record("float32", r);
-        let mut s8 = SessionBuilder::fixed_qmn(q8.clone()).threads(threads).build();
+        let mut s8 = SessionBuilder::fixed_qmn(q8.clone())
+            .threads(threads)
+            .force_scalar_kernels(force_scalar)
+            .build();
         let r = b.run_throughput(&format!("int8        {model}"), macc, "MACC/s", || {
             black_box(s8.run(&x));
         });
         record("int8", r);
-        let mut s16 = SessionBuilder::fixed_qmn(q16.clone()).threads(threads).build();
+        let mut s16 = SessionBuilder::fixed_qmn(q16.clone())
+            .threads(threads)
+            .force_scalar_kernels(force_scalar)
+            .build();
         let r = b.run_throughput(&format!("int16       {model}"), macc, "MACC/s", || {
             black_box(s16.run(&x));
         });
         record("int16", r);
-        let mut sa = SessionBuilder::affine_i8(aq.clone()).threads(threads).build();
+        let mut sa = SessionBuilder::affine_i8(aq.clone())
+            .threads(threads)
+            .force_scalar_kernels(force_scalar)
+            .build();
         let r = b.run_throughput(&format!("affine-int8 {model}"), macc, "MACC/s", || {
             black_box(sa.run(&x));
         });
@@ -1146,9 +1320,13 @@ fn main() {
             .parallel_speedup()
             .map(|p| format!("  par {p:>4.2}x"))
             .unwrap_or_default();
+        let sd = row
+            .simd_speedup()
+            .map(|s| format!("  simd {s:>4.2}x"))
+            .unwrap_or_default();
         println!(
             "{:<28} {:<6} {:<7} seq={:<4} dm={:<4} ref {:>10.0} ns  packed {:>10.0} ns  \
-             {:>5.2}x{par}",
+             {:>5.2}x{par}{sd}",
             row.layer, row.kind, row.backend, row.m, row.n, row.ref_ns, row.gemm_ns,
             row.speedup()
         );
@@ -1206,6 +1384,17 @@ fn main() {
     let batched_pass = race_rows
         .iter()
         .all(|r| r.batched_speedup().is_none_or(|s| s >= 1.0 - CHECK_TOLERANCE));
+    // ISSUE 10 gate: the dispatched microkernel must never lose to the
+    // scalar set on the same prepacked panels, on any raced shape. Rows
+    // where scalar was dispatched (non-AVX2 host or --force-scalar) have
+    // no extra arm and gate nothing.
+    let min_simd = race_rows
+        .iter()
+        .filter_map(RaceRow::simd_speedup)
+        .fold(f64::INFINITY, f64::min);
+    let simd_pass = race_rows
+        .iter()
+        .all(|r| r.simd_speedup().is_none_or(|s| s >= 1.0 - CHECK_TOLERANCE));
     // Baseline ratio gate: only against a REAL committed baseline. A
     // schema placeholder (no measured samples) must not gate anything —
     // skip it loudly so CI uploads this run as the first real baseline.
@@ -1236,7 +1425,7 @@ fn main() {
             baseline_bad = baseline_regressions(&race_rows, doc);
         }
     }
-    let pass = live_pass && prepack_pass && batched_pass && baseline_bad.is_empty();
+    let pass = live_pass && prepack_pass && batched_pass && simd_pass && baseline_bad.is_empty();
     // ISSUE 9: planned-vs-pooled activation RAM per dataset topology.
     // Pure analysis (no timer), so the rows are identical on every
     // runner; the transformer is planned here too since its graph never
@@ -1276,10 +1465,11 @@ fn main() {
         })
         .collect();
     let doc = Json::obj(vec![
-        ("version", Json::num(5.0)),
+        ("version", Json::num(6.0)),
         ("bench", Json::str("hotpath")),
         ("mode", Json::str(if smoke { "smoke" } else { "full" })),
         ("threads", Json::num(threads as f64)),
+        ("kernel", Json::str(kern_name)),
         (
             "gate",
             Json::obj(vec![
@@ -1301,6 +1491,15 @@ fn main() {
                          1.0 - tolerance on every foldable shape (dense, stride-1 1x1 conv)",
                     ),
                 ),
+                (
+                    "simd_rule",
+                    Json::str(
+                        "simd_speedup (scalar-kernel scalar_kern_ns / dispatched prepack_ns, \
+                         same prepacked panels) >= 1.0 - tolerance on every row where a \
+                         non-scalar kernel set was dispatched (rows with simd == \"scalar\" \
+                         have no extra arm and gate nothing)",
+                    ),
+                ),
                 ("tolerance", Json::num(CHECK_TOLERANCE)),
                 ("baseline_rule", Json::str(
                     "speedup >= baseline speedup * (1 - baseline_tolerance) per matched shape; \
@@ -1316,6 +1515,10 @@ fn main() {
                 (
                     "min_batched_speedup",
                     Json::num(if min_batched.is_finite() { min_batched } else { 0.0 }),
+                ),
+                (
+                    "min_simd_speedup",
+                    Json::num(if min_simd.is_finite() { min_simd } else { 0.0 }),
                 ),
                 ("pass", Json::Bool(pass)),
             ]),
@@ -1343,9 +1546,11 @@ fn main() {
     text.push('\n');
     std::fs::write(&out_path, text).expect("write bench json");
     println!(
-        "\nwrote {out_path} (threads={threads}, min GEMM speedup {min_speedup:.2}x, min prepack \
-         speedup {min_prepack:.2}x, min batched speedup {:.2}x over {} shapes)",
+        "\nwrote {out_path} (threads={threads}, kernel={kern_name}, min GEMM speedup \
+         {min_speedup:.2}x, min prepack speedup {min_prepack:.2}x, min batched speedup {:.2}x, \
+         min simd speedup {:.2}x over {} shapes)",
         if min_batched.is_finite() { min_batched } else { 0.0 },
+        if min_simd.is_finite() { min_simd } else { 0.0 },
         race_rows.len()
     );
 
@@ -1387,6 +1592,25 @@ fn main() {
                     r.batched_speedup().unwrap_or(0.0),
                     r.looped_ns.unwrap_or(0.0),
                     r.batched_ns.unwrap_or(0.0)
+                );
+            }
+        }
+        if !simd_pass {
+            eprintln!("--check FAILED: dispatched SIMD kernel slower than the scalar set on:");
+            for r in race_rows
+                .iter()
+                .filter(|r| r.simd_speedup().is_some_and(|s| s < 1.0 - CHECK_TOLERANCE))
+            {
+                eprintln!(
+                    "  {}/{} {} {} [{}]: {:.2}x (scalar {:.0} ns, dispatched {:.0} ns)",
+                    r.model,
+                    r.layer,
+                    r.kind,
+                    r.backend,
+                    r.simd,
+                    r.simd_speedup().unwrap_or(0.0),
+                    r.scalar_kern_ns.unwrap_or(0.0),
+                    r.prepack_ns
                 );
             }
         }

@@ -119,6 +119,7 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         alloc.n_pools(),
         alloc.pool_elems.iter().sum::<usize>()
     );
+    println!("host gemm kernels: {}", microai::nn::simd::detected().name);
     Ok(())
 }
 
@@ -213,7 +214,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stats = serving::run_cascade(little.clone(), big.clone(), &cfg, reqs.clone(), Some(&labels));
     println!("\n== big/LITTLE cascade on simulated SparkFun Edge ==");
     println!(
-        "little={little_ms:.1} ms  big={big_ms:.1} ms  threshold={threshold}  arrivals={rate:.1}/s"
+        "little={little_ms:.1} ms  big={big_ms:.1} ms  threshold={threshold}  arrivals={rate:.1}/s  \
+         kernel={}",
+        little_sess.meta().kernel
     );
     println!(
         "requests={n} escalation={:.1}%  accuracy={:.4}",

@@ -13,6 +13,7 @@ pub mod parallel;
 #[cfg(test)]
 mod plan_soundness;
 pub mod session;
+pub mod simd;
 
 pub use float_exec::{argmax, ActStats};
 pub use packed::{Epilogue, PackedNode, PackedWeights};

@@ -38,12 +38,15 @@
 //!
 //! Semantics contract (property-pinned below): integer results are
 //! **bit-exact** against the naive `*_ref` kernels across the
-//! `accum_fits_i32` admission boundary and across thread counts (the
+//! `accum_fits_i32` admission boundary, across thread counts (the
 //! per-element accumulation order is k-major and thread-invariant,
-//! exactly as in `super::gemm`); f32 results are **bit-identical to the
-//! per-call GEMM lowering** (same per-element operation sequence — only
-//! the B storage layout changed) and therefore ULP-bounded vs the
-//! reference.
+//! exactly as in `super::gemm`) AND across kernel sets — the
+//! ISSUE 10 [`super::simd`] dispatch swaps in AVX2 microkernels whose
+//! integer lanes reproduce the scalar bits exactly. f32 results on the
+//! scalar kernel set are **bit-identical to the per-call GEMM lowering**
+//! (same per-element operation sequence — only the B storage layout
+//! changed); the AVX2+FMA f32 kernel contracts mul+add to one rounding
+//! and stays inside the session's 1e-4 budget (DESIGN.md §13).
 //!
 //! Ownership: a [`PackedWeights`] arena is built once per session plan
 //! ([`crate::nn::session::InferenceBackend::pack_weights`]) and shared
@@ -63,6 +66,7 @@ use super::affine_exec::softmax_affine_row;
 use super::gemm::{self, MR, NR};
 use super::int_ops::{accum_fits_i32, softmax_q_row};
 use super::parallel::{IntraOpPool, SharedOut};
+use super::simd::{self, KernelSet};
 
 /// Columns of the packed B layout: N rounded up to a whole NR tile (tail
 /// columns zero-filled, never emitted).
@@ -176,10 +180,15 @@ pub struct PackedNode {
     pub pad: i32,
     pub b: PackedB,
     pub epi: Epilogue,
+    /// The microkernel set this node's GEMMs run on — resolved once at
+    /// build time by [`simd::detected`] (scalar / AVX2 / AVX2+FMA), and
+    /// overridable per node ([`PackedNode::with_kernels`]) or per plan
+    /// ([`PackedWeights::set_kernels`]) for forced-scalar baselines.
+    pub kern: &'static KernelSet,
 }
 
 /// NR-tile B: for each column tile, K contiguous NR-wide rows.
-fn pack_panels<S: Copy, T: Copy + Default>(
+pub(crate) fn pack_panels<S: Copy, T: Copy + Default>(
     w: &[S],
     k: usize,
     n: usize,
@@ -215,6 +224,7 @@ impl PackedNode {
             pad: 0,
             b: PackedB::F32(pack_panels(w, taps, n, |v| v)),
             epi: Epilogue::BiasRelu { bias: b.to_vec(), relu },
+            kern: simd::detected(),
         }
     }
 
@@ -265,6 +275,7 @@ impl PackedNode {
                 width,
                 relu,
             },
+            kern: simd::detected(),
         }
     }
 
@@ -303,7 +314,17 @@ impl PackedNode {
                 zp_out,
                 relu,
             },
+            kern: simd::detected(),
         }
+    }
+
+    /// Replace the kernel set this node's GEMMs run on (builder-style).
+    /// Used by the forced-scalar bench baseline and the f32 bit-identity
+    /// pins; panels and epilogues are untouched, so results stay inside
+    /// the per-lane equivalence contract (`nn::simd` module docs).
+    pub fn with_kernels(mut self, kern: &'static KernelSet) -> PackedNode {
+        self.kern = kern;
+        self
     }
 
     /// Host bytes this node's packed panels + epilogue copies occupy.
@@ -482,15 +503,43 @@ impl PackedAttention {
 pub struct PackedWeights {
     nodes: Vec<Option<PackedNode>>,
     attn: Vec<Option<PackedAttention>>,
+    /// The kernel set every packed node in this arena runs on
+    /// (`SessionMeta::kernel` reports its name). Builders resolve it via
+    /// [`simd::detected`]; [`PackedWeights::set_kernels`] re-targets the
+    /// whole arena (the forced-scalar session path).
+    kern: &'static KernelSet,
 }
 
 impl PackedWeights {
     /// No packing (custom backends without a packer; legacy per-call
-    /// entry points). Executors fall back to the per-call GEMM path.
+    /// entry points). Executors fall back to the per-call GEMM path —
+    /// which is the scalar blocked GEMM, hence the scalar label.
     pub fn empty(n_nodes: usize) -> PackedWeights {
         PackedWeights {
             nodes: (0..n_nodes).map(|_| None).collect(),
             attn: (0..n_nodes).map(|_| None).collect(),
+            kern: simd::scalar(),
+        }
+    }
+
+    /// Name of the kernel set this arena's GEMMs dispatch to
+    /// (`"scalar"` / `"avx2"` / `"avx2+fma"`).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kern.name
+    }
+
+    /// Re-target every packed node (conv/dense and all four attention
+    /// projections) onto `kern`. Panels and epilogues are untouched;
+    /// integer results are bit-identical by the `nn::simd` contract.
+    pub fn set_kernels(&mut self, kern: &'static KernelSet) {
+        self.kern = kern;
+        for pn in self.nodes.iter_mut().flatten() {
+            pn.kern = kern;
+        }
+        for pa in self.attn.iter_mut().flatten() {
+            for pn in [&mut pa.wq, &mut pa.wk, &mut pa.wv, &mut pa.wo] {
+                pn.kern = kern;
+            }
         }
     }
 
@@ -547,7 +596,7 @@ impl PackedWeights {
                 _ => None,
             })
             .collect();
-        PackedWeights { nodes, attn }
+        PackedWeights { nodes, attn, kern: simd::detected() }
     }
 
     /// Pack a fixed-point Qm.n graph's conv/dense/attention weights with
@@ -601,7 +650,7 @@ impl PackedWeights {
                 _ => None,
             })
             .collect();
-        PackedWeights { nodes, attn }
+        PackedWeights { nodes, attn, kern: simd::detected() }
     }
 
     /// Pack an affine graph's conv/dense/attention weights (zero-point
@@ -637,270 +686,17 @@ impl PackedWeights {
                 _ => None,
             })
             .collect();
-        PackedWeights { nodes, attn }
+        PackedWeights { nodes, attn, kern: simd::detected() }
     }
 }
 
 // ---------------------------------------------------------------------------
-// Fused microkernels (packed B, epilogue in the register-tile tail)
+// Microkernel dispatch (the fused kernels themselves live in `nn::simd`:
+// scalar always, AVX2/AVX2+FMA behind runtime feature detection)
 // ---------------------------------------------------------------------------
-
-#[inline(always)]
-fn shift_at(shift: &[i32], fi: usize) -> i32 {
-    if shift.len() == 1 {
-        shift[0]
-    } else {
-        shift[fi]
-    }
-}
-
-/// f32 fused kernel: identical per-element operation sequence to the
-/// per-call `gemm_f32_cols` + bias/ReLU emit (k-major accumulate, then
-/// `acc + bias`, then ReLU), so results are BIT-identical to the PR-3/4
-/// path — only the B storage layout changed.
-#[allow(clippy::too_many_arguments)]
-fn kernel_f32(
-    a: &[f32],
-    bp: &[f32],
-    m: usize,
-    n: usize,
-    k: usize,
-    j0: usize,
-    j1: usize,
-    bias: &[f32],
-    relu: bool,
-    row0: usize,
-    out: &SharedOut<f32>,
-) {
-    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
-    debug_assert!(a.len() >= m * k, "A panel too small");
-    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
-    let tile_elems = k * NR;
-    let mut i = 0usize;
-    while i < m {
-        let mr = MR.min(m - i);
-        let mut j = j0;
-        while j < j1 {
-            let nr = NR.min(j1 - j);
-            let tb = (j / NR) * tile_elems;
-            let mut acc: [[f32; NR]; MR] = [[0.0; NR]; MR];
-            for p in 0..k {
-                let brow = &bp[tb + p * NR..tb + p * NR + nr];
-                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
-                    let av = a[(i + mi) * k + p];
-                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
-                        *accv += av * bv;
-                    }
-                }
-            }
-            for (mi, accrow) in acc.iter().enumerate().take(mr) {
-                let base = (row0 + i + mi) * n;
-                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
-                    let fi = j + ni;
-                    let v = accv + bias[fi];
-                    // SAFETY: the dispatch owns rows row0..row0+m and
-                    // columns j0..j1 of the output exclusively.
-                    unsafe { out.write(base + fi, if relu { v.max(0.0) } else { v }) };
-                }
-            }
-            j += nr;
-        }
-        i += mr;
-    }
-}
-
-/// i32-lane fused kernel (fixed-point, `accum_fits_i32`-admitted nodes):
-/// bit-exact with the reference epilogue (`acc + b as i32`, widen,
-/// rescale, clamp, ReLU).
-#[allow(clippy::too_many_arguments)]
-fn kernel_i32(
-    a: &[i32],
-    bp: &[i32],
-    m: usize,
-    n: usize,
-    k: usize,
-    j0: usize,
-    j1: usize,
-    bias: &[i64],
-    shift: &[i32],
-    width: u32,
-    relu: bool,
-    row0: usize,
-    out: &SharedOut<i32>,
-) {
-    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
-    debug_assert!(a.len() >= m * k, "A panel too small");
-    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
-    let tile_elems = k * NR;
-    let mut i = 0usize;
-    while i < m {
-        let mr = MR.min(m - i);
-        let mut j = j0;
-        while j < j1 {
-            let nr = NR.min(j1 - j);
-            let tb = (j / NR) * tile_elems;
-            let mut acc: [[i32; NR]; MR] = [[0; NR]; MR];
-            for p in 0..k {
-                let brow = &bp[tb + p * NR..tb + p * NR + nr];
-                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
-                    let av = a[(i + mi) * k + p];
-                    if av == 0 {
-                        // ReLU sparsity: exact skip for integers.
-                        continue;
-                    }
-                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
-                        *accv += av * bv;
-                    }
-                }
-            }
-            for (mi, accrow) in acc.iter().enumerate().take(mr) {
-                let base = (row0 + i + mi) * n;
-                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
-                    let fi = j + ni;
-                    let total = accv + bias[fi] as i32;
-                    let mut v = clamp_to(rescale(i64::from(total), shift_at(shift, fi)), width);
-                    if relu && v < 0 {
-                        v = 0;
-                    }
-                    // SAFETY: as in `kernel_f32`.
-                    unsafe { out.write(base + fi, v) };
-                }
-            }
-            j += nr;
-        }
-        i += mr;
-    }
-}
-
-/// i64 wide fused kernel, fixed-point epilogue.
-#[allow(clippy::too_many_arguments)]
-fn kernel_i64_fixed(
-    a: &[i32],
-    bp: &[i64],
-    m: usize,
-    n: usize,
-    k: usize,
-    j0: usize,
-    j1: usize,
-    bias: &[i64],
-    shift: &[i32],
-    width: u32,
-    relu: bool,
-    row0: usize,
-    out: &SharedOut<i32>,
-) {
-    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
-    debug_assert!(a.len() >= m * k, "A panel too small");
-    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
-    let tile_elems = k * NR;
-    let mut i = 0usize;
-    while i < m {
-        let mr = MR.min(m - i);
-        let mut j = j0;
-        while j < j1 {
-            let nr = NR.min(j1 - j);
-            let tb = (j / NR) * tile_elems;
-            let mut acc: [[i64; NR]; MR] = [[0; NR]; MR];
-            for p in 0..k {
-                let brow = &bp[tb + p * NR..tb + p * NR + nr];
-                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
-                    let av = a[(i + mi) * k + p];
-                    if av == 0 {
-                        // ReLU sparsity: exact skip for integers.
-                        continue;
-                    }
-                    let av = av as i64;
-                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
-                        *accv += av * bv;
-                    }
-                }
-            }
-            for (mi, accrow) in acc.iter().enumerate().take(mr) {
-                let base = (row0 + i + mi) * n;
-                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
-                    let fi = j + ni;
-                    let mut v = clamp_to(rescale(accv + bias[fi], shift_at(shift, fi)), width);
-                    if relu && v < 0 {
-                        v = 0;
-                    }
-                    // SAFETY: as in `kernel_f32`.
-                    unsafe { out.write(base + fi, v) };
-                }
-            }
-            j += nr;
-        }
-        i += mr;
-    }
-}
-
-/// i64 wide fused kernel, affine (gemmlowp requantize) epilogue. The
-/// bias carries the build-time zero-point fold; the final accumulator is
-/// the same integer the reference reaches, so the `as i32` cast into
-/// `requantize` is bit-identical.
-#[allow(clippy::too_many_arguments)]
-fn kernel_i64_affine(
-    a: &[i32],
-    bp: &[i64],
-    m: usize,
-    n: usize,
-    k: usize,
-    j0: usize,
-    j1: usize,
-    bias: &[i64],
-    mult: &[i32],
-    shift: &[i32],
-    zp_out: i32,
-    relu: bool,
-    row0: usize,
-    out: &SharedOut<i32>,
-) {
-    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
-    debug_assert!(a.len() >= m * k, "A panel too small");
-    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
-    let tile_elems = k * NR;
-    let mut i = 0usize;
-    while i < m {
-        let mr = MR.min(m - i);
-        let mut j = j0;
-        while j < j1 {
-            let nr = NR.min(j1 - j);
-            let tb = (j / NR) * tile_elems;
-            let mut acc: [[i64; NR]; MR] = [[0; NR]; MR];
-            for p in 0..k {
-                let brow = &bp[tb + p * NR..tb + p * NR + nr];
-                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
-                    let av = a[(i + mi) * k + p];
-                    if av == 0 {
-                        // Raw-payload zero: contributes 0 to Σ x·w.
-                        continue;
-                    }
-                    let av = av as i64;
-                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
-                        *accv += av * bv;
-                    }
-                }
-            }
-            for (mi, accrow) in acc.iter().enumerate().take(mr) {
-                let base = (row0 + i + mi) * n;
-                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
-                    let fi = j + ni;
-                    let total = bias[fi] + accv;
-                    let mut v = requantize(total as i32, mult[fi], shift[fi], zp_out);
-                    if relu {
-                        v = v.max(zp_out);
-                    }
-                    // SAFETY: as in `kernel_f32`.
-                    unsafe { out.write(base + fi, v) };
-                }
-            }
-            j += nr;
-        }
-        i += mr;
-    }
-}
 
 /// Dispatch one integer A panel through the node's (lane, epilogue)
-/// combination.
+/// combination on the node's selected kernel set.
 fn run_int_kernel(
     a: &[i32],
     pn: &PackedNode,
@@ -913,13 +709,13 @@ fn run_int_kernel(
     let (n, k) = (pn.n, pn.taps);
     match (&pn.b, &pn.epi) {
         (PackedB::I32(bp), Epilogue::BiasShiftClamp { bias, shift, width, relu }) => {
-            kernel_i32(a, bp, m, n, k, j0, j1, bias, shift, *width, *relu, row0, out)
+            (pn.kern.i32)(a, bp, m, n, k, j0, j1, bias, shift, *width, *relu, row0, out)
         }
         (PackedB::I64(bp), Epilogue::BiasShiftClamp { bias, shift, width, relu }) => {
-            kernel_i64_fixed(a, bp, m, n, k, j0, j1, bias, shift, *width, *relu, row0, out)
+            (pn.kern.i64_fixed)(a, bp, m, n, k, j0, j1, bias, shift, *width, *relu, row0, out)
         }
         (PackedB::I64(bp), Epilogue::BiasRequant { bias, mult, shift, zp_out, relu }) => {
-            kernel_i64_affine(
+            (pn.kern.i64_affine)(
                 a, bp, m, n, k, j0, j1, bias, mult, shift, *zp_out, *relu, row0, out,
             )
         }
@@ -957,7 +753,7 @@ pub fn conv1d_f32_packed(
     let out_view = SharedOut::new(&mut out[..]);
     if k == 1 && stride == 1 {
         pool.run_partitioned(s_out, &|_tid, s0, s1| {
-            kernel_f32(&x[s0 * taps..s1 * taps], bp, s1 - s0, f, taps, 0, f, bias, *relu, s0,
+            (pn.kern.f32)(&x[s0 * taps..s1 * taps], bp, s1 - s0, f, taps, 0, f, bias, *relu, s0,
                 &out_view);
         });
         return s_out;
@@ -965,7 +761,8 @@ pub fn conv1d_f32_packed(
     let rows_cache = gemm::panel_rows(taps, s_out);
     let body = |panel: &mut [f32], row0: usize, rows: usize| {
         gemm::pack_1d_f32(x, s, c, k, stride, pad_lo, row0, rows, &mut panel[..rows * taps]);
-        kernel_f32(&panel[..rows * taps], bp, rows, f, taps, 0, f, bias, *relu, row0, &out_view);
+        (pn.kern.f32)(&panel[..rows * taps], bp, rows, f, taps, 0, f, bias, *relu, row0,
+            &out_view);
     };
     gemm::split_positions(pool, scratch, rows_cache * taps, rows_cache, s_out, &body);
     s_out
@@ -997,7 +794,7 @@ pub fn conv2d_f32_packed(
     let out_view = SharedOut::new(&mut out[..]);
     if kh == 1 && kw == 1 && stride == 1 {
         pool.run_partitioned(positions, &|_tid, s0, s1| {
-            kernel_f32(&x[s0 * taps..s1 * taps], bp, s1 - s0, f, taps, 0, f, bias, *relu, s0,
+            (pn.kern.f32)(&x[s0 * taps..s1 * taps], bp, s1 - s0, f, taps, 0, f, bias, *relu, s0,
                 &out_view);
         });
         return (h_out, w_out);
@@ -1007,7 +804,8 @@ pub fn conv2d_f32_packed(
         gemm::pack_2d_f32(
             x, h, wdt, c, kh, kw, stride, ph, pw, w_out, row0, rows, &mut panel[..rows * taps],
         );
-        kernel_f32(&panel[..rows * taps], bp, rows, f, taps, 0, f, bias, *relu, row0, &out_view);
+        (pn.kern.f32)(&panel[..rows * taps], bp, rows, f, taps, 0, f, bias, *relu, row0,
+            &out_view);
     };
     gemm::split_positions(pool, scratch, rows_cache * taps, rows_cache, positions, &body);
     (h_out, w_out)
@@ -1026,7 +824,7 @@ pub fn dense_f32_packed(x: &[f32], pn: &PackedNode, pool: &IntraOpPool, out: &mu
     out.resize(n, 0.0);
     let out_view = SharedOut::new(&mut out[..]);
     gemm::split_col_tiles(pool, n, &|j0, j1| {
-        kernel_f32(x, bp, 1, n, taps, j0, j1, bias, *relu, 0, &out_view);
+        (pn.kern.f32)(x, bp, 1, n, taps, j0, j1, bias, *relu, 0, &out_view);
     });
 }
 
@@ -1152,7 +950,7 @@ pub fn dense_f32_batched(
         for u in u0..u1 {
             let (mi0, j0) = ((u / col_tiles) * MR, (u % col_tiles) * NR);
             let rows = MR.min(batch - mi0);
-            kernel_f32(
+            (pn.kern.f32)(
                 &xs[mi0 * taps..], bp, rows, n, taps, j0, (j0 + NR).min(n), bias, *relu,
                 mi0, &out_view,
             );
@@ -1256,7 +1054,9 @@ pub fn attention_f32_packed(
             let (bp, bias) = f32_parts(pn);
             let ov = SharedOut::new(dst);
             pool.run_partitioned(seq, &|_tid, s0, s1| {
-                kernel_f32(&x[s0 * dm..s1 * dm], bp, s1 - s0, dm, dm, 0, dm, bias, false, s0, &ov);
+                (pn.kern.f32)(
+                    &x[s0 * dm..s1 * dm], bp, s1 - s0, dm, dm, 0, dm, bias, false, s0, &ov,
+                );
             });
         };
         proj(&pa.wq, q);
@@ -1301,7 +1101,9 @@ pub fn attention_f32_packed(
     let (bp, bias) = f32_parts(&pa.wo);
     let ov = SharedOut::new(&mut out[..]);
     pool.run_partitioned(seq, &|_tid, s0, s1| {
-        kernel_f32(&ctx[s0 * dm..s1 * dm], bp, s1 - s0, dm, dm, 0, dm, bias, false, s0, &ov);
+        (pa.wo.kern.f32)(
+            &ctx[s0 * dm..s1 * dm], bp, s1 - s0, dm, dm, 0, dm, bias, false, s0, &ov,
+        );
     });
 }
 
@@ -1704,8 +1506,12 @@ mod tests {
             );
             // Tiny shapes route the per-call entry to the reference
             // kernel, so bit-equality is asserted only when the per-call
-            // entry took the blocked path; otherwise ULP-bounded.
-            let pn = PackedNode::f32_node(&w, &b, &[k], k * c, f, relu);
+            // entry took the blocked path; otherwise ULP-bounded. Forced
+            // onto the scalar kernel set: bit-identity with the per-call
+            // scalar GEMM is a SCALAR-kernel contract (the AVX2+FMA f32
+            // kernel rounds differently; its own pin lives in nn::simd).
+            let pn = PackedNode::f32_node(&w, &b, &[k], k * c, f, relu)
+                .with_kernels(simd::scalar());
             for pool in &pools {
                 let mut scratch = vec![Vec::new(); pool.threads()];
                 let mut got = Vec::new();
@@ -1734,7 +1540,8 @@ mod tests {
             let dx: Vec<f32> = g.vec_normal(i, 1.0);
             let mut dwant = Vec::new();
             gemm::dense_gemm(&dx, &dw, &db, o, relu, &serial, &mut dwant);
-            let dpn = PackedNode::f32_node(&dw, &db, &[], i, o, relu);
+            let dpn =
+                PackedNode::f32_node(&dw, &db, &[], i, o, relu).with_kernels(simd::scalar());
             let mut dgot = Vec::new();
             dense_f32_packed(&dx, &dpn, &serial, &mut dgot);
             if i * o >= gemm::GEMM_MIN_MACCS {

@@ -664,6 +664,11 @@ pub struct SessionMeta {
     /// ([`SessionBuilder::max_batch`]); [`Session::infer`] splits larger
     /// batches into micro-batches of this size. Host-side only.
     pub max_batch: usize,
+    /// GEMM microkernel set the plan's packed weights dispatch to
+    /// (`"scalar"` / `"avx2"` / `"avx2+fma"` — `nn::simd`), so bench
+    /// artifacts and serving rows are attributable to the ISA that
+    /// produced them. Forks inherit it (they alias the packed arena).
+    pub kernel: &'static str,
 }
 
 /// Builder: pick a backend, optionally attach a deployment board, build.
@@ -672,6 +677,7 @@ pub struct SessionBuilder {
     board: Option<&'static Board>,
     threads: usize,
     max_batch: usize,
+    force_scalar: bool,
 }
 
 impl SessionBuilder {
@@ -693,7 +699,7 @@ impl SessionBuilder {
 
     /// Any custom [`InferenceBackend`] implementation.
     pub fn from_backend(backend: Arc<dyn InferenceBackend>) -> SessionBuilder {
-        SessionBuilder { backend, board: None, threads: 1, max_batch: 1 }
+        SessionBuilder { backend, board: None, threads: 1, max_batch: 1, force_scalar: false }
     }
 
     /// Attach a deployment board: the session metadata then carries
@@ -725,6 +731,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Pin every packed-weight GEMM in this session to the portable
+    /// scalar microkernels instead of the runtime-detected SIMD set
+    /// (`nn::simd::detected`). The dispatch-equivalence contract makes
+    /// this behavior-preserving — integer logits are bit-identical, f32
+    /// stays inside the 1e-4 budget — so the switch exists for A/B
+    /// baselines (`bench_hotpath --force-scalar`) and cross-arch
+    /// equivalence tests, not for correctness workarounds.
+    pub fn force_scalar_kernels(mut self, force: bool) -> SessionBuilder {
+        self.force_scalar = force;
+        self
+    }
+
     /// [`SessionBuilder::build`], surfacing verification failures as an
     /// error instead of a panic: the range proof (`crate::analysis`) must
     /// admit every integer accumulator and the plan's buffer invariants
@@ -744,7 +762,12 @@ impl SessionBuilder {
         self.finish(plan)
     }
 
-    fn finish(self, plan: Plan) -> Session {
+    fn finish(self, mut plan: Plan) -> Session {
+        if self.force_scalar {
+            // The packed arena is freshly built by `prepare()` and not
+            // yet shared with any fork, so make_mut never deep-copies.
+            Arc::make_mut(&mut plan.packed).set_kernels(crate::nn::simd::scalar());
+        }
         let arena = self.backend.new_arena(&plan, self.threads, self.max_batch);
         let dtype = self.backend.dtype();
         let (device_latency_ms, device_energy_uwh) = match self.board {
@@ -777,6 +800,7 @@ impl SessionBuilder {
             packed_weight_bytes: plan.packed.host_bytes(),
             intra_op_threads: self.threads,
             max_batch: self.max_batch,
+            kernel: plan.packed.kernel_name(),
         };
         Session { backend: self.backend, plan, arena, meta, runs: 0 }
     }

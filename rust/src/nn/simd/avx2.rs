@@ -1,0 +1,450 @@
+//! AVX2 / AVX2+FMA microkernels for the packed-panel GEMM core
+//! (x86-64 only; compiled out on other targets, under Miri, and with
+//! `--no-default-features`).
+//!
+//! Strategy per accumulator lane, on the SAME 4×8 register tile and
+//! NR-tiled packed-B layout as [`super::scalar`]:
+//!
+//! - **f32 (AVX2+FMA)**: one `__m256` accumulator per tile row, B rows
+//!   stream as full 8-wide `loadu`, A broadcasts per element,
+//!   `_mm256_fmadd_ps` accumulates. Full (nr = NR) tiles run the fused
+//!   bias/ReLU epilogue vectorized and store straight through the
+//!   output window; tail tiles (nr < NR — the packed B is zero-filled
+//!   there, so the extra lanes accumulate exact zeros) spill the
+//!   accumulator to the stack and run the scalar epilogue per owned
+//!   column. The fused multiply-add rounds once where scalar rounds
+//!   twice, so f32 bits may differ from scalar within the session's
+//!   existing 1e-4 fused-reorder budget (DESIGN.md §13).
+//! - **i32 (AVX2)**: `_mm256_mullo_epi32` + `_mm256_add_epi32`. Both
+//!   wrap mod 2³², exactly like the scalar kernel's release-mode
+//!   arithmetic, and `accum_fits_i32`-admitted nodes never reach the
+//!   wrap, so results are BIT-exact vs scalar. The `av == 0` ReLU
+//!   sparsity skip is kept (exact for integers).
+//! - **i64 (AVX2, fixed + affine)**: two `__m256i` accumulators per
+//!   8-column tile row. Packed i64 weights are pre-widened from i32, so
+//!   the low 32 bits of every 64-bit lane sign-extend back to the exact
+//!   weight, and `_mm256_mul_epi32` (signed 32×32→64) produces the
+//!   exact product `_mm256_add_epi64` then accumulates — bit-identical
+//!   to the scalar `i64 += (av as i64) * bv`. Integer epilogues always
+//!   spill and run the scalar per-element code, so rescale/clamp/
+//!   requantize are the same instruction sequence as scalar.
+//!
+//! Safety regime (PR-7 audit): the public entries are plain fns (so
+//! they coerce to the [`super::KernelSet`] fn pointers) whose only
+//! `unsafe` is the call into the `#[target_feature]` impl, justified by
+//! the dispatch contract — these entries are only reachable through a
+//! `KernelSet` installed after `is_x86_feature_detected!` succeeded (or
+//! under an explicit detection guard in the forced-variant tests). The
+//! impls assert panel bounds at entry so every raw `loadu`/`storeu` is
+//! provably in-bounds, and output writes go through the same
+//! [`SharedOut`] disjoint-range contract as the scalar kernels.
+
+use core::arch::x86_64::*;
+
+use crate::fixedpoint::ops::{clamp_to, rescale};
+use crate::nn::gemm::{MR, NR};
+use crate::nn::packed::packed_cols;
+use crate::nn::parallel::SharedOut;
+use crate::quant::affine::requantize;
+
+use super::scalar::{self, shift_at};
+use super::KernelSet;
+
+/// Integer kernels vectorized, f32 left scalar: the set for CPUs with
+/// AVX2 but no FMA (integer SIMD never needs FMA).
+pub(crate) static AVX2_INT: KernelSet = KernelSet {
+    name: "avx2",
+    f32: scalar::kernel_f32,
+    i32: kernel_i32,
+    i64_fixed: kernel_i64_fixed,
+    i64_affine: kernel_i64_affine,
+};
+
+/// All four lanes vectorized (the common modern-x86 outcome).
+pub(crate) static AVX2_FMA: KernelSet = KernelSet {
+    name: "avx2+fma",
+    f32: kernel_f32,
+    i32: kernel_i32,
+    i64_fixed: kernel_i64_fixed,
+    i64_affine: kernel_i64_affine,
+};
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_f32(
+    a: &[f32],
+    bp: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[f32],
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<f32>,
+) {
+    // SAFETY: reachable only through a KernelSet installed after
+    // `is_x86_feature_detected!("avx2")`/`("fma")` succeeded (dispatch
+    // contract; the forced-variant tests guard the same way), so the
+    // target features the impl assumes are present on this CPU.
+    unsafe { kernel_f32_impl(a, bp, m, n, k, j0, j1, bias, relu, row0, out) }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn kernel_f32_impl(
+    a: &[f32],
+    bp: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[f32],
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<f32>,
+) {
+    assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    assert!(a.len() >= m * k, "A panel too small");
+    assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    assert!(bias.len() >= j1, "bias too small");
+    let tile_elems = k * NR;
+    let bpp = bp.as_ptr();
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            // SAFETY: B loads — `j < j1 <= n` puts tile `j / NR` inside
+            // the `packed_cols(n) / NR` tiles the entry assert covers,
+            // so `tb + p·NR + NR <= packed_cols(n)·k <= bp.len()` for
+            // every `p < k` (tail columns are zero-filled, never OOB).
+            // Bias load — only on nr = NR tiles, where `j + NR <= j1 <=
+            // bias.len()`. Output — the dispatch owns rows
+            // row0..row0+m and columns j0..j1 exclusively (the same
+            // SharedOut contract the scalar kernel relies on), and the
+            // vector store targets base+j..base+j+NR only when the full
+            // tile is owned (nr = NR).
+            unsafe {
+                let mut acc = [_mm256_setzero_ps(); MR];
+                for p in 0..k {
+                    let bvec = _mm256_loadu_ps(bpp.add(tb + p * NR));
+                    for (mi, accv) in acc.iter_mut().enumerate().take(mr) {
+                        let av = _mm256_set1_ps(a[(i + mi) * k + p]);
+                        *accv = _mm256_fmadd_ps(av, bvec, *accv);
+                    }
+                }
+                for (mi, accv) in acc.iter().enumerate().take(mr) {
+                    let base = (row0 + i + mi) * n;
+                    if nr == NR {
+                        let mut v = _mm256_add_ps(*accv, _mm256_loadu_ps(bias.as_ptr().add(j)));
+                        if relu {
+                            v = _mm256_max_ps(v, _mm256_setzero_ps());
+                        }
+                        _mm256_storeu_ps(out.slice_mut(base + j, NR).as_mut_ptr(), v);
+                    } else {
+                        let mut spill = [0.0f32; NR];
+                        _mm256_storeu_ps(spill.as_mut_ptr(), *accv);
+                        for (ni, &sv) in spill.iter().enumerate().take(nr) {
+                            let fi = j + ni;
+                            let v = sv + bias[fi];
+                            out.write(base + fi, if relu { v.max(0.0) } else { v });
+                        }
+                    }
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_i32(
+    a: &[i32],
+    bp: &[i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    shift: &[i32],
+    width: u32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    // SAFETY: as in `kernel_f32` — only reachable behind a successful
+    // AVX2 detection.
+    unsafe { kernel_i32_impl(a, bp, m, n, k, j0, j1, bias, shift, width, relu, row0, out) }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn kernel_i32_impl(
+    a: &[i32],
+    bp: &[i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    shift: &[i32],
+    width: u32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    assert!(a.len() >= m * k, "A panel too small");
+    assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let bpp = bp.as_ptr();
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            // SAFETY: B loads in-bounds by the same tile-index argument
+            // as `kernel_f32_impl` (entry assert + `j < j1 <= n`); the
+            // stack spill stores into a local `[i32; NR]`; output
+            // writes go element-wise through `SharedOut::write` under
+            // the dispatch's disjoint row/column ownership contract.
+            unsafe {
+                let mut acc = [_mm256_setzero_si256(); MR];
+                for p in 0..k {
+                    let bvec = _mm256_loadu_si256(bpp.add(tb + p * NR) as *const __m256i);
+                    for (mi, accv) in acc.iter_mut().enumerate().take(mr) {
+                        let av = a[(i + mi) * k + p];
+                        if av == 0 {
+                            // ReLU sparsity: exact skip for integers.
+                            continue;
+                        }
+                        let avv = _mm256_set1_epi32(av);
+                        *accv = _mm256_add_epi32(*accv, _mm256_mullo_epi32(avv, bvec));
+                    }
+                }
+                for (mi, accv) in acc.iter().enumerate().take(mr) {
+                    let base = (row0 + i + mi) * n;
+                    let mut spill = [0i32; NR];
+                    _mm256_storeu_si256(spill.as_mut_ptr() as *mut __m256i, *accv);
+                    for (ni, &sv) in spill.iter().enumerate().take(nr) {
+                        let fi = j + ni;
+                        let total = sv + bias[fi] as i32;
+                        let mut v = clamp_to(rescale(i64::from(total), shift_at(shift, fi)), width);
+                        if relu && v < 0 {
+                            v = 0;
+                        }
+                        out.write(base + fi, v);
+                    }
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_i64_fixed(
+    a: &[i32],
+    bp: &[i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    shift: &[i32],
+    width: u32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    // SAFETY: as in `kernel_f32` — only reachable behind a successful
+    // AVX2 detection.
+    unsafe { kernel_i64_fixed_impl(a, bp, m, n, k, j0, j1, bias, shift, width, relu, row0, out) }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn kernel_i64_fixed_impl(
+    a: &[i32],
+    bp: &[i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    shift: &[i32],
+    width: u32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    assert!(a.len() >= m * k, "A panel too small");
+    assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let bpp = bp.as_ptr();
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            // SAFETY: B loads — each 8-i64 tile row splits into two
+            // 4-lane halves at `tb + p·NR` and `tb + p·NR + 4`, both
+            // inside `packed_cols(n)·k <= bp.len()` by the entry assert
+            // and `j < j1 <= n`. `_mm256_mul_epi32` reads the low 32
+            // bits of each i64 lane — exact, because packed i64 weights
+            // are pre-widened from i32 so those bits sign-extend back
+            // to the full value. Spills store into locals; output
+            // writes go through `SharedOut::write` under the dispatch
+            // ownership contract.
+            unsafe {
+                let mut acc_lo = [_mm256_setzero_si256(); MR];
+                let mut acc_hi = [_mm256_setzero_si256(); MR];
+                for p in 0..k {
+                    let b_lo = _mm256_loadu_si256(bpp.add(tb + p * NR) as *const __m256i);
+                    let b_hi = _mm256_loadu_si256(bpp.add(tb + p * NR + 4) as *const __m256i);
+                    for (mi, (alo, ahi)) in
+                        acc_lo.iter_mut().zip(acc_hi.iter_mut()).enumerate().take(mr)
+                    {
+                        let av = a[(i + mi) * k + p];
+                        if av == 0 {
+                            // ReLU sparsity: exact skip for integers.
+                            continue;
+                        }
+                        let avv = _mm256_set1_epi64x(av as i64);
+                        *alo = _mm256_add_epi64(*alo, _mm256_mul_epi32(avv, b_lo));
+                        *ahi = _mm256_add_epi64(*ahi, _mm256_mul_epi32(avv, b_hi));
+                    }
+                }
+                for (mi, (alo, ahi)) in acc_lo.iter().zip(acc_hi.iter()).enumerate().take(mr) {
+                    let base = (row0 + i + mi) * n;
+                    let mut spill = [0i64; NR];
+                    _mm256_storeu_si256(spill.as_mut_ptr() as *mut __m256i, *alo);
+                    _mm256_storeu_si256(spill.as_mut_ptr().add(4) as *mut __m256i, *ahi);
+                    for (ni, &sv) in spill.iter().enumerate().take(nr) {
+                        let fi = j + ni;
+                        let mut v = clamp_to(rescale(sv + bias[fi], shift_at(shift, fi)), width);
+                        if relu && v < 0 {
+                            v = 0;
+                        }
+                        out.write(base + fi, v);
+                    }
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_i64_affine(
+    a: &[i32],
+    bp: &[i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    mult: &[i32],
+    shift: &[i32],
+    zp_out: i32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    // SAFETY: as in `kernel_f32` — only reachable behind a successful
+    // AVX2 detection.
+    unsafe {
+        kernel_i64_affine_impl(a, bp, m, n, k, j0, j1, bias, mult, shift, zp_out, relu, row0, out)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn kernel_i64_affine_impl(
+    a: &[i32],
+    bp: &[i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    mult: &[i32],
+    shift: &[i32],
+    zp_out: i32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    assert!(a.len() >= m * k, "A panel too small");
+    assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let bpp = bp.as_ptr();
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            // SAFETY: identical bounds/exactness argument to
+            // `kernel_i64_fixed_impl` — only the (scalar, spilled)
+            // epilogue differs.
+            unsafe {
+                let mut acc_lo = [_mm256_setzero_si256(); MR];
+                let mut acc_hi = [_mm256_setzero_si256(); MR];
+                for p in 0..k {
+                    let b_lo = _mm256_loadu_si256(bpp.add(tb + p * NR) as *const __m256i);
+                    let b_hi = _mm256_loadu_si256(bpp.add(tb + p * NR + 4) as *const __m256i);
+                    for (mi, (alo, ahi)) in
+                        acc_lo.iter_mut().zip(acc_hi.iter_mut()).enumerate().take(mr)
+                    {
+                        let av = a[(i + mi) * k + p];
+                        if av == 0 {
+                            // Raw-payload zero: contributes 0 to Σ x·w.
+                            continue;
+                        }
+                        let avv = _mm256_set1_epi64x(av as i64);
+                        *alo = _mm256_add_epi64(*alo, _mm256_mul_epi32(avv, b_lo));
+                        *ahi = _mm256_add_epi64(*ahi, _mm256_mul_epi32(avv, b_hi));
+                    }
+                }
+                for (mi, (alo, ahi)) in acc_lo.iter().zip(acc_hi.iter()).enumerate().take(mr) {
+                    let base = (row0 + i + mi) * n;
+                    let mut spill = [0i64; NR];
+                    _mm256_storeu_si256(spill.as_mut_ptr() as *mut __m256i, *alo);
+                    _mm256_storeu_si256(spill.as_mut_ptr().add(4) as *mut __m256i, *ahi);
+                    for (ni, &sv) in spill.iter().enumerate().take(nr) {
+                        let fi = j + ni;
+                        let total = bias[fi] + sv;
+                        let mut v = requantize(total as i32, mult[fi], shift[fi], zp_out);
+                        if relu {
+                            v = v.max(zp_out);
+                        }
+                        out.write(base + fi, v);
+                    }
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}

@@ -1,0 +1,308 @@
+//! Runtime-dispatched GEMM microkernels (the ISSUE 10 tentpole).
+//!
+//! One [`KernelSet`] bundles the four fused panel kernels the packed
+//! GEMM core runs — f32, i32-lane, i64-lane fixed-point, i64-lane
+//! affine — as plain fn pointers, all sharing the [`super::packed`]
+//! NR-tiled panel layout, 4×8 register tile, and `SharedOut` output
+//! contract. `nn::packed` stores a `&'static KernelSet` on every
+//! [`super::packed::PackedNode`] at build time, so dispatch costs one
+//! indirect call per panel, decided once per session:
+//!
+//! - [`detected`]: `is_x86_feature_detected!("avx2")`/`("fma")` picks
+//!   the widest [`avx2`] set the CPU supports (AVX2+FMA → all four
+//!   lanes vectorized; AVX2 without FMA → integer lanes only). Non-x86
+//!   targets, Miri, and `--no-default-features` builds compile the
+//!   dispatch down to [`SCALAR`] unconditionally — no behavior change.
+//! - [`scalar`]: the always-compiled portable set, for forced-baseline
+//!   benches (`bench_hotpath --force-scalar`), the f32 bit-identity
+//!   pins, and `SessionBuilder::force_scalar_kernels`.
+//!
+//! Contract (property-pinned here at the kernel level and in
+//! `nn::packed` through the full conv/dense/attention paths): integer
+//! lanes are BIT-EXACT across every set — vector integer add/mul are
+//! exact, and the rescale/clamp/requantize epilogues always run the
+//! scalar per-element instruction sequence — while f32 stays inside the
+//! session's existing 1e-4 budget (FMA contracts mul+add to one
+//! rounding; DESIGN.md §13).
+
+use super::parallel::SharedOut;
+
+pub(crate) mod scalar;
+
+#[cfg(all(target_arch = "x86_64", feature = "simd", not(miri)))]
+mod avx2;
+
+/// f32 fused panel kernel:
+/// `(a, bp, m, n, k, j0, j1, bias, relu, row0, out)`.
+pub type KernF32 =
+    fn(&[f32], &[f32], usize, usize, usize, usize, usize, &[f32], bool, usize, &SharedOut<f32>);
+
+/// i32-lane fixed-point kernel:
+/// `(a, bp, m, n, k, j0, j1, bias, shift, width, relu, row0, out)`.
+pub type KernI32 = fn(
+    &[i32],
+    &[i32],
+    usize,
+    usize,
+    usize,
+    usize,
+    usize,
+    &[i64],
+    &[i32],
+    u32,
+    bool,
+    usize,
+    &SharedOut<i32>,
+);
+
+/// i64 wide-lane fixed-point kernel (same parameter order as
+/// [`KernI32`], B pre-widened to i64).
+pub type KernI64Fixed = fn(
+    &[i32],
+    &[i64],
+    usize,
+    usize,
+    usize,
+    usize,
+    usize,
+    &[i64],
+    &[i32],
+    u32,
+    bool,
+    usize,
+    &SharedOut<i32>,
+);
+
+/// i64 wide-lane affine kernel:
+/// `(a, bp, m, n, k, j0, j1, bias, mult, shift, zp_out, relu, row0, out)`.
+pub type KernI64Affine = fn(
+    &[i32],
+    &[i64],
+    usize,
+    usize,
+    usize,
+    usize,
+    usize,
+    &[i64],
+    &[i32],
+    &[i32],
+    i32,
+    bool,
+    usize,
+    &SharedOut<i32>,
+);
+
+/// One microkernel per accumulator lane, plus the name bench/serving
+/// artifacts report so every measurement is attributable to the ISA
+/// that produced it.
+#[derive(Clone, Copy)]
+pub struct KernelSet {
+    /// `"scalar"`, `"avx2"`, or `"avx2+fma"` — surfaces in
+    /// `SessionMeta::kernel` and the bench v6 `simd` row field.
+    pub name: &'static str,
+    pub f32: KernF32,
+    pub i32: KernI32,
+    pub i64_fixed: KernI64Fixed,
+    pub i64_affine: KernI64Affine,
+}
+
+impl std::fmt::Debug for KernelSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelSet").field("name", &self.name).finish()
+    }
+}
+
+/// The portable scalar set — always compiled, always tested, and the
+/// bit-level (integer) / ULP-level (f32) definition the vector sets are
+/// pinned against.
+pub static SCALAR: KernelSet = KernelSet {
+    name: "scalar",
+    f32: scalar::kernel_f32,
+    i32: scalar::kernel_i32,
+    i64_fixed: scalar::kernel_i64_fixed,
+    i64_affine: scalar::kernel_i64_affine,
+};
+
+/// The widest kernel set this CPU supports, decided by runtime feature
+/// detection (cached by `std` after the first query). Called once per
+/// packed node at session build — never on the inference hot path.
+pub fn detected() -> &'static KernelSet {
+    #[cfg(all(target_arch = "x86_64", feature = "simd", not(miri)))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            if std::arch::is_x86_feature_detected!("fma") {
+                return &avx2::AVX2_FMA;
+            }
+            return &avx2::AVX2_INT;
+        }
+    }
+    &SCALAR
+}
+
+/// The scalar set, by reference — the forced baseline for benches,
+/// bit-identity tests, and `SessionBuilder::force_scalar_kernels`.
+pub fn scalar() -> &'static KernelSet {
+    &SCALAR
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::gemm::testgen::{random_affine_weights, random_qw};
+    use crate::nn::gemm::NR;
+    use crate::nn::int_ops::accum_fits_i32;
+    use crate::nn::packed::pack_panels;
+    use crate::prop_assert;
+    use crate::util::check::{property, Gen};
+
+    /// Random panel geometry hitting every tail class: m % MR ∈ {0..3},
+    /// n % NR ∈ {0..7}, odd k, NR-aligned j0/j1 column windows (the
+    /// pool-partition and batch-fold entry shapes), and row0 offsets
+    /// (the batch-fold M-stacking shape).
+    fn geometry(g: &mut Gen) -> (usize, usize, usize, usize, usize, usize) {
+        let m = g.usize_in(1, 9);
+        let n = g.usize_in(1, 20);
+        let k = g.usize_in(1, 17);
+        let t0 = g.usize_in(0, n.div_ceil(NR) - 1);
+        let j0 = t0 * NR;
+        let j1 = g.usize_in(j0, n);
+        let row0 = g.usize_in(0, 3);
+        (m, n, k, j0, j1, row0)
+    }
+
+    /// Pin `probe`'s four lanes against [`SCALAR`]: integer lanes
+    /// bit-exact, f32 within the 1e-4 fused-reorder budget.
+    fn pin_against_scalar(probe: &'static KernelSet, cases: u64) {
+        use crate::nn::parallel::SharedOut;
+        property(cases, |g| {
+            let (m, n, k, j0, j1, row0) = geometry(g);
+            let relu = g.bool();
+
+            // f32 lane.
+            let w = g.vec_normal(k * n, 0.5);
+            let bias = g.vec_normal(n, 0.1);
+            let a = g.vec_normal(m * k, 1.0);
+            let bp = pack_panels(&w, k, n, |v| v);
+            let mut want = vec![0.0f32; (row0 + m) * n];
+            let mut got = want.clone();
+            (SCALAR.f32)(&a, &bp, m, n, k, j0, j1, &bias, relu, row0, &SharedOut::new(&mut want));
+            (probe.f32)(&a, &bp, m, n, k, j0, j1, &bias, relu, row0, &SharedOut::new(&mut got));
+            for (idx, (&x, &y)) in want.iter().zip(&got).enumerate() {
+                let tol = 1e-4f32.max(x.abs() * 1e-4);
+                prop_assert!(
+                    (x - y).abs() <= tol,
+                    "{} f32 off at {idx}: {x} vs {y} (m={m} n={n} k={k} j0={j0} j1={j1})",
+                    probe.name
+                );
+            }
+
+            // Fixed-point lanes, across the accum_fits_i32 straddle: the
+            // i64 wide lane always runs; the i32 narrow lane runs exactly
+            // when the node would be admitted to it.
+            let width = *g.pick(&[8u32, 16]);
+            let qw = random_qw(g, k, n, width, width == 8);
+            let lim = (1i32 << (width - 1)) - 1;
+            let ia: Vec<i32> = (0..m * k).map(|_| g.i32_in(-lim - 1, lim)).collect();
+            let bp64 = pack_panels(&qw.w, k, n, i64::from);
+            let mut want = vec![0i32; (row0 + m) * n];
+            let mut got = want.clone();
+            (SCALAR.i64_fixed)(
+                &ia, &bp64, m, n, k, j0, j1, &qw.b_acc, &qw.shift, width, relu, row0,
+                &SharedOut::new(&mut want),
+            );
+            (probe.i64_fixed)(
+                &ia, &bp64, m, n, k, j0, j1, &qw.b_acc, &qw.shift, width, relu, row0,
+                &SharedOut::new(&mut got),
+            );
+            prop_assert!(want == got, "{} i64_fixed diverged (m={m} n={n} k={k})", probe.name);
+            if accum_fits_i32(&qw, k, width) {
+                let bp32 = pack_panels(&qw.w, k, n, |v| v);
+                let mut want = vec![0i32; (row0 + m) * n];
+                let mut got = want.clone();
+                (SCALAR.i32)(
+                    &ia, &bp32, m, n, k, j0, j1, &qw.b_acc, &qw.shift, width, relu, row0,
+                    &SharedOut::new(&mut want),
+                );
+                (probe.i32)(
+                    &ia, &bp32, m, n, k, j0, j1, &qw.b_acc, &qw.shift, width, relu, row0,
+                    &SharedOut::new(&mut got),
+                );
+                prop_assert!(want == got, "{} i32 diverged (m={m} n={n} k={k})", probe.name);
+            }
+
+            // Affine lane (gemmlowp requantize epilogue).
+            let aqw = random_affine_weights(g, k, n);
+            let zp_out = g.i32_in(-128, 127);
+            let aa: Vec<i32> = (0..m * k).map(|_| g.i32_in(-128, 127)).collect();
+            let abp = pack_panels(&aqw.w, k, n, i64::from);
+            let mut want = vec![0i32; (row0 + m) * n];
+            let mut got = want.clone();
+            (SCALAR.i64_affine)(
+                &aa, &abp, m, n, k, j0, j1, &aqw.b, &aqw.mult, &aqw.shift, zp_out, relu, row0,
+                &SharedOut::new(&mut want),
+            );
+            (probe.i64_affine)(
+                &aa, &abp, m, n, k, j0, j1, &aqw.b, &aqw.mult, &aqw.shift, zp_out, relu, row0,
+                &SharedOut::new(&mut got),
+            );
+            prop_assert!(want == got, "{} i64_affine diverged (m={m} n={n} k={k})", probe.name);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dispatch_names_are_attributable() {
+        assert_eq!(SCALAR.name, "scalar");
+        assert_eq!(scalar().name, "scalar");
+        let d = detected();
+        assert!(
+            ["scalar", "avx2", "avx2+fma"].contains(&d.name),
+            "unknown kernel set {:?}",
+            d
+        );
+        // Non-x86 targets, Miri, and no-feature builds MUST resolve to
+        // scalar — the fallback is unconditional, not best-effort.
+        #[cfg(not(all(target_arch = "x86_64", feature = "simd", not(miri))))]
+        assert_eq!(d.name, "scalar");
+        // And where dispatch is live, the name must agree with the CPU.
+        #[cfg(all(target_arch = "x86_64", feature = "simd", not(miri)))]
+        {
+            let want = if std::arch::is_x86_feature_detected!("avx2") {
+                if std::arch::is_x86_feature_detected!("fma") {
+                    "avx2+fma"
+                } else {
+                    "avx2"
+                }
+            } else {
+                "scalar"
+            };
+            assert_eq!(d.name, want);
+        }
+    }
+
+    /// Whatever `detected()` resolved to on this machine agrees with
+    /// scalar. On non-AVX2 hosts (and under Miri) this compares scalar
+    /// against itself — the always-green shim that keeps the suite
+    /// cross-arch.
+    #[test]
+    fn detected_kernels_match_scalar_at_kernel_level() {
+        pin_against_scalar(detected(), 60);
+    }
+
+    /// The cfg-gated forced-variant pin (ISSUE 10): run BOTH vector sets
+    /// explicitly — not just whichever one dispatch would pick — so a
+    /// `RUSTFLAGS=+avx2,+fma` CI leg and a plain leg both exercise the
+    /// scalar and AVX2 arms on the same runner.
+    #[cfg(all(target_arch = "x86_64", feature = "simd", not(miri)))]
+    #[test]
+    fn forced_avx2_variants_bit_exact_vs_scalar() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("skipping forced AVX2 pin: host CPU lacks avx2");
+            return;
+        }
+        pin_against_scalar(&super::avx2::AVX2_INT, 60);
+        if std::arch::is_x86_feature_detected!("fma") {
+            pin_against_scalar(&super::avx2::AVX2_FMA, 60);
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Portable scalar microkernels — the always-compiled, always-tested
+//! reference members of every [`super::KernelSet`].
+//!
+//! These are the PR-5 fused kernels moved verbatim out of `nn::packed`:
+//! 4×8 register tiles, k-major per-element accumulation (thread- and
+//! tile-invariant bits), epilogue fused into the register tail. Every
+//! other kernel set in this module tree is defined by bit-equality (for
+//! the integer lanes) or ULP-budget equality (f32) against THESE
+//! functions; the property pins live in `nn::packed` (full-path, at
+//! threads 1/2/4 across the `accum_fits_i32` straddle) and in
+//! `super::tests` (kernel-level, forced-variant).
+
+use crate::fixedpoint::ops::{clamp_to, rescale};
+use crate::nn::gemm::{MR, NR};
+use crate::nn::packed::packed_cols;
+use crate::nn::parallel::SharedOut;
+use crate::quant::affine::requantize;
+
+#[inline(always)]
+pub(crate) fn shift_at(shift: &[i32], fi: usize) -> i32 {
+    if shift.len() == 1 {
+        shift[0]
+    } else {
+        shift[fi]
+    }
+}
+
+/// f32 fused kernel: identical per-element operation sequence to the
+/// per-call `gemm_f32_cols` + bias/ReLU emit (k-major accumulate, then
+/// `acc + bias`, then ReLU), so results are BIT-identical to the PR-3/4
+/// path — only the B storage layout changed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_f32(
+    a: &[f32],
+    bp: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[f32],
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<f32>,
+) {
+    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            let mut acc: [[f32; NR]; MR] = [[0.0; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[tb + p * NR..tb + p * NR + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                let base = (row0 + i + mi) * n;
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    let fi = j + ni;
+                    let v = accv + bias[fi];
+                    // SAFETY: the dispatch owns rows row0..row0+m and
+                    // columns j0..j1 of the output exclusively.
+                    unsafe { out.write(base + fi, if relu { v.max(0.0) } else { v }) };
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// i32-lane fused kernel (fixed-point, `accum_fits_i32`-admitted nodes):
+/// bit-exact with the reference epilogue (`acc + b as i32`, widen,
+/// rescale, clamp, ReLU).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_i32(
+    a: &[i32],
+    bp: &[i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    shift: &[i32],
+    width: u32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            let mut acc: [[i32; NR]; MR] = [[0; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[tb + p * NR..tb + p * NR + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    if av == 0 {
+                        // ReLU sparsity: exact skip for integers.
+                        continue;
+                    }
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                let base = (row0 + i + mi) * n;
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    let fi = j + ni;
+                    let total = accv + bias[fi] as i32;
+                    let mut v = clamp_to(rescale(i64::from(total), shift_at(shift, fi)), width);
+                    if relu && v < 0 {
+                        v = 0;
+                    }
+                    // SAFETY: as in `kernel_f32`.
+                    unsafe { out.write(base + fi, v) };
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// i64 wide fused kernel, fixed-point epilogue.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_i64_fixed(
+    a: &[i32],
+    bp: &[i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    shift: &[i32],
+    width: u32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            let mut acc: [[i64; NR]; MR] = [[0; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[tb + p * NR..tb + p * NR + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    if av == 0 {
+                        // ReLU sparsity: exact skip for integers.
+                        continue;
+                    }
+                    let av = av as i64;
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                let base = (row0 + i + mi) * n;
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    let fi = j + ni;
+                    let mut v = clamp_to(rescale(accv + bias[fi], shift_at(shift, fi)), width);
+                    if relu && v < 0 {
+                        v = 0;
+                    }
+                    // SAFETY: as in `kernel_f32`.
+                    unsafe { out.write(base + fi, v) };
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}
+
+/// i64 wide fused kernel, affine (gemmlowp requantize) epilogue. The
+/// bias carries the build-time zero-point fold; the final accumulator is
+/// the same integer the reference reaches, so the `as i32` cast into
+/// `requantize` is bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_i64_affine(
+    a: &[i32],
+    bp: &[i64],
+    m: usize,
+    n: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    bias: &[i64],
+    mult: &[i32],
+    shift: &[i32],
+    zp_out: i32,
+    relu: bool,
+    row0: usize,
+    out: &SharedOut<i32>,
+) {
+    debug_assert!(j0 % NR == 0 && j0 <= j1 && j1 <= n, "bad packed column range");
+    debug_assert!(a.len() >= m * k, "A panel too small");
+    debug_assert!(bp.len() >= packed_cols(n) * k, "packed B too small");
+    let tile_elems = k * NR;
+    let mut i = 0usize;
+    while i < m {
+        let mr = MR.min(m - i);
+        let mut j = j0;
+        while j < j1 {
+            let nr = NR.min(j1 - j);
+            let tb = (j / NR) * tile_elems;
+            let mut acc: [[i64; NR]; MR] = [[0; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[tb + p * NR..tb + p * NR + nr];
+                for (mi, accrow) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i + mi) * k + p];
+                    if av == 0 {
+                        // Raw-payload zero: contributes 0 to Σ x·w.
+                        continue;
+                    }
+                    let av = av as i64;
+                    for (accv, &bv) in accrow.iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            for (mi, accrow) in acc.iter().enumerate().take(mr) {
+                let base = (row0 + i + mi) * n;
+                for (ni, &accv) in accrow.iter().enumerate().take(nr) {
+                    let fi = j + ni;
+                    let total = bias[fi] + accv;
+                    let mut v = requantize(total as i32, mult[fi], shift[fi], zp_out);
+                    if relu {
+                        v = v.max(zp_out);
+                    }
+                    // SAFETY: as in `kernel_f32`.
+                    unsafe { out.write(base + fi, v) };
+                }
+            }
+            j += nr;
+        }
+        i += mr;
+    }
+}

@@ -1,0 +1,254 @@
+//! ISSUE 10 pin: runtime kernel dispatch is behavior-preserving at the
+//! SESSION level. For every backend a forced-scalar session and an
+//! auto-dispatched session (whatever `nn::simd::detected()` resolves to
+//! on this host) serve the same examples at threads {1, 4} and batch
+//! {1, 8}; the integer engines (int8 / int16 fixed-point and affine)
+//! must produce BIT-IDENTICAL logits — the kernel-set contract in
+//! DESIGN.md §13 — and float32 must agree within the session's 1e-4
+//! relative budget (AVX2+FMA contracts mul+add to one rounding, which
+//! legitimately moves f32 bits; on non-AVX2 hosts both sessions run the
+//! scalar set and the comparison degenerates to scalar-vs-scalar, which
+//! keeps the suite green on every architecture).
+//!
+//! `SessionMeta::kernel` attributability rides along: the forced session
+//! must report "scalar" and the auto session must report the detected
+//! set, so a logged serving fleet can always tell which microkernels
+//! produced an answer.
+
+use std::sync::Arc;
+
+use microai::graph::ir::LayerKind;
+use microai::graph::{deploy_pipeline, resnet_v1_6_shapes, Graph};
+use microai::nn::float_exec::ActStats;
+use microai::nn::{simd, Session, SessionBuilder};
+use microai::quant::{quantize, quantize_affine, QuantSpec};
+use microai::util::prng::Pcg32;
+
+const THREADS: [usize; 2] = [1, 4];
+/// 1 pins the single-example fast path; 8 pins the batch-folded GEMMs
+/// (examples stacked into M change the partitioning the kernels see).
+const BATCHES: [usize; 2] = [1, 8];
+/// Same relative budget the float session tests already grant the packed
+/// path; FMA reassociation stays comfortably inside it (DESIGN.md §13).
+const F32_TOL: f32 = 1e-4;
+
+fn fixture_graph(dims: usize, shape: &[usize], classes: usize, filters: usize, seed: u64) -> Graph {
+    let mut g = resnet_v1_6_shapes("fix", dims, shape, classes, filters);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        if let LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } = &mut n.kind {
+            for v in w.data.iter_mut() {
+                *v = rng.normal() * 0.35;
+            }
+            for v in b.data.iter_mut() {
+                *v = rng.normal() * 0.05;
+            }
+        }
+    }
+    deploy_pipeline(&g)
+}
+
+fn fixture_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
+}
+
+fn calibrate(g: &Graph, inputs: &[Vec<f32>]) -> ActStats {
+    let mut sess = SessionBuilder::float32(g.clone()).build();
+    let mut stats = ActStats::new(g.nodes.len());
+    for x in inputs {
+        assert!(sess.calibrate(x, &mut stats));
+    }
+    stats
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The property itself: a forced-scalar session and an auto-dispatched
+/// session of the same backend serve identical batches; `exact` demands
+/// bit-identical logits (integer engines), otherwise the 1e-4 relative
+/// budget applies (float32 under FMA contraction).
+fn pin_pair(mk: impl Fn(bool, usize) -> Session, pool: &[Vec<f32>], exact: bool, label: &str) {
+    for &t in &THREADS {
+        let mut scalar = mk(true, t);
+        let mut auto = mk(false, t);
+        assert_eq!(
+            scalar.meta().kernel,
+            "scalar",
+            "{label} t={t}: forced-scalar session must report the scalar set"
+        );
+        assert_eq!(
+            auto.meta().kernel,
+            simd::detected().name,
+            "{label} t={t}: auto session must report the detected set"
+        );
+        for &n in &BATCHES {
+            // Cycle the example pool so n can exceed its size.
+            let flat: Vec<f32> = (0..n).flat_map(|i| pool[i % pool.len()].clone()).collect();
+            let s = scalar.run_batch(&flat);
+            let a = auto.run_batch(&flat);
+            assert_eq!(s.len(), a.len(), "{label} t={t} n={n}: logit count diverges");
+            if exact {
+                assert_eq!(
+                    bits(&s),
+                    bits(&a),
+                    "{label} t={t} n={n}: integer logits must be bit-identical across \
+                     kernel sets (dispatched: {})",
+                    simd::detected().name
+                );
+            } else {
+                for (i, (x, y)) in s.iter().zip(a.iter()).enumerate() {
+                    let tol = F32_TOL.max(x.abs() * F32_TOL);
+                    assert!(
+                        (x - y).abs() <= tol,
+                        "{label} t={t} n={n} logit {i}: {x} vs {y} exceeds the {F32_TOL} \
+                         relative budget (dispatched: {})",
+                        simd::detected().name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// All four engine/width arms over one deployed graph, `max_batch(8)`.
+fn pin_all_backends(g: &Graph, pool: &[Vec<f32>]) {
+    let stats = calibrate(g, pool);
+    let q16 = Arc::new(quantize(g, &stats, QuantSpec::int16_per_layer()));
+    let q8 = Arc::new(quantize(g, &stats, QuantSpec::int8_per_layer()));
+    let aq = Arc::new(quantize_affine(g, &stats));
+
+    pin_pair(
+        |fs, t| {
+            SessionBuilder::float32(g.clone())
+                .threads(t)
+                .max_batch(8)
+                .force_scalar_kernels(fs)
+                .build()
+        },
+        pool,
+        false,
+        "float32",
+    );
+    pin_pair(
+        |fs, t| {
+            SessionBuilder::fixed_qmn(q16.clone())
+                .threads(t)
+                .max_batch(8)
+                .force_scalar_kernels(fs)
+                .build()
+        },
+        pool,
+        true,
+        "int16",
+    );
+    pin_pair(
+        |fs, t| {
+            SessionBuilder::fixed_qmn(q8.clone())
+                .threads(t)
+                .max_batch(8)
+                .force_scalar_kernels(fs)
+                .build()
+        },
+        pool,
+        true,
+        "int8",
+    );
+    pin_pair(
+        |fs, t| {
+            SessionBuilder::affine_i8(aq.clone())
+                .threads(t)
+                .max_batch(8)
+                .force_scalar_kernels(fs)
+                .build()
+        },
+        pool,
+        true,
+        "affine",
+    );
+}
+
+#[test]
+fn dispatch_equivalent_resnet_1d_har_shaped() {
+    // k=3 convs, 1×1 shortcut convs (folded at batch 8), dense head.
+    let g = fixture_graph(1, &[64, 6], 5, 8, 42);
+    let pool = fixture_inputs(16, 64 * 6, 7);
+    pin_all_backends(&g, &pool);
+}
+
+#[test]
+fn dispatch_equivalent_resnet_1d_smnist_shaped() {
+    // Different channel/class mix so tail geometry (n % NR, k odd) hits
+    // different cases than the HAR fixture.
+    let g = fixture_graph(1, &[39, 13], 10, 8, 43);
+    let pool = fixture_inputs(12, 39 * 13, 8);
+    pin_all_backends(&g, &pool);
+}
+
+#[test]
+fn dispatch_equivalent_resnet_2d_gtsrb_shaped() {
+    // conv2d topology: the 2-D im2col path feeds the kernels per row.
+    let g = fixture_graph(2, &[12, 12, 3], 4, 4, 9);
+    let pool = fixture_inputs(8, 12 * 12 * 3, 11);
+    pin_all_backends(&g, &pool);
+}
+
+/// Randomized 2-block transformer (embedding → [LN → MHSA → add → LN →
+/// FFN → add] ×2 → GAP → dense → softmax): pins the packed-attention
+/// projections' dispatch alongside conv/dense.
+fn transformer_fixture(seed: u64) -> (Graph, u32) {
+    const VOCAB: u32 = 20;
+    let mut g = microai::graph::build::transformer("txfix", 12, VOCAB as usize, 16, 2, 2, 2, 5);
+    let mut rng = Pcg32::seeded(seed);
+    for n in g.nodes.iter_mut() {
+        match &mut n.kind {
+            LayerKind::Conv { w, b, .. } | LayerKind::Dense { w, b } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.3;
+                }
+                for v in b.data.iter_mut() {
+                    *v = rng.normal() * 0.05;
+                }
+            }
+            LayerKind::Embedding { w } => {
+                for v in w.data.iter_mut() {
+                    *v = rng.normal() * 0.5;
+                }
+            }
+            LayerKind::LayerNorm { gamma, beta, .. } => {
+                for v in gamma.iter_mut() {
+                    *v = 1.0 + rng.normal() * 0.2;
+                }
+                for v in beta.iter_mut() {
+                    *v = rng.normal() * 0.1;
+                }
+            }
+            LayerKind::SelfAttention { w, .. } => {
+                for t in [&mut w.wq, &mut w.wk, &mut w.wv, &mut w.wo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.3;
+                    }
+                }
+                for t in [&mut w.bq, &mut w.bk, &mut w.bv, &mut w.bo] {
+                    for v in t.data.iter_mut() {
+                        *v = rng.normal() * 0.05;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    (deploy_pipeline(&g), VOCAB)
+}
+
+#[test]
+fn dispatch_equivalent_transformer() {
+    let (g, vocab) = transformer_fixture(91);
+    let seq: usize = g.input_shape.iter().product();
+    let mut rng = Pcg32::seeded(92);
+    let pool: Vec<Vec<f32>> =
+        (0..8).map(|_| (0..seq).map(|_| rng.below(vocab) as f32).collect()).collect();
+    pin_all_backends(&g, &pool);
+}
